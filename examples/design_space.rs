@@ -1,0 +1,79 @@
+//! Design-space exploration (Section VI's analysis, automated).
+//!
+//! Sweeps tile size × head count × device, printing for each candidate
+//! build its resource estimate, feasibility, and modeled latency on the
+//! BERT-variant workload — reproducing the paper's findings that
+//! (a) TS=64 with 8 heads is the best feasible U55C point, (b) U200 caps
+//! at 6 heads, and (c) smaller tiles trade resources for latency.
+//!
+//!     cargo run --release --example design_space
+
+use famous::analytical::LatencyModel;
+use famous::config::Topology;
+use famous::fpga::{Device, ResourceModel};
+use famous::report::{fmt_f, Table};
+
+fn main() {
+    let rm = ResourceModel::default();
+    let lm = LatencyModel::default();
+    let workload = (64usize, 768usize); // SL, d_model (BERT variant)
+
+    for dev in [Device::alveo_u55c(), Device::alveo_u200()] {
+        let mut t = Table::new(
+            format!("Design space on {} (SL={}, d_model={})", dev.name, workload.0, workload.1),
+            &["TS", "heads", "DSP", "BRAM18k", "LUT", "LUT%", "fits", "latency ms", "GOPS"],
+        );
+        let mut best: Option<(f64, usize, usize)> = None;
+        for ts in [16usize, 32, 64, 128] {
+            if workload.1 % ts != 0 {
+                continue;
+            }
+            for h in [2usize, 4, 6, 8, 12] {
+                if workload.1 % h != 0 {
+                    continue;
+                }
+                let topo = Topology::new(workload.0, workload.1, h, ts);
+                let est = rm.estimate(&topo);
+                let fits = est.fits(&dev);
+                let ms = lm.predict(&topo).total_ms();
+                let gops = famous::metrics::OpCount::paper_convention(&topo) / (ms * 1e-3);
+                if fits {
+                    match best {
+                        Some((b, _, _)) if b <= ms => {}
+                        _ => best = Some((ms, ts, h)),
+                    }
+                }
+                t.row(vec![
+                    ts.to_string(),
+                    h.to_string(),
+                    est.dsp.to_string(),
+                    est.bram18k.to_string(),
+                    est.lut.to_string(),
+                    format!("{:.0}%", est.utilization(&dev).lut_pct),
+                    if fits { "yes".into() } else { "NO".into() },
+                    fmt_f(ms),
+                    fmt_f(gops),
+                ]);
+            }
+        }
+        print!("{}", t.render());
+        if let Some((ms, ts, h)) = best {
+            println!(
+                "best feasible point on {}: TS={ts}, h={h} at {:.3} ms",
+                dev.name, ms
+            );
+        }
+        let max_h = rm.max_heads(&dev, workload.1, workload.0, 64);
+        println!("max parallel heads at TS=64: {max_h} (paper: {})\n", match dev.name.as_str() {
+            "alveo_u55c" => 8,
+            _ => 6,
+        });
+    }
+
+    // The paper's headline finding should fall out of the sweep:
+    let u55c_best = ResourceModel::default().max_heads(&Device::alveo_u55c(), 768, 64, 64);
+    assert_eq!(u55c_best, 8, "U55C should cap at 8 heads");
+    let u200_best = ResourceModel::default().max_heads(&Device::alveo_u200(), 768, 64, 64);
+    assert_eq!(u200_best, 6, "U200 should cap at 6 heads");
+    println!("design_space OK (paper's head limits reproduced)");
+}

@@ -1,0 +1,18 @@
+use famous::benchlib::{bench, black_box};
+use famous::fixed::{matmul_i32, matmul_i32_fast, matmul_i32_tiled, FxMatrix};
+use famous::rng::XorShift64;
+fn rand_mat(seed: u64, rows: usize, cols: usize) -> FxMatrix {
+    let mut rng = XorShift64::new(seed);
+    FxMatrix { rows, cols, data: (0..rows*cols).map(|_| rng.range_i64(-128,127) as i8).collect() }
+}
+fn main() {
+    let a = rand_mat(1, 64, 768);
+    let b = rand_mat(2, 96, 768);
+    let macs = (64*768*96) as f64;
+    let s = bench(3, 30, || { black_box(matmul_i32(&a,&b)); });
+    println!("naive    {:.3} ms  {:.2} Gmac/s", s.min_ms, macs/(s.min_ms*1e-3)/1e9);
+    let s = bench(3, 30, || { black_box(matmul_i32_tiled(&a,&b,64)); });
+    println!("tiled64  {:.3} ms  {:.2} Gmac/s", s.min_ms, macs/(s.min_ms*1e-3)/1e9);
+    let s = bench(3, 30, || { black_box(matmul_i32_fast(&a,&b)); });
+    println!("fast     {:.3} ms  {:.2} Gmac/s", s.min_ms, macs/(s.min_ms*1e-3)/1e9);
+}

@@ -1,0 +1,52 @@
+//! Quickstart: load the AOT artifacts, run one multi-head attention
+//! invocation on the modeled U55C accelerator, and verify the output
+//! against the python oracle's golden vector.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use famous::accel::FamousAccelerator;
+use famous::config::Topology;
+use famous::sim::SimConfig;
+use famous::testdata::MhaInputs;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's headline configuration: BERT-variant topology on the
+    // U55C TS=64 build (Table I test 1).
+    let topo = Topology::new(64, 768, 8, 64);
+    let mut accel = FamousAccelerator::with_pjrt(SimConfig::u55c(), "artifacts")?;
+
+    // Deterministic int8-grid operands (same stream as the python oracle).
+    let inputs = MhaInputs::generate(&topo);
+    let report = accel.run(&topo, &inputs)?;
+
+    println!("== FAMOUS quickstart ==");
+    println!("topology        : {topo}");
+    println!("fabric latency  : {:.3} ms  ({} cycles @ 400 MHz)", report.latency_ms, report.cycles);
+    println!("throughput      : {:.0} GOPS (paper convention)", report.gops);
+    println!("paper reports   : 0.94 ms / 328 GOPS (Table I test 1)");
+
+    // Cross-check the functional output against the shipped golden vector.
+    let rt = famous::runtime::Runtime::load("artifacts")?;
+    if let Some(golden) = rt.golden(&topo.name())? {
+        let max_err = report
+            .output
+            .iter()
+            .zip(&golden)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!("golden check    : max |diff| = {max_err:.2e} (python oracle)");
+        assert!(max_err < 1e-5, "output diverged from the oracle");
+    }
+
+    // Phase attribution (what the cycle trace is for).
+    println!("-- phase breakdown --");
+    for name in ["CTRL", "LI", "LB", "LIA", "LWA", "SA", "BA", "S", "SV"] {
+        let cycles = report.sim.trace.phase_cycles(name);
+        println!(
+            "  {name:<4} {cycles:>8} cc  ({:>5.1}%)",
+            cycles as f64 / report.cycles as f64 * 100.0
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

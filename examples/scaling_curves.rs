@@ -1,0 +1,101 @@
+//! Scaling curves: latency/GOPS series over each runtime-programmable
+//! parameter (the figure-form view of Table I's row families).  Emits
+//! aligned tables plus a JSON dump (`scaling_curves.json`) for plotting.
+//!
+//!     cargo run --release --example scaling_curves
+
+use famous::config::Topology;
+use famous::jsonlite::Json;
+use famous::metrics::OpCount;
+use famous::report::{fmt_f, Table};
+use famous::sim::{SimConfig, Simulator};
+
+fn run_ms(topo: &Topology) -> f64 {
+    let mut cfg = SimConfig::u55c();
+    if topo.tile_size != cfg.build.tile_size {
+        cfg.build.tile_size = topo.tile_size;
+        cfg.build.max_topology.tile_size = topo.tile_size;
+    }
+    // Widen admission for the sweep (model extrapolation beyond the
+    // paper's synthesized maxima, labeled as such).
+    cfg.build.max_topology.seq_len = 1024;
+    cfg.build.max_topology.d_model = 4096;
+    cfg.build.max_topology.heads = 64;
+    Simulator::new(cfg).run_timing(topo).unwrap().latency_ms
+}
+
+fn series(
+    name: &str,
+    pts: Vec<(String, Topology)>,
+    out: &mut Vec<(String, Json)>,
+) {
+    let mut t = Table::new(
+        format!("Scaling: {name}"),
+        &["x", "latency ms", "GOPS (attn-only)"],
+    );
+    let mut arr = Vec::new();
+    for (x, topo) in &pts {
+        let ms = run_ms(topo);
+        let gops = OpCount::attention_only(topo).giga() / (ms * 1e-3);
+        t.row(vec![x.clone(), fmt_f(ms), fmt_f(gops)]);
+        arr.push(Json::obj([
+            ("x", Json::from(x.as_str())),
+            ("latency_ms", Json::from(ms)),
+            ("gops", Json::from(gops)),
+        ]));
+    }
+    print!("{}", t.render());
+    out.push((name.to_string(), Json::arr(arr)));
+}
+
+fn main() {
+    let mut dump = Vec::new();
+
+    // Latency vs sequence length (tests 1, 6-8 extended).
+    series(
+        "sequence length (d=768, h=8, TS=64)",
+        [16, 32, 64, 128, 256, 512]
+            .iter()
+            .map(|&sl| (sl.to_string(), Topology::new(sl, 768, 8, 64)))
+            .collect(),
+        &mut dump,
+    );
+    // Latency vs embedding dimension (tests 1, 4, 5 extended).
+    series(
+        "embedding dimension (SL=64, h=8, TS=64)",
+        [256, 512, 768, 1024, 1536, 2048]
+            .iter()
+            .map(|&d| (d.to_string(), Topology::new(64, d, 8, 64)))
+            .collect(),
+        &mut dump,
+    );
+    // Latency vs runtime head count (tests 1-3 extended).
+    series(
+        "heads (SL=64, d=768, TS=64)",
+        [1, 2, 4, 8, 12, 16]
+            .iter()
+            .filter(|&&h| 768 % h == 0)
+            .map(|&h| (h.to_string(), Topology::new(64, 768, h, 64)))
+            .collect(),
+        &mut dump,
+    );
+    // Latency vs tile size (tests 1, 9, 10 extended).
+    series(
+        "tile size (SL=64, d=768, h=8)",
+        [16, 32, 48, 64, 96, 128]
+            .iter()
+            .filter(|&&ts| 768 % ts == 0)
+            .map(|&ts| (ts.to_string(), Topology::new(64, 768, 8, ts)))
+            .collect(),
+        &mut dump,
+    );
+
+    let json = Json::obj(dump.into_iter().collect::<Vec<_>>());
+    std::fs::write("scaling_curves.json", json.to_string()).unwrap();
+    println!("wrote scaling_curves.json");
+
+    // The monotone shapes Table I implies, asserted over the wider sweep.
+    assert!(run_ms(&Topology::new(256, 768, 8, 64)) > run_ms(&Topology::new(128, 768, 8, 64)));
+    assert!(run_ms(&Topology::new(64, 2048, 8, 64)) > run_ms(&Topology::new(64, 1024, 8, 64)));
+    println!("scaling_curves OK");
+}

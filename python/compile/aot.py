@@ -1,0 +1,143 @@
+"""AOT bridge: lower the L2 model to HLO text the rust runtime can load.
+
+For every topology in the registry this emits
+
+    artifacts/<name>.hlo.txt        HLO text of jit(mha_forward_quant)
+    artifacts/<name>.golden.bin     oracle output (f32 LE), golden topologies
+    artifacts/manifest.json         index the rust runtime reads
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` (from python/: ``python -m compile.aot``).
+Python never runs again after this: the rust binary is self-contained.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import struct
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, testdata, topologies
+
+ARG_ORDER = ["x", "wq", "wk", "wv", "bq", "bk", "bv"]
+
+
+def arg_shapes(topo):
+    sl, dm, h, d_k = topo.seq_len, topo.d_model, topo.heads, topo.d_k
+    return {
+        "x": (sl, dm),
+        "wq": (h, d_k, dm), "wk": (h, d_k, dm), "wv": (h, d_k, dm),
+        "bq": (h, d_k), "bk": (h, d_k), "bv": (h, d_k),
+    }
+
+
+def to_hlo_text(lowered):
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_topology(topo, use_pallas=True):
+    """Lower one topology.
+
+    Two variants share identical math (pytest + a rust integration test
+    pin them to each other):
+
+    * ``use_pallas=True`` — the Pallas kernels in interpret mode.  This is
+      the kernel-structure artifact (what would lower to Mosaic on TPU);
+      on the CPU PJRT backend its grid loops become HLO ``while`` ops,
+      which XLA:CPU executes serially (~10x slower).
+    * ``use_pallas=False`` — the same model through the pure-jnp path,
+      which XLA fuses into flat GEMM kernels.  This is the deployment
+      artifact the rust hot path executes (EXPERIMENTS.md §Perf).
+    """
+    shapes = arg_shapes(topo)
+    specs = [jax.ShapeDtypeStruct(shapes[a], np.float32) for a in ARG_ORDER]
+
+    def fn(*args):
+        x, wq, wk, wv, bq, bk, bv = args
+        from .kernels import quant
+        fq = lambda a: quant.fake_quant(a, model.INT8_GRID_SCALE)
+        out = model.mha_forward(fq(x), fq(wq), fq(wk), fq(wv), fq(bq),
+                                fq(bk), fq(bv), tile_size=topo.tile_size,
+                                use_pallas=use_pallas)
+        return (out,)  # return_tuple interchange
+
+    return jax.jit(fn).lower(*specs)
+
+
+def write_golden(topo, out_dir):
+    """Run the oracle on the deterministic testdata inputs and persist the
+    output; the rust side regenerates the inputs from the same LCG."""
+    args = testdata.gen_inputs(topo)
+    out = np.asarray(model.mha_forward_quant(*args, tile_size=topo.tile_size),
+                     dtype=np.float32)
+    path = os.path.join(out_dir, f"{topo.name}.golden.bin")
+    with open(path, "wb") as f:
+        f.write(out.astype("<f4").tobytes())
+    digest = hashlib.sha256(
+        b"".join(np.asarray(a, dtype="<f4").tobytes() for a in args)
+    ).hexdigest()
+    return {"golden": os.path.basename(path),
+            "golden_shape": list(out.shape),
+            "inputs_sha256": digest}
+
+
+def build(out_dir, golden=True, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text-v1", "arg_order": ARG_ORDER,
+                "grid_scale": testdata.GRID_SCALE, "entries": []}
+    golden_names = {t.name for t in topologies.GOLDEN} if golden else set()
+    for topo in topologies.TOPOLOGIES:
+        topo.validate()
+        # Deployment artifact: XLA-fused path (fast on CPU PJRT).
+        hlo = to_hlo_text(lower_topology(topo, use_pallas=False))
+        path = os.path.join(out_dir, f"{topo.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        # Kernel-structure artifact: Pallas interpret path (slow on CPU;
+        # kept for cross-validation — see lower_topology docs).
+        hlo_p = to_hlo_text(lower_topology(topo, use_pallas=True))
+        path_p = os.path.join(out_dir, f"{topo.name}.pallas.hlo.txt")
+        with open(path_p, "w") as f:
+            f.write(hlo_p)
+        entry = dict(topo.dict())
+        entry["hlo"] = os.path.basename(path)
+        entry["hlo_pallas"] = os.path.basename(path_p)
+        entry["args"] = {a: list(s) for a, s in arg_shapes(topo).items()}
+        if topo.name in golden_names:
+            entry.update(write_golden(topo, out_dir))
+        manifest["entries"].append(entry)
+        if verbose:
+            print(f"lowered {topo.name}: {len(hlo)} chars (+pallas variant)"
+                  + (" (+golden)" if topo.name in golden_names else ""))
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"wrote {len(manifest['entries'])} artifacts to {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--no-golden", action="store_true",
+                    help="skip golden-vector generation (faster)")
+    args = ap.parse_args()
+    build(args.out, golden=not args.no_golden)
+
+
+if __name__ == "__main__":
+    main()

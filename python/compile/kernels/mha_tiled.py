@@ -1,0 +1,181 @@
+"""Pallas kernels implementing the FAMOUS dataflow on TPU-shaped tiles.
+
+Hardware adaptation (DESIGN.md §3): the paper streams (d_k × TS) weight
+tiles from HBM into BRAM and accumulates partial products in on-chip
+buffers; here the same schedule is expressed with a Pallas grid over the
+reduction dimension and BlockSpecs that stage one (SL × TS) activation
+block plus one (d_k × TS) weight block in VMEM per grid step, accumulating
+into the output ref (which stays resident in VMEM because its index_map is
+constant across the grid).
+
+All kernels are lowered with ``interpret=True``: the image's PJRT client is
+CPU-only, and real Mosaic lowering emits TPU custom-calls it cannot run.
+Structure (BlockSpecs, grid, accumulation) is exactly what would lower to
+Mosaic on hardware; see tpu_estimate.py for the VMEM/MXU projections.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU-only PJRT; see module docstring.
+
+
+# --------------------------------------------------------------------------
+# QKV projection module (QKV_PM, Algorithm 1 + Fig. 4 tiling)
+# --------------------------------------------------------------------------
+
+def _qkv_tile_kernel(x_ref, wq_ref, wk_ref, wv_ref, q_ref, k_ref, v_ref):
+    """One grid step == one FAMOUS tile iteration: multiply the staged
+    (SL × TS) activation block with the three staged (d_k × TS) weight
+    blocks and accumulate into the resident Q/K/V buffers."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        q_ref[...] = jnp.zeros_like(q_ref)
+        k_ref[...] = jnp.zeros_like(k_ref)
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    x = x_ref[...]
+    # (SL,TS) @ (TS,d_k): contraction over the tile columns, exactly the
+    # inner-unrolled MAC chain of Algorithm 1 lines 8-11.
+    q_ref[...] += jnp.dot(x, wq_ref[...].T, preferred_element_type=jnp.float32)
+    k_ref[...] += jnp.dot(x, wk_ref[...].T, preferred_element_type=jnp.float32)
+    v_ref[...] += jnp.dot(x, wv_ref[...].T, preferred_element_type=jnp.float32)
+
+
+def qkv_projection_tiled(x, wq, wk, wv, bq, bk, bv, ts):
+    """Single-head tiled Q/K/V projection.
+
+    x: (SL, d_model); w*: (d_k, d_model); b*: (d_k,).
+    Returns (Q, K, V), each (SL, d_k).
+    """
+    sl, d_model = x.shape
+    d_k = wq.shape[0]
+    if d_model % ts != 0:
+        raise ValueError(f"d_model={d_model} not a multiple of tile size {ts}")
+    n_tiles = d_model // ts
+
+    out_shape = jax.ShapeDtypeStruct((sl, d_k), jnp.float32)
+    acc_spec = pl.BlockSpec((sl, d_k), lambda t: (0, 0))
+    q, k, v = pl.pallas_call(
+        _qkv_tile_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((sl, ts), lambda t: (0, t)),    # X column tile
+            pl.BlockSpec((d_k, ts), lambda t: (0, t)),   # Wq tile
+            pl.BlockSpec((d_k, ts), lambda t: (0, t)),   # Wk tile
+            pl.BlockSpec((d_k, ts), lambda t: (0, t)),   # Wv tile
+        ],
+        out_specs=[acc_spec, acc_spec, acc_spec],
+        out_shape=[out_shape, out_shape, out_shape],
+        interpret=INTERPRET,
+    )(x, wq, wk, wv)
+    # Bias add happens after the tile loop, as in the paper (biases are
+    # streamed to registers while QKV_PM computes, then added once).
+    return q + bq[None, :], k + bk[None, :], v + bv[None, :]
+
+
+# --------------------------------------------------------------------------
+# Score module (QK_PM, Algorithm 2) — QK^T, scale, softmax
+# --------------------------------------------------------------------------
+
+def _score_kernel(q_ref, k_ref, s_ref, *, scale):
+    s = jnp.dot(q_ref[...], k_ref[...].T,
+                preferred_element_type=jnp.float32) * scale
+    # Row softmax fused in the same module, as the paper routes S directly
+    # into the softmax unit before SV_PM.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    s_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_scores(q, k, scale):
+    """Softmax(Q K^T * scale) for one head: (SL,d_k),(SL,d_k) -> (SL,SL)."""
+    sl, d_k = q.shape
+    return pl.pallas_call(
+        functools.partial(_score_kernel, scale=float(scale)),
+        out_shape=jax.ShapeDtypeStruct((sl, sl), jnp.float32),
+        interpret=INTERPRET,
+    )(q, k)
+
+
+# --------------------------------------------------------------------------
+# Attention-score module (SV_PM, Algorithm 3)
+# --------------------------------------------------------------------------
+
+def _sv_kernel(s_ref, v_ref, o_ref):
+    o_ref[...] = jnp.dot(s_ref[...], v_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def weighted_values(s, v):
+    """S @ V for one head: (SL,SL),(SL,d_k) -> (SL,d_k)."""
+    sl, d_k = v.shape
+    return pl.pallas_call(
+        _sv_kernel,
+        out_shape=jax.ShapeDtypeStruct((sl, d_k), jnp.float32),
+        interpret=INTERPRET,
+    )(s, v)
+
+
+# --------------------------------------------------------------------------
+# Fused single-head attention (QK_PM + softmax + SV_PM in one kernel)
+# --------------------------------------------------------------------------
+
+def _fused_head_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal):
+    s = jnp.dot(q_ref[...], k_ref[...].T,
+                preferred_element_type=jnp.float32) * scale
+    if causal:
+        # Decoder masking (eq. 1's Mask): row i attends to cols <= i.
+        sl = s.shape[0]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (sl, sl), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (sl, sl), 1)
+        s = jnp.where(cols <= rows, s, -1e9)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v_ref[...], preferred_element_type=jnp.float32)
+
+
+def fused_attention_head(q, k, v, scale, causal=False):
+    """softmax(Mask(QK^T·scale))·V in a single VMEM-resident kernel.  Used
+    by the default model path: for FAMOUS-scale SL (≤ a few hundred) the
+    whole (SL × SL) score tile fits comfortably in VMEM (tpu_estimate.py).
+    ``causal=True`` gives the decoder's masked attention (Section II)."""
+    sl, d_k = q.shape
+    return pl.pallas_call(
+        functools.partial(_fused_head_kernel, scale=float(scale),
+                          causal=causal),
+        out_shape=jax.ShapeDtypeStruct((sl, d_k), jnp.float32),
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+# --------------------------------------------------------------------------
+# Full multi-head attention assembled from the kernels
+# --------------------------------------------------------------------------
+
+def mha_tiled(x, wq, wk, wv, bq, bk, bv, ts, scale, fused=True,
+              causal=False):
+    """Multi-head attention with the FAMOUS schedule.
+
+    x: (SL, d_model); w*: (h, d_k, d_model); b*: (h, d_k).
+    Heads are vmapped (the hardware instantiates h parallel module sets).
+    ``causal=True`` selects the decoder's masked attention (the unfused
+    path has no mask support; fused is forced in that case).
+    """
+    def one_head(wq_h, wk_h, wv_h, bq_h, bk_h, bv_h):
+        q, k, v = qkv_projection_tiled(x, wq_h, wk_h, wv_h,
+                                       bq_h, bk_h, bv_h, ts)
+        if fused or causal:
+            return fused_attention_head(q, k, v, scale, causal=causal)
+        s = attention_scores(q, k, scale)
+        return weighted_values(s, v)
+
+    heads = jax.vmap(one_head)(wq, wk, wv, bq, bk, bv)  # (h, SL, d_k)
+    h, sl, d_k = heads.shape
+    return jnp.transpose(heads, (1, 0, 2)).reshape(sl, h * d_k)

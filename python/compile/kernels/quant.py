@@ -1,0 +1,36 @@
+"""Int8 quantization helpers shared by the kernels and the reference.
+
+FAMOUS quantizes activations and weights to 8-bit fixed point before they
+enter the DSP48 MAC datapath (Table I: "8bit fixed").  We emulate that
+datapath in float32: values are snapped to an int8 grid (symmetric,
+per-tensor scale) and all subsequent MACs run in f32.  Products of two
+int8-grid values are <= 2^14 and reduction fan-ins here are <= 768 terms,
+so every intermediate is an exact integer below 2^24 — f32 arithmetic is
+bit-exact integer arithmetic, matching the hardware's wide accumulator.
+"""
+
+import jax.numpy as jnp
+
+INT8_MIN = -128.0
+INT8_MAX = 127.0
+
+
+def quantize(x, scale):
+    """Snap ``x`` to the int8 grid with step ``scale`` (returns int values)."""
+    return jnp.clip(jnp.round(x / scale), INT8_MIN, INT8_MAX)
+
+
+def dequantize(q, scale):
+    """Map int8 grid values back to real units."""
+    return q * scale
+
+
+def fake_quant(x, scale):
+    """quantize -> dequantize: the value the fixed-point datapath sees."""
+    return dequantize(quantize(x, scale), scale)
+
+
+def pick_scale(x, bits=8):
+    """Symmetric per-tensor scale covering the dynamic range of ``x``."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    return amax / (2.0 ** (bits - 1) - 1.0)

@@ -1,0 +1,128 @@
+"""Pure-jnp oracle for every kernel in this package.
+
+These are the ground-truth semantics the Pallas kernels (and, transitively,
+the rust functional simulator) are validated against.  Shapes follow the
+paper's notation:
+
+    X  : (SL, d_model)            input sequence
+    Wq : (h, d_k, d_model)        per-head projection, indexed [k][j] as in
+    Wk : (h, d_k, d_model)        Algorithm 1 (i.e. Q = X @ Wq[h].T), where
+    Wv : (h, d_k, d_model)        d_k = d_model / h
+    Bq/Bk/Bv : (h, d_k)
+    out: (SL, d_model)            heads concatenated along the feature dim
+
+Equation 1 scales QK^T by 1/sqrt(d_k); Algorithm 2 line 9 divides by
+d_model instead.  ``scale_mode`` selects between the two readings
+("sqrt_dk" — eq. 1, default — or "d_model" — Algorithm 2).
+"""
+
+import math
+
+import jax.numpy as jnp
+
+
+def scale_factor(d_model, h, scale_mode="sqrt_dk"):
+    """Python float (not a jnp value): shapes are static, and the kernels
+    bake the scale in as a compile-time constant."""
+    d_k = d_model // h
+    if scale_mode == "sqrt_dk":
+        return 1.0 / math.sqrt(float(d_k))
+    if scale_mode == "d_model":
+        return 1.0 / float(d_model)
+    raise ValueError(f"unknown scale_mode {scale_mode!r}")
+
+
+def qkv_projection(x, w, b):
+    """Single-head projection: (SL,dm) @ (d_k,dm).T + (d_k,) -> (SL,d_k)."""
+    return jnp.dot(x, w.T) + b[None, :]
+
+
+def softmax(s):
+    """Numerically-stable row softmax (the hardware uses a LUT variant)."""
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def lut_softmax(s, lut_bits=8, x_min=-8.0):
+    """LUT softmax as synthesized by HLS: exp() is a 2^lut_bits-entry table
+    over [x_min, 0] after max-subtraction.  Matches the hardware's
+    quantized non-linearity; error vs exact softmax is bounded by the LUT
+    step."""
+    m = jnp.max(s, axis=-1, keepdims=True)
+    z = jnp.clip(s - m, x_min, 0.0)
+    # Snap the exp argument to the LUT grid (table indexed by truncation).
+    step = (-x_min) / (2 ** lut_bits - 1)
+    z_idx = jnp.floor((z - x_min) / step)
+    z_q = x_min + z_idx * step
+    e = jnp.exp(z_q)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def causal_mask(sl, neg=-1e9):
+    """The decoder's Mask(·) of eq. 1: position i may attend to j <= i."""
+    rows = jnp.arange(sl)[:, None]
+    cols = jnp.arange(sl)[None, :]
+    return jnp.where(cols <= rows, 0.0, neg).astype(jnp.float32)
+
+
+def attention_head(q, k, v, scale, use_lut_softmax=False, causal=False):
+    """Scaled dot-product attention for one head (Fig. 2), with the
+    decoder's optional masking (Section II's Masked Attention)."""
+    s = jnp.dot(q, k.T) * scale
+    if causal:
+        s = s + causal_mask(s.shape[0])
+    p = lut_softmax(s) if use_lut_softmax else softmax(s)
+    return jnp.dot(p, v)
+
+
+def mha(x, wq, wk, wv, bq, bk, bv, scale_mode="sqrt_dk",
+        use_lut_softmax=False, causal=False):
+    """Full dense multi-head attention (eq. 1 & 2), heads concatenated."""
+    h = wq.shape[0]
+    d_model = x.shape[-1]
+    scale = scale_factor(d_model, h, scale_mode)
+    outs = []
+    for i in range(h):
+        q = qkv_projection(x, wq[i], bq[i])
+        k = qkv_projection(x, wk[i], bk[i])
+        v = qkv_projection(x, wv[i], bv[i])
+        outs.append(attention_head(q, k, v, scale, use_lut_softmax, causal))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def tiled_qkv_projection(x, w, b, ts):
+    """Reference for the FAMOUS tiling (Fig. 4): reduce over column tiles of
+    size ``ts``, accumulating partial products — must equal
+    ``qkv_projection`` exactly in integer arithmetic."""
+    d_model = x.shape[-1]
+    assert d_model % ts == 0, "d_model must be a multiple of the tile size"
+    acc = jnp.zeros((x.shape[0], w.shape[0]), dtype=jnp.float32)
+    for t in range(d_model // ts):
+        xs = x[:, t * ts:(t + 1) * ts]
+        ws = w[:, t * ts:(t + 1) * ts]
+        acc = acc + jnp.dot(xs, ws.T)
+    return acc + b[None, :]
+
+
+# --- Encoder extension (paper's stated future work: MHA + FFN + LN) ------
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gamma * (x - mu) / jnp.sqrt(var + eps) + beta
+
+
+def ffn(x, w1, b1, w2, b2):
+    """Position-wise feed-forward network: two linear maps, ReLU between."""
+    hmid = jnp.maximum(jnp.dot(x, w1) + b1, 0.0)
+    return jnp.dot(hmid, w2) + b2
+
+
+def encoder_block(x, params, scale_mode="sqrt_dk"):
+    """Full encoder layer: MHA -> add&LN -> FFN -> add&LN (Fig. 1)."""
+    a = mha(x, params["wq"], params["wk"], params["wv"],
+            params["bq"], params["bk"], params["bv"], scale_mode)
+    x1 = layer_norm(x + a, params["ln1_g"], params["ln1_b"])
+    f = ffn(x1, params["w1"], params["b1"], params["w2"], params["b2"])
+    return layer_norm(x1 + f, params["ln2_g"], params["ln2_b"])

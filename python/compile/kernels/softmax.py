@@ -1,0 +1,63 @@
+"""Standalone softmax kernels — the QK_PM tail of the paper.
+
+Two variants:
+  * ``softmax_exact``  — numerically-stable row softmax (reference grade).
+  * ``softmax_lut``    — the paper's LUT realization: HLS synthesizes the
+    exponential as a lookup table in LUTs/FFs.  We mirror that with a
+    2^bits-entry table gathered inside the kernel, so the kernel's numerics
+    match what the fabric computes (and match ref.lut_softmax exactly).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .mha_tiled import INTERPRET
+
+
+def _softmax_kernel(s_ref, o_ref):
+    s = s_ref[...]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_exact(s):
+    """Row softmax over the trailing axis of a 2-D score matrix."""
+    return pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct(s.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(s)
+
+
+def make_exp_lut(bits=8, x_min=-8.0):
+    """The exp table the fabric stores: 2^bits samples of exp over
+    [x_min, 0], indexed by truncation."""
+    n = 2 ** bits
+    grid = x_min + jnp.arange(n, dtype=jnp.float32) * ((-x_min) / (n - 1))
+    return jnp.exp(grid)
+
+
+def _softmax_lut_kernel(s_ref, lut_ref, o_ref, *, bits, x_min):
+    s = s_ref[...]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    z = jnp.clip(s - m, x_min, 0.0)
+    n = 2 ** bits
+    step = (-x_min) / (n - 1)
+    idx = jnp.floor((z - x_min) / step).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, n - 1)
+    e = lut_ref[...][idx]
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_lut(s, bits=8, x_min=-8.0):
+    """LUT softmax; bit-matches ref.lut_softmax(s, bits, x_min)."""
+    lut = make_exp_lut(bits, x_min)
+    return pl.pallas_call(
+        functools.partial(_softmax_lut_kernel, bits=bits, x_min=x_min),
+        out_shape=jax.ShapeDtypeStruct(s.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(s, lut)

@@ -1,0 +1,93 @@
+"""TPU performance projection for the Pallas kernels (DESIGN.md §8).
+
+interpret=True gives CPU-numpy wallclock, which says nothing about TPU
+performance; what *is* knowable statically is (a) the VMEM working set each
+grid step stages (from the BlockSpecs) and (b) the MXU occupancy of each
+matmul tile.  This module computes both so EXPERIMENTS.md §Perf can report
+them per topology, and the kernel block shapes can be tuned against the
+16 MiB/core VMEM budget and the 128×128 systolic array.
+"""
+
+from dataclasses import dataclass
+
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+MXU_DIM = 128  # systolic array is 128x128 (bf16 inputs, f32 accumulate)
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def _mxu_tiles(m, k, n):
+    """Number of 128^3 MXU passes a (m,k)x(k,n) matmul occupies."""
+    return _ceil_div(m, MXU_DIM) * _ceil_div(k, MXU_DIM) * _ceil_div(n, MXU_DIM)
+
+
+def _mxu_utilization(m, k, n):
+    """Useful MACs / MACs the occupied MXU passes could do."""
+    ideal = m * k * n
+    occupied = _mxu_tiles(m, k, n) * MXU_DIM ** 3
+    return ideal / occupied
+
+
+@dataclass
+class KernelEstimate:
+    """Static TPU projection for one kernel configuration."""
+    name: str
+    vmem_bytes: int          # resident working set per grid step
+    vmem_frac: float         # fraction of the 16 MiB/core budget
+    macs: int                # useful multiply-accumulates per invocation
+    mxu_utilization: float   # useful / occupied MXU capacity
+    fits_vmem: bool
+
+    def row(self):
+        return (f"{self.name:28s} vmem={self.vmem_bytes/2**20:7.3f} MiB "
+                f"({self.vmem_frac*100:5.1f}%) mxu_util={self.mxu_utilization:5.3f} "
+                f"fits={'yes' if self.fits_vmem else 'NO'}")
+
+
+def estimate_qkv_tile(sl, d_model, h, ts, bytes_per_el=4):
+    """qkv_projection_tiled: per grid step the kernel stages one (SL,TS) X
+    block, three (d_k,TS) weight blocks, and keeps three (SL,d_k)
+    accumulators resident."""
+    d_k = d_model // h
+    vmem = bytes_per_el * (sl * ts + 3 * d_k * ts + 3 * sl * d_k)
+    macs = 3 * sl * ts * d_k * (d_model // ts)  # whole-call useful MACs
+    util = _mxu_utilization(sl, ts, d_k)
+    return KernelEstimate(
+        name=f"qkv_tiled(sl={sl},d={d_model},h={h},ts={ts})",
+        vmem_bytes=vmem, vmem_frac=vmem / VMEM_BYTES_PER_CORE,
+        macs=macs, mxu_utilization=util,
+        fits_vmem=vmem <= VMEM_BYTES_PER_CORE)
+
+
+def estimate_fused_head(sl, d_model, h, bytes_per_el=4):
+    """fused_attention_head: Q,K,V blocks + (SL,SL) score tile + output."""
+    d_k = d_model // h
+    vmem = bytes_per_el * (3 * sl * d_k + sl * sl + sl * d_k)
+    macs = sl * d_k * sl + sl * sl * d_k  # QK^T + SV
+    util = min(_mxu_utilization(sl, d_k, sl), _mxu_utilization(sl, sl, d_k))
+    return KernelEstimate(
+        name=f"fused_head(sl={sl},d={d_model},h={h})",
+        vmem_bytes=vmem, vmem_frac=vmem / VMEM_BYTES_PER_CORE,
+        macs=macs, mxu_utilization=util,
+        fits_vmem=vmem <= VMEM_BYTES_PER_CORE)
+
+
+def estimate_topology(sl, d_model, h, ts):
+    """All kernel estimates for one FAMOUS topology."""
+    return [estimate_qkv_tile(sl, d_model, h, ts),
+            estimate_fused_head(sl, d_model, h)]
+
+
+def report(topologies):
+    lines = []
+    for (sl, d, h, ts) in topologies:
+        for est in estimate_topology(sl, d, h, ts):
+            lines.append(est.row())
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report([(64, 768, 8, 64), (64, 512, 8, 64), (128, 768, 8, 64),
+                  (64, 768, 12, 64), (256, 768, 8, 64)]))

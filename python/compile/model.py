@@ -1,0 +1,76 @@
+"""Layer 2 — the jax model the accelerator executes.
+
+`mha_forward` is the computation FAMOUS implements in fabric (eq. 1 & 2,
+heads concatenated, no output projection — the paper's accelerator stops at
+the attention score).  It is assembled from the Layer-1 Pallas kernels so a
+single jax.jit lowering captures kernels + glue in one HLO module, which
+aot.py serializes for the rust runtime.
+
+`encoder_forward` is the paper's announced extension (full encoder block);
+it reuses the same attention kernels and adds FFN + residual + LayerNorm.
+
+The quantized path applies the same int8 fake-quantization the hardware's
+8-bit datapath performs (see kernels/quant.py for why f32 emulation is
+bit-exact here).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import mha_tiled, quant, ref
+
+INT8_GRID_SCALE = 1.0 / 64.0  # matches testdata.GRID_SCALE / rust quantizer
+
+
+def mha_forward(x, wq, wk, wv, bq, bk, bv, *, tile_size,
+                scale_mode="sqrt_dk", fused=True, use_pallas=True,
+                causal=False):
+    """Dense MHA with the FAMOUS schedule.
+
+    x: (SL, d_model); w*: (h, d_k, d_model); b*: (h, d_k) -> (SL, d_model).
+    ``causal=True`` gives the decoder's masked attention (Section II).
+    """
+    d_model = x.shape[-1]
+    h = wq.shape[0]
+    scale = ref.scale_factor(d_model, h, scale_mode)
+    if use_pallas:
+        return mha_tiled.mha_tiled(x, wq, wk, wv, bq, bk, bv,
+                                   tile_size, scale, fused=fused,
+                                   causal=causal)
+    return ref.mha(x, wq, wk, wv, bq, bk, bv, scale_mode, causal=causal)
+
+
+def mha_forward_quant(x, wq, wk, wv, bq, bk, bv, *, tile_size,
+                      in_scale=INT8_GRID_SCALE, scale_mode="sqrt_dk"):
+    """8-bit-datapath MHA: operands snapped to the int8 grid first, exactly
+    as the accelerator quantizes its HBM streams before the MACs."""
+    fq = lambda a: quant.fake_quant(a, in_scale)
+    return mha_forward(fq(x), fq(wq), fq(wk), fq(wv), fq(bq), fq(bk), fq(bv),
+                       tile_size=tile_size, scale_mode=scale_mode)
+
+
+def encoder_forward(x, params, *, tile_size, scale_mode="sqrt_dk"):
+    """Full encoder block (future-work scope): Pallas MHA + FFN + LN."""
+    a = mha_forward(x, params["wq"], params["wk"], params["wv"],
+                    params["bq"], params["bk"], params["bv"],
+                    tile_size=tile_size, scale_mode=scale_mode)
+    x1 = ref.layer_norm(x + a, params["ln1_g"], params["ln1_b"])
+    f = ref.ffn(x1, params["w1"], params["b1"], params["w2"], params["b2"])
+    return ref.layer_norm(x1 + f, params["ln2_g"], params["ln2_b"])
+
+
+def encoder_params_shape(sl, d_model, h, d_ff=None):
+    """ShapeDtypeStructs for encoder_forward's parameter pytree."""
+    import jax
+    d_ff = d_ff or 4 * d_model
+    d_k = d_model // h
+    f32 = jnp.float32
+    s = lambda *shape: jax.ShapeDtypeStruct(shape, f32)
+    return {
+        "wq": s(h, d_k, d_model), "wk": s(h, d_k, d_model),
+        "wv": s(h, d_k, d_model),
+        "bq": s(h, d_k), "bk": s(h, d_k), "bv": s(h, d_k),
+        "ln1_g": s(d_model), "ln1_b": s(d_model),
+        "w1": s(d_model, d_ff), "b1": s(d_ff),
+        "w2": s(d_ff, d_model), "b2": s(d_model),
+        "ln2_g": s(d_model), "ln2_b": s(d_model),
+    }

@@ -1,0 +1,51 @@
+"""Deterministic cross-language test vectors.
+
+The rust integration tests must feed the PJRT executables the *same*
+inputs the python oracle used, without shipping multi-megabyte weight
+dumps.  Both sides therefore generate inputs from the same closed-form
+LCG-based formula (reimplemented in rust/src/testdata.rs); the artifact
+bundle only stores the oracle *outputs*.
+
+Values land on the int8 quantization grid scaled by 1/64 so the fixed-
+point datapath, the float kernels, and the XLA executable all agree
+bit-for-bit (every product/sum is an exact small integer in f32).
+"""
+
+import numpy as np
+
+GRID_SCALE = 1.0 / 64.0  # int8 grid step; |x| <= 127/64 ~ 2
+
+
+def _lcg_vals(seed, n):
+    """Deterministic int8-grid values in [-16, 16]/64 via a 32-bit LCG.
+
+    Small magnitudes keep QK^T products within the exact-f32 range for
+    every topology in the registry.
+    """
+    state = np.uint64(seed * 2654435761 % (2**32) or 1)
+    out = np.empty(n, dtype=np.float32)
+    a = np.uint64(1664525)
+    c = np.uint64(1013904223)
+    mod = np.uint64(2**32)
+    for i in range(n):
+        state = (a * state + c) % mod
+        out[i] = float((int(state) >> 16) % 33 - 16)  # [-16, 16]
+    return out * GRID_SCALE
+
+
+def gen_matrix(seed, rows, cols):
+    return _lcg_vals(seed, rows * cols).reshape(rows, cols)
+
+
+def gen_inputs(topo):
+    """All operands for one topology, keyed by the aot entry signature."""
+    sl, dm, h = topo.seq_len, topo.d_model, topo.heads
+    d_k = topo.d_k
+    x = gen_matrix(1, sl, dm)
+    wq = gen_matrix(2, h * d_k, dm).reshape(h, d_k, dm)
+    wk = gen_matrix(3, h * d_k, dm).reshape(h, d_k, dm)
+    wv = gen_matrix(4, h * d_k, dm).reshape(h, d_k, dm)
+    bq = gen_matrix(5, h, d_k)
+    bk = gen_matrix(6, h, d_k)
+    bv = gen_matrix(7, h, d_k)
+    return x, wq, wk, wv, bq, bk, bv

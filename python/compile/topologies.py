@@ -1,0 +1,86 @@
+"""Topology registry: every (SL, d_model, h, TS) configuration the paper
+evaluates (Table I tests 1-12, Table II comparison points) plus the
+synthesis-time maxima.  aot.py lowers one artifact per entry; the rust
+coordinator looks them up through artifacts/manifest.json.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class Topology:
+    seq_len: int
+    d_model: int
+    heads: int
+    tile_size: int
+
+    @property
+    def d_k(self):
+        return self.d_model // self.heads
+
+    @property
+    def n_tiles(self):
+        return self.d_model // self.tile_size
+
+    @property
+    def name(self):
+        return (f"mha_sl{self.seq_len}_d{self.d_model}"
+                f"_h{self.heads}_ts{self.tile_size}")
+
+    def validate(self):
+        if self.d_model % self.heads:
+            raise ValueError(f"{self}: d_model must be divisible by heads")
+        if self.d_model % self.tile_size:
+            raise ValueError(f"{self}: d_model must be divisible by tile_size")
+
+    def dict(self):
+        d = asdict(self)
+        d["name"] = self.name
+        d["d_k"] = self.d_k
+        d["n_tiles"] = self.n_tiles
+        return d
+
+
+# Table I — runtime-programmable tests on the TS=64 U55C build (tests 1-8),
+# the TS=32/16 rebuilds (tests 9-10; same math, different schedule), and the
+# U200 build (tests 11-12).  Table II adds (64,768,12) and (64,512,4).
+TOPOLOGIES = [
+    Topology(64, 768, 8, 64),    # test 1 / headline / Table II
+    Topology(64, 768, 4, 64),    # test 2
+    Topology(64, 768, 2, 64),    # test 3
+    Topology(64, 512, 8, 64),    # test 4 / Table II
+    Topology(64, 256, 8, 64),    # test 5
+    Topology(128, 768, 8, 64),   # test 6
+    Topology(32, 768, 8, 64),    # test 7
+    Topology(16, 768, 8, 64),    # test 8
+    Topology(64, 768, 8, 32),    # test 9  (TS resynthesis)
+    Topology(64, 768, 8, 16),    # test 10 (TS resynthesis)
+    Topology(64, 768, 6, 64),    # test 11 (U200)  -- 768/6 = 128
+    Topology(64, 512, 6, 64),    # test 12 (U200)  -- 512/6 not integer! see note
+    Topology(64, 768, 12, 64),   # Table II Intel E5 / Calabash topology
+    Topology(64, 512, 4, 64),    # Table II V100 / P100 topology
+]
+
+# Note on test 12: the paper reports (SL=64, d_model=512, h=6) on U200, but
+# 512/6 is not an integer d_k.  We follow eq. 2's constraint d_k = d_model/h
+# and substitute h=8 for the functional artifact while keeping the paper's
+# h=6 for the *timing* model (which only needs d_model/h as a rational
+# workload ratio).  Recorded in EXPERIMENTS.md.
+TOPOLOGIES = [t for t in TOPOLOGIES if t.d_model % t.heads == 0]
+
+# Golden vectors are emitted for these (kept small to bound artifact size).
+GOLDEN = [Topology(64, 768, 8, 64), Topology(16, 768, 8, 64),
+          Topology(64, 256, 8, 64)]
+
+# Synthesis-time maxima of the two builds in the paper (Section VI).
+SYNTH_MAX = {
+    "u55c_ts64": Topology(128, 768, 8, 64),
+    "u200_ts64": Topology(128, 768, 6, 64),
+}
+
+
+def by_name(name):
+    for t in TOPOLOGIES:
+        if t.name == name:
+            return t
+    raise KeyError(name)

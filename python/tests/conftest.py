@@ -1,0 +1,14 @@
+"""Shared fixtures: make `compile` importable and provide small topologies."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xFA0005)

@@ -1,0 +1,95 @@
+"""AOT pipeline tests: lowering, manifest schema, golden vectors,
+testdata determinism (the cross-language contract with rust)."""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model, testdata, topologies
+from compile.topologies import Topology
+
+
+def test_testdata_lcg_is_stable():
+    """Pin the LCG stream: rust/src/testdata.rs reimplements this exactly.
+    If this test ever needs updating, update the rust side in lockstep."""
+    v = testdata._lcg_vals(1, 8)
+    expect = np.float32([-11, 4, 6, 11, -9, -10, 14, 15]) / 64.0
+    assert np.array_equal(v, expect)
+
+
+def test_testdata_on_int8_grid():
+    for seed in (1, 2, 9):
+        v = testdata._lcg_vals(seed, 256) / testdata.GRID_SCALE
+        assert np.array_equal(v, np.round(v))
+        assert np.abs(v).max() <= 16
+
+
+def test_gen_inputs_shapes():
+    t = Topology(16, 256, 4, 64)
+    x, wq, wk, wv, bq, bk, bv = testdata.gen_inputs(t)
+    assert x.shape == (16, 256)
+    assert wq.shape == wk.shape == wv.shape == (4, 64, 256)
+    assert bq.shape == (4, 64)
+
+
+def test_topology_registry_valid():
+    for t in topologies.TOPOLOGIES:
+        t.validate()
+        assert t.d_k * t.heads == t.d_model
+        assert t.n_tiles * t.tile_size == t.d_model
+    assert topologies.by_name("mha_sl64_d768_h8_ts64").heads == 8
+    with pytest.raises(KeyError):
+        topologies.by_name("nope")
+
+
+def test_lower_topology_produces_hlo_text():
+    t = Topology(8, 128, 4, 32)
+    hlo = aot.to_hlo_text(aot.lower_topology(t))
+    assert hlo.startswith("HloModule")
+    assert "f32[8,128]" in hlo  # input/output shape appears
+    # no TPU custom-calls: interpret-mode pallas lowers to plain HLO
+    assert "custom-call" not in hlo.lower() or "mosaic" not in hlo.lower()
+
+
+def test_build_manifest_roundtrip(tmp_path, monkeypatch):
+    small = [Topology(8, 128, 4, 32), Topology(4, 64, 2, 16)]
+    monkeypatch.setattr(topologies, "TOPOLOGIES", small)
+    monkeypatch.setattr(topologies, "GOLDEN", [small[0]])
+    man = aot.build(str(tmp_path), verbose=False)
+    with open(tmp_path / "manifest.json") as f:
+        loaded = json.load(f)
+    assert loaded["arg_order"] == aot.ARG_ORDER
+    assert len(loaded["entries"]) == 2
+    e0 = next(e for e in loaded["entries"] if e["name"] == small[0].name)
+    assert (tmp_path / e0["hlo"]).exists()
+    assert (tmp_path / e0["golden"]).exists()
+    # golden payload: f32-LE of the quant forward on testdata inputs
+    got = np.frombuffer((tmp_path / e0["golden"]).read_bytes(), "<f4")
+    want = np.asarray(model.mha_forward_quant(
+        *testdata.gen_inputs(small[0]), tile_size=32)).ravel()
+    assert np.array_equal(got, want)
+    # inputs hash matches regeneration
+    digest = hashlib.sha256(b"".join(
+        np.asarray(a, "<f4").tobytes()
+        for a in testdata.gen_inputs(small[0]))).hexdigest()
+    assert e0["inputs_sha256"] == digest
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="run `make artifacts` first")
+def test_shipped_manifest_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    names = {e["name"] for e in man["entries"]}
+    assert "mha_sl64_d768_h8_ts64" in names  # the headline topology
+    for e in man["entries"]:
+        assert os.path.exists(os.path.join(root, e["hlo"])), e["name"]
+        if "golden" in e:
+            n = np.prod(e["golden_shape"])
+            sz = os.path.getsize(os.path.join(root, e["golden"]))
+            assert sz == 4 * n

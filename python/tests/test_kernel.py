@@ -1,0 +1,217 @@
+"""Kernel-vs-oracle correctness: the CORE signal for Layer 1.
+
+Float comparisons are exact (==) wherever the computation is integer-exact
+on the int8 grid (projections, SV); softmax paths use tight allclose.
+Hypothesis sweeps shapes/dtypes per the repro mandate.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import testdata
+from compile.kernels import mha_tiled, ref
+from compile.topologies import Topology
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=20, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def mk(seed, *shape):
+    return testdata.gen_matrix(seed, shape[0], int(np.prod(shape[1:]))) \
+        .reshape(*shape).astype(np.float32)
+
+
+# --------------------------------------------------------------------- QKV
+
+@pytest.mark.parametrize("sl,dm,dk,ts", [
+    (8, 128, 32, 32), (16, 256, 64, 64), (64, 768, 96, 64), (4, 64, 16, 16),
+])
+def test_qkv_tiled_matches_ref_exactly(sl, dm, dk, ts):
+    x = mk(1, sl, dm)
+    wq, wk, wv = mk(2, dk, dm), mk(3, dk, dm), mk(4, dk, dm)
+    bq, bk, bv = mk(5, 1, dk)[0], mk(6, 1, dk)[0], mk(7, 1, dk)[0]
+    q, k, v = mha_tiled.qkv_projection_tiled(x, wq, wk, wv, bq, bk, bv, ts)
+    assert np.array_equal(np.asarray(q), np.asarray(ref.qkv_projection(x, wq, bq)))
+    assert np.array_equal(np.asarray(k), np.asarray(ref.qkv_projection(x, wk, bk)))
+    assert np.array_equal(np.asarray(v), np.asarray(ref.qkv_projection(x, wv, bv)))
+
+
+def test_qkv_tiled_equals_untiled_reference_tiling():
+    """ref.tiled_qkv_projection is itself exactly the direct projection —
+    the tiling invariant the paper's Fig. 4 relies on."""
+    x, w, b = mk(11, 16, 128), mk(12, 32, 128), mk(13, 1, 32)[0]
+    direct = ref.qkv_projection(x, w, b)
+    for ts in (16, 32, 64, 128):
+        tiled = ref.tiled_qkv_projection(x, w, b, ts)
+        assert np.array_equal(np.asarray(tiled), np.asarray(direct))
+
+
+def test_qkv_tiled_rejects_non_divisible_tile():
+    x, w = mk(1, 8, 100), mk(2, 16, 100)
+    b = mk(3, 1, 16)[0]
+    with pytest.raises(ValueError, match="tile size"):
+        mha_tiled.qkv_projection_tiled(x, w, w, w, b, b, b, 48)
+
+
+@hypothesis.given(
+    sl=st.sampled_from([4, 8, 16]),
+    n_tiles=st.integers(1, 4),
+    ts=st.sampled_from([8, 16, 32]),
+    dk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(1, 1000))
+def test_qkv_tiled_property(sl, n_tiles, ts, dk, seed):
+    dm = n_tiles * ts
+    x, w, b = mk(seed, sl, dm), mk(seed + 1, dk, dm), mk(seed + 2, 1, dk)[0]
+    q, _, _ = mha_tiled.qkv_projection_tiled(x, w, w, w, b, b, b, ts)
+    assert np.array_equal(np.asarray(q), np.asarray(ref.qkv_projection(x, w, b)))
+
+
+# ------------------------------------------------------------------ scores
+
+@pytest.mark.parametrize("sl,dk", [(8, 16), (16, 64), (64, 96)])
+def test_attention_scores_match_ref(sl, dk):
+    q, k = mk(21, sl, dk), mk(22, sl, dk)
+    scale = ref.scale_factor(dk * 8, 8)
+    s = mha_tiled.attention_scores(q, k, scale)
+    want = ref.softmax(jnp.dot(q, k.T) * scale)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_scores_rows_sum_to_one():
+    q, k = mk(31, 16, 32), mk(32, 16, 32)
+    s = np.asarray(mha_tiled.attention_scores(q, k, 0.125))
+    np.testing.assert_allclose(s.sum(axis=-1), np.ones(16), rtol=1e-6)
+    assert (s >= 0).all()
+
+
+# ---------------------------------------------------------------------- SV
+
+@pytest.mark.parametrize("sl,dk", [(8, 16), (64, 96)])
+def test_weighted_values_match_ref(sl, dk):
+    s, v = mk(41, sl, sl), mk(42, sl, dk)
+    out = mha_tiled.weighted_values(s, v)
+    assert np.array_equal(np.asarray(out), np.asarray(jnp.dot(s, v)))
+
+
+# ------------------------------------------------------------------- fused
+
+@pytest.mark.parametrize("sl,dk", [(8, 16), (16, 64), (64, 96)])
+def test_fused_head_matches_composition(sl, dk):
+    q, k, v = mk(51, sl, dk), mk(52, sl, dk), mk(53, sl, dk)
+    scale = 1.0 / np.sqrt(dk)
+    fused = mha_tiled.fused_attention_head(q, k, v, scale)
+    composed = mha_tiled.weighted_values(
+        mha_tiled.attention_scores(q, k, scale), v)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(composed),
+                               rtol=1e-6, atol=1e-7)
+    want = ref.attention_head(q, k, v, scale)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+# --------------------------------------------------------------------- MHA
+
+@pytest.mark.parametrize("sl,dm,h,ts", [
+    (8, 128, 4, 32), (16, 256, 8, 64), (16, 256, 2, 32), (32, 768, 8, 64),
+])
+def test_mha_tiled_matches_ref(sl, dm, h, ts):
+    topo = Topology(sl, dm, h, ts)
+    args = testdata.gen_inputs(topo)
+    scale = ref.scale_factor(dm, h)
+    got = mha_tiled.mha_tiled(*args, ts, scale)
+    want = ref.mha(*args)
+    assert got.shape == (sl, dm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_mha_tiled_unfused_path_matches():
+    topo = Topology(8, 128, 4, 32)
+    args = testdata.gen_inputs(topo)
+    scale = ref.scale_factor(128, 4)
+    fused = mha_tiled.mha_tiled(*args, 32, scale, fused=True)
+    unfused = mha_tiled.mha_tiled(*args, 32, scale, fused=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-6, atol=1e-7)
+
+
+@hypothesis.given(
+    sl=st.sampled_from([4, 8, 16]),
+    h=st.sampled_from([1, 2, 4]),
+    dk=st.sampled_from([8, 16]),
+    ts=st.sampled_from([16, 32]),
+    seed=st.integers(1, 500))
+def test_mha_tiled_property_sweep(sl, h, dk, ts, seed):
+    dm = h * dk
+    hypothesis.assume(dm % ts == 0)
+    x = mk(seed, sl, dm)
+    wq, wk, wv = (mk(seed + i, h * dk, dm).reshape(h, dk, dm)
+                  for i in (1, 2, 3))
+    bq, bk, bv = (mk(seed + i, h, dk) for i in (4, 5, 6))
+    scale = ref.scale_factor(dm, h)
+    got = mha_tiled.mha_tiled(x, wq, wk, wv, bq, bk, bv, ts, scale)
+    want = ref.mha(x, wq, wk, wv, bq, bk, bv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_head_concat_order():
+    """Heads must concatenate along features in head order (Fig. 2)."""
+    topo = Topology(4, 32, 2, 16)
+    x, wq, wk, wv, bq, bk, bv = testdata.gen_inputs(topo)
+    scale = ref.scale_factor(32, 2)
+    full = np.asarray(mha_tiled.mha_tiled(x, wq, wk, wv, bq, bk, bv, 16, scale))
+    for i in range(2):
+        q = ref.qkv_projection(x, wq[i], bq[i])
+        k = ref.qkv_projection(x, wk[i], bk[i])
+        v = ref.qkv_projection(x, wv[i], bv[i])
+        head = np.asarray(ref.attention_head(q, k, v, scale))
+        np.testing.assert_allclose(full[:, i * 16:(i + 1) * 16], head,
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------------------------ causal
+
+@pytest.mark.parametrize("sl,dk", [(8, 16), (16, 64)])
+def test_causal_fused_head_matches_ref(sl, dk):
+    q, k, v = mk(61, sl, dk), mk(62, sl, dk), mk(63, sl, dk)
+    scale = 1.0 / np.sqrt(dk)
+    got = mha_tiled.fused_attention_head(q, k, v, scale, causal=True)
+    want = ref.attention_head(q, k, v, scale, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_causal_first_row_sees_only_itself():
+    """Row 0 of masked attention must equal V's row 0 exactly."""
+    q, k, v = mk(71, 8, 16), mk(72, 8, 16), mk(73, 8, 16)
+    out = np.asarray(ref.attention_head(q, k, v, 0.25, causal=True))
+    np.testing.assert_allclose(out[0], np.asarray(v)[0], rtol=1e-6)
+
+
+def test_causal_mha_differs_from_dense():
+    topo = Topology(8, 128, 4, 32)
+    args = testdata.gen_inputs(topo)
+    scale = ref.scale_factor(128, 4)
+    dense = np.asarray(mha_tiled.mha_tiled(*args, 32, scale))
+    masked = np.asarray(mha_tiled.mha_tiled(*args, 32, scale, causal=True))
+    assert not np.array_equal(dense, masked)
+    # last row attends to everything in both cases -> identical
+    np.testing.assert_allclose(dense[-1], masked[-1], rtol=1e-5, atol=1e-6)
+
+
+def test_causal_prefix_invariance():
+    """Masked attention on a prefix equals the prefix of masked attention
+    on the full sequence — the property decoding relies on."""
+    topo = Topology(12, 64, 2, 16)
+    x, wq, wk, wv, bq, bk, bv = testdata.gen_inputs(topo)
+    scale = ref.scale_factor(64, 2)
+    full = np.asarray(ref.mha(x, wq, wk, wv, bq, bk, bv, causal=True))
+    pre = np.asarray(ref.mha(x[:5], wq, wk, wv, bq, bk, bv, causal=True))
+    np.testing.assert_allclose(full[:5], pre, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,94 @@
+"""Layer-2 model tests: shapes, quantized path, encoder extension."""
+
+import numpy as np
+import pytest
+
+from compile import model, testdata
+from compile.kernels import ref
+from compile.topologies import Topology
+
+
+@pytest.mark.parametrize("topo", [
+    Topology(8, 128, 4, 32), Topology(16, 256, 8, 64),
+])
+def test_mha_forward_shape(topo):
+    args = testdata.gen_inputs(topo)
+    out = model.mha_forward(*args, tile_size=topo.tile_size)
+    assert out.shape == (topo.seq_len, topo.d_model)
+
+
+def test_quant_path_is_exact_on_grid_inputs():
+    """testdata inputs already live on the int8 grid, so the quantized and
+    float paths must agree bit-for-bit (the datapath-emulation premise)."""
+    topo = Topology(16, 256, 4, 64)
+    args = testdata.gen_inputs(topo)
+    f = np.asarray(model.mha_forward(*args, tile_size=64))
+    q = np.asarray(model.mha_forward_quant(*args, tile_size=64))
+    assert np.array_equal(f, q)
+
+
+def test_quant_path_quantizes_off_grid_inputs():
+    topo = Topology(8, 128, 4, 32)
+    args = list(testdata.gen_inputs(topo))
+    args[0] = args[0] + 0.003  # push x off the grid
+    f = np.asarray(model.mha_forward(*args, tile_size=32))
+    q = np.asarray(model.mha_forward_quant(*args, tile_size=32))
+    assert not np.array_equal(f, q)
+    # but the quantization error stays bounded at int8 scale
+    assert np.max(np.abs(f - q)) < 0.15
+
+
+def test_scale_mode_d_model_differs():
+    topo = Topology(8, 128, 4, 32)
+    args = testdata.gen_inputs(topo)
+    a = np.asarray(model.mha_forward(*args, tile_size=32,
+                                     scale_mode="sqrt_dk"))
+    b = np.asarray(model.mha_forward(*args, tile_size=32,
+                                     scale_mode="d_model"))
+    assert not np.array_equal(a, b)
+
+
+def _encoder_params(topo, d_ff=None):
+    d_ff = d_ff or 2 * topo.d_model
+    dm, h, dk = topo.d_model, topo.heads, topo.d_k
+    g = lambda s, *shape: testdata.gen_matrix(
+        s, shape[0], int(np.prod(shape[1:]))).reshape(*shape)
+    return {
+        "wq": g(2, h * dk, dm).reshape(h, dk, dm),
+        "wk": g(3, h * dk, dm).reshape(h, dk, dm),
+        "wv": g(4, h * dk, dm).reshape(h, dk, dm),
+        "bq": g(5, h, dk), "bk": g(6, h, dk), "bv": g(7, h, dk),
+        "ln1_g": np.ones(dm, np.float32), "ln1_b": np.zeros(dm, np.float32),
+        "w1": g(8, dm, d_ff), "b1": g(9, 1, d_ff)[0],
+        "w2": g(10, d_ff, dm), "b2": g(11, 1, dm)[0],
+        "ln2_g": np.ones(dm, np.float32), "ln2_b": np.zeros(dm, np.float32),
+    }
+
+
+def test_encoder_forward_matches_ref():
+    topo = Topology(8, 128, 4, 32)
+    params = _encoder_params(topo)
+    x = testdata.gen_matrix(1, topo.seq_len, topo.d_model)
+    got = np.asarray(model.encoder_forward(x, params, tile_size=32))
+    want = np.asarray(ref.encoder_block(x, params))
+    assert got.shape == (topo.seq_len, topo.d_model)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_encoder_layernorm_statistics():
+    topo = Topology(8, 128, 4, 32)
+    params = _encoder_params(topo)
+    x = testdata.gen_matrix(1, topo.seq_len, topo.d_model)
+    out = np.asarray(model.encoder_forward(x, params, tile_size=32))
+    # final LN with unit gamma / zero beta -> rows ~N(0,1)
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(-1), 1.0, atol=1e-2)
+
+
+def test_encoder_params_shape_registry():
+    shapes = model.encoder_params_shape(8, 128, 4)
+    assert shapes["wq"].shape == (4, 32, 128)
+    assert shapes["w1"].shape == (128, 512)
+    p = _encoder_params(Topology(8, 128, 4, 32), d_ff=512)
+    for k, s in shapes.items():
+        assert tuple(p[k].shape) == tuple(s.shape), k

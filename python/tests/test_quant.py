@@ -1,0 +1,46 @@
+"""Quantization helper properties (the int8 datapath contract)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from compile.kernels import quant
+
+
+@hypothesis.given(st.lists(st.floats(-100, 100), min_size=1, max_size=64),
+                  st.floats(1e-3, 2.0))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_quantize_range(vals, scale):
+    q = np.asarray(quant.quantize(np.float32(vals), scale))
+    assert (q >= -128).all() and (q <= 127).all()
+    assert np.array_equal(q, np.round(q))  # integers on the grid
+
+
+@hypothesis.given(st.floats(1e-3, 2.0), st.integers(-128, 127))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_fake_quant_idempotent(scale, level):
+    """Values already on the grid are fixed points of fake_quant."""
+    x = np.float32(level) * scale
+    y = np.asarray(quant.fake_quant(np.float32([x]), scale))[0]
+    assert np.isclose(y, x, rtol=1e-6, atol=1e-7)
+
+
+def test_fake_quant_error_bound():
+    rng = np.random.default_rng(7)
+    x = rng.uniform(-1.9, 1.9, size=1024).astype(np.float32)
+    scale = 1.0 / 64.0
+    err = np.abs(np.asarray(quant.fake_quant(x, scale)) - x)
+    assert (err <= scale / 2 + 1e-7).all()
+
+
+def test_pick_scale_covers_range():
+    x = np.float32([-3.7, 0.1, 2.5])
+    s = float(quant.pick_scale(x))
+    q = np.asarray(quant.quantize(x, s))
+    # max-magnitude element maps to the edge of the grid without clipping
+    assert abs(q).max() == 127
+
+
+def test_pick_scale_zero_input():
+    s = float(quant.pick_scale(np.zeros(4, np.float32)))
+    assert s > 0  # no divide-by-zero downstream

@@ -1,0 +1,70 @@
+"""Softmax kernels (exact + LUT) vs oracle, and LUT error bounds."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from compile import testdata
+from compile.kernels import ref, softmax
+
+
+def mk(seed, r, c):
+    return testdata.gen_matrix(seed, r, c).astype(np.float32)
+
+
+@pytest.mark.parametrize("sl", [4, 16, 64])
+def test_softmax_exact_matches_ref(sl):
+    s = mk(1, sl, sl) * 4.0
+    got = np.asarray(softmax.softmax_exact(s))
+    want = np.asarray(ref.softmax(s))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("bits", [6, 8, 10])
+def test_softmax_lut_matches_ref_lut(bits):
+    s = mk(2, 16, 16) * 4.0
+    got = np.asarray(softmax.softmax_lut(s, bits=bits))
+    want = np.asarray(ref.lut_softmax(s, lut_bits=bits))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_lut_error_shrinks_with_bits():
+    """The LUT step bounds the softmax error: more bits -> closer to exact."""
+    s = mk(3, 32, 32) * 6.0
+    exact = np.asarray(ref.softmax(s))
+    errs = [np.max(np.abs(np.asarray(softmax.softmax_lut(s, bits=b)) - exact))
+            for b in (4, 6, 8, 10)]
+    assert errs == sorted(errs, reverse=True) or errs[-1] < errs[0]
+    assert errs[-1] < 5e-3  # 10-bit LUT is indistinguishable at int8 scale
+
+
+def test_lut_softmax_is_row_stochastic():
+    s = mk(4, 8, 8) * 10.0
+    p = np.asarray(softmax.softmax_lut(s))
+    np.testing.assert_allclose(p.sum(-1), np.ones(8), rtol=1e-6)
+    assert (p >= 0).all()
+
+
+@hypothesis.given(sl=st.sampled_from([2, 4, 8, 16]),
+                  scale=st.floats(0.1, 16.0),
+                  seed=st.integers(1, 100))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_softmax_invariances(sl, scale, seed):
+    s = mk(seed, sl, sl) * scale
+    p = np.asarray(softmax.softmax_exact(s))
+    # shift invariance
+    p2 = np.asarray(softmax.softmax_exact(s + 7.5))
+    np.testing.assert_allclose(p, p2, rtol=1e-5, atol=1e-6)
+    # monotonicity per row
+    row = s[0]
+    order = np.argsort(row, kind="stable")
+    assert (np.diff(p[0][order]) >= -1e-7).all()
+
+
+def test_exp_lut_table_shape():
+    lut = np.asarray(softmax.make_exp_lut(bits=8, x_min=-8.0))
+    assert lut.shape == (256,)
+    assert np.isclose(lut[-1], 1.0)
+    assert np.isclose(lut[0], np.exp(-8.0))
+    assert (np.diff(lut) > 0).all()

@@ -1,0 +1,32 @@
+"""Static TPU projection sanity (DESIGN.md §8)."""
+
+from compile.kernels import tpu_estimate as te
+
+
+def test_headline_topology_fits_vmem():
+    for est in te.estimate_topology(64, 768, 8, 64):
+        assert est.fits_vmem, est.name
+        assert est.vmem_frac < 0.1  # tiny tiles; far from the 16 MiB budget
+
+
+def test_vmem_grows_with_tile_size():
+    a = te.estimate_qkv_tile(64, 768, 8, 16).vmem_bytes
+    b = te.estimate_qkv_tile(64, 768, 8, 64).vmem_bytes
+    assert b > a
+
+
+def test_mxu_util_improves_with_mxu_aligned_dims():
+    small = te.estimate_fused_head(16, 768, 12)   # d_k=64, sl=16 -> padded
+    big = te.estimate_fused_head(128, 1024, 8)    # 128-aligned everywhere
+    assert big.mxu_utilization > small.mxu_utilization
+    assert big.mxu_utilization == 1.0
+
+
+def test_macs_count_matches_closed_form():
+    est = te.estimate_qkv_tile(64, 768, 8, 64)
+    assert est.macs == 3 * 64 * 768 * 96  # 3 projections, full reduction
+
+
+def test_report_formats():
+    out = te.report([(64, 768, 8, 64)])
+    assert "qkv_tiled" in out and "fused_head" in out

@@ -1,0 +1,192 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. load/compute overlap (gamma / double-buffering) — explains the
+//!    TS=32/16 residuals in Table I;
+//! 2. tile size — the resource/latency trade (Section VI);
+//! 3. LUT softmax precision — numerics of the fabric's nonlinearity;
+//! 4. batching policy — reconfiguration counts under mixed workloads.
+//!
+//!     cargo bench --bench ablation
+
+use famous::analytical::LatencyModel;
+use famous::config::Topology;
+use famous::coordinator::{BatchPolicy, Request, Scheduler, SchedulerConfig};
+use famous::fpga::ResourceModel;
+use famous::report::{fmt_f, Table};
+use famous::rng::XorShift64;
+use famous::runtime::Backend;
+use famous::runtime::SimBackend;
+use famous::sim::{SimConfig, Simulator};
+use famous::testdata::MhaInputs;
+
+fn main() {
+    overlap_ablation();
+    tile_size_ablation();
+    softmax_ablation();
+    batching_ablation();
+    println!("ablation OK");
+}
+
+/// 1. Overlap factor: residuals of tests 9-10 shrink as gamma -> 1,
+///    evidence the real pipeline double-buffers tile loads.
+fn overlap_ablation() {
+    let rows = [
+        (Topology::new(64, 768, 8, 64), 0.94, "test 1 (TS=64)"),
+        (Topology::new(64, 768, 8, 32), 1.155, "test 9 (TS=32)"),
+        (Topology::new(64, 768, 8, 16), 1.563, "test 10 (TS=16)"),
+    ];
+    let mut t = Table::new(
+        "Ablation: load/compute overlap gamma (residual vs Table I)",
+        &["row", "paper ms", "g=0", "resid", "g=0.5", "resid", "g=1", "resid"],
+    );
+    for (topo, paper, label) in &rows {
+        let mut cells = vec![label.to_string(), fmt_f(*paper)];
+        for gamma in [0.0, 0.5, 1.0] {
+            let m = LatencyModel::with_overlap(gamma);
+            let ms = m.predict(topo).total_ms();
+            cells.push(fmt_f(ms));
+            cells.push(format!("{:+.0}%", (ms - paper) / paper * 100.0));
+        }
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    // Claim: full overlap explains the small-tile rows far better.
+    let g0 = LatencyModel::with_overlap(0.0);
+    let g1 = LatencyModel::with_overlap(1.0);
+    let t10 = Topology::new(64, 768, 8, 16);
+    assert!(
+        g1.residual_vs_ms(&t10, 1.563).abs() < g0.residual_vs_ms(&t10, 1.563).abs() / 2.0,
+        "gamma=1 should at least halve the TS=16 residual"
+    );
+
+    // The simulator's double_buffer flag implements the same mechanism.
+    let mut t2 = Table::new(
+        "Simulator double-buffering (cycles)",
+        &["TS", "sequential", "double-buffered", "saved"],
+    );
+    for ts in [64usize, 32, 16] {
+        let topo = Topology::new(64, 768, 8, ts);
+        let mut cfg = SimConfig::u55c();
+        cfg.build.tile_size = ts;
+        cfg.build.max_topology.tile_size = ts;
+        let seq = Simulator::new(cfg.clone()).run_timing(&topo).unwrap().cycles;
+        cfg.double_buffer = true;
+        let dbuf = Simulator::new(cfg).run_timing(&topo).unwrap().cycles;
+        t2.row(vec![
+            ts.to_string(),
+            seq.to_string(),
+            dbuf.to_string(),
+            format!("{:.0}%", (seq - dbuf) as f64 / seq as f64 * 100.0),
+        ]);
+        assert!(dbuf < seq);
+    }
+    print!("{}", t2.render());
+}
+
+/// 2. Tile size: smaller tiles free resources but cost latency (tests
+///    9-10's trade, swept more finely).
+fn tile_size_ablation() {
+    let rm = ResourceModel::default();
+    let lm = LatencyModel::default();
+    let mut t = Table::new(
+        "Ablation: tile size trade-off (d_model=768, h=8, SL=64)",
+        &["TS", "DSP", "BRAM18k", "LUT", "latency ms", "GOPS"],
+    );
+    for ts in [16usize, 24, 32, 48, 64, 96, 128] {
+        if 768 % ts != 0 {
+            continue;
+        }
+        let topo = Topology::new(64, 768, 8, ts);
+        let e = rm.estimate(&topo);
+        let ms = lm.predict(&topo).total_ms();
+        t.row(vec![
+            ts.to_string(),
+            e.dsp.to_string(),
+            e.bram18k.to_string(),
+            e.lut.to_string(),
+            fmt_f(ms),
+            fmt_f(famous::metrics::OpCount::paper_convention(&topo) / (ms * 1e-3)),
+        ]);
+    }
+    print!("{}", t.render());
+    // Monotone claims.
+    let ms_at = |ts| lm.predict(&Topology::new(64, 768, 8, ts)).total_ms();
+    assert!(ms_at(64) < ms_at(32) && ms_at(32) < ms_at(16));
+}
+
+/// 3. LUT softmax: functional error vs the exact-exponential datapath.
+fn softmax_ablation() {
+    let topo = Topology::new(64, 256, 8, 64);
+    let inputs = MhaInputs::generate(&topo);
+    let exact = SimBackend::new(SimConfig::u55c()).run_mha(&topo, &inputs).unwrap();
+    let mut t = Table::new(
+        "Ablation: LUT softmax precision (vs exact exponential)",
+        &["LUT bits", "max |err|", "mean |err|"],
+    );
+    let mut prev = f32::INFINITY;
+    for bits in [4u32, 6, 8, 10, 12] {
+        let mut cfg = SimConfig::u55c();
+        cfg.softmax_lut_bits = Some(bits);
+        let got = SimBackend::new(cfg).run_mha(&topo, &inputs).unwrap();
+        let errs: Vec<f32> = got.iter().zip(&exact).map(|(a, b)| (a - b).abs()).collect();
+        let max = errs.iter().copied().fold(0f32, f32::max);
+        let mean = errs.iter().sum::<f32>() / errs.len() as f32;
+        t.row(vec![bits.to_string(), format!("{max:.2e}"), format!("{mean:.2e}")]);
+        assert!(max <= prev * 1.5 + 1e-6, "error should not grow with bits");
+        prev = max;
+    }
+    print!("{}", t.render());
+}
+
+/// 4. Batching policy: reconfigurations on random mixed request streams.
+fn batching_ablation() {
+    let topos = [
+        Topology::new(64, 768, 8, 64),
+        Topology::new(32, 768, 8, 64),
+        Topology::new(64, 512, 8, 64),
+        Topology::new(16, 768, 8, 64),
+    ];
+    let mut rng = XorShift64::new(42);
+    let stream: Vec<Topology> = (0..200).map(|_| rng.pick(&topos).clone()).collect();
+
+    let count = |policy, window| {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 16,
+            policy,
+            fairness_window: window,
+        });
+        for (i, topo) in stream.iter().enumerate() {
+            s.push(Request {
+                id: i as u64,
+                topology: topo.clone(),
+                inputs: MhaInputs {
+                    x: vec![], wq: vec![], wk: vec![], wv: vec![],
+                    bq: vec![], bk: vec![], bv: vec![],
+                },
+            });
+        }
+        let mut switches = 0;
+        let mut last = None;
+        while let Some(b) = s.next_batch() {
+            if last.as_ref() != Some(&b[0].topology) {
+                switches += 1;
+                last = Some(b[0].topology.clone());
+            }
+        }
+        switches
+    };
+    let mut t = Table::new(
+        "Ablation: batching policy (200 mixed requests, 4 topologies)",
+        &["policy", "fairness window", "topology switches"],
+    );
+    t.row(vec!["FIFO".into(), "-".into(), count(BatchPolicy::Fifo, 1).to_string()]);
+    for w in [8usize, 32, 128] {
+        t.row(vec![
+            "GroupByTopology".into(),
+            w.to_string(),
+            count(BatchPolicy::GroupByTopology, w).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    assert!(count(BatchPolicy::GroupByTopology, 128) < count(BatchPolicy::Fifo, 1));
+}

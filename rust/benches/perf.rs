@@ -1,0 +1,133 @@
+//! Hot-path performance benches (EXPERIMENTS.md §Perf).
+//!
+//! Wall-clock micro/meso benches of the layers rust owns:
+//! * simulator timing engine (must be O(phases), not O(cycles));
+//! * functional int8 datapath (the fixed-point GEMM);
+//! * PJRT execute path (artifact inference incl. literal marshalling);
+//! * coordinator serving throughput over the sim datapath.
+//!
+//!     cargo bench --bench perf
+
+use famous::accel::FamousAccelerator;
+use famous::benchlib::{bench, black_box};
+use famous::config::Topology;
+use famous::coordinator::{BatchPolicy, Coordinator, Request, SchedulerConfig};
+use famous::fixed::{matmul_i32_tiled, FxMatrix, Quantizer};
+use famous::report::{fmt_f, Table};
+use famous::runtime::{Backend, Runtime, SimBackend};
+use famous::sim::{SimConfig, Simulator};
+use famous::testdata::MhaInputs;
+
+fn main() {
+    let topo = Topology::new(64, 768, 8, 64);
+    let inputs = MhaInputs::generate(&topo);
+    let mut t = Table::new("Hot-path wall-clock (this host)", &["path", "mean ms", "min ms", "note"]);
+
+    // 1. Simulator timing engine.
+    let s = bench(3, 50, || {
+        let mut sim = Simulator::new(SimConfig::u55c());
+        black_box(sim.run_timing(&topo).unwrap().cycles);
+    });
+    t.row(vec![
+        "sim timing engine".into(),
+        fmt_f(s.mean_ms),
+        fmt_f(s.min_ms),
+        "per request; O(phases)".into(),
+    ]);
+
+    // 2. Fixed-point GEMM (the functional datapath core): one head's QKV.
+    let q = Quantizer::grid64();
+    let x = FxMatrix::from_f32(&inputs.x, 64, 768, &q);
+    let w = FxMatrix::from_f32(&inputs.wq[..96 * 768], 96, 768, &q);
+    let macs = 64.0 * 768.0 * 96.0;
+    let s = bench(3, 30, || {
+        black_box(matmul_i32_tiled(&x, &w, 64));
+    });
+    t.row(vec![
+        "int8 GEMM tiled (ref)".into(),
+        fmt_f(s.mean_ms),
+        fmt_f(s.min_ms),
+        format!("{:.2} Gmac/s", macs / (s.min_ms * 1e-3) / 1e9),
+    ]);
+    let s = bench(3, 30, || {
+        black_box(famous::fixed::matmul_i32_fast(&x, &w));
+    });
+    t.row(vec![
+        "int8 GEMM fast (hot)".into(),
+        fmt_f(s.mean_ms),
+        fmt_f(s.min_ms),
+        format!("{:.2} Gmac/s", macs / (s.min_ms * 1e-3) / 1e9),
+    ]);
+
+    // 3. Full functional datapath (8 heads).
+    let s = bench(1, 10, || {
+        let mut b = SimBackend::new(SimConfig::u55c());
+        black_box(b.run_mha(&topo, &inputs).unwrap());
+    });
+    t.row(vec![
+        "sim datapath full MHA".into(),
+        fmt_f(s.mean_ms),
+        fmt_f(s.min_ms),
+        "int8 8-head (64,768)".into(),
+    ]);
+
+    // 4. PJRT execute, both artifact variants (when artifacts exist).
+    if let Ok(mut rt) = Runtime::load("artifacts") {
+        use famous::runtime::Variant;
+        rt.run_mha(&topo, &inputs).unwrap(); // compile outside timing
+        let s = bench(2, 20, || {
+            black_box(rt.run_mha(&topo, &inputs).unwrap());
+        });
+        t.row(vec![
+            "PJRT deploy (64,768,8)".into(),
+            fmt_f(s.mean_ms),
+            fmt_f(s.min_ms),
+            "XLA-fused artifact; compiled-cache hit".into(),
+        ]);
+        if rt.run_mha_variant(&topo, &inputs, Variant::Pallas).is_ok() {
+            let s = bench(1, 5, || {
+                black_box(rt.run_mha_variant(&topo, &inputs, Variant::Pallas).unwrap());
+            });
+            t.row(vec![
+                "PJRT pallas (64,768,8)".into(),
+                fmt_f(s.mean_ms),
+                fmt_f(s.min_ms),
+                "interpret-grid HLO (while loops on XLA:CPU)".into(),
+            ]);
+        }
+    } else {
+        t.row(vec!["PJRT execute".into(), "-".into(), "-".into(), "no artifacts".into()]);
+    }
+
+    // 5. Coordinator throughput over the sim datapath.
+    let s = bench(0, 3, || {
+        let accel = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+        let mut coord = Coordinator::new(
+            accel,
+            SchedulerConfig {
+                max_batch: 16,
+                policy: BatchPolicy::GroupByTopology,
+                fairness_window: 64,
+            },
+        );
+        for i in 0..32u64 {
+            let tp = if i % 2 == 0 {
+                Topology::new(64, 768, 8, 64)
+            } else {
+                Topology::new(32, 768, 8, 64)
+            };
+            let inp = MhaInputs::generate(&tp);
+            coord.submit(Request { id: i, topology: tp, inputs: inp }).unwrap();
+        }
+        black_box(coord.serve_all().unwrap());
+    });
+    t.row(vec![
+        "coordinator 32 reqs".into(),
+        fmt_f(s.mean_ms),
+        fmt_f(s.min_ms),
+        format!("{:.0} req/s e2e", 32.0 / (s.min_ms * 1e-3)),
+    ]);
+
+    print!("{}", t.render());
+    println!("perf OK");
+}

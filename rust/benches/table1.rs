@@ -1,0 +1,111 @@
+//! Table I regeneration: all 12 tests — latency/GOPS from the cycle-level
+//! simulator (and the analytical model as a cross-check) against the
+//! paper's published values, plus the resource columns from the
+//! structural estimator.
+//!
+//!     cargo bench --bench table1
+
+use famous::analytical::{row_is_reliable, LatencyModel, TABLE1};
+use famous::config::Topology;
+use famous::fpga::ResourceModel;
+use famous::metrics::OpCount;
+use famous::report::{fmt_f, Table};
+use famous::sim::{SimConfig, Simulator};
+
+fn sim_for(device: &str, ts: usize) -> Simulator {
+    let mut cfg = if device == "u200" { SimConfig::u200() } else { SimConfig::u55c() };
+    if ts != cfg.build.tile_size {
+        cfg.build.tile_size = ts;
+        cfg.build.max_topology.tile_size = ts;
+    }
+    Simulator::new(cfg)
+}
+
+fn main() {
+    let model = LatencyModel::default();
+    let mut t = Table::new(
+        "Table I — latency & GOPS (sim vs paper; one constant set, fitted on test 1 only)",
+        &["test", "topology", "TS", "dev", "paper ms", "sim ms", "model ms", "resid", "paper GOPS", "sim GOPS"],
+    );
+    let mut resids = Vec::new();
+    for row in TABLE1 {
+        let label = format!("{},{},{}", row.seq_len, row.d_model, row.heads);
+        if row.d_model % row.heads != 0 {
+            t.row(vec![
+                row.test.to_string(), label, row.tile_size.to_string(), row.device.into(),
+                fmt_f(row.latency_ms), "-".into(), "-".into(),
+                "skipped: d_model % h != 0 (paper quirk)".into(),
+                fmt_f(row.gops), "-".into(),
+            ]);
+            continue;
+        }
+        let topo = row.topology();
+        let mut sim = sim_for(row.device, row.tile_size);
+        let r = sim.run_timing(&topo).expect("admitted");
+        let model_ms = model.predict(&topo).total_ms();
+        let resid = (r.latency_ms - row.latency_ms) / row.latency_ms;
+        if row_is_reliable(row.test) {
+            resids.push(resid.abs());
+        }
+        let gops = OpCount::paper_convention(&topo) / (r.latency_ms * 1e-3);
+        t.row(vec![
+            row.test.to_string(),
+            label,
+            row.tile_size.to_string(),
+            row.device.into(),
+            fmt_f(row.latency_ms),
+            fmt_f(r.latency_ms),
+            fmt_f(model_ms),
+            format!("{:+.1}%{}", resid * 100.0, if row_is_reliable(row.test) { "" } else { " (garbled row)" }),
+            fmt_f(row.gops),
+            fmt_f(gops),
+        ]);
+    }
+    print!("{}", t.render());
+    let median = {
+        let mut r = resids.clone();
+        r.sort_by(f64::total_cmp);
+        r[r.len() / 2]
+    };
+    println!(
+        "reliable rows: {} | median |resid| {:.1}% | max |resid| {:.1}% (tests 9-10: no-overlap reading; see ablation bench)",
+        resids.len(),
+        median * 100.0,
+        resids.iter().copied().fold(0.0, f64::max) * 100.0
+    );
+
+    // Resource columns.
+    let rm = ResourceModel::default();
+    let mut rt = Table::new(
+        "Table I — resources (structural estimate vs paper)",
+        &["build", "DSP", "(paper)", "BRAM18k", "(paper)", "LUT", "(paper)", "FF", "(paper)"],
+    );
+    for (label, topo, p) in [
+        ("U55C TS=64", Topology::new(64, 768, 8, 64), (4157u64, 3148u64, 1_284_782u64, 661_996u64)),
+        ("U55C TS=32", Topology::new(64, 768, 8, 32), (3636, 2636, 746_769, 587_337)),
+        ("U55C TS=16", Topology::new(64, 768, 8, 16), (2996, 2380, 607_554, 529_543)),
+        ("U200 TS=64", Topology::new(64, 768, 6, 64), (3306, 2740, 1_048_022, 625_983)),
+    ] {
+        let e = rm.estimate(&topo);
+        rt.row(vec![
+            label.into(),
+            e.dsp.to_string(), p.0.to_string(),
+            e.bram18k.to_string(), p.1.to_string(),
+            e.lut.to_string(), p.2.to_string(),
+            e.ff.to_string(), p.3.to_string(),
+        ]);
+    }
+    print!("{}", rt.render());
+
+    // Shape assertions: the orderings Table I demonstrates.
+    let ms = |sl, dm, h, ts, dev: &str| {
+        sim_for(dev, ts).run_timing(&Topology::new(sl, dm, h, ts)).unwrap().latency_ms
+    };
+    assert!(ms(64, 768, 8, 64, "u55c") < ms(64, 768, 4, 64, "u55c"));
+    assert!(ms(64, 768, 4, 64, "u55c") < ms(64, 768, 2, 64, "u55c"));
+    assert!(ms(64, 256, 8, 64, "u55c") < ms(64, 512, 8, 64, "u55c"));
+    assert!(ms(64, 768, 8, 64, "u55c") < ms(64, 768, 8, 32, "u55c"));
+    assert!(ms(64, 768, 8, 32, "u55c") < ms(64, 768, 8, 16, "u55c"));
+    assert!(ms(32, 768, 8, 64, "u55c") < ms(64, 768, 8, 64, "u55c"));
+    println!("table1 shape assertions OK");
+}

@@ -1,0 +1,46 @@
+//! Table III regeneration: FAMOUS (dense, FPGA) vs sparse ASIC
+//! accelerators.  The ASIC numbers are published datapoints; our FAMOUS
+//! row is recomputed from the simulator.  The claim to reproduce: dense
+//! FAMOUS lands between A^3 and SpAtten despite forgoing sparsity, at
+//! FPGA (not 1 GHz ASIC) clocks.
+//!
+//!     cargo bench --bench table3
+
+use famous::baselines::ASIC_TABLE3;
+use famous::config::Topology;
+use famous::metrics::OpCount;
+use famous::report::{fmt_f, Table};
+use famous::sim::{SimConfig, Simulator};
+
+fn main() {
+    let topo = Topology::new(64, 768, 8, 64);
+    let ms = Simulator::new(SimConfig::u55c()).run_timing(&topo).unwrap().latency_ms;
+    let ours_gops = OpCount::paper_convention(&topo) / (ms * 1e-3);
+
+    let mut t = Table::new(
+        "Table III — comparison with ASIC accelerators",
+        &["work", "sparse", "technology", "GOPS (paper)", "GOPS (ours)"],
+    );
+    for p in ASIC_TABLE3 {
+        t.row(vec![
+            p.name.into(),
+            if p.sparse { "yes" } else { "no" }.into(),
+            p.tech.into(),
+            fmt_f(p.gops),
+            if p.name == "FAMOUS" { fmt_f(ours_gops) } else { "-".into() },
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Shape: our modeled FAMOUS reproduces the published 328 GOPS and the
+    // orderings against the ASICs.
+    assert!((ours_gops - 328.0).abs() < 5.0, "{ours_gops}");
+    let gops_of = |n: &str| ASIC_TABLE3.iter().find(|p| p.name == n).unwrap().gops;
+    assert!(ours_gops > gops_of("A^3"));
+    assert!(ours_gops < gops_of("SpAtten"));
+    assert!(ours_gops < gops_of("Sanger"));
+    assert!(ours_gops < gops_of("SALO"));
+    println!(
+        "FAMOUS (dense, FPGA) at {ours_gops:.0} GOPS: above A^3 (221), below the sparse 55/45nm ASICs — Table III shape reproduced"
+    );
+}

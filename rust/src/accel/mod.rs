@@ -1,0 +1,189 @@
+//! `FamousAccelerator` — the device-level façade.
+//!
+//! One instance models one programmed FPGA card: a synthesized build
+//! (SimConfig), a functional engine ([`crate::runtime::Backend`] — PJRT
+//! artifacts or the int8 simulator datapath), the cycle-level timing
+//! model, and the structural resource estimate.  `run()` is the analogue
+//! of one µB-triggered accelerator invocation: program registers, stream
+//! operands, compute, read the timer.
+
+use crate::config::Topology;
+use crate::fpga::resources::{ResourceEstimate, ResourceModel, Utilization};
+use crate::jsonlite::Json;
+use crate::metrics::OpCount;
+use crate::runtime::{Backend, SimBackend};
+use crate::sim::{SimConfig, SimResult, Simulator};
+use crate::testdata::MhaInputs;
+use anyhow::{bail, Result};
+
+/// Outcome of one accelerator invocation.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub topology: Topology,
+    /// Functional output (SL × d_model), from the configured backend.
+    pub output: Vec<f32>,
+    /// Modeled fabric latency.
+    pub latency_ms: f64,
+    pub cycles: u64,
+    /// GOPS under the paper's op-count convention for this topology.
+    pub gops: f64,
+    /// GOPS under the strict attention-only convention.
+    pub gops_attention_only: f64,
+    /// Full phase trace (for per-phase attribution and Table IV's
+    /// compute-only view).
+    pub sim: SimResult,
+}
+
+impl RunReport {
+    pub fn compute_only_ms(&self, clock_hz: f64) -> f64 {
+        self.sim.trace.compute_only() as f64 / clock_hz * 1e3
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("topology", self.topology.to_json()),
+            ("latency_ms", Json::from(self.latency_ms)),
+            ("cycles", Json::from(self.cycles as f64)),
+            ("gops", Json::from(self.gops)),
+        ])
+    }
+}
+
+/// The accelerator: build + backend + telemetry.
+pub struct FamousAccelerator {
+    pub config: SimConfig,
+    // NOTE: not Send — the PJRT client is Rc-based; the server constructs
+    // the accelerator on its worker thread (see coordinator::server).
+    backend: Box<dyn Backend>,
+    pub resource_model: ResourceModel,
+    /// Completed invocations.
+    pub runs: u64,
+}
+
+impl FamousAccelerator {
+    pub fn new(config: SimConfig, backend: Box<dyn Backend>) -> Self {
+        FamousAccelerator { config, backend, resource_model: ResourceModel::default(), runs: 0 }
+    }
+
+    /// Accelerator whose functional engine is the PJRT runtime over
+    /// `artifacts/` (the production configuration).
+    pub fn with_pjrt(config: SimConfig, artifacts_dir: &str) -> Result<Self> {
+        let rt = crate::runtime::Runtime::load(artifacts_dir)?;
+        Ok(Self::new(config, Box::new(rt)))
+    }
+
+    /// Accelerator whose functional engine is the int8 simulator datapath
+    /// (no artifacts needed; independent cross-check of the PJRT path).
+    pub fn with_sim_datapath(config: SimConfig) -> Self {
+        let backend = SimBackend::new(config.clone());
+        Self::new(config, Box::new(backend))
+    }
+
+    /// Resource estimate of this build (synthesis-time).
+    pub fn resources(&self) -> ResourceEstimate {
+        // Resources are set by the synthesized maxima at the paper's
+        // synthesis point (SL=64 convention; analytical/mod.rs docs).
+        let mut synth = self.config.build.max_topology.clone();
+        synth.seq_len = synth.seq_len.min(64);
+        self.resource_model.estimate(&synth)
+    }
+
+    pub fn utilization(&self) -> Utilization {
+        self.resources().utilization(&self.config.build.device)
+    }
+
+    /// One invocation: admission check → timing sim → functional compute.
+    pub fn run(&mut self, topo: &Topology, inputs: &MhaInputs) -> Result<RunReport> {
+        if let Err(e) = self.config.build.admits(topo) {
+            bail!("admission: {e}");
+        }
+        let mut sim = Simulator::new(self.config.clone());
+        let sim_result = sim.run_timing(topo).map_err(|e| anyhow::anyhow!("sim: {e}"))?;
+        let output = self.backend.run_mha(topo, inputs)?;
+        let expected = topo.seq_len * topo.d_model;
+        if output.len() != expected {
+            bail!("backend returned {} elements, expected {expected}", output.len());
+        }
+        self.runs += 1;
+        let latency_ms = sim_result.latency_ms;
+        Ok(RunReport {
+            topology: topo.clone(),
+            gops: OpCount::paper_convention(topo) / (latency_ms * 1e-3),
+            gops_attention_only: OpCount::attention_only(topo).giga() / (latency_ms * 1e-3),
+            latency_ms,
+            cycles: sim_result.cycles,
+            output,
+            sim: sim_result,
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn accel() -> FamousAccelerator {
+        FamousAccelerator::with_sim_datapath(SimConfig::u55c())
+    }
+
+    #[test]
+    fn headline_run() {
+        let mut a = accel();
+        let topo = Topology::new(64, 768, 8, 64);
+        let r = a.run(&topo, &MhaInputs::generate(&topo)).unwrap();
+        assert_eq!(r.output.len(), 64 * 768);
+        assert!((r.latency_ms - 0.94).abs() < 0.01);
+        assert!((r.gops - 328.0).abs() < 5.0, "{}", r.gops);
+        assert_eq!(a.runs, 1);
+    }
+
+    #[test]
+    fn admission_rejects_oversized() {
+        let mut a = accel();
+        let topo = Topology::new(64, 1536, 8, 64);
+        assert!(a.run(&topo, &MhaInputs::generate(&topo)).is_err());
+        assert_eq!(a.runs, 0);
+    }
+
+    #[test]
+    fn resources_match_paper_build() {
+        let a = accel();
+        let r = a.resources();
+        assert!((r.dsp as f64 - 4157.0).abs() / 4157.0 < 0.01);
+        let u = a.utilization();
+        assert!((u.lut_pct - 98.0).abs() < 2.5);
+    }
+
+    #[test]
+    fn compute_only_view() {
+        let mut a = accel();
+        let topo = Topology::new(64, 768, 8, 64);
+        let r = a.run(&topo, &MhaInputs::generate(&topo)).unwrap();
+        let co = r.compute_only_ms(a.config.build.clock_hz);
+        assert!(co < r.latency_ms);
+        assert!((co - 0.494).abs() / 0.494 < 0.10, "{co}");
+    }
+
+    #[test]
+    fn gops_scales_down_with_fewer_heads() {
+        // Table I tests 1-3 shape: fewer runtime heads -> lower GOPS.
+        let mut a = accel();
+        let g8 = {
+            let t = Topology::new(64, 768, 8, 64);
+            a.run(&t, &MhaInputs::generate(&t)).unwrap().gops
+        };
+        let g4 = {
+            let t = Topology::new(64, 768, 4, 64);
+            a.run(&t, &MhaInputs::generate(&t)).unwrap().gops
+        };
+        let g2 = {
+            let t = Topology::new(64, 768, 2, 64);
+            a.run(&t, &MhaInputs::generate(&t)).unwrap().gops
+        };
+        assert!(g8 > g4 && g4 > g2);
+    }
+}

@@ -1,0 +1,117 @@
+//! Section VII analytical latency model (eqs. 3–14).
+//!
+//! The paper decomposes total latency into eight phase terms, each an
+//! instance of the pipelined-loop algebra in [`crate::fpga::hls`]:
+//!
+//! | term | meaning                                   | eq. |
+//! |------|-------------------------------------------|-----|
+//! | LI   | load all inputs from HBM                  | 5   |
+//! | LB   | load all biases                           | 6   |
+//! | LIA  | load input tile per attention head        | 7   |
+//! | LWA  | load weight tile per attention head       | 8   |
+//! | SA   | QKV computation in `QKV_PM`               | 9   |
+//! | BA   | bias addition                             | 10  |
+//! | S    | score computation in `QK_PM`              | 11  |
+//! | SV   | weighted values in `SV_PM`                | 12  |
+//!
+//! Pipeline depths come from the paper's text: `PD_L` = 7 (AXI setup) +
+//! 1 (addr) + 1 (load) + 1 (store) + 3 (float→fixed) = 13 cc;
+//! `PD_MHA` = d_model/TS + load(1) + mul(2) + add(1) + store(1);
+//! `PD_BA` = 3; `PD_S` = d_k; `PD_SV` = SL.
+//!
+//! ## Calibration (DESIGN.md §6)
+//!
+//! The poster's equations as printed do **not** reduce to its own
+//! Table I: a literal sum gives 0.24 ms for test 1 vs 0.94 ms measured
+//! (the paper's own model text quotes 0.98 ms, so repetition factors were
+//! evidently compressed out of the printed equations).  We apply the
+//! smallest structural completion that explains the data:
+//!
+//! * the per-head tile phases (LIA, LWA, SA) repeat once per tile
+//!   (`d_model/TS` times — the Fig. 4 schedule);
+//! * one fixed control overhead `C0` (µB instruction generation, AXI-lite
+//!   handshakes, start/stop timing) fitted on test 1 **only**: 72 020 cc;
+//! * an optional load/compute overlap factor `gamma` (double-buffering
+//!   ablation; default 0 = the paper's sequential reading).
+//!
+//! One constant set must explain all rows; per-test residuals are
+//! recorded in EXPERIMENTS.md (typ. ±5%, worst +63% on the TS=16 rebuild,
+//! where real hardware evidently overlaps loads with compute — see the
+//! `gamma` ablation bench).
+
+mod model;
+
+pub use model::{LatencyBreakdown, LatencyModel, PhaseCycles};
+
+/// Paper-published Table I measurements for residual reporting
+/// (test id, topology fields, device, latency ms, GOPS).
+pub struct PaperRow {
+    pub test: u32,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub tile_size: usize,
+    pub device: &'static str,
+    pub latency_ms: f64,
+    pub gops: f64,
+}
+
+impl PaperRow {
+    pub fn topology(&self) -> crate::config::Topology {
+        crate::config::Topology::new(self.seq_len, self.d_model, self.heads, self.tile_size)
+    }
+}
+
+/// Table I as published.  Test 8's row is garbled in the source scan
+/// (latency "13", GOPS "16"); we carry it for completeness but exclude it
+/// from residual statistics (flagged by `row_is_reliable`).
+pub const TABLE1: &[PaperRow] = &[
+    PaperRow { test: 1, seq_len: 64, d_model: 768, heads: 8, tile_size: 64, device: "u55c", latency_ms: 0.94, gops: 328.0 },
+    PaperRow { test: 2, seq_len: 64, d_model: 768, heads: 4, tile_size: 64, device: "u55c", latency_ms: 1.401, gops: 220.0 },
+    PaperRow { test: 3, seq_len: 64, d_model: 768, heads: 2, tile_size: 64, device: "u55c", latency_ms: 2.281, gops: 135.0 },
+    PaperRow { test: 4, seq_len: 64, d_model: 512, heads: 8, tile_size: 64, device: "u55c", latency_ms: 0.597, gops: 184.0 },
+    PaperRow { test: 5, seq_len: 64, d_model: 256, heads: 8, tile_size: 64, device: "u55c", latency_ms: 0.352, gops: 312.0 },
+    PaperRow { test: 6, seq_len: 128, d_model: 768, heads: 8, tile_size: 64, device: "u55c", latency_ms: 2.0, gops: 314.0 },
+    PaperRow { test: 7, seq_len: 32, d_model: 768, heads: 8, tile_size: 64, device: "u55c", latency_ms: 0.534, gops: 285.0 },
+    PaperRow { test: 8, seq_len: 16, d_model: 768, heads: 8, tile_size: 64, device: "u55c", latency_ms: 1.3, gops: 16.0 },
+    PaperRow { test: 9, seq_len: 64, d_model: 768, heads: 8, tile_size: 32, device: "u55c", latency_ms: 1.155, gops: 267.0 },
+    PaperRow { test: 10, seq_len: 64, d_model: 768, heads: 8, tile_size: 16, device: "u55c", latency_ms: 1.563, gops: 197.0 },
+    PaperRow { test: 11, seq_len: 64, d_model: 768, heads: 6, tile_size: 64, device: "u200", latency_ms: 0.977, gops: 315.0 },
+    PaperRow { test: 12, seq_len: 64, d_model: 512, heads: 6, tile_size: 64, device: "u200", latency_ms: 0.604, gops: 182.0 },
+];
+
+/// Test 8's published numbers are OCR-garbled (see TABLE1 docs).
+pub fn row_is_reliable(test: u32) -> bool {
+    test != 8
+}
+
+/// The paper's own analytical-model predictions quoted in Section VII
+/// (test id, predicted ms at 400 MHz).
+pub const PAPER_PREDICTIONS: &[(u32, f64)] = &[(1, 0.98), (6, 1.9)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_is_complete() {
+        assert_eq!(TABLE1.len(), 12);
+        assert!(TABLE1.iter().all(|r| r.latency_ms > 0.0));
+        assert_eq!(TABLE1.iter().filter(|r| r.device == "u200").count(), 2);
+    }
+
+    #[test]
+    fn reliability_flags() {
+        assert!(!row_is_reliable(8));
+        assert!(row_is_reliable(1));
+    }
+
+    #[test]
+    fn topologies_well_formed_where_divisible() {
+        for r in TABLE1 {
+            if r.d_model % r.heads == 0 {
+                assert!(r.topology().validate().is_ok(), "test {}", r.test);
+            }
+        }
+    }
+}

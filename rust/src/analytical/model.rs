@@ -1,0 +1,298 @@
+//! The latency model proper: phase equations + calibration constants.
+
+use crate::config::Topology;
+use crate::fpga::hls::{LoopNest, PipelinedLoop};
+use crate::jsonlite::Json;
+
+/// Per-phase cycle attribution (eqs. 5–12 plus the calibrated overhead).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseCycles {
+    /// LI — load all inputs (eq. 5).
+    pub li: u64,
+    /// LB — load biases (eq. 6).
+    pub lb: u64,
+    /// LIA — per-head input-tile loads, all tiles (eq. 7 × n_tiles).
+    pub lia: u64,
+    /// LWA — per-head weight-tile loads, all tiles (eq. 8 × n_tiles).
+    pub lwa: u64,
+    /// SA — QKV_PM compute, all tiles (eq. 9 × n_tiles).
+    pub sa: u64,
+    /// BA — bias addition (eq. 10).
+    pub ba: u64,
+    /// S — QK_PM score compute + softmax hand-off (eq. 11).
+    pub s: u64,
+    /// SV — SV_PM weighted values (eq. 12).
+    pub sv: u64,
+    /// Calibrated fixed control overhead (µB + AXI-lite; DESIGN.md §6).
+    pub overhead: u64,
+    /// Cycles saved by load/compute overlap (subtracted from the total;
+    /// non-zero only when the model's `gamma` ablation knob is set).
+    pub overlap_saved: u64,
+}
+
+impl PhaseCycles {
+    /// Total latency in cycles (eq. 13 + overhead − overlap).
+    pub fn total(&self) -> u64 {
+        (self.li + self.lb + self.lia + self.lwa + self.sa + self.ba + self.s + self.sv
+            + self.overhead)
+            .saturating_sub(self.overlap_saved)
+    }
+
+    /// Compute-only latency: "excluding the latency associated with load
+    /// and store operations" — the Table IV convention.
+    pub fn compute_only(&self) -> u64 {
+        self.sa + self.ba + self.s + self.sv + self.overhead
+    }
+
+    /// Pure load cycles (AXI/HBM traffic phases).
+    pub fn load_only(&self) -> u64 {
+        self.li + self.lb + self.lia + self.lwa
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("li", Json::from(self.li as f64)),
+            ("lb", Json::from(self.lb as f64)),
+            ("lia", Json::from(self.lia as f64)),
+            ("lwa", Json::from(self.lwa as f64)),
+            ("sa", Json::from(self.sa as f64)),
+            ("ba", Json::from(self.ba as f64)),
+            ("s", Json::from(self.s as f64)),
+            ("sv", Json::from(self.sv as f64)),
+            ("overhead", Json::from(self.overhead as f64)),
+            ("total", Json::from(self.total() as f64)),
+        ])
+    }
+}
+
+/// Full prediction for one topology.
+#[derive(Clone, Debug)]
+pub struct LatencyBreakdown {
+    pub topology: Topology,
+    pub phases: PhaseCycles,
+    pub clock_hz: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total_cycles(&self) -> u64 {
+        self.phases.total()
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.phases.total() as f64 / self.clock_hz * 1e3
+    }
+
+    pub fn compute_only_ms(&self) -> f64 {
+        self.phases.compute_only() as f64 / self.clock_hz * 1e3
+    }
+}
+
+/// Calibration constants (module docs in `analytical/mod.rs` explain the
+/// provenance of each value).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyModel {
+    /// PD_L: AXI setup 7 + addr 1 + load 1 + store 1 + float→fixed 3.
+    pub pd_l: u64,
+    /// Extra terms in PD_MHA beyond d_model/TS: load 1 + mul 2 + add 1 +
+    /// store 1.
+    pub pd_mha_const: u64,
+    /// PD_BA: load + add + store.
+    pub pd_ba: u64,
+    /// Fixed control overhead C0 (fitted on Table I test 1 only).
+    pub c0: u64,
+    /// Load/compute overlap in the tile loop, 0..=1 (0 = the paper's
+    /// sequential equations; 1 = perfect double buffering).
+    pub gamma: f64,
+    /// Fabric clock for ms conversion.
+    pub clock_hz: f64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel {
+            pd_l: 13,
+            pd_mha_const: 5,
+            pd_ba: 3,
+            c0: 72_020,
+            gamma: 0.0,
+            clock_hz: 400e6,
+        }
+    }
+}
+
+impl LatencyModel {
+    /// Ablation constructor: same constants, different overlap factor.
+    pub fn with_overlap(gamma: f64) -> Self {
+        // Under full overlap the fixed overhead absorbs the un-overlapped
+        // pipeline fill; refit of C0 on test 1 gives 158_036 (DESIGN.md §6).
+        let c0 = if gamma > 0.0 { (72_020.0 + gamma * 86_016.0) as u64 } else { 72_020 };
+        LatencyModel { gamma, c0, ..LatencyModel::default() }
+    }
+
+    /// Predict the phase breakdown for one topology (eqs. 5–13).
+    pub fn predict(&self, topo: &Topology) -> LatencyBreakdown {
+        let sl = topo.seq_len as u64;
+        let dm = topo.d_model as u64;
+        let dk = topo.d_k() as u64;
+        let ts = topo.tile_size as u64;
+        let n_tiles = topo.n_tiles() as u64;
+
+        // eq. 5: LI = [(d_model−1)·1 + PD_L] · SL
+        let li = LoopNest::new(PipelinedLoop::new(dm, 1, self.pd_l), sl).latency();
+        // eq. 6: LB = (d_k−1)·1 + PD_L
+        let lb = PipelinedLoop::new(dk, 1, self.pd_l).latency();
+        // eq. 7 × n_tiles: LIA = [(TS−1)·1 + PD_L] · SL, per tile
+        let lia_tile = LoopNest::new(PipelinedLoop::new(ts, 1, self.pd_l), sl).latency();
+        let lia = lia_tile * n_tiles;
+        // eq. 8 × n_tiles: LWA = [(d_k−1)·1 + PD_L] · SL, per tile
+        let lwa_tile = LoopNest::new(PipelinedLoop::new(dk, 1, self.pd_l), sl).latency();
+        let lwa = lwa_tile * n_tiles;
+        // eq. 9 × n_tiles: SA = [(d_k−1)·1 + PD_MHA] · SL, PD_MHA = n_tiles + 5
+        let pd_mha = n_tiles + self.pd_mha_const;
+        let sa_tile = LoopNest::new(PipelinedLoop::new(dk, 1, pd_mha), sl).latency();
+        let sa = sa_tile * n_tiles;
+        // eq. 10: BA = [(d_k−1)·1 + PD_BA] · SL
+        let ba = LoopNest::new(PipelinedLoop::new(dk, 1, self.pd_ba), sl).latency();
+        // eq. 11: S = [(SL−1)·1 + PD_S] · SL, PD_S = d_k
+        let s = LoopNest::new(PipelinedLoop::new(sl, 1, dk), sl).latency();
+        // eq. 12: SV = [(d_k−1)·1 + PD_SV] · SL, PD_SV = SL
+        let sv = LoopNest::new(PipelinedLoop::new(dk, 1, sl), sl).latency();
+
+        // gamma ablation: per tile, overlap hides min(loads, compute).
+        let overlap_saved = if self.gamma > 0.0 {
+            let per_tile = (lia_tile + lwa_tile).min(sa_tile);
+            (self.gamma * (per_tile * n_tiles) as f64) as u64
+        } else {
+            0
+        };
+
+        LatencyBreakdown {
+            topology: topo.clone(),
+            phases: PhaseCycles {
+                li,
+                lb,
+                lia,
+                lwa,
+                sa,
+                ba,
+                s,
+                sv,
+                overhead: self.c0,
+                overlap_saved,
+            },
+            clock_hz: self.clock_hz,
+        }
+    }
+
+    /// Residual vs a measured latency: (predicted − measured)/measured.
+    pub fn residual_vs_ms(&self, topo: &Topology, measured_ms: f64) -> f64 {
+        (self.predict(topo).total_ms() - measured_ms) / measured_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::{row_is_reliable, TABLE1};
+
+    fn t1() -> Topology {
+        Topology::new(64, 768, 8, 64)
+    }
+
+    #[test]
+    fn phase_values_match_hand_computation_test1() {
+        // Worked numbers from DESIGN.md §6 (PD_L=13, PD_MHA=17).
+        let p = LatencyModel::default().predict(&t1()).phases;
+        assert_eq!(p.li, 49_920);
+        assert_eq!(p.lb, 108);
+        assert_eq!(p.lia, 4_864 * 12);
+        assert_eq!(p.lwa, 6_912 * 12);
+        assert_eq!(p.sa, 7_168 * 12);
+        assert_eq!(p.ba, 6_272);
+        assert_eq!(p.s, 10_176);
+        assert_eq!(p.sv, 10_176);
+    }
+
+    #[test]
+    fn test1_calibrated_to_measured() {
+        // C0 was fitted on this row; it must land exactly.
+        let ms = LatencyModel::default().predict(&t1()).total_ms();
+        assert!((ms - 0.94).abs() < 0.005, "{ms}");
+    }
+
+    #[test]
+    fn runtime_rows_within_tolerance() {
+        // Tests 2-7 share the constants fitted on test 1; the model must
+        // hold within ±15% (the paper's own model is ±5% on 2 points).
+        let m = LatencyModel::default();
+        for row in TABLE1.iter().filter(|r| {
+            row_is_reliable(r.test) && r.test <= 7 && r.d_model % r.heads == 0
+        }) {
+            let resid = m.residual_vs_ms(&row.topology(), row.latency_ms);
+            assert!(
+                resid.abs() < 0.15,
+                "test {}: resid {:.1}%",
+                row.test,
+                resid * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn latency_orderings_match_table1() {
+        // The *shape* claims: fewer heads -> slower; smaller d_model ->
+        // faster; longer sequence -> slower; smaller tile -> slower.
+        let m = LatencyModel::default();
+        let ms = |sl, dm, h, ts| m.predict(&Topology::new(sl, dm, h, ts)).total_ms();
+        assert!(ms(64, 768, 8, 64) < ms(64, 768, 4, 64));
+        assert!(ms(64, 768, 4, 64) < ms(64, 768, 2, 64));
+        assert!(ms(64, 256, 8, 64) < ms(64, 512, 8, 64));
+        assert!(ms(64, 512, 8, 64) < ms(64, 768, 8, 64));
+        assert!(ms(32, 768, 8, 64) < ms(64, 768, 8, 64));
+        assert!(ms(64, 768, 8, 64) < ms(128, 768, 8, 64));
+        assert!(ms(64, 768, 8, 64) < ms(64, 768, 8, 32));
+        assert!(ms(64, 768, 8, 32) < ms(64, 768, 8, 16));
+    }
+
+    #[test]
+    fn compute_only_matches_table4_convention() {
+        // Table IV reports FAMOUS at 0.494 ms compute-only for test 1's
+        // topology; our compute_only() should land within 10%.
+        let b = LatencyModel::default().predict(&t1());
+        let ms = b.compute_only_ms();
+        assert!((ms - 0.494).abs() / 0.494 < 0.10, "{ms}");
+    }
+
+    #[test]
+    fn paper_prediction_agreement() {
+        // The paper's own model says 0.98 ms (test 1) and 1.9 ms (test 6);
+        // ours must be within 15% of those predictions too.
+        let m = LatencyModel::default();
+        let p1 = m.predict(&t1()).total_ms();
+        assert!((p1 - 0.98).abs() / 0.98 < 0.15, "{p1}");
+        let p6 = m.predict(&Topology::new(128, 768, 8, 64)).total_ms();
+        assert!((p6 - 1.9).abs() / 1.9 < 0.15, "{p6}");
+    }
+
+    #[test]
+    fn overlap_ablation_helps_small_tiles() {
+        // gamma=1 (full double-buffering) must bring the TS=32 rebuild
+        // (test 9) much closer to its measurement than gamma=0 does.
+        let seq = Topology::new(64, 768, 8, 32);
+        let g0 = LatencyModel::default().residual_vs_ms(&seq, 1.155).abs();
+        let g1 = LatencyModel::with_overlap(1.0).residual_vs_ms(&seq, 1.155).abs();
+        assert!(g1 < g0, "g0={g0:.3} g1={g1:.3}");
+        assert!(g1 < 0.10, "g1={g1:.3}");
+    }
+
+    #[test]
+    fn totals_are_consistent() {
+        let p = LatencyModel::default().predict(&t1()).phases;
+        assert_eq!(
+            p.total(),
+            p.li + p.lb + p.lia + p.lwa + p.sa + p.ba + p.s + p.sv + p.overhead
+        );
+        assert!(p.compute_only() < p.total());
+        assert_eq!(p.load_only(), p.li + p.lb + p.lia + p.lwa);
+    }
+}

@@ -1,0 +1,222 @@
+//! Measured CPU attention baseline.
+//!
+//! The paper compares against Intel Xeon CPUs running dense MHA at f32.
+//! This is the equivalent computation on the present host: a naive
+//! textbook implementation and a cache-blocked one (the fair software
+//! baseline), both single-threaded by default with an optional
+//! thread-pool parallel mode.  Used by the Table II bench to put a *real*
+//! measured number beside the paper's published platform points.
+
+use crate::config::Topology;
+use crate::exec::ThreadPool;
+use crate::testdata::MhaInputs;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// f32 CPU MHA with selectable kernel.
+pub struct CpuAttention {
+    pub block: usize,
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl CpuAttention {
+    pub fn naive() -> Self {
+        CpuAttention { block: 0, pool: None }
+    }
+
+    pub fn blocked(block: usize) -> Self {
+        CpuAttention { block, pool: None }
+    }
+
+    pub fn parallel(block: usize) -> Self {
+        CpuAttention { block, pool: Some(Arc::new(ThreadPool::default_size())) }
+    }
+
+    /// Run MHA; returns (output, wall-clock ms).
+    pub fn run(&self, topo: &Topology, inp: &MhaInputs) -> (Vec<f32>, f64) {
+        let t0 = Instant::now();
+        let out = match &self.pool {
+            Some(pool) => self.run_parallel(topo, inp, pool),
+            None => {
+                let mut out = vec![0f32; topo.seq_len * topo.d_model];
+                for head in 0..topo.heads {
+                    self.run_head(topo, inp, head, &mut out);
+                }
+                out
+            }
+        };
+        (out, t0.elapsed().as_secs_f64() * 1e3)
+    }
+
+    fn run_parallel(&self, topo: &Topology, inp: &MhaInputs, pool: &Arc<ThreadPool>) -> Vec<f32> {
+        let heads: Vec<usize> = (0..topo.heads).collect();
+        // Each head writes a disjoint column stripe; compute stripes then merge.
+        let cfg = CpuAttention { block: self.block, pool: None };
+        let topo2 = topo.clone();
+        let inp2 = MhaInputs {
+            x: inp.x.clone(),
+            wq: inp.wq.clone(),
+            wk: inp.wk.clone(),
+            wv: inp.wv.clone(),
+            bq: inp.bq.clone(),
+            bk: inp.bk.clone(),
+            bv: inp.bv.clone(),
+        };
+        let shared = Arc::new((cfg, topo2, inp2));
+        let stripes = pool.parallel_map(heads, move |head| {
+            let (cfg, topo, inp) = &*shared.clone();
+            let mut out = vec![0f32; topo.seq_len * topo.d_model];
+            cfg.run_head(topo, inp, head, &mut out);
+            (head, out)
+        });
+        let dk = topo.d_k();
+        let dm = topo.d_model;
+        let mut out = vec![0f32; topo.seq_len * dm];
+        for (head, stripe) in stripes {
+            for i in 0..topo.seq_len {
+                let a = i * dm + head * dk;
+                out[a..a + dk].copy_from_slice(&stripe[a..a + dk]);
+            }
+        }
+        out
+    }
+
+    fn run_head(&self, topo: &Topology, inp: &MhaInputs, head: usize, out: &mut [f32]) {
+        let (sl, dm, dk) = (topo.seq_len, topo.d_model, topo.d_k());
+        let wr = head * dk * dm..(head + 1) * dk * dm;
+        let br = head * dk..(head + 1) * dk;
+        let q = self.proj(&inp.x, &inp.wq[wr.clone()], &inp.bq[br.clone()], sl, dm, dk);
+        let k = self.proj(&inp.x, &inp.wk[wr.clone()], &inp.bk[br.clone()], sl, dm, dk);
+        let v = self.proj(&inp.x, &inp.wv[wr], &inp.bv[br], sl, dm, dk);
+        // scores + softmax
+        let scale = 1.0 / (dk as f32).sqrt();
+        let mut s = vec![0f32; sl * sl];
+        for i in 0..sl {
+            for j in 0..sl {
+                let mut acc = 0f32;
+                for l in 0..dk {
+                    acc += q[i * dk + l] * k[j * dk + l];
+                }
+                s[i * sl + j] = acc * scale;
+            }
+        }
+        for i in 0..sl {
+            let row = &mut s[i * sl..(i + 1) * sl];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0;
+            for vv in row.iter_mut() {
+                *vv = (*vv - m).exp();
+                sum += *vv;
+            }
+            for vv in row.iter_mut() {
+                *vv /= sum;
+            }
+        }
+        // SV, written into the head's column stripe
+        for i in 0..sl {
+            for j in 0..dk {
+                let mut acc = 0f32;
+                for l in 0..sl {
+                    acc += s[i * sl + l] * v[l * dk + j];
+                }
+                out[i * dm + head * dk + j] = acc;
+            }
+        }
+    }
+
+    /// x (sl×dm) @ w (dk×dm)ᵀ + b, naive or blocked over the reduction.
+    fn proj(&self, x: &[f32], w: &[f32], b: &[f32], sl: usize, dm: usize, dk: usize) -> Vec<f32> {
+        let mut out = vec![0f32; sl * dk];
+        if self.block == 0 {
+            for i in 0..sl {
+                for j in 0..dk {
+                    let mut acc = 0f32;
+                    for l in 0..dm {
+                        acc += x[i * dm + l] * w[j * dm + l];
+                    }
+                    out[i * dk + j] = acc + b[j];
+                }
+            }
+        } else {
+            let bs = self.block;
+            for l0 in (0..dm).step_by(bs) {
+                let l1 = (l0 + bs).min(dm);
+                for i in 0..sl {
+                    let xrow = &x[i * dm..(i + 1) * dm];
+                    for j in 0..dk {
+                        let wrow = &w[j * dm..(j + 1) * dm];
+                        let mut acc = 0f32;
+                        for l in l0..l1 {
+                            acc += xrow[l] * wrow[l];
+                        }
+                        out[i * dk + j] += acc;
+                    }
+                }
+            }
+            for i in 0..sl {
+                for j in 0..dk {
+                    out[i * dk + j] += b[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new(8, 64, 4, 16)
+    }
+
+    #[test]
+    fn naive_and_blocked_agree() {
+        let t = topo();
+        let inp = MhaInputs::generate(&t);
+        let (a, _) = CpuAttention::naive().run(&t, &inp);
+        let (b, _) = CpuAttention::blocked(16).run(&t, &inp);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn parallel_agrees_with_serial() {
+        let t = Topology::new(16, 128, 4, 32);
+        let inp = MhaInputs::generate(&t);
+        let (a, _) = CpuAttention::blocked(32).run(&t, &inp);
+        let (b, _) = CpuAttention::parallel(32).run(&t, &inp);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matches_simulator_datapath() {
+        // The CPU f32 baseline and the accelerator's int8 datapath see
+        // the same grid-aligned inputs -> outputs agree to fp tolerance.
+        let t = Topology::new(8, 64, 2, 16);
+        let inp = MhaInputs::generate(&t);
+        let (cpu_out, _) = CpuAttention::naive().run(&t, &inp);
+        let mut sim = crate::sim::Simulator::new({
+            let mut c = crate::sim::SimConfig::u55c();
+            c.build.tile_size = 16;
+            c.build.max_topology = crate::config::Topology::new(128, 768, 8, 16);
+            c
+        });
+        let sim_out = sim.run(&t, &inp).unwrap().output.unwrap();
+        for (x, y) in cpu_out.iter().zip(&sim_out) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn reports_positive_latency() {
+        let t = topo();
+        let inp = MhaInputs::generate(&t);
+        let (_, ms) = CpuAttention::naive().run(&t, &inp);
+        assert!(ms > 0.0);
+    }
+}

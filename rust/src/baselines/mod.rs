@@ -1,0 +1,17 @@
+//! Comparison baselines for Tables II–IV.
+//!
+//! Two kinds (DESIGN.md §2):
+//! * [`cpu`] — a real, measured attention implementation on this host
+//!   (naive + cache-blocked), the honest "general-purpose platform"
+//!   comparator we can actually run.
+//! * [`platforms`] — the published datapoints of every platform the paper
+//!   compares against (CPUs, GPUs, ASICs, FPGA accelerators), carried as
+//!   data so the tables can be regenerated with like-for-like ratios.
+
+pub mod cpu;
+pub mod platforms;
+
+pub use cpu::CpuAttention;
+pub use platforms::{
+    PlatformPoint, ASIC_TABLE3, FAMOUS_TABLE2, FPGA_TABLE4, PLATFORMS_TABLE2,
+};

@@ -1,0 +1,62 @@
+//! Tiny benchmarking helpers shared by the `benches/` targets (criterion
+//! is unavailable in the offline image; see DESIGN.md §2).
+
+use std::time::Instant;
+
+/// Wall-clock statistics of repeated runs of `f`, in milliseconds.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl BenchStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "mean {:.4} ms  min {:.4} ms  max {:.4} ms  ({} iters)",
+            self.mean_ms, self.min_ms, self.max_ms, self.iters
+        )
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench(warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchStats {
+        iters,
+        mean_ms: mean,
+        min_ms: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max_ms: samples.iter().copied().fold(0.0, f64::max),
+    }
+}
+
+/// Keep a value from being optimized away.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let s = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.min_ms <= s.mean_ms && s.mean_ms <= s.max_ms);
+    }
+}

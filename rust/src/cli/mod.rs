@@ -1,0 +1,237 @@
+//! Tiny CLI argument parser (no clap in the offline image).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative spec for one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key}: expected number, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Command parser: subcommands + options.
+pub struct Parser {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub subcommands: Vec<(&'static str, &'static str)>,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Parser {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Parser { program, about, subcommands: Vec::new(), opts: Vec::new() }
+    }
+
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} ", self.program, self.about, self.program);
+        if !self.subcommands.is_empty() {
+            s.push_str("<SUBCOMMAND> ");
+        }
+        s.push_str("[OPTIONS]\n");
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for (name, help) in &self.subcommands {
+                s.push_str(&format!("  {name:<16} {help}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let lhs = if o.takes_value {
+                    format!("--{} <v>", o.name)
+                } else {
+                    format!("--{}", o.name)
+                };
+                let dflt = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                s.push_str(&format!("  {lhs:<20} {}{dflt}\n", o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse argv (excluding argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        if !self.subcommands.is_empty() {
+            match it.peek() {
+                Some(first) if !first.starts_with('-') => {
+                    let name = it.next().unwrap();
+                    if !self.subcommands.iter().any(|(n, _)| n == name) {
+                        return Err(format!("unknown subcommand '{name}'\n\n{}", self.usage()));
+                    }
+                    args.subcommand = Some(name.clone());
+                }
+                _ => {}
+            }
+        }
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option '--{key}'\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option '--{key}' expects a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(key.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("flag '--{key}' does not take a value"));
+                    }
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn parser() -> Parser {
+        Parser::new("famous", "test")
+            .subcommand("serve", "run server")
+            .subcommand("bench", "run benches")
+            .opt_default("topology", "64,768,8", "workload")
+            .opt("device", "fpga device")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_subcommand_and_opts() {
+        let a = parser()
+            .parse(&sv(&["serve", "--device", "u55c", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("device"), Some("u55c"));
+        assert_eq!(a.get("topology"), Some("64,768,8")); // default
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parser().parse(&sv(&["bench", "--device=u200"])).unwrap();
+        assert_eq!(a.get("device"), Some("u200"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(parser().parse(&sv(&["serve", "--nope"])).is_err());
+        assert!(parser().parse(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parser().parse(&sv(&["serve", "--device"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = parser().parse(&sv(&["--help"])).unwrap_err();
+        assert!(err.contains("SUBCOMMANDS"));
+        assert!(err.contains("--topology"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let p = Parser::new("x", "y").opt("n", "count").opt("r", "rate");
+        let a = p.parse(&sv(&["--n", "42", "--r", "1.5"])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), Some(42));
+        assert_eq!(a.get_f64("r").unwrap(), Some(1.5));
+        let bad = p.parse(&sv(&["--n", "xyz"])).unwrap();
+        assert!(bad.get_usize("n").is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Configuration system: workload topologies, synthesis-time accelerator
+//! builds, and the runtime-programmable register image.
+//!
+//! The paper's key flexibility split (Section IV.C / VI):
+//! * **Synthesis-time** (fixed once "bitstream" is built): tile size `TS`,
+//!   data width, target device, and the *maxima* for (h, d_model, SL).
+//! * **Runtime-programmable** (per request, via MicroBlaze → AXI-lite):
+//!   heads `h`, embedding dimension `d_model`, sequence length `SL`,
+//!   each up to its synthesized maximum.
+
+mod topology;
+
+pub use topology::Topology;
+
+use crate::fpga::device::Device;
+use crate::jsonlite::Json;
+use std::fmt;
+
+/// Synthesis-time accelerator build (what one "bitstream" fixes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Tile size `TS`: column width of the weight tiles (Fig. 4).
+    pub tile_size: usize,
+    /// Datapath width in bits (paper: 8-bit fixed point).
+    pub data_bits: u32,
+    /// Fabric clock in Hz (paper reports results around 400 MHz).
+    pub clock_hz: f64,
+    /// Target device (resource inventory + feasibility).
+    pub device: Device,
+    /// Synthesized maxima for the runtime-programmable parameters.
+    pub max_topology: Topology,
+}
+
+impl AcceleratorConfig {
+    /// The paper's U55C build: TS=64, 8-bit, maxima (SL=128, d=768, h=8).
+    pub fn u55c_ts64() -> Self {
+        AcceleratorConfig {
+            tile_size: 64,
+            data_bits: 8,
+            clock_hz: 400e6,
+            device: Device::alveo_u55c(),
+            max_topology: Topology::new(128, 768, 8, 64),
+        }
+    }
+
+    /// The paper's U200 build: h max 6 (LUT-bound, Section VI).
+    pub fn u200_ts64() -> Self {
+        AcceleratorConfig {
+            tile_size: 64,
+            data_bits: 8,
+            clock_hz: 400e6,
+            device: Device::alveo_u200(),
+            max_topology: Topology::new(128, 768, 6, 64),
+        }
+    }
+
+    /// U55C rebuilt with a different tile size (tests 9–10).
+    pub fn u55c_with_tile_size(ts: usize) -> Self {
+        let mut c = Self::u55c_ts64();
+        c.tile_size = ts;
+        c.max_topology.tile_size = ts;
+        c
+    }
+
+    /// Can `topo` run on this build without re-synthesis?
+    /// (Runtime programmability contract, Section IV.C.)
+    pub fn admits(&self, topo: &Topology) -> Result<(), ConfigError> {
+        topo.validate()?;
+        let m = &self.max_topology;
+        if topo.tile_size != self.tile_size {
+            return Err(ConfigError::NeedsResynthesis {
+                param: "tile_size",
+                requested: topo.tile_size,
+                built: self.tile_size,
+            });
+        }
+        for (param, req, max) in [
+            ("seq_len", topo.seq_len, m.seq_len),
+            ("d_model", topo.d_model, m.d_model),
+            ("heads", topo.heads, m.heads),
+        ] {
+            if req > max {
+                return Err(ConfigError::ExceedsSynthesizedMax { param, requested: req, max });
+            }
+        }
+        Ok(())
+    }
+
+    /// Cycles → milliseconds at this build's clock.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_hz * 1e3
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("tile_size", Json::from(self.tile_size as f64)),
+            ("data_bits", Json::from(self.data_bits as f64)),
+            ("clock_hz", Json::from(self.clock_hz)),
+            ("device", Json::from(self.device.name.as_str())),
+            ("max_topology", self.max_topology.to_json()),
+        ])
+    }
+}
+
+/// Errors surfaced by config validation and admission control.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// d_model not divisible by heads / tile_size, zero dims, ...
+    InvalidTopology(String),
+    /// Requested parameter exceeds the synthesized maximum: the hardware
+    /// would need a new bitstream (what FAMOUS exists to avoid).
+    ExceedsSynthesizedMax { param: &'static str, requested: usize, max: usize },
+    /// Parameter is synthesis-time only (tile size, data width).
+    NeedsResynthesis { param: &'static str, requested: usize, built: usize },
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::InvalidTopology(m) => write!(f, "invalid topology: {m}"),
+            ConfigError::ExceedsSynthesizedMax { param, requested, max } => write!(
+                f,
+                "{param}={requested} exceeds synthesized maximum {max} (needs re-synthesis)"
+            ),
+            ConfigError::NeedsResynthesis { param, requested, built } => write!(
+                f,
+                "{param}={requested} differs from synthesized {built}: synthesis-time parameter"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u55c_admits_all_table1_runtime_tests() {
+        let c = AcceleratorConfig::u55c_ts64();
+        for (sl, dm, h) in [
+            (64, 768, 8),
+            (64, 768, 4),
+            (64, 768, 2),
+            (64, 512, 8),
+            (64, 256, 8),
+            (128, 768, 8),
+            (32, 768, 8),
+            (16, 768, 8),
+        ] {
+            let t = Topology::new(sl, dm, h, 64);
+            assert!(c.admits(&t).is_ok(), "{t:?}");
+        }
+    }
+
+    #[test]
+    fn tile_size_change_needs_resynthesis() {
+        let c = AcceleratorConfig::u55c_ts64();
+        let t = Topology::new(64, 768, 8, 32);
+        assert!(matches!(
+            c.admits(&t),
+            Err(ConfigError::NeedsResynthesis { param: "tile_size", .. })
+        ));
+    }
+
+    #[test]
+    fn exceeding_max_heads_rejected() {
+        let c = AcceleratorConfig::u200_ts64();
+        let t = Topology::new(64, 768, 8, 64); // h=8 > built max 6
+        assert!(matches!(
+            c.admits(&t),
+            Err(ConfigError::ExceedsSynthesizedMax { param: "heads", .. })
+        ));
+    }
+
+    #[test]
+    fn cycles_to_ms_at_400mhz() {
+        let c = AcceleratorConfig::u55c_ts64();
+        assert!((c.cycles_to_ms(400_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resynthesized_build_admits_new_ts() {
+        let c = AcceleratorConfig::u55c_with_tile_size(32);
+        assert!(c.admits(&Topology::new(64, 768, 8, 32)).is_ok());
+    }
+}

@@ -1,0 +1,121 @@
+//! Workload topology: the paper's (SL, d_model, h) triple plus the tile
+//! size of the build it runs on.
+
+use super::ConfigError;
+use crate::jsonlite::Json;
+
+/// One MHA workload shape. Matches `python/compile/topologies.Topology`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Topology {
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub tile_size: usize,
+}
+
+impl Topology {
+    pub fn new(seq_len: usize, d_model: usize, heads: usize, tile_size: usize) -> Self {
+        Topology { seq_len, d_model, heads, tile_size }
+    }
+
+    /// Per-head projection width `d_k = d_model / h` (eq. 2).
+    pub fn d_k(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Number of weight/input column tiles `d_model / TS` (Fig. 4).
+    pub fn n_tiles(&self) -> usize {
+        self.d_model / self.tile_size
+    }
+
+    /// Artifact name — must match `topologies.Topology.name` in python.
+    pub fn name(&self) -> String {
+        format!(
+            "mha_sl{}_d{}_h{}_ts{}",
+            self.seq_len, self.d_model, self.heads, self.tile_size
+        )
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let err = |m: String| Err(ConfigError::InvalidTopology(m));
+        if self.seq_len == 0 || self.d_model == 0 || self.heads == 0 || self.tile_size == 0 {
+            return err(format!("zero dimension in {self:?}"));
+        }
+        if self.d_model % self.heads != 0 {
+            return err(format!(
+                "d_model={} not divisible by heads={}",
+                self.d_model, self.heads
+            ));
+        }
+        if self.d_model % self.tile_size != 0 {
+            return err(format!(
+                "d_model={} not divisible by tile_size={}",
+                self.d_model, self.tile_size
+            ));
+        }
+        Ok(())
+    }
+
+    /// Total multiply-add operation count conventions — see
+    /// `crate::metrics::ops` for the two GOP conventions in the paper.
+    pub fn output_elems(&self) -> usize {
+        self.seq_len * self.d_model
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("seq_len", Json::from(self.seq_len as f64)),
+            ("d_model", Json::from(self.d_model as f64)),
+            ("heads", Json::from(self.heads as f64)),
+            ("tile_size", Json::from(self.tile_size as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let get = |k: &str| -> Result<usize, String> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("topology missing field {k}"))
+        };
+        Ok(Topology::new(get("seq_len")?, get("d_model")?, get("heads")?, get("tile_size")?))
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "(SL={}, d_model={}, h={}, TS={})",
+            self.seq_len, self.d_model, self.heads, self.tile_size
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_quantities() {
+        let t = Topology::new(64, 768, 8, 64);
+        assert_eq!(t.d_k(), 96);
+        assert_eq!(t.n_tiles(), 12);
+        assert_eq!(t.name(), "mha_sl64_d768_h8_ts64");
+    }
+
+    #[test]
+    fn validation_catches_indivisible() {
+        assert!(Topology::new(64, 512, 6, 64).validate().is_err());
+        assert!(Topology::new(64, 768, 8, 40).validate().is_err());
+        assert!(Topology::new(0, 768, 8, 64).validate().is_err());
+        assert!(Topology::new(64, 768, 8, 64).validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Topology::new(32, 256, 4, 32);
+        let j = t.to_json();
+        assert_eq!(Topology::from_json(&j).unwrap(), t);
+    }
+}

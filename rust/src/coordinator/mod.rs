@@ -1,0 +1,206 @@
+//! Layer-3 coordinator: the host/MicroBlaze control flow as a service.
+//!
+//! The paper's programmability story (Fig. 6): extract the topology from a
+//! trained model, generate control words, program the accelerator, run —
+//! no re-synthesis between applications.  The coordinator makes that an
+//! operational serving loop:
+//!
+//! * [`model_desc`] — model descriptor → [`crate::config::Topology`] +
+//!   control words (the `.pth`-interpreter step, sans PyTorch).
+//! * [`scheduler`] — request queue + topology-grouping batcher: the
+//!   accelerator pays one reprogramming per topology *switch*, so the
+//!   scheduler greedily groups same-topology requests (bounded by a
+//!   fairness window) to minimize switches.
+//! * [`server`] — a threaded front-end: bounded ingress channel
+//!   (backpressure), worker thread owning the accelerator, per-request
+//!   response channels.
+//!
+//! [`Coordinator`] is the synchronous core — directly testable, and what
+//! the server thread drives.
+
+pub mod model_desc;
+pub mod scheduler;
+pub mod server;
+
+pub use model_desc::ModelDescriptor;
+pub use scheduler::{BatchPolicy, Request, Scheduler, SchedulerConfig};
+pub use server::{Server, ServerConfig, ServerHandle};
+
+use crate::accel::FamousAccelerator;
+use crate::config::Topology;
+use crate::metrics::LatencyStats;
+use anyhow::Result;
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub topology: Topology,
+    pub output: Vec<f32>,
+    /// Modeled fabric latency of the invocation that served this request.
+    pub fabric_ms: f64,
+    pub gops: f64,
+    /// Whether serving this request required reprogramming the registers.
+    pub reprogrammed: bool,
+}
+
+/// Serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorStats {
+    pub served: u64,
+    pub batches: u64,
+    pub reconfigurations: u64,
+    pub rejected: u64,
+    pub fabric_latency: LatencyStats,
+}
+
+/// The synchronous serving core: scheduler + accelerator.
+pub struct Coordinator {
+    pub accel: FamousAccelerator,
+    pub scheduler: Scheduler,
+    pub stats: CoordinatorStats,
+    last_topology: Option<Topology>,
+}
+
+impl Coordinator {
+    pub fn new(accel: FamousAccelerator, sched_config: SchedulerConfig) -> Self {
+        Coordinator {
+            accel,
+            scheduler: Scheduler::new(sched_config),
+            stats: CoordinatorStats::default(),
+            last_topology: None,
+        }
+    }
+
+    /// Enqueue a request (admission-checked against the synthesized
+    /// build).  Rejected requests are counted and returned as Err.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        if let Err(e) = self.accel.config.build.admits(&req.topology) {
+            self.stats.rejected += 1;
+            anyhow::bail!("rejected request {}: {e}", req.id);
+        }
+        self.scheduler.push(req);
+        Ok(())
+    }
+
+    /// Serve the next batch (all same topology).  Returns the responses,
+    /// or None if the queue is empty.
+    pub fn serve_next_batch(&mut self) -> Result<Option<Vec<Response>>> {
+        let Some(batch) = self.scheduler.next_batch() else { return Ok(None) };
+        let topo = batch[0].topology.clone();
+        let reprogrammed = self.last_topology.as_ref() != Some(&topo);
+        if reprogrammed {
+            self.stats.reconfigurations += 1;
+            self.last_topology = Some(topo.clone());
+        }
+        let mut responses = Vec::with_capacity(batch.len());
+        for req in batch {
+            let report = self.accel.run(&req.topology, &req.inputs)?;
+            self.stats.served += 1;
+            self.stats.fabric_latency.record(report.latency_ms);
+            responses.push(Response {
+                id: req.id,
+                topology: req.topology,
+                output: report.output,
+                fabric_ms: report.latency_ms,
+                gops: report.gops,
+                reprogrammed,
+            });
+        }
+        self.stats.batches += 1;
+        Ok(Some(responses))
+    }
+
+    /// Drain the whole queue, returning responses in completion order.
+    pub fn serve_all(&mut self) -> Result<Vec<Response>> {
+        let mut all = Vec::new();
+        while let Some(mut batch) = self.serve_next_batch()? {
+            all.append(&mut batch);
+        }
+        Ok(all)
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.scheduler.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+    use crate::testdata::MhaInputs;
+
+    fn coordinator(policy: BatchPolicy) -> Coordinator {
+        let accel = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+        Coordinator::new(
+            accel,
+            SchedulerConfig { max_batch: 8, policy, fairness_window: 64 },
+        )
+    }
+
+    fn req(id: u64, topo: Topology) -> Request {
+        let inputs = MhaInputs::generate(&topo);
+        Request { id, topology: topo, inputs }
+    }
+
+    #[test]
+    fn serves_all_no_loss_no_dup() {
+        let mut c = coordinator(BatchPolicy::GroupByTopology);
+        let t1 = Topology::new(64, 768, 8, 64);
+        let t2 = Topology::new(32, 768, 8, 64);
+        for i in 0..10 {
+            let t = if i % 2 == 0 { t1.clone() } else { t2.clone() };
+            c.submit(req(i, t)).unwrap();
+        }
+        let resp = c.serve_all().unwrap();
+        assert_eq!(resp.len(), 10);
+        let mut ids: Vec<u64> = resp.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert_eq!(c.stats.served, 10);
+    }
+
+    #[test]
+    fn grouping_minimizes_reconfigurations() {
+        let mut grouped = coordinator(BatchPolicy::GroupByTopology);
+        let mut fifo = coordinator(BatchPolicy::Fifo);
+        let t1 = Topology::new(64, 768, 8, 64);
+        let t2 = Topology::new(32, 768, 8, 64);
+        for i in 0..8 {
+            let t = if i % 2 == 0 { t1.clone() } else { t2.clone() };
+            grouped.submit(req(i, t.clone())).unwrap();
+            fifo.submit(req(i, t)).unwrap();
+        }
+        grouped.serve_all().unwrap();
+        fifo.serve_all().unwrap();
+        // Interleaved stream: FIFO reprograms every batch, grouping twice.
+        assert_eq!(grouped.stats.reconfigurations, 2);
+        assert!(fifo.stats.reconfigurations > 2);
+    }
+
+    #[test]
+    fn rejects_oversynthesized_requests() {
+        let mut c = coordinator(BatchPolicy::GroupByTopology);
+        let too_big = Topology::new(256, 768, 8, 64);
+        assert!(c.submit(req(0, too_big)).is_err());
+        assert_eq!(c.stats.rejected, 1);
+        assert_eq!(c.queue_len(), 0);
+    }
+
+    #[test]
+    fn stats_track_latency() {
+        let mut c = coordinator(BatchPolicy::GroupByTopology);
+        let t = Topology::new(64, 768, 8, 64);
+        c.submit(req(1, t)).unwrap();
+        c.serve_all().unwrap();
+        assert_eq!(c.stats.fabric_latency.count(), 1);
+        assert!((c.stats.fabric_latency.mean() - 0.94).abs() < 0.01);
+    }
+
+    #[test]
+    fn empty_queue_returns_none() {
+        let mut c = coordinator(BatchPolicy::Fifo);
+        assert!(c.serve_next_batch().unwrap().is_none());
+    }
+}

@@ -1,0 +1,132 @@
+//! Model descriptor extraction — the Fig. 6 flow without PyTorch.
+//!
+//! The paper saves trained models as `.pth`, runs a python interpreter to
+//! extract (heads, embedding dim, sequence length), and feeds those to the
+//! host software which generates control words.  Our equivalent carries
+//! the extracted topology as a small JSON descriptor (what that
+//! interpreter would emit), so the rust host performs the same
+//! descriptor → control-words step with no python on the request path.
+
+use crate::config::Topology;
+use crate::jsonlite::{parse, Json};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Extracted model metadata (the output of the paper's interpreter step).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelDescriptor {
+    pub name: String,
+    /// Source framework tag (informational; e.g. "pytorch").
+    pub framework: String,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    /// Encoder layer count (used by the encoder-extension example).
+    pub layers: usize,
+}
+
+impl ModelDescriptor {
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let j = parse(text).map_err(|e| anyhow!("{e}"))?;
+        let get = |k: &str| {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("descriptor missing '{k}'"))
+        };
+        Ok(ModelDescriptor {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unnamed")
+                .to_string(),
+            framework: j
+                .get("framework")
+                .and_then(Json::as_str)
+                .unwrap_or("pytorch")
+                .to_string(),
+            seq_len: get("seq_len")?,
+            d_model: get("d_model")?,
+            heads: get("heads")?,
+            layers: j.get("layers").and_then(Json::as_usize).unwrap_or(1),
+        })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Self::from_json_str(&text)
+    }
+
+    /// The topology this model needs on a build with tile size `ts`.
+    pub fn topology(&self, ts: usize) -> Result<Topology> {
+        let t = Topology::new(self.seq_len, self.d_model, self.heads, ts);
+        t.validate().map_err(|e| anyhow!("{e}"))?;
+        Ok(t)
+    }
+
+    /// Well-known descriptors matching the paper's evaluation workloads.
+    pub fn bert_variant() -> Self {
+        // "a variant of BERT": d_model 768, 8 heads, SL 64 (Section VI).
+        ModelDescriptor {
+            name: "bert-variant".into(),
+            framework: "pytorch".into(),
+            seq_len: 64,
+            d_model: 768,
+            heads: 8,
+            layers: 12,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::from(self.name.as_str())),
+            ("framework", Json::from(self.framework.as_str())),
+            ("seq_len", Json::from(self.seq_len as f64)),
+            ("d_model", Json::from(self.d_model as f64)),
+            ("heads", Json::from(self.heads as f64)),
+            ("layers", Json::from(self.layers as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_descriptor() {
+        let d = ModelDescriptor::from_json_str(
+            r#"{"name": "tiny", "seq_len": 32, "d_model": 256, "heads": 4, "layers": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(d.heads, 4);
+        assert_eq!(d.layers, 2);
+        assert_eq!(d.topology(64).unwrap(), Topology::new(32, 256, 4, 64));
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(ModelDescriptor::from_json_str(r#"{"seq_len": 32}"#).is_err());
+    }
+
+    #[test]
+    fn invalid_topology_errors() {
+        let d = ModelDescriptor::from_json_str(
+            r#"{"seq_len": 32, "d_model": 250, "heads": 4}"#,
+        )
+        .unwrap();
+        assert!(d.topology(64).is_err()); // 250 % 4 != 0
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = ModelDescriptor::bert_variant();
+        let d2 = ModelDescriptor::from_json_str(&d.to_json().to_string()).unwrap();
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn bert_variant_fits_u55c_build() {
+        let d = ModelDescriptor::bert_variant();
+        let t = d.topology(64).unwrap();
+        assert!(crate::config::AcceleratorConfig::u55c_ts64().admits(&t).is_ok());
+    }
+}

@@ -1,0 +1,260 @@
+//! Request queue + batching policy.
+//!
+//! Reprogramming the accelerator's registers between topologies is cheap
+//! but not free (one µB control sequence ≈ the analytical model's C0),
+//! and more importantly each *switch* flushes the weight tiles staged in
+//! BRAM.  The scheduler therefore groups same-topology requests into
+//! batches, bounded by `max_batch` and by a fairness window so a steady
+//! stream of one topology cannot starve others indefinitely.
+
+use crate::config::Topology;
+use crate::testdata::MhaInputs;
+use std::collections::VecDeque;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub topology: Topology,
+    pub inputs: MhaInputs,
+}
+
+/// Batch formation policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Strict arrival order; a batch ends when the topology changes.
+    Fifo,
+    /// Pull all queued requests matching the head's topology (up to
+    /// max_batch), skipping over others — minimizes reconfigurations.
+    GroupByTopology,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    pub max_batch: usize,
+    pub policy: BatchPolicy,
+    /// GroupByTopology looks at most this far past the head for matches
+    /// (fairness: bounded reordering).
+    pub fairness_window: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_batch: 16, policy: BatchPolicy::GroupByTopology, fairness_window: 128 }
+    }
+}
+
+/// The queue.
+pub struct Scheduler {
+    pub config: SchedulerConfig,
+    queue: VecDeque<Request>,
+}
+
+impl Scheduler {
+    pub fn new(config: SchedulerConfig) -> Self {
+        assert!(config.max_batch > 0);
+        Scheduler { config, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Form the next batch (non-empty, all same topology), or None.
+    pub fn next_batch(&mut self) -> Option<Vec<Request>> {
+        let head = self.queue.front()?.topology.clone();
+        let mut batch = Vec::new();
+        match self.config.policy {
+            BatchPolicy::Fifo => {
+                while batch.len() < self.config.max_batch {
+                    match self.queue.front() {
+                        Some(r) if r.topology == head => {
+                            batch.push(self.queue.pop_front().unwrap())
+                        }
+                        _ => break,
+                    }
+                }
+            }
+            BatchPolicy::GroupByTopology => {
+                let window = self.config.fairness_window.min(self.queue.len());
+                let mut kept = VecDeque::with_capacity(self.queue.len());
+                let mut scanned = 0;
+                while let Some(r) = self.queue.pop_front() {
+                    if batch.len() < self.config.max_batch
+                        && scanned < window
+                        && r.topology == head
+                    {
+                        batch.push(r);
+                    } else {
+                        kept.push_back(r);
+                    }
+                    scanned += 1;
+                }
+                self.queue = kept;
+            }
+        }
+        debug_assert!(!batch.is_empty());
+        Some(batch)
+    }
+
+    /// Number of topology switches an oracle batcher would need for the
+    /// current queue contents (lower bound = distinct topologies).
+    pub fn distinct_topologies(&self) -> usize {
+        let mut seen: Vec<&Topology> = Vec::new();
+        for r in &self.queue {
+            if !seen.contains(&&r.topology) {
+                seen.push(&r.topology);
+            }
+        }
+        seen.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::{run, Gen};
+
+    fn req(id: u64, sl: usize) -> Request {
+        let topo = Topology::new(sl, 768, 8, 64);
+        // Tiny placeholder operands: scheduler tests don't execute them.
+        Request {
+            id,
+            topology: topo,
+            inputs: MhaInputs {
+                x: vec![],
+                wq: vec![],
+                wk: vec![],
+                wv: vec![],
+                bq: vec![],
+                bk: vec![],
+                bv: vec![],
+            },
+        }
+    }
+
+    #[test]
+    fn fifo_batches_stop_at_topology_change() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 10,
+            policy: BatchPolicy::Fifo,
+            fairness_window: 100,
+        });
+        for (i, sl) in [64, 64, 32, 64].iter().enumerate() {
+            s.push(req(i as u64, *sl));
+        }
+        let b1 = s.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let b2 = s.next_batch().unwrap();
+        assert_eq!(b2[0].id, 2);
+    }
+
+    #[test]
+    fn grouping_pulls_matching_from_window() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        for (i, sl) in [64, 32, 64, 32, 64].iter().enumerate() {
+            s.push(req(i as u64, *sl));
+        }
+        let b1 = s.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        let b2 = s.next_batch().unwrap();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 2,
+            ..SchedulerConfig::default()
+        });
+        for i in 0..5 {
+            s.push(req(i, 64));
+        }
+        assert_eq!(s.next_batch().unwrap().len(), 2);
+        assert_eq!(s.next_batch().unwrap().len(), 2);
+        assert_eq!(s.next_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fairness_window_bounds_reordering() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 100,
+            policy: BatchPolicy::GroupByTopology,
+            fairness_window: 2,
+        });
+        // Head topology 64; matching request at position 3 is outside the
+        // window and must NOT be pulled forward.
+        for (i, sl) in [64, 32, 32, 64].iter().enumerate() {
+            s.push(req(i as u64, *sl));
+        }
+        let b1 = s.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+    }
+
+    // ---- property tests (proptest_lite) ---------------------------------
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated() {
+        run("scheduler conservation", 200, |g: &mut Gen| {
+            let n = g.usize_in(0, 40);
+            let mut s = Scheduler::new(SchedulerConfig {
+                max_batch: g.usize_in(1, 8),
+                policy: if g.bool() { BatchPolicy::Fifo } else { BatchPolicy::GroupByTopology },
+                fairness_window: g.usize_in(1, 16),
+            });
+            let sls = [16usize, 32, 64, 128];
+            for i in 0..n {
+                s.push(req(i as u64, *g.pick(&sls)));
+            }
+            let mut seen = Vec::new();
+            while let Some(batch) = s.next_batch() {
+                assert!(batch.len() <= s.config.max_batch);
+                // homogeneity
+                assert!(batch.iter().all(|r| r.topology == batch[0].topology));
+                seen.extend(batch.iter().map(|r| r.id));
+            }
+            seen.sort();
+            assert_eq!(seen, (0..n as u64).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn prop_grouping_never_worse_than_fifo() {
+        run("grouping switch count", 100, |g: &mut Gen| {
+            let n = g.usize_in(1, 30);
+            let sls = [32usize, 64];
+            let stream: Vec<usize> = (0..n).map(|_| *g.pick(&sls)).collect();
+            let count_switches = |policy: BatchPolicy| {
+                let mut s = Scheduler::new(SchedulerConfig {
+                    max_batch: 1000,
+                    policy,
+                    fairness_window: 1000,
+                });
+                for (i, sl) in stream.iter().enumerate() {
+                    s.push(req(i as u64, *sl));
+                }
+                let mut switches = 0;
+                let mut last: Option<Topology> = None;
+                while let Some(b) = s.next_batch() {
+                    if last.as_ref() != Some(&b[0].topology) {
+                        switches += 1;
+                        last = Some(b[0].topology.clone());
+                    }
+                }
+                switches
+            };
+            assert!(
+                count_switches(BatchPolicy::GroupByTopology) <= count_switches(BatchPolicy::Fifo)
+            );
+        });
+    }
+}

@@ -1,0 +1,241 @@
+//! Threaded serving front-end.
+//!
+//! One worker thread owns the [`Coordinator`] (and through it the PJRT
+//! executables / simulator); clients submit through a bounded channel —
+//! full queue = backpressure at the ingress, mirroring the paper's
+//! host-side flow control — and receive their response over a dedicated
+//! oneshot-style channel.
+
+use super::{Coordinator, Response};
+use crate::coordinator::scheduler::Request;
+use crate::exec::{bounded, BoundedSender};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Server tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Ingress queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Collect up to this many pending submissions before serving a round.
+    pub ingest_burst: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { queue_capacity: 256, ingest_burst: 32 }
+    }
+}
+
+enum Msg {
+    Job(Request, mpsc::Sender<Result<Response, String>>),
+    Shutdown,
+}
+
+/// Client-side handle: submit requests, await responses.
+pub struct ServerHandle {
+    tx: BoundedSender<Msg>,
+}
+
+impl Clone for ServerHandle {
+    fn clone(&self) -> Self {
+        ServerHandle { tx: self.tx.clone() }
+    }
+}
+
+impl ServerHandle {
+    /// Submit and block until served.  Errors if the queue is full
+    /// (backpressure surfaced to the caller) or the server is down.
+    pub fn call(&self, req: Request) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .try_send(Msg::Job(req, rtx))
+            .map_err(|_| anyhow!("server queue full or shut down (backpressure)"))?;
+        rrx.recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Blocking submit (waits for queue space instead of failing).
+    pub fn call_blocking(&self, req: Request) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Job(req, rtx))
+            .map_err(|_| anyhow!("server shut down"))?;
+        rrx.recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+/// The running server.
+pub struct Server {
+    handle: ServerHandle,
+    worker: Option<JoinHandle<super::CoordinatorStats>>,
+}
+
+impl Server {
+    /// Start the worker thread.  The coordinator (whose PJRT client is not
+    /// `Send`) is constructed *on* the worker thread via `factory`; final
+    /// stats come back from `shutdown()`.
+    pub fn start(
+        factory: impl FnOnce() -> Coordinator + Send + 'static,
+        config: ServerConfig,
+    ) -> Self {
+        let (tx, rx) = bounded::<Msg>(config.queue_capacity);
+        let worker = std::thread::Builder::new()
+            .name("famous-coordinator".into())
+            .spawn(move || {
+                let mut coordinator = factory();
+                let mut replies: Vec<(u64, mpsc::Sender<Result<Response, String>>)> = Vec::new();
+                'outer: loop {
+                    // Block for one message, then opportunistically drain a
+                    // burst so the scheduler sees a window to batch over.
+                    let first = match rx.recv() {
+                        Some(m) => m,
+                        None => break,
+                    };
+                    let mut msgs = vec![first];
+                    msgs.extend(rx.drain_up_to(config.ingest_burst));
+                    let mut shutdown = false;
+                    for m in msgs {
+                        match m {
+                            Msg::Shutdown => shutdown = true,
+                            Msg::Job(req, reply) => {
+                                let id = req.id;
+                                match coordinator.submit(req) {
+                                    Ok(()) => replies.push((id, reply)),
+                                    Err(e) => {
+                                        let _ = reply.send(Err(e.to_string()));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // Serve everything queued.
+                    loop {
+                        match coordinator.serve_next_batch() {
+                            Ok(Some(responses)) => {
+                                for resp in responses {
+                                    if let Some(pos) =
+                                        replies.iter().position(|(id, _)| *id == resp.id)
+                                    {
+                                        let (_, reply) = replies.swap_remove(pos);
+                                        let _ = reply.send(Ok(resp));
+                                    }
+                                }
+                            }
+                            Ok(None) => break,
+                            Err(e) => {
+                                // Engine failure: fail all waiters, stop.
+                                for (_, reply) in replies.drain(..) {
+                                    let _ = reply.send(Err(format!("engine: {e}")));
+                                }
+                                break 'outer;
+                            }
+                        }
+                    }
+                    if shutdown {
+                        break;
+                    }
+                }
+                coordinator.stats.clone()
+            })
+            .expect("spawn coordinator worker");
+        Server { handle: ServerHandle { tx }, worker: Some(worker) }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the worker and collect the final serving statistics.
+    pub fn shutdown(mut self) -> super::CoordinatorStats {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        self.worker.take().expect("not yet shut down").join().expect("worker panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::FamousAccelerator;
+    use crate::config::Topology;
+    use crate::coordinator::{BatchPolicy, SchedulerConfig};
+    use crate::sim::SimConfig;
+    use crate::testdata::MhaInputs;
+
+    fn server() -> Server {
+        Server::start(
+            || {
+                let accel = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+                Coordinator::new(
+                    accel,
+                    SchedulerConfig {
+                        max_batch: 8,
+                        policy: BatchPolicy::GroupByTopology,
+                        fairness_window: 64,
+                    },
+                )
+            },
+            ServerConfig::default(),
+        )
+    }
+
+    fn req(id: u64, sl: usize) -> Request {
+        let topo = Topology::new(sl, 768, 8, 64);
+        let inputs = MhaInputs::generate(&topo);
+        Request { id, topology: topo, inputs }
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let srv = server();
+        let resp = srv.handle().call(req(1, 64)).unwrap();
+        assert_eq!(resp.id, 1);
+        assert_eq!(resp.output.len(), 64 * 768);
+        assert!((resp.fabric_ms - 0.94).abs() < 0.01);
+        let stats = srv.shutdown();
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn serves_concurrent_clients() {
+        let srv = server();
+        let mut joins = Vec::new();
+        for i in 0..6 {
+            let h = srv.handle();
+            joins.push(std::thread::spawn(move || {
+                let sl = if i % 2 == 0 { 64 } else { 32 };
+                h.call_blocking(req(i, sl)).unwrap()
+            }));
+        }
+        let responses: Vec<Response> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert_eq!(responses.len(), 6);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        let stats = srv.shutdown();
+        assert_eq!(stats.served, 6);
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn rejects_inadmissible_request() {
+        let srv = server();
+        let err = srv.handle().call(req(9, 512)).unwrap_err(); // SL 512 > max 128
+        assert!(err.to_string().contains("rejected"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_returns_stats() {
+        let srv = server();
+        srv.handle().call(req(1, 64)).unwrap();
+        srv.handle().call(req(2, 64)).unwrap();
+        let stats = srv.shutdown();
+        assert_eq!(stats.served, 2);
+        assert!(stats.fabric_latency.mean() > 0.0);
+    }
+}

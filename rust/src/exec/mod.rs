@@ -1,0 +1,371 @@
+//! Execution substrate: a worker thread pool + bounded MPSC channels
+//! (tokio is unavailable offline; the coordinator's event loop runs on
+//! these primitives instead).
+//!
+//! The pool is deliberately simple: a shared injector queue guarded by a
+//! mutex + condvar.  The coordinator's hot path batches work coarsely
+//! (one job per request batch), so queue contention is negligible — see
+//! EXPERIMENTS.md §Perf for measurements.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    done: Condvar,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0, "thread pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("famous-worker-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Pool sized to the machine (at least 2 workers).
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.max(2))
+    }
+
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every spawned job has finished.
+    pub fn wait_idle(&self) {
+        let q = self.shared.queue.lock().unwrap();
+        let _guard = self
+            .shared
+            .done
+            .wait_while(q, |q| {
+                !q.is_empty() || self.shared.in_flight.load(Ordering::SeqCst) > 0
+            })
+            .unwrap();
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn parallel_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.spawn(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("results still shared after wait_idle"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("job completed"))
+            .collect()
+    }
+}
+
+fn worker_loop(s: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = s.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if s.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = s.available.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not wedge wait_idle: decrement via guard.
+        struct Guard<'a>(&'a Shared);
+        impl Drop for Guard<'_> {
+            fn drop(&mut self) {
+                self.0.in_flight.fetch_sub(1, Ordering::SeqCst);
+                self.0.done.notify_all();
+            }
+        }
+        let _g = Guard(&s);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Bounded MPSC channel with blocking send (backpressure) — the
+/// coordinator's ingress queue.
+pub struct BoundedSender<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+pub struct BoundedReceiver<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    queue: Mutex<VecDeque<T>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+    closed: AtomicBool,
+}
+
+/// Create a bounded channel of capacity `cap`.
+pub fn bounded<T>(cap: usize) -> (BoundedSender<T>, BoundedReceiver<T>) {
+    assert!(cap > 0);
+    let inner = Arc::new(ChannelInner {
+        queue: Mutex::new(VecDeque::new()),
+        cap,
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        closed: AtomicBool::new(false),
+    });
+    (BoundedSender { inner: Arc::clone(&inner) }, BoundedReceiver { inner })
+}
+
+/// Error returned when the peer has hung up.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+impl<T> BoundedSender<T> {
+    /// Blocking send; returns Err(Closed) if the receiver dropped.
+    pub fn send(&self, v: T) -> Result<(), Closed> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return Err(Closed);
+            }
+            if q.len() < self.inner.cap {
+                q.push_back(v);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            q = self.inner.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking send; Err(v) gives the value back if full/closed.
+    pub fn try_send(&self, v: T) -> Result<(), T> {
+        if self.inner.closed.load(Ordering::SeqCst) {
+            return Err(v);
+        }
+        let mut q = self.inner.queue.lock().unwrap();
+        if q.len() < self.inner.cap {
+            q.push_back(v);
+            self.inner.not_empty.notify_one();
+            Ok(())
+        } else {
+            Err(v)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for BoundedSender<T> {
+    fn clone(&self) -> Self {
+        BoundedSender { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Drop for BoundedReceiver<T> {
+    fn drop(&mut self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        self.inner.not_full.notify_all();
+    }
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Blocking receive; None once all senders dropped and queue drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(v) = q.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(v);
+            }
+            if Arc::strong_count(&self.inner) <= 1 || self.inner.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            let (guard, timeout) = self
+                .inner
+                .not_empty
+                .wait_timeout(q, std::time::Duration::from_millis(20))
+                .unwrap();
+            q = guard;
+            let _ = timeout; // periodic wake to observe sender drops
+        }
+    }
+
+    /// Drain up to `max` immediately-available items (batch ingress).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        let take = max.min(q.len());
+        let out: Vec<T> = q.drain(..take).collect();
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        self.inner.not_full.notify_all();
+        self.inner.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.parallel_map((0..50).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.spawn(|| panic!("boom"));
+        pool.wait_idle();
+        let ok = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&ok);
+        pool.spawn(move || {
+            c.store(7, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(ok.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn channel_fifo() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn channel_backpressure_try_send() {
+        let (tx, _rx) = bounded(2);
+        assert!(tx.try_send(1).is_ok());
+        assert!(tx.try_send(2).is_ok());
+        assert_eq!(tx.try_send(3), Err(3)); // full
+    }
+
+    #[test]
+    fn recv_none_after_senders_drop() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_fails_after_receiver_drop() {
+        let (tx, rx) = bounded::<i32>(1);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(Closed));
+    }
+
+    #[test]
+    fn drain_up_to_batches() {
+        let (tx, rx) = bounded(16);
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let batch = rx.drain_up_to(4);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(rx.drain_up_to(100), vec![4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn blocking_send_unblocks_on_recv() {
+        let (tx, rx) = bounded(1);
+        tx.send(0).unwrap();
+        let t = std::thread::spawn(move || tx.send(1).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(rx.recv(), Some(0));
+        t.join().unwrap();
+        assert_eq!(rx.recv(), Some(1));
+    }
+}

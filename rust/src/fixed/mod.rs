@@ -1,0 +1,159 @@
+//! Fixed-point substrate: the accelerator's 8-bit DSP48 datapath.
+//!
+//! The paper quantizes all operands to 8-bit fixed point (Table I, "8bit
+//! fixed") and MACs them on DSP48E2 slices, which multiply up to 27×18-bit
+//! operands into a 48-bit accumulator — so int8×int8 products accumulate
+//! *exactly*; quantization error enters only at the operand snap.  This
+//! module reproduces that datapath bit-for-bit:
+//!
+//! * [`Fx`] — a Q-format value: integer mantissa + fractional bits.
+//! * [`Quantizer`] — float ⇄ int8-grid conversion (round-half-away,
+//!   saturating), matching `python/compile/kernels/quant.py`.
+//! * [`Dsp48Mac`] — a MAC unit with the DSP48's 48-bit accumulator and
+//!   overflow detection.
+//! * [`matmul_i32`] / [`FxMatrix`] — the functional GEMM used by the
+//!   simulator's datapath mode.
+
+mod mac;
+mod matrix;
+
+pub use mac::Dsp48Mac;
+pub use matrix::{matmul_i32, matmul_i32_fast, matmul_i32_tiled, FxMatrix};
+
+/// A fixed-point value: `value = mantissa * 2^-frac_bits`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fx {
+    pub mantissa: i32,
+    pub frac_bits: u32,
+}
+
+impl Fx {
+    pub fn from_f32(v: f32, frac_bits: u32, int_bits: u32) -> Fx {
+        let scale = (1i64 << frac_bits) as f32;
+        let raw = (v * scale).round() as i64;
+        let max = (1i64 << (int_bits + frac_bits - 1)) - 1;
+        let min = -(1i64 << (int_bits + frac_bits - 1));
+        Fx { mantissa: raw.clamp(min, max) as i32, frac_bits }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.mantissa as f32 / (1i64 << self.frac_bits) as f32
+    }
+}
+
+/// Symmetric int8 quantizer with grid step `scale` (round-half-away-from-
+/// zero, saturating at ±127/−128) — the operand snap in front of the MACs.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    pub scale: f32,
+}
+
+impl Quantizer {
+    pub fn new(scale: f32) -> Self {
+        assert!(scale > 0.0, "quantizer scale must be positive");
+        Quantizer { scale }
+    }
+
+    /// The grid used by the cross-language testdata (1/64).
+    pub fn grid64() -> Self {
+        Quantizer::new(crate::testdata::GRID_SCALE)
+    }
+
+    /// Pick a scale covering `|x|max` like `quant.pick_scale` (python).
+    pub fn fit(data: &[f32]) -> Self {
+        let amax = data.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-8);
+        Quantizer::new(amax / 127.0)
+    }
+
+    /// Snap to the int8 grid, returning the integer level.
+    pub fn quantize(&self, v: f32) -> i8 {
+        // `f32::round` rounds half away from zero — same as numpy's
+        // np.round for the .5 cases we care about? (numpy rounds half to
+        // even; the testdata grid never produces exact .5 values, so the
+        // two conventions agree on every exchanged value.)
+        let q = (v / self.scale).round();
+        q.clamp(-128.0, 127.0) as i8
+    }
+
+    pub fn dequantize(&self, q: i8) -> f32 {
+        q as f32 * self.scale
+    }
+
+    /// quantize → dequantize: the value the datapath actually sees.
+    pub fn fake_quant(&self, v: f32) -> f32 {
+        self.dequantize(self.quantize(v))
+    }
+
+    pub fn quantize_vec(&self, data: &[f32]) -> Vec<i8> {
+        data.iter().map(|&v| self.quantize(v)).collect()
+    }
+
+    pub fn dequantize_vec(&self, data: &[i8]) -> Vec<f32> {
+        data.iter().map(|&q| self.dequantize(q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fx_roundtrip_exact_on_grid() {
+        for level in -128i32..=127 {
+            let v = level as f32 / 64.0;
+            let fx = Fx::from_f32(v, 6, 2);
+            assert_eq!(fx.mantissa, level);
+            assert_eq!(fx.to_f32(), v);
+        }
+    }
+
+    #[test]
+    fn fx_saturates() {
+        let fx = Fx::from_f32(100.0, 6, 2);
+        assert_eq!(fx.mantissa, 127);
+        let fx = Fx::from_f32(-100.0, 6, 2);
+        assert_eq!(fx.mantissa, -128);
+    }
+
+    #[test]
+    fn quantizer_roundtrip_on_grid() {
+        let q = Quantizer::grid64();
+        for level in -128i8..=127 {
+            let v = level as f32 / 64.0;
+            assert_eq!(q.quantize(v), level);
+            assert_eq!(q.fake_quant(v), v);
+        }
+    }
+
+    #[test]
+    fn quantizer_saturates() {
+        let q = Quantizer::grid64();
+        assert_eq!(q.quantize(10.0), 127);
+        assert_eq!(q.quantize(-10.0), -128);
+    }
+
+    #[test]
+    fn quantizer_error_bounded_by_half_step() {
+        let q = Quantizer::new(0.05);
+        for i in 0..100 {
+            let v = -3.0 + i as f32 * 0.0617;
+            if v.abs() < 127.0 * 0.05 {
+                assert!((q.fake_quant(v) - v).abs() <= 0.025 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn fit_covers_range() {
+        let data = [-3.7f32, 0.1, 2.5];
+        let q = Quantizer::fit(&data);
+        assert_eq!(q.quantize(-3.7), -127);
+    }
+
+    #[test]
+    fn fit_zero_input_no_panic() {
+        let q = Quantizer::fit(&[0.0, 0.0]);
+        assert!(q.scale > 0.0);
+        assert_eq!(q.quantize(0.0), 0);
+    }
+}

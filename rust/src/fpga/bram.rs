@@ -1,0 +1,129 @@
+//! BRAM banking model.
+//!
+//! UltraScale+ block RAM comes in 18 Kb units with two ports.  HLS's
+//! `array_partition` directive splits an array across banks so the
+//! unrolled PEs can read operands in parallel; the paper leans on this
+//! ("data required simultaneously by a DSP are stored in separate
+//! BRAMs").  This model answers two questions the simulator and the
+//! resource estimator need:
+//!
+//! * how many 18 Kb banks does an array of a given shape/partitioning
+//!   consume, and
+//! * does a parallel access pattern fit the ports (≤ 2 concurrent
+//!   accesses per bank per cycle), or does it stall?
+
+/// One 18 Kb, two-port block RAM.
+pub const BRAM_BITS: u64 = 18 * 1024;
+pub const PORTS_PER_BANK: u32 = 2;
+
+/// A banked on-chip array (one logical HLS array after partitioning).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BramBank {
+    pub name: String,
+    /// Logical element count (rows*cols).
+    pub elems: u64,
+    /// Element width in bits.
+    pub width_bits: u32,
+    /// Cyclic partition factor (number of physical banks).
+    pub partition: u32,
+}
+
+impl BramBank {
+    pub fn new(name: impl Into<String>, elems: u64, width_bits: u32, partition: u32) -> Self {
+        assert!(partition > 0, "partition factor must be >= 1");
+        BramBank { name: name.into(), elems, width_bits, partition }
+    }
+
+    /// 18 Kb units consumed, accounting for partition quantization: each
+    /// partition rounds up to whole banks (this is where small tiles waste
+    /// BRAM, visible in Table I's TS=16 row).
+    pub fn banks18k(&self) -> u64 {
+        let elems_per_part = self.elems.div_ceil(self.partition as u64);
+        let bits_per_part = elems_per_part * self.width_bits as u64;
+        let banks_per_part = bits_per_part.div_ceil(BRAM_BITS).max(1);
+        banks_per_part * self.partition as u64
+    }
+
+    /// Cycles needed to satisfy `accesses` parallel reads in one II slot.
+    /// With enough banks each access hits its own port: 1 cycle.  Port
+    /// conflicts serialize.
+    pub fn access_cycles(&self, accesses: u32) -> u32 {
+        let ports = self.partition * PORTS_PER_BANK;
+        accesses.div_ceil(ports).max(1)
+    }
+
+    /// True iff `accesses` simultaneous reads are conflict-free.
+    pub fn conflict_free(&self, accesses: u32) -> bool {
+        self.access_cycles(accesses) == 1
+    }
+}
+
+/// The set of arrays one module instantiates (per attention head).
+#[derive(Clone, Debug, Default)]
+pub struct BramPool {
+    pub banks: Vec<BramBank>,
+}
+
+impl BramPool {
+    pub fn add(&mut self, bank: BramBank) -> &mut Self {
+        self.banks.push(bank);
+        self
+    }
+
+    pub fn total_banks18k(&self) -> u64 {
+        self.banks.iter().map(BramBank::banks18k).sum()
+    }
+
+    /// Worst serialization factor across arrays for a pattern that reads
+    /// `reads_per_array` operands from each array per cycle.
+    pub fn worst_access_cycles(&self, reads_per_array: u32) -> u32 {
+        self.banks.iter().map(|b| b.access_cycles(reads_per_array)).max().unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_array_one_bank() {
+        // 64 int8 elements, unpartitioned: 512 bits -> 1 bank.
+        let b = BramBank::new("bias", 64, 8, 1);
+        assert_eq!(b.banks18k(), 1);
+    }
+
+    #[test]
+    fn partitioning_multiplies_banks() {
+        // A (96 x 64) int8 weight tile = 6144 elems = 49152 bits = 3 banks
+        // unpartitioned, but partitioned x64 -> 64 banks (quantization).
+        let unpart = BramBank::new("w", 96 * 64, 8, 1);
+        assert_eq!(unpart.banks18k(), 3);
+        let part = BramBank::new("w", 96 * 64, 8, 64);
+        assert_eq!(part.banks18k(), 64);
+    }
+
+    #[test]
+    fn port_limits() {
+        let b = BramBank::new("x", 4096, 8, 8); // 8 banks -> 16 ports
+        assert!(b.conflict_free(16));
+        assert!(!b.conflict_free(17));
+        assert_eq!(b.access_cycles(32), 2);
+        assert_eq!(b.access_cycles(1), 1);
+    }
+
+    #[test]
+    fn pool_totals() {
+        let mut p = BramPool::default();
+        p.add(BramBank::new("a", 96 * 64, 8, 64));
+        p.add(BramBank::new("b", 64 * 64, 8, 64));
+        assert_eq!(p.total_banks18k(), 128);
+        assert_eq!(p.worst_access_cycles(128), 1);
+        assert_eq!(p.worst_access_cycles(129), 2);
+    }
+
+    #[test]
+    fn partition_beyond_elems_still_counts_banks() {
+        let b = BramBank::new("tiny", 4, 8, 16);
+        assert_eq!(b.banks18k(), 16); // HLS still instantiates 16 banks
+    }
+}

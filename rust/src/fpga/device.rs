@@ -1,0 +1,170 @@
+//! UltraScale+ device inventories.
+//!
+//! Resource counts for the parts named in the paper's Tables I & IV.
+//! Percent-utilization figures in Table I let us cross-check: U55C shows
+//! 4157 DSPs = 46% (→ ~9024 total) and 1,284,782 LUTs = 98% (→ ~1.30M),
+//! matching the published XCU55C (VU47P-class) and XCU200 (VU9P-class)
+//! datasheets.
+
+use crate::jsonlite::Json;
+
+/// Static resource inventory of one FPGA part.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Device {
+    pub name: String,
+    /// Part number as the paper cites it.
+    pub part: String,
+    pub dsp: u64,
+    /// BRAM counted in 18 Kb units (Table I's "BRAMs 18k" column).
+    pub bram18k: u64,
+    pub lut: u64,
+    pub ff: u64,
+    /// Off-chip memory bandwidth in GB/s (HBM2 for U55C, DDR4 for U200).
+    pub mem_bw_gbps: f64,
+    /// Whether the part has HBM stacks (affects the AXI model's setup).
+    pub has_hbm: bool,
+}
+
+impl Device {
+    /// Alveo U55C (XCU55C-FSVH2892-2L-E) — the paper's primary platform.
+    pub fn alveo_u55c() -> Device {
+        Device {
+            name: "alveo_u55c".into(),
+            part: "XCU55C-FSVH2892-2L-E".into(),
+            dsp: 9024,
+            bram18k: 4032,
+            lut: 1_303_680,
+            ff: 2_607_360,
+            mem_bw_gbps: 460.0, // 16 GB HBM2
+            has_hbm: true,
+        }
+    }
+
+    /// Alveo U200 (XCU200-FSGD2104-2-E) — the portability platform.
+    pub fn alveo_u200() -> Device {
+        Device {
+            name: "alveo_u200".into(),
+            part: "XCU200-FSGD2104-2-E".into(),
+            dsp: 6840,
+            bram18k: 4320,
+            lut: 1_182_240,
+            ff: 2_364_480,
+            mem_bw_gbps: 77.0, // 4x DDR4-2400
+            has_hbm: false,
+        }
+    }
+
+    /// VU9P (Calabash [34]'s part) — used in Table IV context.
+    pub fn vu9p() -> Device {
+        Device {
+            name: "vu9p".into(),
+            part: "XCVU9P".into(),
+            dsp: 6840,
+            bram18k: 4320,
+            lut: 1_182_240,
+            ff: 2_364_480,
+            mem_bw_gbps: 77.0,
+            has_hbm: false,
+        }
+    }
+
+    /// VU13P (Lu et al. [21]'s part).
+    pub fn vu13p() -> Device {
+        Device {
+            name: "vu13p".into(),
+            part: "XCVU13P".into(),
+            dsp: 12_288,
+            bram18k: 5376,
+            lut: 1_728_000,
+            ff: 3_456_000,
+            mem_bw_gbps: 77.0,
+            has_hbm: false,
+        }
+    }
+
+    /// Alveo U250 (Ye et al. [35]'s part).
+    pub fn alveo_u250() -> Device {
+        Device {
+            name: "alveo_u250".into(),
+            part: "XCU250".into(),
+            dsp: 12_288,
+            bram18k: 5376,
+            lut: 1_728_000,
+            ff: 3_456_000,
+            mem_bw_gbps: 77.0,
+            has_hbm: false,
+        }
+    }
+
+    /// VU37P (Li et al. [44]'s part, HBM).
+    pub fn vu37p() -> Device {
+        Device {
+            name: "vu37p".into(),
+            part: "XCVU37P".into(),
+            dsp: 9024,
+            bram18k: 4032,
+            lut: 1_303_680,
+            ff: 2_607_360,
+            mem_bw_gbps: 460.0,
+            has_hbm: true,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name {
+            "alveo_u55c" | "u55c" => Some(Device::alveo_u55c()),
+            "alveo_u200" | "u200" => Some(Device::alveo_u200()),
+            "vu9p" => Some(Device::vu9p()),
+            "vu13p" => Some(Device::vu13p()),
+            "alveo_u250" | "u250" => Some(Device::alveo_u250()),
+            "vu37p" => Some(Device::vu37p()),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::from(self.name.as_str())),
+            ("part", Json::from(self.part.as_str())),
+            ("dsp", Json::from(self.dsp as f64)),
+            ("bram18k", Json::from(self.bram18k as f64)),
+            ("lut", Json::from(self.lut as f64)),
+            ("ff", Json::from(self.ff as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_utilization_cross_check() {
+        // Table I: 4157 DSP = 46%, 3148 BRAM18k = 78%, 1,284,782 LUT = 98%
+        // on U55C. Verify our inventory reproduces those percentages ±2pp.
+        let d = Device::alveo_u55c();
+        let pct = |used: u64, total: u64| used as f64 / total as f64 * 100.0;
+        assert!((pct(4157, d.dsp) - 46.0).abs() < 2.0);
+        assert!((pct(3148, d.bram18k) - 78.0).abs() < 2.0);
+        assert!((pct(1_284_782, d.lut) - 98.0).abs() < 2.0);
+        assert!((pct(661_996, d.ff) - 25.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn u200_utilization_cross_check() {
+        // Table I tests 11-12: 3306 DSP = 48%, 2740 BRAM = 63%,
+        // 1,048,022 LUT = 88% on U200.
+        let d = Device::alveo_u200();
+        let pct = |used: u64, total: u64| used as f64 / total as f64 * 100.0;
+        assert!((pct(3306, d.dsp) - 48.0).abs() < 2.0);
+        assert!((pct(2740, d.bram18k) - 63.0).abs() < 2.0);
+        assert!((pct(1_048_022, d.lut) - 88.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Device::by_name("u55c").unwrap().name, "alveo_u55c");
+        assert_eq!(Device::by_name("u200").unwrap().name, "alveo_u200");
+        assert!(Device::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,106 @@
+//! HLS pipelined-loop latency algebra (paper eqs. 3 & 4, after [46]).
+//!
+//! Vitis HLS schedules a `#pragma HLS pipeline II=1` loop as
+//!
+//! ```text
+//! PLL = (TC - 1) * II + PipelineDepth          (eq. 3)
+//! TL  = PLL * outer_trip_count                 (eq. 4, un-pipelined outer)
+//! ```
+//!
+//! FAMOUS's modules are all "outer loop un-pipelined, second loop pipelined
+//! II=1, innermost fully unrolled" (Section VII), so every phase latency in
+//! both the analytical model and the simulator reduces to instances of this
+//! algebra.  Keeping it as an explicit type lets the simulator expose
+//! per-loop cycle attributions and lets tests pin the algebra down.
+
+/// One pipelined loop (the innermost *scheduled* loop after unrolling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelinedLoop {
+    /// Trip count (iterations of the pipelined loop).
+    pub trip_count: u64,
+    /// Initiation interval (cycles between iteration starts).
+    pub ii: u64,
+    /// Pipeline depth (cycles to drain one iteration).
+    pub pipeline_depth: u64,
+}
+
+impl PipelinedLoop {
+    pub fn new(trip_count: u64, ii: u64, pipeline_depth: u64) -> Self {
+        assert!(ii >= 1, "II must be >= 1");
+        assert!(pipeline_depth >= 1, "pipeline depth must be >= 1");
+        PipelinedLoop { trip_count, ii, pipeline_depth }
+    }
+
+    /// Pipelined-loop latency, eq. 3.  A zero-trip loop costs nothing.
+    pub fn latency(&self) -> u64 {
+        if self.trip_count == 0 {
+            return 0;
+        }
+        (self.trip_count - 1) * self.ii + self.pipeline_depth
+    }
+}
+
+/// A pipelined loop enclosed by un-pipelined outer loops (eq. 4).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LoopNest {
+    pub inner: PipelinedLoop,
+    /// Product of all enclosing un-pipelined trip counts.
+    pub outer_trips: u64,
+}
+
+impl LoopNest {
+    pub fn new(inner: PipelinedLoop, outer_trips: u64) -> Self {
+        LoopNest { inner, outer_trips }
+    }
+
+    /// Total latency, eq. 4: the outer loop re-fills the pipeline each
+    /// iteration (no pragma on the outer loop, per Algorithm 1-3).
+    pub fn latency(&self) -> u64 {
+        self.inner.latency() * self.outer_trips
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_matches_hand_computation() {
+        // (TC-1)*II + PD: 64 iterations, II=1, depth 13 -> 76.
+        let l = PipelinedLoop::new(64, 1, 13);
+        assert_eq!(l.latency(), 76);
+    }
+
+    #[test]
+    fn eq4_scales_by_outer_trip() {
+        let l = PipelinedLoop::new(64, 1, 13);
+        assert_eq!(LoopNest::new(l, 64).latency(), 76 * 64);
+    }
+
+    #[test]
+    fn ii_greater_than_one() {
+        let l = PipelinedLoop::new(10, 3, 5);
+        assert_eq!(l.latency(), 9 * 3 + 5);
+    }
+
+    #[test]
+    fn zero_trip_costs_nothing() {
+        let l = PipelinedLoop::new(0, 1, 10);
+        assert_eq!(l.latency(), 0);
+        assert_eq!(LoopNest::new(l, 100).latency(), 0);
+    }
+
+    #[test]
+    fn single_trip_is_depth() {
+        let l = PipelinedLoop::new(1, 1, 7);
+        assert_eq!(l.latency(), 7);
+    }
+
+    #[test]
+    fn latency_monotone_in_all_fields() {
+        let base = PipelinedLoop::new(16, 1, 4).latency();
+        assert!(PipelinedLoop::new(17, 1, 4).latency() > base);
+        assert!(PipelinedLoop::new(16, 2, 4).latency() > base);
+        assert!(PipelinedLoop::new(16, 1, 5).latency() > base);
+    }
+}

@@ -1,0 +1,15 @@
+//! FPGA substrate: device inventories, BRAM banking, HLS loop-latency
+//! algebra, and the structural resource estimator.
+//!
+//! These are the pieces of the Vitis/Vivado flow the paper's results
+//! depend on; DESIGN.md §2 documents how each maps onto the simulator.
+
+pub mod bram;
+pub mod device;
+pub mod hls;
+pub mod resources;
+
+pub use bram::{BramBank, BramPool};
+pub use device::Device;
+pub use hls::{LoopNest, PipelinedLoop};
+pub use resources::{ResourceEstimate, ResourceModel, Utilization};

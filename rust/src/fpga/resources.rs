@@ -1,0 +1,243 @@
+//! Structural resource estimator, calibrated against Table I.
+//!
+//! The estimate is *structural*: each term is an identifiable piece of the
+//! architecture (PE arrays, banked tiles, softmax, per-head control), with
+//! coefficients fitted to the paper's four synthesized builds
+//! (U55C @ TS∈{64,32,16}, U200 @ TS=64).  Fit residuals (EXPERIMENTS.md):
+//!
+//! * DSP  = h·(3·TS + d_k + SL + 170)                  (≤ ±6%, ≤1% on TS=64)
+//! * BRAM = h·(2·TS + d_k + SL) + 832                  (≤ ±1%)
+//! * LUT  = h·(22.3·TS² + 300·d_k + 469·SL) + 89_500   (≤ ±2%)
+//! * FF   = h·345·TS + 491_000                         (≤ ±1%)
+//!
+//! Interpretation of the terms:
+//! * `3·TS` DSP/head — the three QKV MAC chains, inner-unrolled over the
+//!   tile width; `d_k` — QK_PM's unrolled dot product; `SL` — SV_PM's.
+//! * `2·TS` BRAM/head — the three weight tiles + input tile after HLS bank
+//!   quantization (fits the measured TS-sensitivity exactly).
+//! * the quadratic LUT term is the TS-wide operand mux/routing fabric —
+//!   this is the term that caps parallel heads (98% LUT on U55C) and is
+//!   why the paper found h=8 (U55C) / h=6 (U200) to be the limits.
+//!
+//! `SL` here is the *synthesized* sequence length (the paper synthesizes
+//! at SL=64 and reports constant resources for runtime SL up to 128 —
+//! Table I tests 1–8; we adopt the same convention).
+
+use super::device::Device;
+use crate::config::Topology;
+use crate::jsonlite::Json;
+
+/// Calibrated coefficients (public so ablation benches can perturb them).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResourceModel {
+    pub dsp_per_ts: f64,
+    pub dsp_head_overhead: f64,
+    pub bram_per_ts: f64,
+    pub bram_fixed: f64,
+    pub lut_ts_quad: f64,
+    pub lut_per_dk: f64,
+    pub lut_per_sl: f64,
+    pub lut_fixed: f64,
+    pub ff_per_ts: f64,
+    pub ff_fixed: f64,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        ResourceModel {
+            dsp_per_ts: 3.0,
+            dsp_head_overhead: 170.0,
+            bram_per_ts: 2.0,
+            bram_fixed: 832.0,
+            lut_ts_quad: 22.3,
+            lut_per_dk: 300.0,
+            lut_per_sl: 469.0,
+            lut_fixed: 89_500.0,
+            ff_per_ts: 345.0,
+            ff_fixed: 491_000.0,
+        }
+    }
+}
+
+/// Predicted post-synthesis resource usage of one build.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResourceEstimate {
+    pub dsp: u64,
+    pub bram18k: u64,
+    pub lut: u64,
+    pub ff: u64,
+}
+
+impl ResourceEstimate {
+    pub fn utilization(&self, dev: &Device) -> Utilization {
+        Utilization {
+            dsp_pct: self.dsp as f64 / dev.dsp as f64 * 100.0,
+            bram_pct: self.bram18k as f64 / dev.bram18k as f64 * 100.0,
+            lut_pct: self.lut as f64 / dev.lut as f64 * 100.0,
+            ff_pct: self.ff as f64 / dev.ff as f64 * 100.0,
+        }
+    }
+
+    /// Does the build fit the device? (LUT is the binding constraint in
+    /// the paper; we check all four.)
+    pub fn fits(&self, dev: &Device) -> bool {
+        self.dsp <= dev.dsp && self.bram18k <= dev.bram18k && self.lut <= dev.lut && self.ff <= dev.ff
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("dsp", Json::from(self.dsp as f64)),
+            ("bram18k", Json::from(self.bram18k as f64)),
+            ("lut", Json::from(self.lut as f64)),
+            ("ff", Json::from(self.ff as f64)),
+        ])
+    }
+}
+
+/// Percent-of-device view (Table I's parenthesized numbers).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Utilization {
+    pub dsp_pct: f64,
+    pub bram_pct: f64,
+    pub lut_pct: f64,
+    pub ff_pct: f64,
+}
+
+impl ResourceModel {
+    /// Estimate resources for a build synthesized at `synth` (TS, h, d_k,
+    /// SL are the synthesis-time maxima).
+    pub fn estimate(&self, synth: &Topology) -> ResourceEstimate {
+        let h = synth.heads as f64;
+        let ts = synth.tile_size as f64;
+        let dk = synth.d_k() as f64;
+        let sl = synth.seq_len as f64;
+        let dsp = h * (self.dsp_per_ts * ts + dk + sl + self.dsp_head_overhead);
+        let bram = h * (self.bram_per_ts * ts + dk + sl) + self.bram_fixed;
+        let lut = h * (self.lut_ts_quad * ts * ts + self.lut_per_dk * dk + self.lut_per_sl * sl)
+            + self.lut_fixed;
+        let ff = h * self.ff_per_ts * ts + self.ff_fixed;
+        ResourceEstimate {
+            dsp: dsp.round() as u64,
+            bram18k: bram.round() as u64,
+            lut: lut.round() as u64,
+            ff: ff.round() as u64,
+        }
+    }
+
+    /// Largest head count that fits `dev` at this (TS, d_model, SL) —
+    /// the paper's "optimal number of attention heads" analysis
+    /// (Section VI: 8 on U55C, 6 on U200 at TS=64).
+    pub fn max_heads(&self, dev: &Device, d_model: usize, seq_len: usize, ts: usize) -> usize {
+        let mut best = 0;
+        for h in 1..=64 {
+            if d_model % h != 0 {
+                continue;
+            }
+            let t = Topology::new(seq_len, d_model, h, ts);
+            if self.estimate(&t).fits(dev) {
+                best = h;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pct_err(got: u64, want: u64) -> f64 {
+        (got as f64 - want as f64).abs() / want as f64 * 100.0
+    }
+
+    /// The four synthesized builds from Table I, with the paper's numbers.
+    fn paper_builds() -> Vec<(Topology, ResourceEstimate)> {
+        vec![
+            (
+                Topology::new(64, 768, 8, 64),
+                ResourceEstimate { dsp: 4157, bram18k: 3148, lut: 1_284_782, ff: 661_996 },
+            ),
+            (
+                Topology::new(64, 768, 8, 32),
+                ResourceEstimate { dsp: 3636, bram18k: 2636, lut: 746_769, ff: 587_337 },
+            ),
+            (
+                Topology::new(64, 768, 8, 16),
+                ResourceEstimate { dsp: 2996, bram18k: 2380, lut: 607_554, ff: 529_543 },
+            ),
+            (
+                Topology::new(64, 768, 6, 64),
+                ResourceEstimate { dsp: 3306, bram18k: 2740, lut: 1_048_022, ff: 625_983 },
+            ),
+        ]
+    }
+
+    #[test]
+    fn calibration_within_tolerance() {
+        let m = ResourceModel::default();
+        for (topo, paper) in paper_builds() {
+            let est = m.estimate(&topo);
+            assert!(pct_err(est.dsp, paper.dsp) < 7.0, "DSP {topo}: {est:?} vs {paper:?}");
+            assert!(pct_err(est.bram18k, paper.bram18k) < 2.0, "BRAM {topo}");
+            assert!(pct_err(est.lut, paper.lut) < 3.0, "LUT {topo}");
+            assert!(pct_err(est.ff, paper.ff) < 2.0, "FF {topo}");
+        }
+    }
+
+    #[test]
+    fn headline_build_tight() {
+        // The TS=64 U55C build is the headline; hold it to ±1%.
+        let m = ResourceModel::default();
+        let est = m.estimate(&Topology::new(64, 768, 8, 64));
+        assert!(pct_err(est.dsp, 4157) < 1.0, "dsp={}", est.dsp);
+        assert!(pct_err(est.bram18k, 3148) < 1.0, "bram={}", est.bram18k);
+        assert!(pct_err(est.lut, 1_284_782) < 1.0, "lut={}", est.lut);
+        assert!(pct_err(est.ff, 661_996) < 1.0, "ff={}", est.ff);
+    }
+
+    #[test]
+    fn reproduces_paper_max_heads() {
+        // Section VI: "The optimal number of attention heads operating in
+        // parallel was determined to be 8 and 6 ... on Alveo U55C and U200".
+        let m = ResourceModel::default();
+        assert_eq!(m.max_heads(&Device::alveo_u55c(), 768, 64, 64), 8);
+        assert_eq!(m.max_heads(&Device::alveo_u200(), 768, 64, 64), 6);
+    }
+
+    #[test]
+    fn lut_is_binding_constraint_on_u55c() {
+        // Section VI: "Further DSP utilization was not feasible, as it
+        // would have exceeded the capacity of LUTs."
+        let m = ResourceModel::default();
+        let dev = Device::alveo_u55c();
+        let h9 = Topology::new(64, 768, 12, 64); // next divisor above 8
+        let est = m.estimate(&h9);
+        assert!(est.lut > dev.lut, "h=12 should blow LUTs");
+        assert!(est.dsp < dev.dsp, "DSPs would still have headroom");
+    }
+
+    #[test]
+    fn smaller_tile_uses_fewer_resources() {
+        // Table I tests 9-10: reducing TS reduces every resource class.
+        let m = ResourceModel::default();
+        let e64 = m.estimate(&Topology::new(64, 768, 8, 64));
+        let e32 = m.estimate(&Topology::new(64, 768, 8, 32));
+        let e16 = m.estimate(&Topology::new(64, 768, 8, 16));
+        assert!(e64.dsp > e32.dsp && e32.dsp > e16.dsp);
+        assert!(e64.bram18k > e32.bram18k && e32.bram18k > e16.bram18k);
+        assert!(e64.lut > e32.lut && e32.lut > e16.lut);
+        assert!(e64.ff > e32.ff && e32.ff > e16.ff);
+    }
+
+    #[test]
+    fn utilization_percentages_match_table1() {
+        let m = ResourceModel::default();
+        let u = m
+            .estimate(&Topology::new(64, 768, 8, 64))
+            .utilization(&Device::alveo_u55c());
+        assert!((u.dsp_pct - 46.0).abs() < 2.0);
+        assert!((u.bram_pct - 78.0).abs() < 2.0);
+        assert!((u.lut_pct - 98.0).abs() < 2.5);
+        assert!((u.ff_pct - 25.0).abs() < 2.0);
+    }
+}

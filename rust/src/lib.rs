@@ -1,0 +1,42 @@
+//! FAMOUS — full-system reproduction of *“FAMOUS: Flexible Accelerator for
+//! the Attention Mechanism of Transformer on UltraScale+ FPGAs”* (FPT 2024).
+//!
+//! The crate models the paper's accelerator end to end:
+//!
+//! * [`fpga`] — UltraScale+ device inventories, BRAM banking, HLS
+//!   pipelined-loop latency algebra, and a structural resource estimator.
+//! * [`sim`] — a cycle-approximate simulator of the three processing
+//!   modules (`QKV_PM`, `QK_PM`, `SV_PM`), the AXI/HBM load path, and the
+//!   MicroBlaze-style control plane, with a functional int8 datapath.
+//! * [`analytical`] — the paper's Section VII latency model (eqs. 3–14).
+//! * [`runtime`] — PJRT loader/executor for the jax/Pallas-AOT'd HLO
+//!   artifacts (the functional oracle on the request path).
+//! * [`accel`] — `FamousAccelerator`: functional output + latency report +
+//!   resource feasibility for one request.
+//! * [`coordinator`] — the host/MicroBlaze control flow as a request
+//!   router/batcher with runtime (h, d_model, SL) reprogramming.
+//! * [`baselines`] — measured CPU attention plus calibrated models of the
+//!   platforms the paper compares against (Tables II–IV).
+//!
+//! Substrates built from scratch (offline image; see DESIGN.md §2):
+//! [`jsonlite`], [`fixed`], [`rng`], [`proptest_lite`], [`exec`], [`cli`].
+
+pub mod analytical;
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod exec;
+pub mod fixed;
+pub mod fpga;
+pub mod jsonlite;
+pub mod metrics;
+pub mod proptest_lite;
+pub mod rng;
+pub mod sim;
+pub mod testdata;
+// Layered on top (written after the substrates):
+pub mod accel;
+pub mod baselines;
+pub mod coordinator;
+pub mod report;
+pub mod runtime;

@@ -1,0 +1,315 @@
+//! `famous` — leader binary: run the accelerator, serve requests,
+//! regenerate the paper's tables, inspect builds.
+
+use famous::accel::FamousAccelerator;
+use famous::analytical::{LatencyModel, TABLE1};
+use famous::cli::Parser;
+use famous::config::Topology;
+use famous::coordinator::{
+    BatchPolicy, Coordinator, ModelDescriptor, Request, SchedulerConfig, Server, ServerConfig,
+};
+use famous::fpga::{Device, ResourceModel};
+use famous::report::{fmt_f, Table};
+use famous::sim::SimConfig;
+use famous::testdata::MhaInputs;
+
+fn parser() -> Parser {
+    Parser::new("famous", "FAMOUS attention accelerator (FPT'24) — full-system reproduction")
+        .subcommand("run", "run one MHA invocation and print the report")
+        .subcommand("serve", "serve a synthetic request stream through the coordinator")
+        .subcommand("table1", "reproduce Table I (all 12 tests)")
+        .subcommand("resources", "print resource estimates / max-heads per device")
+        .subcommand("trace", "dump the per-phase cycle trace as JSON")
+        .subcommand("info", "list available artifacts")
+        .opt_default("topology", "64,768,8", "SL,d_model,heads")
+        .opt_default("tile-size", "64", "synthesis tile size TS")
+        .opt_default("device", "u55c", "u55c | u200")
+        .opt_default("artifacts", "artifacts", "artifact directory")
+        .opt_default("requests", "32", "serve: number of synthetic requests")
+        .opt_default("model", "", "serve: model descriptor JSON path")
+        .flag("sim-datapath", "use the rust int8 datapath instead of PJRT")
+        .flag("double-buffer", "enable load/compute overlap in the tile loop")
+}
+
+fn parse_topology(s: &str, ts: usize) -> Result<Topology, String> {
+    let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+    if parts.len() != 3 {
+        return Err(format!("topology '{s}' must be SL,d_model,heads"));
+    }
+    let nums: Vec<usize> = parts
+        .iter()
+        .map(|p| p.parse().map_err(|_| format!("bad number '{p}' in topology")))
+        .collect::<Result<_, _>>()?;
+    let t = Topology::new(nums[0], nums[1], nums[2], ts);
+    t.validate().map_err(|e| e.to_string())?;
+    Ok(t)
+}
+
+fn sim_config(args: &famous::cli::Args) -> Result<SimConfig, String> {
+    let mut cfg = match args.get_or("device", "u55c") {
+        "u55c" => SimConfig::u55c(),
+        "u200" => SimConfig::u200(),
+        other => return Err(format!("unknown device '{other}'")),
+    };
+    let ts = args.get_usize("tile-size")?.unwrap_or(64);
+    if ts != cfg.build.tile_size {
+        cfg.build.tile_size = ts;
+        cfg.build.max_topology.tile_size = ts;
+    }
+    cfg.double_buffer = args.flag("double-buffer");
+    Ok(cfg)
+}
+
+fn make_accel(args: &famous::cli::Args, cfg: SimConfig) -> anyhow::Result<FamousAccelerator> {
+    if args.flag("sim-datapath") {
+        Ok(FamousAccelerator::with_sim_datapath(cfg))
+    } else {
+        FamousAccelerator::with_pjrt(cfg, args.get_or("artifacts", "artifacts"))
+    }
+}
+
+fn cmd_run(args: &famous::cli::Args) -> anyhow::Result<()> {
+    let cfg = sim_config(args).map_err(anyhow::Error::msg)?;
+    let ts = cfg.build.tile_size;
+    let topo = parse_topology(args.get_or("topology", "64,768,8"), ts)
+        .map_err(anyhow::Error::msg)?;
+    let mut accel = make_accel(args, cfg)?;
+    let inputs = MhaInputs::generate(&topo);
+    let report = accel.run(&topo, &inputs)?;
+    println!("topology      : {topo}");
+    println!("backend       : {}", accel.backend_name());
+    println!("latency       : {:.3} ms ({} cycles)", report.latency_ms, report.cycles);
+    println!("compute-only  : {:.3} ms", report.compute_only_ms(accel.config.build.clock_hz));
+    println!("GOPS (paper)  : {:.0}", report.gops);
+    println!("GOPS (attn)   : {:.0}", report.gops_attention_only);
+    let res = accel.resources();
+    let u = accel.utilization();
+    println!(
+        "build         : DSP {} ({:.0}%)  BRAM18k {} ({:.0}%)  LUT {} ({:.0}%)  FF {} ({:.0}%)",
+        res.dsp, u.dsp_pct, res.bram18k, u.bram_pct, res.lut, u.lut_pct, res.ff, u.ff_pct
+    );
+    println!("output[0..4]  : {:?}", &report.output[..4.min(report.output.len())]);
+    Ok(())
+}
+
+fn cmd_serve(args: &famous::cli::Args) -> anyhow::Result<()> {
+    let cfg = sim_config(args).map_err(anyhow::Error::msg)?;
+    let n: usize = args.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(32);
+    let ts = cfg.build.tile_size;
+    // Workload: topologies from a model descriptor, or the paper's mix.
+    let topos: Vec<Topology> = match args.get("model") {
+        Some(path) if !path.is_empty() => {
+            let desc = ModelDescriptor::from_file(path)?;
+            vec![desc.topology(ts)?]
+        }
+        _ => vec![
+            Topology::new(64, 768, 8, ts),
+            Topology::new(32, 768, 8, ts),
+            Topology::new(64, 512, 8, ts),
+        ],
+    };
+    let use_sim = args.flag("sim-datapath");
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let cfg2 = cfg.clone();
+    let srv = Server::start(
+        move || {
+            let accel = if use_sim {
+                FamousAccelerator::with_sim_datapath(cfg2)
+            } else {
+                FamousAccelerator::with_pjrt(cfg2, &artifacts).expect("load artifacts")
+            };
+            Coordinator::new(
+                accel,
+                SchedulerConfig {
+                    max_batch: 16,
+                    policy: BatchPolicy::GroupByTopology,
+                    fairness_window: 64,
+                },
+            )
+        },
+        ServerConfig::default(),
+    );
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for i in 0..n {
+        let h = srv.handle();
+        let topo = topos[i % topos.len()].clone();
+        joins.push(std::thread::spawn(move || {
+            let inputs = MhaInputs::generate(&topo);
+            h.call_blocking(Request { id: i as u64, topology: topo, inputs })
+        }));
+    }
+    let mut ok = 0;
+    for j in joins {
+        if j.join().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = srv.shutdown();
+    println!("served {ok}/{n} requests in {wall:.2}s wall ({:.1} req/s)", ok as f64 / wall);
+    println!(
+        "batches {}  reconfigurations {}  fabric p50 {:.3} ms  p99 {:.3} ms",
+        stats.batches,
+        stats.reconfigurations,
+        stats.fabric_latency.percentile(50.0),
+        stats.fabric_latency.percentile(99.0)
+    );
+    Ok(())
+}
+
+fn cmd_table1(args: &famous::cli::Args) -> anyhow::Result<()> {
+    let model = LatencyModel::default();
+    let rm = ResourceModel::default();
+    let mut t = Table::new(
+        "Table I — runtime programmability (paper vs model)",
+        &[
+            "test", "SL", "d_model", "h", "TS", "dev", "paper ms", "ours ms", "resid",
+            "paper GOPS", "ours GOPS",
+        ],
+    );
+    for row in TABLE1 {
+        if row.d_model % row.heads != 0 {
+            t.row(vec![
+                row.test.to_string(),
+                row.seq_len.to_string(),
+                row.d_model.to_string(),
+                row.heads.to_string(),
+                row.tile_size.to_string(),
+                row.device.into(),
+                fmt_f(row.latency_ms),
+                "-".into(),
+                "d%h != 0".into(),
+                fmt_f(row.gops),
+                "-".into(),
+            ]);
+            continue;
+        }
+        let topo = row.topology();
+        let ours = model.predict(&topo).total_ms();
+        let gops = famous::metrics::OpCount::paper_convention(&topo) / (ours * 1e-3);
+        t.row(vec![
+            row.test.to_string(),
+            row.seq_len.to_string(),
+            row.d_model.to_string(),
+            row.heads.to_string(),
+            row.tile_size.to_string(),
+            row.device.into(),
+            fmt_f(row.latency_ms),
+            fmt_f(ours),
+            format!("{:+.1}%", (ours - row.latency_ms) / row.latency_ms * 100.0),
+            fmt_f(row.gops),
+            fmt_f(gops),
+        ]);
+    }
+    print!("{}", t.render());
+    let _ = args;
+    // Resource rows for the synthesized builds.
+    let mut r = Table::new(
+        "Table I resources (paper vs structural estimate)",
+        &["build", "DSP paper", "DSP ours", "BRAM paper", "BRAM ours", "LUT paper", "LUT ours"],
+    );
+    for (label, topo, dsp, bram, lut) in [
+        ("U55C TS=64", Topology::new(64, 768, 8, 64), 4157u64, 3148u64, 1_284_782u64),
+        ("U55C TS=32", Topology::new(64, 768, 8, 32), 3636, 2636, 746_769),
+        ("U55C TS=16", Topology::new(64, 768, 8, 16), 2996, 2380, 607_554),
+        ("U200 TS=64", Topology::new(64, 768, 6, 64), 3306, 2740, 1_048_022),
+    ] {
+        let e = rm.estimate(&topo);
+        r.row(vec![
+            label.into(),
+            dsp.to_string(),
+            e.dsp.to_string(),
+            bram.to_string(),
+            e.bram18k.to_string(),
+            lut.to_string(),
+            e.lut.to_string(),
+        ]);
+    }
+    print!("{}", r.render());
+    Ok(())
+}
+
+fn cmd_resources(_args: &famous::cli::Args) -> anyhow::Result<()> {
+    let rm = ResourceModel::default();
+    let mut t = Table::new(
+        "Max parallel heads per device (TS=64, d_model=768, SL=64)",
+        &["device", "DSP", "BRAM18k", "LUT", "max heads"],
+    );
+    for dev in [
+        Device::alveo_u55c(),
+        Device::alveo_u200(),
+        Device::vu9p(),
+        Device::vu13p(),
+        Device::alveo_u250(),
+        Device::vu37p(),
+    ] {
+        let mh = rm.max_heads(&dev, 768, 64, 64);
+        t.row(vec![
+            dev.name.clone(),
+            dev.dsp.to_string(),
+            dev.bram18k.to_string(),
+            dev.lut.to_string(),
+            mh.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_info(args: &famous::cli::Args) -> anyhow::Result<()> {
+    let rt = famous::runtime::Runtime::load(args.get_or("artifacts", "artifacts"))?;
+    println!(
+        "artifacts: {} entries (grid scale {})",
+        rt.manifest.entries.len(),
+        rt.manifest.grid_scale
+    );
+    for e in &rt.manifest.entries {
+        println!(
+            "  {:32} hlo={:36} golden={}",
+            e.name,
+            e.hlo,
+            e.golden.as_deref().unwrap_or("-")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &famous::cli::Args) -> anyhow::Result<()> {
+    let cfg = sim_config(args).map_err(anyhow::Error::msg)?;
+    let ts = cfg.build.tile_size;
+    let topo = parse_topology(args.get_or("topology", "64,768,8"), ts)
+        .map_err(anyhow::Error::msg)?;
+    let mut sim = famous::sim::Simulator::new(cfg);
+    let r = sim.run_timing(&topo).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{}", r.trace.to_json().to_string());
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let p = parser();
+    let args = match p.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("table1") => cmd_table1(&args),
+        Some("resources") => cmd_resources(&args),
+        Some("info") => cmd_info(&args),
+        Some("trace") => cmd_trace(&args),
+        _ => {
+            eprintln!("{}", p.usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

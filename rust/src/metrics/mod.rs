@@ -1,0 +1,156 @@
+//! Operation counting and throughput metrics.
+//!
+//! The paper's GOP numbers follow two conventions (Section VI, Table II):
+//! for (64, 512) topologies 0.11 GOP matches *attention-only* counting
+//! (QKV projections + QKᵀ + SV, 2 ops per MAC); for (64, 768) the quoted
+//! 0.308 GOP additionally includes the output projection (our
+//! `with_projection` = 0.315 G, −2% off the quoted value).  Both
+//! conventions are provided; tables state which one they use, and
+//! comparative GOPS always reuse the paper's own GOP so speedup ratios
+//! are like-for-like (DESIGN.md §5).
+
+use crate::config::Topology;
+
+/// Multiply-accumulate based operation counts (1 MAC = 2 ops).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpCount {
+    pub ops: u64,
+}
+
+impl OpCount {
+    /// QKV projections + QKᵀ + SV: `6·SL·d² + 4·SL²·d` ops.
+    pub fn attention_only(topo: &Topology) -> OpCount {
+        let sl = topo.seq_len as u64;
+        let d = topo.d_model as u64;
+        OpCount { ops: 6 * sl * d * d + 4 * sl * sl * d }
+    }
+
+    /// Attention plus the output projection: `+ 2·SL·d²` ops.
+    pub fn with_projection(topo: &Topology) -> OpCount {
+        let sl = topo.seq_len as u64;
+        let d = topo.d_model as u64;
+        OpCount { ops: Self::attention_only(topo).ops + 2 * sl * d * d }
+    }
+
+    /// The GOP value the paper itself quotes for this topology's
+    /// (SL, d_model), where published; falls back to attention_only.
+    /// Used when reproducing the paper's GOPS columns so ratios match.
+    pub fn paper_convention(topo: &Topology) -> f64 {
+        match (topo.seq_len, topo.d_model) {
+            (64, 768) => 0.308,
+            (64, 512) => 0.11,
+            _ => Self::attention_only(topo).giga(),
+        }
+    }
+
+    pub fn giga(&self) -> f64 {
+        self.ops as f64 / 1e9
+    }
+}
+
+/// Throughput in giga-operations per second from an op count + latency.
+pub fn gops(ops_giga: f64, latency_ms: f64) -> f64 {
+    assert!(latency_ms > 0.0);
+    ops_giga / (latency_ms * 1e-3)
+}
+
+/// Simple latency statistics over repeated measurements (for the measured
+/// CPU baseline and the coordinator's telemetry).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples_ms.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples_ms.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Percentile by nearest-rank (p in [0,100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * s.len() as f64).ceil().max(1.0) as usize;
+        s[rank.min(s.len()) - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attention_only_matches_paper_512() {
+        // (64,512): 6·64·512² + 4·64²·512 = 0.109 G ≈ paper's 0.11.
+        let t = Topology::new(64, 512, 8, 64);
+        let g = OpCount::attention_only(&t).giga();
+        assert!((g - 0.11).abs() / 0.11 < 0.02, "{g}");
+    }
+
+    #[test]
+    fn with_projection_matches_paper_768() {
+        // (64,768): attention-only 0.239 G; +projection 0.315 ≈ 0.308.
+        let t = Topology::new(64, 768, 8, 64);
+        assert!((OpCount::attention_only(&t).giga() - 0.239).abs() < 0.001);
+        let g = OpCount::with_projection(&t).giga();
+        assert!((g - 0.308).abs() / 0.308 < 0.03, "{g}");
+    }
+
+    #[test]
+    fn paper_convention_table() {
+        let t768 = Topology::new(64, 768, 8, 64);
+        let t512 = Topology::new(64, 512, 8, 64);
+        assert_eq!(OpCount::paper_convention(&t768), 0.308);
+        assert_eq!(OpCount::paper_convention(&t512), 0.11);
+    }
+
+    #[test]
+    fn headline_gops_reproduced() {
+        // 0.308 GOP at 0.94 ms = 328 GOPS (the paper's headline).
+        let g = gops(0.308, 0.94);
+        assert!((g - 328.0).abs() < 1.0, "{g}");
+    }
+
+    #[test]
+    fn stats_basics() {
+        let mut s = LatencyStats::default();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.percentile(50.0), 2.0);
+        assert_eq!(s.percentile(100.0), 4.0);
+    }
+
+    #[test]
+    fn stats_empty_safe() {
+        let s = LatencyStats::default();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(99.0), 0.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Property-testing substrate (no proptest crate in the offline image).
+//!
+//! A deliberately small harness with the proptest essentials: value
+//! generators over a seeded [`XorShift64`], a runner that executes N random
+//! cases, and greedy input shrinking on failure.  Used by the coordinator/
+//! fixed-point/tiling invariant tests (DESIGN.md §7).
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath)
+//! use famous::proptest_lite::{run, Gen};
+//! run("addition commutes", 256, |g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::rng::XorShift64;
+
+/// Per-case value source.  Records drawn scalars so the runner can replay
+/// and shrink a failing case.
+pub struct Gen {
+    rng: XorShift64,
+    /// Values drawn this case (as i64 bit-patterns for replay).
+    trace: Vec<i64>,
+    /// When replaying a shrunk trace, draws come from here instead.
+    replay: Option<Vec<i64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: XorShift64::new(seed), trace: Vec::new(), replay: None, cursor: 0 }
+    }
+
+    fn replaying(values: Vec<i64>) -> Self {
+        Gen {
+            rng: XorShift64::new(0),
+            trace: Vec::new(),
+            replay: Some(values),
+            cursor: 0,
+        }
+    }
+
+    fn draw(&mut self, fresh: impl FnOnce(&mut XorShift64) -> i64) -> i64 {
+        let v = match &self.replay {
+            Some(vals) => {
+                // Exhausted traces fall back to zero — shrinking only ever
+                // shortens value magnitude, not trace length semantics.
+                let v = vals.get(self.cursor).copied().unwrap_or(0);
+                self.cursor += 1;
+                v
+            }
+            None => fresh(&mut self.rng),
+        };
+        self.trace.push(v);
+        v
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        let v = self.draw(|r| r.range_i64(lo, hi));
+        v.clamp(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64_in(lo as i64, hi as i64) as usize
+    }
+
+    pub fn i8_any(&mut self) -> i8 {
+        self.i64_in(-128, 127) as i8
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        // Draw a 53-bit integer and map: keeps replay/shrink integral.
+        let raw = self.draw(|r| (r.next_f64() * (1u64 << 53) as f64) as i64);
+        lo + (raw as f64 / (1u64 << 53) as f64) * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.i64_in(0, 1) == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    pub fn vec_i8(&mut self, len: usize) -> Vec<i8> {
+        (0..len).map(|_| self.i8_any()).collect()
+    }
+}
+
+/// Outcome of a property run (exposed for harness self-tests).
+#[derive(Debug)]
+pub enum Outcome {
+    Pass { cases: usize },
+    Fail { case: usize, shrunk_trace: Vec<i64>, message: String },
+}
+
+/// Run `cases` random cases of `prop`; panic with the shrunk counterexample
+/// on failure.  Deterministic per (name, case index).
+pub fn run(name: &str, cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    match run_collect(name, cases, &prop) {
+        Outcome::Pass { .. } => {}
+        Outcome::Fail { case, shrunk_trace, message } => panic!(
+            "property '{name}' failed on case {case}: {message}\n  shrunk trace: {shrunk_trace:?}"
+        ),
+    }
+}
+
+/// Like [`run`] but returns the outcome instead of panicking.
+pub fn run_collect(
+    name: &str,
+    cases: usize,
+    prop: &(impl Fn(&mut Gen) + std::panic::RefUnwindSafe),
+) -> Outcome {
+    let name_seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for case in 0..cases {
+        let seed = name_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = check(prop, &mut g) {
+            let trace = g.trace.clone();
+            let (shrunk_trace, message) = shrink(prop, trace, msg);
+            return Outcome::Fail { case, shrunk_trace, message };
+        }
+    }
+    Outcome::Pass { cases }
+}
+
+fn check(
+    prop: &(impl Fn(&mut Gen) + std::panic::RefUnwindSafe),
+    g: &mut Gen,
+) -> Result<(), String> {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(g)));
+    match result {
+        Ok(()) => Ok(()),
+        Err(e) => Err(panic_message(&e)),
+    }
+}
+
+fn panic_message(e: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+/// Greedy shrink: repeatedly try halving each drawn value toward zero,
+/// keeping any mutation that still fails.
+fn shrink(
+    prop: &(impl Fn(&mut Gen) + std::panic::RefUnwindSafe),
+    mut trace: Vec<i64>,
+    mut message: String,
+) -> (Vec<i64>, String) {
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // silence shrink probes
+    let mut improved = true;
+    let mut budget = 2000usize;
+    while improved && budget > 0 {
+        improved = false;
+        for i in 0..trace.len() {
+            if trace[i] == 0 {
+                continue;
+            }
+            for candidate in [0, trace[i] / 2, trace[i] - trace[i].signum()] {
+                if candidate == trace[i] {
+                    continue;
+                }
+                budget = budget.saturating_sub(1);
+                let mut t = trace.clone();
+                t[i] = candidate;
+                let mut g = Gen::replaying(t.clone());
+                if let Err(msg) = check(prop, &mut g) {
+                    trace = t;
+                    message = msg;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+    }
+    std::panic::set_hook(hook);
+    (trace, message)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run("abs is non-negative", 100, |g| {
+            let v = g.i64_in(-1000, 1000);
+            assert!(v.abs() >= 0);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let out = run_collect("find big", 500, &|g: &mut Gen| {
+            let v = g.i64_in(0, 1000);
+            assert!(v < 900, "v too big: {v}");
+        });
+        match out {
+            Outcome::Fail { shrunk_trace, .. } => {
+                // Shrinking drives v down to the smallest failing value.
+                assert_eq!(shrunk_trace, vec![900]);
+            }
+            Outcome::Pass { .. } => panic!("should have failed"),
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        use std::sync::atomic::{AtomicI64, Ordering};
+        let collect = || {
+            let sum = AtomicI64::new(0);
+            run("collect", 10, |g| {
+                sum.fetch_add(g.i64_in(0, 100), Ordering::SeqCst);
+            });
+            sum.load(Ordering::SeqCst)
+        };
+        assert_eq!(collect(), collect());
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        run("gen bounds", 200, |g| {
+            assert!((0..=10).contains(&g.usize_in(0, 10)));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let _ = g.bool();
+            let v = g.vec_i8(5);
+            assert_eq!(v.len(), 5);
+            let xs = [1, 2, 3];
+            assert!(xs.contains(g.pick(&xs)));
+        });
+    }
+}

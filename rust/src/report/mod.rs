@@ -1,0 +1,116 @@
+//! Table rendering for the benchmark harness.
+//!
+//! Each paper table is regenerated as an aligned text table with the
+//! paper's published value, our measured/modeled value, and the ratio —
+//! the "shape" evidence EXPERIMENTS.md records.
+
+use std::fmt::Write as _;
+
+/// A simple aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            for i in 0..ncol {
+                let _ = write!(out, "{:<w$}  ", cells[i], w = widths[i]);
+            }
+            out.pop();
+            out.pop();
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+/// Format a float with sensible precision for latency/GOPS cells.
+pub fn fmt_f(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Format a ratio as "1.23x".
+pub fn fmt_ratio(ours: f64, paper: f64) -> String {
+    if paper == 0.0 {
+        "-".into()
+    } else {
+        format!("{:.2}x", ours / paper)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "long_header", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        t.row(vec!["100".into(), "x".into(), "yy".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // Columns align: "long_header" column starts at same offset.
+        let h = lines[1];
+        let r = lines[3];
+        assert_eq!(h.find("long_header").unwrap(), 5);
+        assert_eq!(r.find('2').unwrap(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        Table::new("T", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn float_formats() {
+        assert_eq!(fmt_f(328.4), "328");
+        assert_eq!(fmt_f(2.281), "2.28");
+        assert_eq!(fmt_f(0.94), "0.940");
+        assert_eq!(fmt_ratio(2.0, 1.0), "2.00x");
+        assert_eq!(fmt_ratio(1.0, 0.0), "-");
+    }
+}

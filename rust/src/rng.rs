@@ -1,0 +1,161 @@
+//! Deterministic PRNG substrate (no `rand` crate in the offline image).
+//!
+//! `XorShift64` drives the property-test harness and workload generators;
+//! `Lcg32` is the *cross-language* generator shared with
+//! `python/compile/testdata.py` (see [`crate::testdata`]).
+
+/// xorshift64* — fast, well-distributed, deterministic.
+#[derive(Clone, Debug)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point.
+        Self { state: seed ^ 0x9E37_79B9_7F4A_7C15 | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`; `n` must be non-zero.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        // Rejection sampling to kill modulo bias.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + self.below(span) as i64
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Pick a random element of a non-empty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// The 32-bit LCG shared with the python testdata generator
+/// (`state = 1664525*state + 1013904223 mod 2^32`).
+#[derive(Clone, Debug)]
+pub struct Lcg32 {
+    state: u64,
+}
+
+impl Lcg32 {
+    /// Matches `testdata._lcg_vals`: seed is scrambled by the Knuth
+    /// multiplier mod 2^32 (0 maps to 1).
+    pub fn from_test_seed(seed: u64) -> Self {
+        let s = seed.wrapping_mul(2_654_435_761) % (1 << 32);
+        Self { state: if s == 0 { 1 } else { s } }
+    }
+
+    pub fn next_state(&mut self) -> u64 {
+        self.state = (1_664_525u64.wrapping_mul(self.state) + 1_013_904_223) % (1 << 32);
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_deterministic() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xorshift_seeds_differ() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = XorShift64::new(7);
+        for n in [1u64, 2, 3, 10, 1000] {
+            for _ in 0..200 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn range_inclusive_hits_endpoints() {
+        let mut r = XorShift64::new(9);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..500 {
+            let v = r.range_i64(-2, 2);
+            assert!((-2..=2).contains(&v));
+            lo_seen |= v == -2;
+            hi_seen |= v == 2;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = XorShift64::new(3);
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            acc += v;
+        }
+        let mean = acc / 1000.0;
+        assert!((mean - 0.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn lcg_matches_python_pin() {
+        // Mirrors python/tests/test_aot.py::test_testdata_lcg_is_stable.
+        let mut lcg = Lcg32::from_test_seed(1);
+        let vals: Vec<i64> = (0..8)
+            .map(|_| ((lcg.next_state() >> 16) % 33) as i64 - 16)
+            .collect();
+        assert_eq!(vals, vec![-11, 4, 6, 11, -9, -10, 14, 15]);
+    }
+}

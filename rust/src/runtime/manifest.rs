@@ -1,0 +1,177 @@
+//! artifacts/manifest.json schema (written by python/compile/aot.py).
+
+use crate::config::Topology;
+use crate::jsonlite::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One lowered topology.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub topology: Topology,
+    /// Deployment HLO (XLA-fused path), relative to the artifact dir.
+    pub hlo: String,
+    /// Kernel-structure HLO (Pallas interpret path), if shipped.
+    pub hlo_pallas: Option<String>,
+    /// Golden output file (f32 LE), if shipped.
+    pub golden: Option<String>,
+    pub golden_shape: Option<Vec<usize>>,
+    /// sha256 of the oracle's input stream (regenerable via testdata).
+    pub inputs_sha256: Option<String>,
+    /// Argument name → dims, in row-major element order.
+    pub args: BTreeMap<String, Vec<usize>>,
+}
+
+/// The full manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: String,
+    pub arg_order: Vec<String>,
+    pub grid_scale: f64,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let j = parse(text).map_err(|e| anyhow!("{e}"))?;
+        let format = j
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))?
+            .to_string();
+        if format != "hlo-text-v1" {
+            bail!("unsupported manifest format '{format}'");
+        }
+        let arg_order = j
+            .get("arg_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'arg_order'"))?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad arg name")))
+            .collect::<Result<Vec<_>>>()?;
+        let grid_scale = j
+            .get("grid_scale")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("manifest missing 'grid_scale'"))?;
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?
+            .iter()
+            .map(parse_entry)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { format, arg_order, grid_scale, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All topologies with artifacts, for discovery/listing.
+    pub fn topologies(&self) -> Vec<Topology> {
+        self.entries.iter().map(|e| e.topology.clone()).collect()
+    }
+}
+
+fn parse_entry(j: &Json) -> Result<ArtifactEntry> {
+    let get_str = |k: &str| {
+        j.get(k).and_then(Json::as_str).map(str::to_string).ok_or_else(|| anyhow!("entry missing '{k}'"))
+    };
+    let get_usize = |k: &str| {
+        j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("entry missing '{k}'"))
+    };
+    let name = get_str("name")?;
+    let topology = Topology::new(
+        get_usize("seq_len")?,
+        get_usize("d_model")?,
+        get_usize("heads")?,
+        get_usize("tile_size")?,
+    );
+    topology.validate().map_err(|e| anyhow!("entry {name}: {e}"))?;
+    let args = j
+        .get("args")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("entry {name} missing args"))?
+        .iter()
+        .map(|(k, v)| {
+            let dims = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("arg {k}: not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("arg {k}: bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok((k.clone(), dims))
+        })
+        .collect::<Result<BTreeMap<_, _>>>()?;
+    let golden_shape = j.get("golden_shape").and_then(Json::as_arr).map(|a| {
+        a.iter().filter_map(Json::as_usize).collect::<Vec<_>>()
+    });
+    Ok(ArtifactEntry {
+        hlo: get_str("hlo")?,
+        hlo_pallas: j.get("hlo_pallas").and_then(Json::as_str).map(str::to_string),
+        golden: j.get("golden").and_then(Json::as_str).map(str::to_string),
+        golden_shape,
+        inputs_sha256: j.get("inputs_sha256").and_then(Json::as_str).map(str::to_string),
+        name,
+        topology,
+        args,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "arg_order": ["x", "wq"],
+      "grid_scale": 0.015625,
+      "entries": [
+        {"name": "mha_sl8_d128_h4_ts32", "seq_len": 8, "d_model": 128,
+         "heads": 4, "tile_size": 32, "d_k": 32, "n_tiles": 4,
+         "hlo": "mha_sl8_d128_h4_ts32.hlo.txt",
+         "golden": "g.bin", "golden_shape": [8, 128],
+         "inputs_sha256": "ab",
+         "args": {"x": [8, 128], "wq": [4, 32, 128]}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.arg_order, vec!["x", "wq"]);
+        assert_eq!(m.grid_scale, 0.015625);
+        let e = m.entry("mha_sl8_d128_h4_ts32").unwrap();
+        assert_eq!(e.topology, Topology::new(8, 128, 4, 32));
+        assert_eq!(e.args["wq"], vec![4, 32, 128]);
+        assert_eq!(e.golden.as_deref(), Some("g.bin"));
+        assert_eq!(e.golden_shape, Some(vec![8, 128]));
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text-v1", "hlo-text-v9");
+        assert!(Manifest::parse_str(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_topology() {
+        let bad = SAMPLE.replace("\"heads\": 4", "\"heads\": 3"); // 128 % 3 != 0
+        assert!(Manifest::parse_str(&bad).is_err());
+    }
+
+    #[test]
+    fn entry_lookup_missing() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert!(m.entry("nope").is_none());
+        assert_eq!(m.topologies().len(), 1);
+    }
+}

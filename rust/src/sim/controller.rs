@@ -1,0 +1,176 @@
+//! MicroBlaze-style control plane (Fig. 5 & 6).
+//!
+//! The paper programs (h, d_model, SL) at runtime: the host extracts the
+//! topology from a trained model, the µB writes AXI-lite control
+//! registers, raises `start`, and reads an AXI-TIMER spanning start→stop.
+//! This module models that register file and the admission checks the
+//! fabric's synthesized maxima impose.
+
+use crate::config::{AcceleratorConfig, ConfigError, Topology};
+
+/// The AXI-lite register image the µB writes before `start`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ControlRegs {
+    pub seq_len: u32,
+    pub d_model: u32,
+    pub heads: u32,
+    /// Derived by the host software: d_model / heads.
+    pub d_k: u32,
+    /// Derived: d_model / tile_size (tile loop bound).
+    pub n_tiles: u32,
+    pub start: bool,
+}
+
+/// Control-plane errors (reported to the host over AXI-lite).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CtrlError {
+    Rejected(ConfigError),
+    /// start raised while a run is in flight.
+    Busy,
+}
+
+impl std::fmt::Display for CtrlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CtrlError::Rejected(e) => write!(f, "control rejected: {e}"),
+            CtrlError::Busy => write!(f, "accelerator busy"),
+        }
+    }
+}
+
+/// The accelerator-side controller: validates and latches register writes,
+/// counts reconfigurations, and models the AXI-TIMER.
+#[derive(Clone, Debug)]
+pub struct Controller {
+    pub build: AcceleratorConfig,
+    regs: Option<ControlRegs>,
+    busy: bool,
+    /// Number of distinct reprogram events (telemetry for the batcher:
+    /// the coordinator tries to minimize these).
+    pub reconfigurations: u64,
+    /// AXI-TIMER value of the last completed run, in cycles.
+    pub last_timer: u64,
+}
+
+impl Controller {
+    pub fn new(build: AcceleratorConfig) -> Self {
+        Controller { build, regs: None, busy: false, reconfigurations: 0, last_timer: 0 }
+    }
+
+    /// Program a topology (µB register writes).  Validates against the
+    /// synthesized maxima — the runtime-programmability contract.
+    pub fn program(&mut self, topo: &Topology) -> Result<ControlRegs, CtrlError> {
+        if self.busy {
+            return Err(CtrlError::Busy);
+        }
+        self.build.admits(topo).map_err(CtrlError::Rejected)?;
+        let regs = ControlRegs {
+            seq_len: topo.seq_len as u32,
+            d_model: topo.d_model as u32,
+            heads: topo.heads as u32,
+            d_k: topo.d_k() as u32,
+            n_tiles: topo.n_tiles() as u32,
+            start: false,
+        };
+        if self.regs.map(|r| (r.seq_len, r.d_model, r.heads)) != Some((regs.seq_len, regs.d_model, regs.heads))
+        {
+            self.reconfigurations += 1;
+        }
+        self.regs = Some(regs);
+        Ok(regs)
+    }
+
+    /// Current register image (None before first program()).
+    pub fn regs(&self) -> Option<ControlRegs> {
+        self.regs
+    }
+
+    /// Raise start; the engine calls `finish(cycles)` when done.
+    pub fn start(&mut self) -> Result<(), CtrlError> {
+        if self.busy {
+            return Err(CtrlError::Busy);
+        }
+        if self.regs.is_none() {
+            return Err(CtrlError::Rejected(ConfigError::InvalidTopology(
+                "start before programming".into(),
+            )));
+        }
+        self.busy = true;
+        Ok(())
+    }
+
+    /// Stop signal from the fabric: latch the AXI-TIMER reading.
+    pub fn finish(&mut self, cycles: u64) {
+        debug_assert!(self.busy, "finish without start");
+        self.busy = false;
+        self.last_timer = cycles;
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.busy
+    }
+
+    /// Timer reading converted to ms at the build clock (what the host
+    /// prints over UARTlite in the paper's setup).
+    pub fn last_latency_ms(&self) -> f64 {
+        self.build.cycles_to_ms(self.last_timer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctrl() -> Controller {
+        Controller::new(AcceleratorConfig::u55c_ts64())
+    }
+
+    #[test]
+    fn program_derives_fields() {
+        let mut c = ctrl();
+        let regs = c.program(&Topology::new(64, 768, 8, 64)).unwrap();
+        assert_eq!(regs.d_k, 96);
+        assert_eq!(regs.n_tiles, 12);
+        assert_eq!(c.reconfigurations, 1);
+    }
+
+    #[test]
+    fn reprogram_same_topology_is_free() {
+        let mut c = ctrl();
+        let t = Topology::new(64, 768, 8, 64);
+        c.program(&t).unwrap();
+        c.program(&t).unwrap();
+        assert_eq!(c.reconfigurations, 1);
+        c.program(&Topology::new(32, 768, 8, 64)).unwrap();
+        assert_eq!(c.reconfigurations, 2);
+    }
+
+    #[test]
+    fn rejects_beyond_synthesized_max() {
+        let mut c = ctrl();
+        let err = c.program(&Topology::new(256, 768, 8, 64)).unwrap_err();
+        assert!(matches!(err, CtrlError::Rejected(ConfigError::ExceedsSynthesizedMax { .. })));
+    }
+
+    #[test]
+    fn busy_protocol() {
+        let mut c = ctrl();
+        c.program(&Topology::new(64, 768, 8, 64)).unwrap();
+        c.start().unwrap();
+        assert!(c.is_busy());
+        assert_eq!(c.start(), Err(CtrlError::Busy));
+        assert!(matches!(
+            c.program(&Topology::new(32, 768, 8, 64)),
+            Err(CtrlError::Busy)
+        ));
+        c.finish(400_000);
+        assert!(!c.is_busy());
+        assert!((c.last_latency_ms() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn start_before_program_rejected() {
+        let mut c = ctrl();
+        assert!(c.start().is_err());
+    }
+}

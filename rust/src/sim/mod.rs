@@ -1,0 +1,31 @@
+//! Cycle-approximate simulator of the FAMOUS accelerator.
+//!
+//! Simulates the architecture of Fig. 3 — `h` parallel sets of
+//! {`QKV_PM`, `QK_PM` (+ scale/softmax), `SV_PM`} processing modules fed
+//! by AXI/HBM loads under MicroBlaze control — with two coupled facets:
+//!
+//! * **Timing**: every phase is scheduled on a cycle timeline built from
+//!   the same HLS loop structure the analytical model uses (outer loop
+//!   un-pipelined, second loop II=1, innermost fully unrolled).  The
+//!   engine emits a [`CycleTrace`] of phase events, so benches can plot
+//!   per-phase attributions and the Table IV "compute-only" convention
+//!   falls out naturally.
+//! * **Function**: the datapath actually computes the attention output
+//!   through the int8/DSP48 model in [`crate::fixed`] (exact integer QKV
+//!   accumulation, f32 score scaling, exact or LUT softmax), validated
+//!   against the python oracle's golden vectors.
+//!
+//! The simulator and [`crate::analytical`] share calibration constants;
+//! `engine` tests pin their agreement so the paper's "analytical model
+//! validates the experiment" claim is reproduced by construction *and*
+//! checked.
+
+pub mod axi;
+pub mod controller;
+pub mod engine;
+pub mod modules;
+pub mod softmax_unit;
+
+pub use controller::{ControlRegs, Controller, CtrlError};
+pub use engine::{CycleTrace, PhaseEvent, SimConfig, SimResult, Simulator};
+pub use softmax_unit::SoftmaxUnit;

@@ -1,0 +1,360 @@
+//! The three processing modules (Fig. 3), each with its HLS-scheduled
+//! timing and its functional int8 datapath.
+//!
+//! Per attention head the fabric instantiates one of each:
+//!
+//! * [`QkvPm`] — Algorithm 1: per tile, MAC the (SL×TS) input block
+//!   against the three (d_k×TS) weight tiles, accumulating Q/K/V.
+//! * [`QkPm`] — Algorithm 2: S = Q·Kᵀ with the scale division folded in,
+//!   then the softmax unit.
+//! * [`SvPm`] — Algorithm 3: attention score = S·V.
+//!
+//! Timing follows the paper's schedule exactly (outer loop un-pipelined,
+//! second loop pipelined II=1, innermost fully unrolled); the cycle
+//! formulas are the same `LoopNest` instances the analytical model uses,
+//! so the two stay consistent by construction.
+
+use crate::fixed::{matmul_i32_fast, FxMatrix};
+use crate::fpga::hls::{LoopNest, PipelinedLoop};
+
+use super::softmax_unit::SoftmaxUnit;
+
+/// Quantized weights + float biases for one attention head.
+/// Weight rows are output features (d_k), columns the reduction (d_model),
+/// as in Algorithm 1's `w_q[k][j]`.
+#[derive(Clone, Debug)]
+pub struct HeadParams {
+    pub wq: FxMatrix,
+    pub wk: FxMatrix,
+    pub wv: FxMatrix,
+    pub bq: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub bv: Vec<f32>,
+}
+
+/// Extra pipeline stages of QKV_PM beyond the tile count: load 1 + mul 2 +
+/// add 1 + store 1 (Section VII).
+pub const PD_MHA_CONST: u64 = 5;
+/// Bias-add pipeline depth: load + add + store.
+pub const PD_BA: u64 = 3;
+
+// ------------------------------------------------------------------ QKV_PM
+
+/// Q/K/V generation module (Algorithm 1).
+pub struct QkvPm {
+    pub seq_len: usize,
+    pub d_k: usize,
+    pub tile_size: usize,
+    pub n_tiles: usize,
+}
+
+impl QkvPm {
+    pub fn new(seq_len: usize, d_k: usize, tile_size: usize, n_tiles: usize) -> Self {
+        QkvPm { seq_len, d_k, tile_size, n_tiles }
+    }
+
+    /// PE count: the three MAC chains, inner-unrolled over the tile width.
+    pub fn pe_count(&self) -> usize {
+        3 * self.tile_size
+    }
+
+    /// Compute cycles for ONE tile iteration (eq. 9 without the tile
+    /// repetition): [(d_k−1)·1 + PD_MHA] · SL, PD_MHA = n_tiles + 5.
+    pub fn cycles_per_tile(&self) -> u64 {
+        let pd = self.n_tiles as u64 + PD_MHA_CONST;
+        LoopNest::new(PipelinedLoop::new(self.d_k as u64, 1, pd), self.seq_len as u64).latency()
+    }
+
+    /// Bias addition cycles (eq. 10).
+    pub fn bias_cycles(&self) -> u64 {
+        LoopNest::new(PipelinedLoop::new(self.d_k as u64, 1, PD_BA), self.seq_len as u64)
+            .latency()
+    }
+
+    /// Functional path: exact int8→i32 tiled GEMM (the DSP48 datapath),
+    /// then dequantize + bias in f32.  `x` is (SL × d_model) int8;
+    /// `scale2` is the product of the x and w grid steps.
+    pub fn run(&self, x: &FxMatrix, p: &HeadParams, scale2: f32) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let deq = |acc: Vec<i32>, bias: &[f32]| -> Vec<f32> {
+            let n = self.d_k;
+            acc.iter()
+                .enumerate()
+                .map(|(idx, &v)| v as f32 * scale2 + bias[idx % n])
+                .collect()
+        };
+        // matmul_i32_fast is bit-identical to the tiled schedule (exact
+        // integer arithmetic); the tile schedule only matters for timing.
+        let q = deq(matmul_i32_fast(x, &p.wq), &p.bq);
+        let k = deq(matmul_i32_fast(x, &p.wk), &p.bk);
+        let v = deq(matmul_i32_fast(x, &p.wv), &p.bv);
+        (q, k, v)
+    }
+
+    /// Useful MACs issued per full run (3 projections).
+    pub fn macs(&self, d_model: usize) -> u64 {
+        3 * self.seq_len as u64 * d_model as u64 * self.d_k as u64
+    }
+}
+
+// ------------------------------------------------------------------- QK_PM
+
+/// Score module (Algorithm 2) with fused scale + softmax.
+pub struct QkPm {
+    pub seq_len: usize,
+    pub d_k: usize,
+    pub softmax: SoftmaxUnit,
+    /// Score scaling: eq. 1 uses 1/√d_k; Algorithm 2 line 9 divides by
+    /// d_model.  Stored as a multiplier.
+    pub scale: f32,
+    /// Decoder masking (Section II's Masked Attention): row i attends
+    /// only to columns <= i.
+    pub causal: bool,
+}
+
+impl QkPm {
+    pub fn new(seq_len: usize, d_k: usize, scale: f32, softmax: SoftmaxUnit) -> Self {
+        QkPm { seq_len, d_k, softmax, scale, causal: false }
+    }
+
+    pub fn causal(seq_len: usize, d_k: usize, scale: f32, softmax: SoftmaxUnit) -> Self {
+        QkPm { causal: true, ..Self::new(seq_len, d_k, scale, softmax) }
+    }
+
+    /// PE count: the unrolled dot product over d_k.
+    pub fn pe_count(&self) -> usize {
+        self.d_k
+    }
+
+    /// eq. 11: [(SL−1)·1 + PD_S] · SL with PD_S = d_k.
+    pub fn cycles(&self) -> u64 {
+        LoopNest::new(
+            PipelinedLoop::new(self.seq_len as u64, 1, self.d_k as u64),
+            self.seq_len as u64,
+        )
+        .latency()
+    }
+
+    /// S = softmax(scale · Q Kᵀ); Q,K are (SL × d_k) row-major f32.
+    pub fn run(&self, q: &[f32], k: &[f32]) -> Vec<f32> {
+        let (sl, dk) = (self.seq_len, self.d_k);
+        assert_eq!(q.len(), sl * dk);
+        assert_eq!(k.len(), sl * dk);
+        let mut s = vec![0f32; sl * sl];
+        for i in 0..sl {
+            let qrow = &q[i * dk..(i + 1) * dk];
+            for j in 0..sl {
+                let krow = &k[j * dk..(j + 1) * dk];
+                // zip over equal slices -> vectorized f32 dot product.
+                let acc: f32 = qrow.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+                s[i * sl + j] = if self.causal && j > i {
+                    -1e9 // decoder mask: future positions excluded
+                } else {
+                    acc * self.scale
+                };
+            }
+        }
+        self.softmax.rows(&mut s, sl, sl);
+        s
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.seq_len * self.seq_len * self.d_k) as u64
+    }
+}
+
+// ------------------------------------------------------------------- SV_PM
+
+/// Weighted-value module (Algorithm 3).
+pub struct SvPm {
+    pub seq_len: usize,
+    pub d_k: usize,
+}
+
+impl SvPm {
+    pub fn new(seq_len: usize, d_k: usize) -> Self {
+        SvPm { seq_len, d_k }
+    }
+
+    /// PE count: the unrolled dot product over SL.
+    pub fn pe_count(&self) -> usize {
+        self.seq_len
+    }
+
+    /// eq. 12: [(d_k−1)·1 + PD_SV] · SL with PD_SV = SL.
+    pub fn cycles(&self) -> u64 {
+        LoopNest::new(
+            PipelinedLoop::new(self.d_k as u64, 1, self.seq_len as u64),
+            self.seq_len as u64,
+        )
+        .latency()
+    }
+
+    /// O = S · V; S is (SL × SL), V is (SL × d_k), both row-major f32.
+    pub fn run(&self, s: &[f32], v: &[f32]) -> Vec<f32> {
+        let (sl, dk) = (self.seq_len, self.d_k);
+        assert_eq!(s.len(), sl * sl);
+        assert_eq!(v.len(), sl * dk);
+        let mut out = vec![0f32; sl * dk];
+        for i in 0..sl {
+            for l in 0..sl {
+                let w = s[i * sl + l];
+                if w == 0.0 {
+                    continue;
+                }
+                for j in 0..dk {
+                    out[i * dk + j] += w * v[l * dk + j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.seq_len * self.seq_len * self.d_k) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Quantizer;
+
+    fn fx(data: Vec<i8>, rows: usize, cols: usize) -> FxMatrix {
+        FxMatrix { rows, cols, data }
+    }
+
+    #[test]
+    fn qkv_cycles_match_eq9_test1() {
+        // Test 1 shape: d_k=96, SL=64, 12 tiles → (95+17)·64 = 7 168/tile.
+        let m = QkvPm::new(64, 96, 64, 12);
+        assert_eq!(m.cycles_per_tile(), 7_168);
+        assert_eq!(m.bias_cycles(), (95 + 3) * 64);
+        assert_eq!(m.pe_count(), 192);
+    }
+
+    #[test]
+    fn qk_sv_cycles_match_eq11_eq12_test1() {
+        let qk = QkPm::new(64, 96, 1.0, SoftmaxUnit::exact());
+        assert_eq!(qk.cycles(), (63 + 96) * 64); // 10 176
+        let sv = SvPm::new(64, 96);
+        assert_eq!(sv.cycles(), (95 + 64) * 64); // 10 176
+    }
+
+    #[test]
+    fn qkv_functional_matches_direct_gemm() {
+        // x (2×4) @ w (3×4).T with grid scale 1: exact small integers.
+        let x = fx(vec![1, 2, 3, 4, -1, 0, 2, 1], 2, 4);
+        let w = fx(vec![1, 0, 0, 0, 0, 1, 0, 0, 1, 1, 1, 1], 3, 4);
+        let p = HeadParams {
+            wq: w.clone(),
+            wk: w.clone(),
+            wv: w,
+            bq: vec![0.5, 0.0, -0.5],
+            bk: vec![0.0; 3],
+            bv: vec![0.0; 3],
+        };
+        let m = QkvPm::new(2, 3, 2, 2);
+        let (q, k, _v) = m.run(&x, &p, 1.0);
+        // row0: [1, 2, 10] + bias
+        assert_eq!(q, vec![1.5, 2.0, 9.5, -0.5, 0.0, 1.5]);
+        assert_eq!(k, vec![1.0, 2.0, 10.0, -1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn qk_run_is_row_softmaxed() {
+        let qk = QkPm::new(2, 2, 0.5, SoftmaxUnit::exact());
+        let q = vec![1.0, 0.0, 0.0, 1.0];
+        let k = vec![1.0, 0.0, 0.0, 1.0];
+        let s = qk.run(&q, &k);
+        // scores: [[.5,0],[0,.5]] -> softmax rows
+        let e = 0.5f32.exp();
+        let p0 = e / (e + 1.0);
+        assert!((s[0] - p0).abs() < 1e-6);
+        assert!((s[1] - (1.0 - p0)).abs() < 1e-6);
+        assert!((s[0] + s[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sv_run_weighted_average() {
+        let sv = SvPm::new(2, 2);
+        // S = identity -> output = V.
+        let s = vec![1.0, 0.0, 0.0, 1.0];
+        let v = vec![3.0, -1.0, 2.0, 5.0];
+        assert_eq!(sv.run(&s, &v), v);
+        // uniform S -> rows average
+        let s = vec![0.5, 0.5, 0.5, 0.5];
+        assert_eq!(sv.run(&s, &v), vec![2.5, 2.0, 2.5, 2.0]);
+    }
+
+    #[test]
+    fn causal_masks_future_positions() {
+        let qk = QkPm::causal(3, 2, 1.0, SoftmaxUnit::exact());
+        let q = vec![1.0, 0.0, 0.5, 0.5, 0.0, 1.0];
+        let k = q.clone();
+        let s = qk.run(&q, &k);
+        // Row 0 attends only to position 0.
+        assert!((s[0] - 1.0).abs() < 1e-6);
+        assert_eq!(&s[1..3], &[0.0, 0.0]);
+        // Row 1: positions 0,1 only.
+        assert_eq!(s[1 * 3 + 2], 0.0);
+        assert!((s[3] + s[4] - 1.0).abs() < 1e-6);
+        // Row 2: full attention, still stochastic.
+        let sum: f32 = s[6..9].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn causal_first_output_row_is_v_row0() {
+        let qk = QkPm::causal(4, 2, 0.5, SoftmaxUnit::exact());
+        let q: Vec<f32> = (0..8).map(|i| i as f32 / 8.0).collect();
+        let s = qk.run(&q, &q);
+        let v = vec![3.0, -1.0, 2.0, 5.0, 0.0, 1.0, -2.0, 4.0];
+        let out = SvPm::new(4, 2).run(&s, &v);
+        assert!((out[0] - 3.0).abs() < 1e-6);
+        assert!((out[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn full_head_matches_float_reference() {
+        // End-to-end single head vs a straightforward float computation.
+        let qz = Quantizer::grid64();
+        let xs: Vec<f32> = (0..4 * 8).map(|i| ((i * 7 % 33) as f32 - 16.0) / 64.0).collect();
+        let ws: Vec<f32> = (0..2 * 8).map(|i| ((i * 11 % 33) as f32 - 16.0) / 64.0).collect();
+        let x = FxMatrix::from_f32(&xs, 4, 8, &qz);
+        let w = FxMatrix::from_f32(&ws, 2, 8, &qz);
+        let p = HeadParams {
+            wq: w.clone(),
+            wk: w.clone(),
+            wv: w.clone(),
+            bq: vec![0.0; 2],
+            bk: vec![0.0; 2],
+            bv: vec![0.0; 2],
+        };
+        let scale2 = qz.scale * qz.scale;
+        let qkv = QkvPm::new(4, 2, 4, 2);
+        let (q, k, v) = qkv.run(&x, &p, scale2);
+        let qk = QkPm::new(4, 2, 1.0 / (2f32).sqrt(), SoftmaxUnit::exact());
+        let s = qk.run(&q, &k);
+        let out = SvPm::new(4, 2).run(&s, &v);
+
+        // float reference
+        let mut q_ref = vec![0f32; 8];
+        for i in 0..4 {
+            for j in 0..2 {
+                for l in 0..8 {
+                    q_ref[i * 2 + j] += xs[i * 8 + l] * ws[j * 8 + l];
+                }
+            }
+        }
+        for (a, b) in q.iter().zip(&q_ref) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert_eq!(out.len(), 8);
+        // attention output rows are convex combos of V rows: bounded.
+        let vmax = v.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let vmin = v.iter().fold(f32::INFINITY, |m, &x| m.min(x));
+        for &o in &out {
+            assert!(o <= vmax + 1e-5 && o >= vmin - 1e-5);
+        }
+    }
+}

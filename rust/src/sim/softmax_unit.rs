@@ -1,0 +1,161 @@
+//! The softmax unit at the tail of `QK_PM`.
+//!
+//! HLS synthesizes the non-linearity out of LUTs and FFs (Section IV.A.2);
+//! we model both the *numerics* (an exp lookup table over a clipped,
+//! max-normalized domain — matching `python/compile/kernels/softmax.py`
+//! and `ref.lut_softmax` exactly) and an exact-exponential mode used when
+//! bit-matching the float oracle.
+
+/// Softmax realization selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SoftmaxKind {
+    /// Exact exponential (matches the float oracle / PJRT artifact).
+    Exact,
+    /// 2^bits-entry LUT over [x_min, 0] (the fabric realization).
+    Lut { bits: u32 },
+}
+
+/// The QK_PM softmax unit.
+#[derive(Clone, Debug)]
+pub struct SoftmaxUnit {
+    pub kind: SoftmaxKind,
+    /// Domain floor of the LUT (paper-scale scores rarely exceed ~8).
+    pub x_min: f32,
+    table: Vec<f32>,
+}
+
+impl SoftmaxUnit {
+    pub fn exact() -> Self {
+        SoftmaxUnit { kind: SoftmaxKind::Exact, x_min: -8.0, table: Vec::new() }
+    }
+
+    pub fn lut(bits: u32) -> Self {
+        let x_min = -8.0f32;
+        let n = 1usize << bits;
+        let step = -x_min / (n as f32 - 1.0);
+        let table = (0..n).map(|i| (x_min + i as f32 * step).exp()).collect();
+        SoftmaxUnit { kind: SoftmaxKind::Lut { bits }, x_min, table }
+    }
+
+    fn exp(&self, z: f32) -> f32 {
+        match self.kind {
+            SoftmaxKind::Exact => z.exp(),
+            SoftmaxKind::Lut { bits } => {
+                let n = 1usize << bits;
+                let step = -self.x_min / (n as f32 - 1.0);
+                let zc = z.clamp(self.x_min, 0.0);
+                let idx = ((zc - self.x_min) / step).floor() as usize;
+                self.table[idx.min(n - 1)]
+            }
+        }
+    }
+
+    /// In-place row softmax over a row-major `rows × cols` matrix.
+    pub fn rows(&self, data: &mut [f32], rows: usize, cols: usize) {
+        assert_eq!(data.len(), rows * cols);
+        for r in 0..rows {
+            let row = &mut data[r * cols..(r + 1) * cols];
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = self.exp(*v - max);
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+
+    /// LUT storage cost in LUT4 equivalents (drives the resource model's
+    /// per-SL softmax term).
+    pub fn lut_cost(&self) -> usize {
+        match self.kind {
+            SoftmaxKind::Exact => 0,
+            SoftmaxKind::Lut { bits } => (1usize << bits) * 32 / 64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn softmax_ref(row: &[f32]) -> Vec<f32> {
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let e: Vec<f32> = row.iter().map(|&v| (v - max).exp()).collect();
+        let s: f32 = e.iter().sum();
+        e.iter().map(|&v| v / s).collect()
+    }
+
+    #[test]
+    fn exact_matches_reference() {
+        let unit = SoftmaxUnit::exact();
+        let mut m = vec![0.5, -1.0, 2.0, 0.0, 0.0, 0.0, 3.0, -3.0];
+        let want0 = softmax_ref(&m[0..4]);
+        let want1 = softmax_ref(&m[4..8]);
+        unit.rows(&mut m, 2, 4);
+        for (g, w) in m[0..4].iter().zip(&want0) {
+            assert!((g - w).abs() < 1e-6);
+        }
+        for (g, w) in m[4..8].iter().zip(&want1) {
+            assert!((g - w).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rows_are_stochastic() {
+        for unit in [SoftmaxUnit::exact(), SoftmaxUnit::lut(8)] {
+            let mut m: Vec<f32> = (0..64).map(|i| ((i * 37) % 13) as f32 - 6.0).collect();
+            unit.rows(&mut m, 8, 8);
+            for r in 0..8 {
+                let sum: f32 = m[r * 8..(r + 1) * 8].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5);
+                assert!(m[r * 8..(r + 1) * 8].iter().all(|&v| v >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn lut_error_shrinks_with_bits() {
+        let mut exact = vec![1.5f32, -0.5, 0.25, -2.0];
+        SoftmaxUnit::exact().rows(&mut exact, 1, 4);
+        let err = |bits: u32| {
+            let mut m = vec![1.5f32, -0.5, 0.25, -2.0];
+            SoftmaxUnit::lut(bits).rows(&mut m, 1, 4);
+            m.iter().zip(&exact).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max)
+        };
+        assert!(err(10) <= err(6));
+        assert!(err(10) < 5e-3);
+    }
+
+    #[test]
+    fn lut_matches_python_lut_softmax_grid() {
+        // Same construction as kernels/softmax.py: floor-indexed table
+        // over [-8, 0] with 2^bits-1 steps -> spot-check a value.
+        let unit = SoftmaxUnit::lut(8);
+        let step = 8.0 / 255.0;
+        let z = -1.234f32;
+        let idx = ((z + 8.0) / step).floor() as usize;
+        let want = (-8.0 + idx as f32 * step).exp();
+        assert!((unit.exp(z) - want).abs() < 1e-7);
+    }
+
+    #[test]
+    fn shift_invariance() {
+        let unit = SoftmaxUnit::exact();
+        let mut a = vec![0.1f32, 0.9, -0.4, 0.0];
+        let mut b: Vec<f32> = a.iter().map(|v| v + 5.0).collect();
+        unit.rows(&mut a, 1, 4);
+        unit.rows(&mut b, 1, 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lut_cost_scales() {
+        assert_eq!(SoftmaxUnit::exact().lut_cost(), 0);
+        assert!(SoftmaxUnit::lut(10).lut_cost() > SoftmaxUnit::lut(8).lut_cost());
+    }
+}

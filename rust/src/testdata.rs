@@ -1,0 +1,121 @@
+//! Cross-language deterministic test vectors.
+//!
+//! Reimplements `python/compile/testdata.py` exactly: both sides generate
+//! identical int8-grid matrices from the same LCG stream, so the rust
+//! integration tests can feed the PJRT executables the very inputs the
+//! python oracle used, comparing against the shipped `*.golden.bin`
+//! without storing multi-megabyte weight dumps.
+
+use crate::config::Topology;
+use crate::rng::Lcg32;
+
+/// Grid step of the shared int8 quantization grid (1/64).
+pub const GRID_SCALE: f32 = 1.0 / 64.0;
+
+/// Deterministic int8-grid values in `[-16, 16] * GRID_SCALE`.
+pub fn lcg_vals(seed: u64, n: usize) -> Vec<f32> {
+    let mut lcg = Lcg32::from_test_seed(seed);
+    (0..n)
+        .map(|_| {
+            let v = ((lcg.next_state() >> 16) % 33) as i64 - 16;
+            v as f32 * GRID_SCALE
+        })
+        .collect()
+}
+
+/// Row-major `rows x cols` matrix from stream `seed`.
+pub fn gen_matrix(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
+    lcg_vals(seed, rows * cols)
+}
+
+/// All seven operands for one topology, in aot.py's `ARG_ORDER`
+/// (x, wq, wk, wv, bq, bk, bv), each flattened row-major.
+#[derive(Clone)]
+pub struct MhaInputs {
+    pub x: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bq: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub bv: Vec<f32>,
+}
+
+impl std::fmt::Debug for MhaInputs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MhaInputs({} elems)", self.elems())
+    }
+}
+
+impl MhaInputs {
+    pub fn generate(topo: &Topology) -> Self {
+        let (sl, dm, h) = (topo.seq_len, topo.d_model, topo.heads);
+        let dk = topo.d_k();
+        MhaInputs {
+            x: gen_matrix(1, sl, dm),
+            wq: gen_matrix(2, h * dk, dm),
+            wk: gen_matrix(3, h * dk, dm),
+            wv: gen_matrix(4, h * dk, dm),
+            bq: gen_matrix(5, h, dk),
+            bk: gen_matrix(6, h, dk),
+            bv: gen_matrix(7, h, dk),
+        }
+    }
+
+    /// Total payload size in f32 elements (telemetry).
+    pub fn elems(&self) -> usize {
+        self.x.len()
+            + self.wq.len()
+            + self.wk.len()
+            + self.wv.len()
+            + self.bq.len()
+            + self.bk.len()
+            + self.bv.len()
+    }
+
+    /// Operand slices in the aot ARG_ORDER.
+    pub fn in_order(&self) -> [&[f32]; 7] {
+        [&self.x, &self.wq, &self.wk, &self.wv, &self.bq, &self.bk, &self.bv]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Topology;
+
+    #[test]
+    fn pinned_stream_matches_python() {
+        let v = lcg_vals(1, 8);
+        let expect: Vec<f32> = [-11f32, 4.0, 6.0, 11.0, -9.0, -10.0, 14.0, 15.0]
+            .iter()
+            .map(|x| x / 64.0)
+            .collect();
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn values_on_grid_and_bounded() {
+        for seed in [1, 2, 9] {
+            for v in lcg_vals(seed, 512) {
+                let grid = v / GRID_SCALE;
+                assert_eq!(grid, grid.round());
+                assert!(grid.abs() <= 16.0);
+            }
+        }
+    }
+
+    #[test]
+    fn input_shapes() {
+        let t = Topology::new(16, 256, 4, 64);
+        let inp = MhaInputs::generate(&t);
+        assert_eq!(inp.x.len(), 16 * 256);
+        assert_eq!(inp.wq.len(), 4 * 64 * 256);
+        assert_eq!(inp.bq.len(), 4 * 64);
+    }
+
+    #[test]
+    fn different_seeds_different_streams() {
+        assert_ne!(lcg_vals(1, 32), lcg_vals(2, 32));
+    }
+}

@@ -1,0 +1,237 @@
+//! Integration tests across the full stack: PJRT runtime loading real
+//! artifacts, golden-vector agreement with the python oracle, simulator
+//! datapath cross-check, accelerator + coordinator end-to-end.
+//!
+//! Requires `make artifacts` to have run (skips gracefully otherwise so
+//! `cargo test` stays green on a fresh checkout).
+
+use famous::accel::FamousAccelerator;
+use famous::config::Topology;
+use famous::coordinator::{
+    BatchPolicy, Coordinator, Request, Scheduler, SchedulerConfig, Server, ServerConfig,
+};
+use famous::runtime::{Backend, Runtime, SimBackend, Variant};
+use famous::sim::SimConfig;
+use famous::testdata::MhaInputs;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        None
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+}
+
+#[test]
+fn manifest_covers_all_table1_topologies() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    for name in [
+        "mha_sl64_d768_h8_ts64",
+        "mha_sl64_d768_h4_ts64",
+        "mha_sl64_d768_h2_ts64",
+        "mha_sl64_d512_h8_ts64",
+        "mha_sl64_d256_h8_ts64",
+        "mha_sl128_d768_h8_ts64",
+        "mha_sl32_d768_h8_ts64",
+        "mha_sl16_d768_h8_ts64",
+        "mha_sl64_d768_h6_ts64",
+        "mha_sl64_d768_h12_ts64",
+        "mha_sl64_d512_h4_ts64",
+    ] {
+        assert!(rt.manifest.entry(name).is_some(), "missing {name}");
+    }
+    assert!((rt.manifest.grid_scale - 1.0 / 64.0).abs() < 1e-12);
+}
+
+#[test]
+fn pjrt_output_matches_python_golden_bitwise_class() {
+    // The golden vectors were produced by the same HLO on the python side;
+    // PJRT CPU should reproduce them to float-noise tolerance.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    for (name, topo) in [
+        ("mha_sl64_d768_h8_ts64", Topology::new(64, 768, 8, 64)),
+        ("mha_sl16_d768_h8_ts64", Topology::new(16, 768, 8, 64)),
+        ("mha_sl64_d256_h8_ts64", Topology::new(64, 256, 8, 64)),
+    ] {
+        let golden = rt.golden(name).unwrap().expect("golden shipped");
+        let out = rt.run_mha(&topo, &MhaInputs::generate(&topo)).unwrap();
+        assert_eq!(out.len(), golden.len(), "{name}");
+        let err = max_abs_diff(&out, &golden);
+        assert!(err < 1e-5, "{name}: max abs diff {err}");
+    }
+}
+
+#[test]
+fn simulator_datapath_matches_pjrt() {
+    // Independent implementations of the same math: the rust int8
+    // datapath and the jax/Pallas artifact must agree to fp tolerance
+    // (softmax exponentials differ in ulps; everything else is exact).
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut sim = SimBackend::new(SimConfig::u55c());
+    for topo in [
+        Topology::new(64, 768, 8, 64),
+        Topology::new(64, 256, 8, 64),
+        Topology::new(16, 768, 8, 64),
+    ] {
+        let inputs = MhaInputs::generate(&topo);
+        let a = rt.run_mha(&topo, &inputs).unwrap();
+        let b = sim.run_mha(&topo, &inputs).unwrap();
+        let err = max_abs_diff(&a, &b);
+        assert!(err < 1e-4, "{topo}: max abs diff {err}");
+    }
+}
+
+#[test]
+fn deploy_and_pallas_variants_agree() {
+    // The XLA-fused deployment artifact and the Pallas kernel-structure
+    // artifact are two lowerings of the same math; they must agree to
+    // float tolerance (EXPERIMENTS.md §Perf documents why both exist).
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    for topo in [Topology::new(16, 768, 8, 64), Topology::new(64, 256, 8, 64)] {
+        let inputs = MhaInputs::generate(&topo);
+        let deploy = rt.run_mha_variant(&topo, &inputs, Variant::Deploy).unwrap();
+        let pallas = rt.run_mha_variant(&topo, &inputs, Variant::Pallas).unwrap();
+        let err = max_abs_diff(&deploy, &pallas);
+        assert!(err < 1e-5, "{topo}: variants diverge by {err}");
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let topo = Topology::new(16, 768, 8, 64);
+    let inputs = MhaInputs::generate(&topo);
+    rt.run_mha(&topo, &inputs).unwrap();
+    rt.run_mha(&topo, &inputs).unwrap();
+    rt.run_mha(&topo, &inputs).unwrap();
+    assert_eq!(rt.compilations, 1, "executable must be cached");
+}
+
+#[test]
+fn accelerator_with_pjrt_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut accel = FamousAccelerator::with_pjrt(SimConfig::u55c(), &dir).unwrap();
+    assert_eq!(accel.backend_name(), "pjrt");
+    let topo = Topology::new(64, 768, 8, 64);
+    let r = accel.run(&topo, &MhaInputs::generate(&topo)).unwrap();
+    assert_eq!(r.output.len(), 64 * 768);
+    assert!((r.latency_ms - 0.94).abs() < 0.01);
+    assert!((r.gops - 328.0).abs() < 5.0);
+}
+
+#[test]
+fn coordinator_over_pjrt_serves_mixed_topologies() {
+    let Some(dir) = artifacts_dir() else { return };
+    let accel = FamousAccelerator::with_pjrt(SimConfig::u55c(), &dir).unwrap();
+    let mut coord = Coordinator::new(
+        accel,
+        SchedulerConfig { max_batch: 4, policy: BatchPolicy::GroupByTopology, fairness_window: 32 },
+    );
+    let topos = [
+        Topology::new(64, 768, 8, 64),
+        Topology::new(32, 768, 8, 64),
+        Topology::new(16, 768, 8, 64),
+    ];
+    for i in 0..9 {
+        let t = topos[i % 3].clone();
+        let inputs = MhaInputs::generate(&t);
+        coord.submit(Request { id: i as u64, topology: t, inputs }).unwrap();
+    }
+    let responses = coord.serve_all().unwrap();
+    assert_eq!(responses.len(), 9);
+    // Grouping: 3 distinct topologies -> exactly 3 reconfigurations.
+    assert_eq!(coord.stats.reconfigurations, 3);
+    assert_eq!(coord.stats.served, 9);
+}
+
+#[test]
+fn server_over_pjrt_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = Server::start(
+        move || {
+            let accel = FamousAccelerator::with_pjrt(SimConfig::u55c(), &dir).unwrap();
+            Coordinator::new(accel, SchedulerConfig::default())
+        },
+        ServerConfig::default(),
+    );
+    let mut joins = Vec::new();
+    for i in 0..4 {
+        let h = srv.handle();
+        joins.push(std::thread::spawn(move || {
+            let t = Topology::new(if i % 2 == 0 { 64 } else { 32 }, 768, 8, 64);
+            let inputs = MhaInputs::generate(&t);
+            h.call_blocking(Request { id: i, topology: t, inputs }).unwrap()
+        }));
+    }
+    for j in joins {
+        let resp = j.join().unwrap();
+        assert!(!resp.output.is_empty());
+        assert!(resp.fabric_ms > 0.0);
+    }
+    let stats = srv.shutdown();
+    assert_eq!(stats.served, 4);
+}
+
+#[test]
+fn scheduler_distinct_topology_lower_bound_holds_e2e() {
+    let mut s = Scheduler::new(SchedulerConfig {
+        max_batch: 100,
+        policy: BatchPolicy::GroupByTopology,
+        fairness_window: 100,
+    });
+    let t1 = Topology::new(64, 768, 8, 64);
+    let t2 = Topology::new(32, 768, 8, 64);
+    for i in 0..10 {
+        let t = if i % 2 == 0 { t1.clone() } else { t2.clone() };
+        s.push(Request { id: i, topology: t.clone(), inputs: MhaInputs::generate(&t) });
+    }
+    assert_eq!(s.distinct_topologies(), 2);
+    let mut batches = 0;
+    while s.next_batch().is_some() {
+        batches += 1;
+    }
+    assert_eq!(batches, 2);
+}
+
+#[test]
+fn corrupt_artifact_fails_loudly() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Copy the manifest into a temp dir with a broken HLO file.
+    let tmp = std::env::temp_dir().join(format!("famous_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let manifest = std::fs::read_to_string(format!("{dir}/manifest.json")).unwrap();
+    std::fs::write(tmp.join("manifest.json"), &manifest).unwrap();
+    // All HLO files exist but contain garbage.
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().map(|e| e == "txt").unwrap_or(false) {
+            std::fs::write(tmp.join(p.file_name().unwrap()), "HloModule garbage !!!").unwrap();
+        }
+    }
+    let mut rt = Runtime::load(tmp.to_str().unwrap()).unwrap();
+    let topo = Topology::new(16, 768, 8, 64);
+    let err = rt.run_mha(&topo, &MhaInputs::generate(&topo));
+    assert!(err.is_err(), "corrupt HLO must not silently succeed");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn missing_topology_artifact_is_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let topo = Topology::new(8, 128, 4, 32); // not in the registry
+    let err = rt.run_mha(&topo, &MhaInputs::generate(&topo)).unwrap_err();
+    assert!(err.to_string().contains("no artifact"), "{err}");
+}

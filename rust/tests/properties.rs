@@ -1,0 +1,210 @@
+//! Property-based tests over the system invariants (DESIGN.md §7),
+//! using the in-crate proptest_lite harness.
+
+use famous::analytical::LatencyModel;
+use famous::config::Topology;
+use famous::fixed::{matmul_i32, matmul_i32_tiled, Dsp48Mac, FxMatrix, Quantizer};
+use famous::fpga::hls::{LoopNest, PipelinedLoop};
+use famous::fpga::ResourceModel;
+use famous::jsonlite::{parse, Json};
+use famous::proptest_lite::{run, Gen};
+use famous::sim::{SimConfig, Simulator};
+
+// ------------------------------------------------------------ fixed point
+
+#[test]
+fn prop_tiled_gemm_equals_direct() {
+    // The FAMOUS tiling invariant: column-tiled accumulation is exactly
+    // the direct product in integer arithmetic, any shape, any tile.
+    run("tiled gemm == direct", 300, |g: &mut Gen| {
+        let m = g.usize_in(1, 8);
+        let n = g.usize_in(1, 8);
+        let ts = *g.pick(&[1usize, 2, 4, 8]);
+        let k = ts * g.usize_in(1, 6);
+        let a = FxMatrix { rows: m, cols: k, data: g.vec_i8(m * k) };
+        let b = FxMatrix { rows: n, cols: k, data: g.vec_i8(n * k) };
+        assert_eq!(matmul_i32_tiled(&a, &b, ts), matmul_i32(&a, &b));
+    });
+}
+
+#[test]
+fn prop_mac_never_overflows_for_model_scale_reductions() {
+    // d_model <= 4096 int8 reductions stay far inside the 48-bit
+    // accumulator: the no-rounding-inside-dot-products guarantee.
+    run("mac headroom", 200, |g: &mut Gen| {
+        let len = g.usize_in(1, 4096);
+        let mut mac = Dsp48Mac::new();
+        for _ in 0..len {
+            mac.mac(g.i8_any(), g.i8_any());
+        }
+        assert!(!mac.overflowed());
+        assert!(mac.value().abs() <= len as i64 * 128 * 128);
+    });
+}
+
+#[test]
+fn prop_quantizer_roundtrip_and_bounds() {
+    run("quantizer", 300, |g: &mut Gen| {
+        let scale = g.f64_in(1e-3, 2.0) as f32;
+        let q = Quantizer::new(scale);
+        let v = g.f64_in(-500.0, 500.0) as f32;
+        let level = q.quantize(v);
+        // In-range values round-trip within half a step.
+        if v.abs() <= 127.0 * scale {
+            assert!((q.fake_quant(v) - v).abs() <= scale / 2.0 + 1e-5);
+        }
+        // Grid values are fixed points.
+        let gv = level as f32 * scale;
+        assert_eq!(q.quantize(gv), level);
+    });
+}
+
+// --------------------------------------------------------------- HLS / sim
+
+#[test]
+fn prop_loop_latency_monotone() {
+    run("PLL monotonicity", 300, |g: &mut Gen| {
+        let tc = g.usize_in(1, 1000) as u64;
+        let ii = g.usize_in(1, 4) as u64;
+        let pd = g.usize_in(1, 64) as u64;
+        let outer = g.usize_in(1, 64) as u64;
+        let base = LoopNest::new(PipelinedLoop::new(tc, ii, pd), outer).latency();
+        assert!(LoopNest::new(PipelinedLoop::new(tc + 1, ii, pd), outer).latency() > base);
+        assert!(LoopNest::new(PipelinedLoop::new(tc, ii, pd + 1), outer).latency() > base);
+        assert!(LoopNest::new(PipelinedLoop::new(tc, ii, pd), outer + 1).latency() > base);
+        // Eq. 3 exactly.
+        assert_eq!(
+            PipelinedLoop::new(tc, ii, pd).latency(),
+            (tc - 1) * ii + pd
+        );
+    });
+}
+
+fn random_admitted_topology(g: &mut Gen) -> Topology {
+    // Topologies admitted by the U55C TS=64 build.
+    let sl = *g.pick(&[16usize, 32, 64, 128]);
+    let dm = *g.pick(&[256usize, 512, 768]);
+    let h_candidates: Vec<usize> = [1usize, 2, 4, 8]
+        .iter()
+        .copied()
+        .filter(|h| dm % h == 0)
+        .collect();
+    let h = *g.pick(&h_candidates);
+    Topology::new(sl, dm, h, 64)
+}
+
+#[test]
+fn prop_sim_equals_analytical_everywhere() {
+    // Not just on Table I rows: on every admitted topology.
+    let model = LatencyModel::default();
+    run("sim == analytical", 60, |g: &mut Gen| {
+        let topo = random_admitted_topology(g);
+        let sim_cc = Simulator::new(SimConfig::u55c()).run_timing(&topo).unwrap().cycles;
+        assert_eq!(sim_cc, model.predict(&topo).total_cycles(), "{topo}");
+    });
+}
+
+#[test]
+fn prop_latency_monotone_in_workload() {
+    // More sequence/embedding is never faster; more heads never slower
+    // (at fixed d_model the per-head width shrinks).
+    let model = LatencyModel::default();
+    run("latency monotonicity", 100, |g: &mut Gen| {
+        let topo = random_admitted_topology(g);
+        let base = model.predict(&topo).total_cycles();
+        if topo.seq_len < 128 {
+            let mut t = topo.clone();
+            t.seq_len *= 2;
+            assert!(model.predict(&t).total_cycles() > base, "{topo}");
+        }
+        if topo.heads < 8 && topo.d_model % (topo.heads * 2) == 0 {
+            let mut t = topo.clone();
+            t.heads *= 2;
+            assert!(model.predict(&t).total_cycles() < base, "{topo}");
+        }
+    });
+}
+
+#[test]
+fn prop_double_buffer_bounded_speedup() {
+    // Overlap can only help, and never beyond hiding all loads.
+    run("double buffer bounds", 40, |g: &mut Gen| {
+        let topo = random_admitted_topology(g);
+        let seq = Simulator::new(SimConfig::u55c()).run_timing(&topo).unwrap();
+        let mut cfg = SimConfig::u55c();
+        cfg.double_buffer = true;
+        let db = Simulator::new(cfg).run_timing(&topo).unwrap();
+        assert!(db.cycles <= seq.cycles, "{topo}");
+        let loads: u64 = seq.trace.phase_cycles("LIA") + seq.trace.phase_cycles("LWA");
+        assert!(db.cycles + loads >= seq.cycles, "{topo}: overlap hid more than the loads");
+    });
+}
+
+#[test]
+fn prop_resource_estimate_monotone_in_heads_and_ts() {
+    let rm = ResourceModel::default();
+    run("resources monotone", 100, |g: &mut Gen| {
+        let dm = 768usize;
+        let h = *g.pick(&[2usize, 4, 6, 8]);
+        let ts = *g.pick(&[16usize, 32, 64]);
+        let base = rm.estimate(&Topology::new(64, dm, h, ts));
+        if h < 12 {
+            let more_heads = rm.estimate(&Topology::new(64, dm, h + if dm % (h + 1) == 0 { 1 } else { h }, ts));
+            assert!(more_heads.dsp >= base.dsp);
+        }
+        if ts < 128 {
+            let bigger_tile = rm.estimate(&Topology::new(64, dm, h, ts * 2));
+            assert!(bigger_tile.dsp > base.dsp);
+            assert!(bigger_tile.lut > base.lut);
+        }
+    });
+}
+
+// ------------------------------------------------------------------- JSON
+
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num((g.i64_in(-1_000_000, 1_000_000) as f64) / 64.0),
+        3 => {
+            let n = g.usize_in(0, 8);
+            Json::Str((0..n).map(|_| *g.pick(&['a', 'b', '"', '\\', 'π', '\n'])).collect())
+        }
+        4 => Json::arr((0..g.usize_in(0, 4)).map(|_| random_json(g, depth - 1))),
+        _ => Json::obj(
+            (0..g.usize_in(0, 4))
+                .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                .collect::<Vec<_>>(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    run("json roundtrip", 300, |g: &mut Gen| {
+        let doc = random_json(g, 3);
+        let text = doc.to_string();
+        let parsed = parse(&text).unwrap_or_else(|e| panic!("parse failed on {text}: {e}"));
+        assert_eq!(parsed, doc, "roundtrip mismatch for {text}");
+    });
+}
+
+// ----------------------------------------------------------- admission
+
+#[test]
+fn prop_admission_is_exactly_the_box() {
+    // admits() accepts exactly the topologies inside the synthesized box
+    // with matching tile size and divisibility.
+    let build = famous::config::AcceleratorConfig::u55c_ts64();
+    run("admission box", 300, |g: &mut Gen| {
+        let sl = g.usize_in(1, 256);
+        let dm = g.usize_in(1, 16) * 64;
+        let h = g.usize_in(1, 16);
+        let ts = *g.pick(&[16usize, 32, 64]);
+        let topo = Topology::new(sl, dm, h, ts);
+        let valid = dm % h == 0 && dm % ts == 0;
+        let inside = sl <= 128 && dm <= 768 && h <= 8 && ts == 64;
+        assert_eq!(build.admits(&topo).is_ok(), valid && inside, "{topo}");
+    });
+}
