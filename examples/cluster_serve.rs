@@ -1,0 +1,133 @@
+//! Cluster serving driver: a heterogeneous FPGA fleet under mixed
+//! traffic (the ROADMAP's scale-*out* story).
+//!
+//! The fleet is two U55Cs plus two U200s — four different resource
+//! envelopes behind one ingress.  Traffic mixes the paper's flexibility
+//! scenario across model sizes and sequence lengths:
+//!
+//! * BERT-base shapes at short (SL 32) and long (SL 64/128) sequence
+//!   lengths — the length-adaptive routing lever of Peng et al.;
+//! * an h=6 shape the U200s can serve (their LUT budget caps heads at
+//!   6, Section VI);
+//! * BERT-large (d_model 1024, 16 heads): no single build admits it, so
+//!   the router head-shards it across two devices and reassembles the
+//!   output on the host (FTRANS-style cross-FPGA partitioning).
+//!
+//! Every response is verified bit-identical against a local
+//! single-device run of the same request, then the fleet report is
+//! printed: per-device utilization/occupancy, cluster GOPS, latency
+//! percentiles, reconfiguration counts.
+//!
+//!     cargo run --release --example cluster_serve
+
+use famous::accel::FamousAccelerator;
+use famous::cluster::{Cluster, ClusterConfig, DeviceSpec, ShardPlan, WorkloadProfile};
+use famous::config::Topology;
+use famous::coordinator::Request;
+use famous::sim::SimConfig;
+use famous::testdata::MhaInputs;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+const N_CLIENTS: usize = 6;
+const REQS_PER_CLIENT: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let fleet = vec![
+        DeviceSpec::u55c(0),
+        DeviceSpec::u55c(1),
+        DeviceSpec::u200(2),
+        DeviceSpec::u200(3),
+    ];
+    // (topology, traffic share): short-SL classification traffic
+    // dominates, long-SL and BERT-large are the heavy tail.
+    let mut workload = WorkloadProfile::default();
+    let apps: Vec<(&str, Topology, f64)> = vec![
+        ("bert-base-sl64", Topology::new(64, 768, 8, 64), 3.0),
+        ("bert-base-sl32", Topology::new(32, 768, 8, 64), 4.0),
+        ("bert-base-sl128", Topology::new(128, 768, 8, 64), 1.0),
+        ("h6-encoder", Topology::new(64, 768, 6, 64), 3.0),
+        ("bert-large", Topology::new(64, 1024, 16, 64), 1.0),
+    ];
+    for (_, t, share) in &apps {
+        workload.push(t.clone(), *share);
+    }
+
+    println!("== FAMOUS cluster serving driver ==");
+    println!(
+        "fleet: 2x U55C + 2x U200; {} clients x {} requests over {} apps",
+        N_CLIENTS,
+        REQS_PER_CLIENT,
+        apps.len()
+    );
+    let cluster = Cluster::start(fleet, &workload, ClusterConfig::default())?;
+    for p in &cluster.plan().placements {
+        println!(
+            "  plan: {} -> devices {:?}{}",
+            p.topology,
+            p.devices,
+            if p.shard.is_some() { " (head-sharded)" } else { "" }
+        );
+    }
+
+    let outputs = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for client in 0..N_CLIENTS {
+        let h = cluster.handle();
+        let apps = apps.clone();
+        let outputs = Arc::clone(&outputs);
+        joins.push(std::thread::spawn(move || {
+            for k in 0..REQS_PER_CLIENT {
+                // Each client favors one app, with periodic excursions
+                // (forces cross-topology traffic on every device).
+                let (name, topo, _) =
+                    &apps[if k % 4 == 3 { (client + k) % apps.len() } else { client % apps.len() }];
+                let id = (client * REQS_PER_CLIENT + k) as u64;
+                let inputs = MhaInputs::generate(topo);
+                let resp = h
+                    .call(Request { id, topology: topo.clone(), inputs: inputs.clone() })
+                    .expect("request served");
+                outputs.lock().unwrap().push((*name, topo.clone(), inputs, resp));
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let fleet_stats = cluster.shutdown();
+
+    let total = N_CLIENTS * REQS_PER_CLIENT;
+    println!("-- fleet report --");
+    print!("{}", fleet_stats.render());
+    println!(
+        "wall time {wall_s:.2} s ({:.1} req/s host-side)",
+        total as f64 / wall_s
+    );
+    assert_eq!(fleet_stats.totals.completed as usize, total);
+
+    // Verify every response bit-identical to a single-device run.
+    println!("-- verification (cluster vs single-device accelerator) --");
+    let mut accel = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+    let outs = outputs.lock().unwrap();
+    let mut verified = 0;
+    let mut sharded = 0;
+    for (_name, topo, inputs, resp) in outs.iter() {
+        let want = if resp.sharded {
+            sharded += 1;
+            let plan = ShardPlan::plan(topo).expect("sharded response implies a plan");
+            let (lo, hi) = plan.split_inputs(inputs)?;
+            let lo_out = accel.run(&plan.half, &lo)?.output;
+            let hi_out = accel.run(&plan.half, &hi)?.output;
+            plan.concat_outputs(&lo_out, &hi_out)?
+        } else {
+            accel.run(topo, inputs)?.output
+        };
+        assert_eq!(resp.output, want, "cluster output diverged for {topo}");
+        verified += 1;
+    }
+    println!("verified {verified}/{total} outputs bit-identical ({sharded} sharded)");
+    println!("cluster_serve OK");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Cluster scaling bench: fixed offered load, 1 → 8 devices.
+//!
+//! The workload is a fixed batch of mixed-topology requests (the
+//! flexibility mix of Table I shapes).  For each fleet size we measure
+//! host wall time and report the *modeled* fabric metrics: cluster GOPS
+//! over the makespan (the busiest device's fabric occupancy),
+//! reconfigurations per request, and affinity hit rate.  Scaling the
+//! fleet cuts the makespan until each of the 4 workload topologies owns
+//! a device (affinity deliberately serializes a topology onto its home
+//! device to avoid reprogramming), so expect near-linear speedup to 4
+//! devices and a plateau at 8 — while reconfigurations stay flat in
+//! absolute terms (≈ one per topology-device pair, not per request).
+//!
+//!     cargo bench --bench cluster
+
+use famous::cluster::{Cluster, ClusterConfig, DeviceSpec, WorkloadProfile};
+use famous::config::Topology;
+use famous::coordinator::Request;
+use famous::report::{fmt_f, Table};
+use famous::testdata::MhaInputs;
+use std::time::Instant;
+
+const OFFERED_REQUESTS: usize = 64;
+
+fn workload_mix() -> Vec<Topology> {
+    vec![
+        Topology::new(64, 768, 8, 64),
+        Topology::new(32, 768, 8, 64),
+        Topology::new(64, 512, 8, 64),
+        Topology::new(128, 768, 8, 64),
+    ]
+}
+
+fn main() {
+    let mix = workload_mix();
+    let mut t = Table::new(
+        format!("Cluster scaling — {OFFERED_REQUESTS} mixed requests, U55C fleet"),
+        &[
+            "devices",
+            "wall s",
+            "makespan ms",
+            "GOPS",
+            "speedup",
+            "reconf",
+            "reconf/req",
+            "affinity %",
+        ],
+    );
+    let mut base_makespan = 0.0f64;
+    for n in [1usize, 2, 4, 8] {
+        let devices: Vec<DeviceSpec> = (0..n).map(DeviceSpec::u55c).collect();
+        let cluster = Cluster::start(
+            devices,
+            &WorkloadProfile::uniform(&mix),
+            ClusterConfig::default(),
+        )
+        .expect("cluster start");
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for i in 0..OFFERED_REQUESTS {
+            let h = cluster.handle();
+            let topo = mix[i % mix.len()].clone();
+            joins.push(std::thread::spawn(move || {
+                let inputs = MhaInputs::generate(&topo);
+                h.call(Request { id: i as u64, topology: topo, inputs }).expect("served")
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.completed as usize, OFFERED_REQUESTS);
+        let makespan = fleet.makespan_ms();
+        if n == 1 {
+            base_makespan = makespan;
+        }
+        t.row(vec![
+            n.to_string(),
+            format!("{wall:.2}"),
+            fmt_f(makespan),
+            fmt_f(fleet.cluster_gops()),
+            if base_makespan > 0.0 {
+                format!("{:.2}x", base_makespan / makespan)
+            } else {
+                "-".into()
+            },
+            fleet.reconfigurations().to_string(),
+            format!("{:.3}", fleet.reconfigs_per_request()),
+            format!("{:.0}", fleet.affinity_hit_rate() * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(GOPS/makespan are modeled fabric quantities; wall s is host thread overhead)");
+}

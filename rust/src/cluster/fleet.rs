@@ -1,0 +1,273 @@
+//! Fleet metrics: per-device serving stats rolled up to cluster level.
+//!
+//! Each device's [`crate::coordinator::CoordinatorStats`] is the ground
+//! truth for what its coordinator did (served, batches,
+//! reconfigurations, fabric latency samples).  The router contributes
+//! what only it can see: completed client requests (a sharded request is
+//! one client request but two device invocations), failover retries,
+//! affinity hit rates, and the modeled GOP of all work dispatched.
+//!
+//! Throughput is *modeled*, like every latency in this repository: the
+//! cluster's makespan is the busiest device's total fabric occupancy, so
+//! `cluster_gops = Σ GOP / max_d Σ fabric_ms(d)` — the steady-state rate
+//! an operator would see if the fabric were the bottleneck.  Wall-clock
+//! rates (host threading, channel overhead) are reported separately by
+//! the example/bench harnesses.
+
+use super::DeviceSpec;
+use crate::coordinator::CoordinatorStats;
+use crate::fpga::resources::{ResourceModel, Utilization};
+use crate::metrics::LatencyStats;
+use crate::report::{fmt_f, Table};
+
+/// Router-side counters (everything per-device stats cannot know).
+#[derive(Clone, Debug, Default)]
+pub struct RouterTotals {
+    /// Client-visible requests completed (sharded counts once).
+    pub completed: u64,
+    /// Requests served via the two-device shard path.
+    pub sharded: u64,
+    /// Backpressure bounces to another device.
+    pub retries: u64,
+    /// Requests landing on their programmed/pinned device.
+    pub affinity_hits: u64,
+    pub affinity_misses: u64,
+    /// Requests no device (even sharded) could admit.
+    pub rejected: u64,
+    /// Modeled GOP dispatched (paper op-counting convention, per
+    /// sub-request — DESIGN.md §5).
+    pub total_gop: f64,
+}
+
+/// One device's roll-up.
+#[derive(Clone, Debug)]
+pub struct DeviceReport {
+    pub id: usize,
+    pub name: String,
+    /// FPGA part, e.g. `XCU55C-FSVH2892-2L-E`.
+    pub part: String,
+    pub stats: CoordinatorStats,
+    /// Static post-synthesis resource utilization of the build.
+    pub utilization: Utilization,
+}
+
+impl DeviceReport {
+    /// Total modeled fabric occupancy of this device.
+    pub fn busy_ms(&self) -> f64 {
+        self.stats.fabric_latency.sum()
+    }
+}
+
+/// The cluster-level report.
+#[derive(Clone, Debug, Default)]
+pub struct FleetStats {
+    pub devices: Vec<DeviceReport>,
+    /// All devices' fabric latency samples merged (cluster percentiles).
+    pub fabric_latency: LatencyStats,
+    pub totals: RouterTotals,
+}
+
+impl FleetStats {
+    /// Build the report from per-device stats + router counters.
+    pub fn assemble(
+        specs: &[DeviceSpec],
+        coord: Vec<CoordinatorStats>,
+        totals: RouterTotals,
+    ) -> FleetStats {
+        assert_eq!(specs.len(), coord.len());
+        let rm = ResourceModel::default();
+        let mut fabric = LatencyStats::default();
+        let devices = specs
+            .iter()
+            .zip(coord)
+            .map(|(spec, stats)| {
+                fabric.merge(&stats.fabric_latency);
+                // Same synthesis-point convention as accel::resources():
+                // resources are set by the synthesized maxima at SL=64.
+                let mut synth = spec.sim.build.max_topology.clone();
+                synth.seq_len = synth.seq_len.min(64);
+                let utilization = rm.estimate(&synth).utilization(&spec.sim.build.device);
+                DeviceReport {
+                    id: spec.id,
+                    name: spec.name.clone(),
+                    part: spec.sim.build.device.part.clone(),
+                    stats,
+                    utilization,
+                }
+            })
+            .collect();
+        FleetStats { devices, fabric_latency: fabric, totals }
+    }
+
+    /// Device invocations served (≥ completed when requests shard).
+    pub fn served(&self) -> u64 {
+        self.devices.iter().map(|d| d.stats.served).sum()
+    }
+
+    pub fn reconfigurations(&self) -> u64 {
+        self.devices.iter().map(|d| d.stats.reconfigurations).sum()
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.devices.iter().map(|d| d.stats.batches).sum()
+    }
+
+    /// Reconfigurations per client-visible request.
+    pub fn reconfigs_per_request(&self) -> f64 {
+        self.reconfigurations() as f64 / (self.totals.completed.max(1)) as f64
+    }
+
+    /// Modeled cluster makespan: the busiest device's fabric occupancy.
+    pub fn makespan_ms(&self) -> f64 {
+        self.devices.iter().map(DeviceReport::busy_ms).fold(0.0, f64::max)
+    }
+
+    /// Modeled aggregate throughput at the fabric bottleneck.
+    pub fn cluster_gops(&self) -> f64 {
+        let ms = self.makespan_ms();
+        if ms <= 0.0 {
+            return 0.0;
+        }
+        self.totals.total_gop / (ms * 1e-3)
+    }
+
+    pub fn affinity_hit_rate(&self) -> f64 {
+        let total = self.totals.affinity_hits + self.totals.affinity_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.totals.affinity_hits as f64 / total as f64
+    }
+
+    /// Per-device share of the makespan (1.0 = the critical device).
+    pub fn occupancy(&self, device: usize) -> f64 {
+        let ms = self.makespan_ms();
+        if ms <= 0.0 {
+            return 0.0;
+        }
+        self.devices[device].busy_ms() / ms
+    }
+
+    /// Render the fleet report (the `cluster` subcommand / example
+    /// output).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Fleet report — per device",
+            &["device", "part", "served", "batches", "reconf", "busy ms", "occ %", "LUT %", "BRAM %"],
+        );
+        for d in &self.devices {
+            t.row(vec![
+                d.name.clone(),
+                d.part.clone(),
+                d.stats.served.to_string(),
+                d.stats.batches.to_string(),
+                d.stats.reconfigurations.to_string(),
+                fmt_f(d.busy_ms()),
+                format!("{:.0}", self.occupancy(d.id) * 100.0),
+                format!("{:.0}", d.utilization.lut_pct),
+                format!("{:.0}", d.utilization.bram_pct),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "cluster: {} requests ({} sharded, {} rejected), {} device invocations\n",
+            self.totals.completed,
+            self.totals.sharded,
+            self.totals.rejected,
+            self.served()
+        ));
+        out.push_str(&format!(
+            "modeled GOPS {:.0} over makespan {:.2} ms; fabric p50 {:.3} ms p99 {:.3} ms\n",
+            self.cluster_gops(),
+            self.makespan_ms(),
+            self.fabric_latency.percentile(50.0),
+            self.fabric_latency.percentile(99.0)
+        ));
+        out.push_str(&format!(
+            "reconfigurations: {} total, {:.2} per request; affinity {:.0}% ({} hits / {} misses); {} retries\n",
+            self.reconfigurations(),
+            self.reconfigs_per_request(),
+            self.affinity_hit_rate() * 100.0,
+            self.totals.affinity_hits,
+            self.totals.affinity_misses,
+            self.totals.retries
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(served: u64, reconf: u64, lat: &[f64]) -> CoordinatorStats {
+        let mut s = CoordinatorStats {
+            served,
+            batches: served,
+            reconfigurations: reconf,
+            rejected: 0,
+            fabric_latency: LatencyStats::default(),
+        };
+        for &v in lat {
+            s.fabric_latency.record(v);
+        }
+        s
+    }
+
+    fn two_device_fleet() -> FleetStats {
+        let specs = vec![DeviceSpec::u55c(0), DeviceSpec::u200(1)];
+        let coord = vec![stats(3, 1, &[1.0, 1.0, 2.0]), stats(2, 2, &[3.0, 0.5])];
+        let totals = RouterTotals {
+            completed: 5,
+            sharded: 0,
+            retries: 1,
+            affinity_hits: 4,
+            affinity_misses: 1,
+            rejected: 0,
+            total_gop: 2.0,
+        };
+        FleetStats::assemble(&specs, coord, totals)
+    }
+
+    #[test]
+    fn aggregates_across_devices() {
+        let f = two_device_fleet();
+        assert_eq!(f.served(), 5);
+        assert_eq!(f.reconfigurations(), 3);
+        assert_eq!(f.fabric_latency.count(), 5);
+        // Makespan = busiest device: device 0 is 4.0 ms, device 1 is 3.5.
+        assert!((f.makespan_ms() - 4.0).abs() < 1e-12);
+        // 2 GOP over 4 ms = 500 GOPS.
+        assert!((f.cluster_gops() - 500.0).abs() < 1e-9);
+        assert!((f.affinity_hit_rate() - 0.8).abs() < 1e-12);
+        assert!((f.reconfigs_per_request() - 0.6).abs() < 1e-12);
+        assert!((f.occupancy(0) - 1.0).abs() < 1e-12);
+        assert!((f.occupancy(1) - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn static_utilization_matches_paper_builds() {
+        let f = two_device_fleet();
+        // U55C TS=64 build: ~98% LUT (Table I).
+        assert!((f.devices[0].utilization.lut_pct - 98.0).abs() < 2.5);
+        // U200 h=6 build: ~89% LUT.
+        assert!(f.devices[1].utilization.lut_pct > 80.0);
+    }
+
+    #[test]
+    fn render_mentions_key_lines() {
+        let s = two_device_fleet().render();
+        assert!(s.contains("Fleet report"));
+        assert!(s.contains("u55c-0"));
+        assert!(s.contains("modeled GOPS"));
+        assert!(s.contains("affinity 80%"));
+    }
+
+    #[test]
+    fn empty_fleet_is_safe() {
+        let f = FleetStats::default();
+        assert_eq!(f.cluster_gops(), 0.0);
+        assert_eq!(f.makespan_ms(), 0.0);
+        assert_eq!(f.affinity_hit_rate(), 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Layer-4 cluster: serving across a fleet of heterogeneous FPGAs.
+//!
+//! FAMOUS scales *up* to one card's DSP/BRAM budget; this layer scales
+//! *out*.  A fleet of simulated devices (mixed U55C + U200 builds, each
+//! with its own [`crate::sim::SimConfig`] resource envelope) sits behind
+//! one ingress, in the spirit of FTRANS's cross-FPGA partitioning and the
+//! length-adaptive routing of Peng et al. (PAPERS.md):
+//!
+//! * [`placement`] — synthesis-time planning: which topologies each
+//!   device pins (weight tiles staged in BRAM, sized by
+//!   [`crate::fpga::resources`]), load-balanced by the
+//!   [`crate::analytical`] latency model; decides when an oversized
+//!   `d_model` is head-sharded across two devices.
+//! * [`shard`] — the head-group split itself: operand slicing on the way
+//!   in, host-side concat on the way out.
+//! * [`router`] — the runtime dispatcher fronting N
+//!   [`crate::coordinator::Server`] workers: topology-affinity routing
+//!   (the fleet-wide analogue of `BatchPolicy::GroupByTopology` — keep a
+//!   topology on the device already programmed for it), least-loaded
+//!   fallback, and backpressure-aware failover when a device queue is
+//!   full.
+//! * [`fleet`] — metrics: per-device `CoordinatorStats` aggregated into
+//!   cluster GOPS, occupancy, p50/p99 fabric latency, and
+//!   reconfigurations per request.
+//!
+//! Invariants (tested in `rust/tests/cluster.rs`, DESIGN.md §7): every
+//! cluster response is bit-identical to a single-device run of the same
+//! request, modeled aggregate throughput on N>1 devices strictly exceeds
+//! one device, and affinity routing performs fewer reconfigurations per
+//! request than a lone coordinator on the same interleaved stream.
+
+pub mod fleet;
+pub mod placement;
+pub mod router;
+pub mod shard;
+
+pub use fleet::{DeviceReport, FleetStats};
+pub use placement::{PlacementPlan, PlacementPlanner, TopologyPlacement, WorkloadProfile};
+pub use router::{Cluster, ClusterConfig, ClusterHandle, ClusterResponse};
+pub use shard::ShardPlan;
+
+use crate::config::Topology;
+use crate::sim::SimConfig;
+use anyhow::{bail, Result};
+
+/// One fleet member: a synthesized build plus its identity.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    /// Index into the fleet (stable routing id).
+    pub id: usize,
+    /// Human-readable name, e.g. `u55c-0`.
+    pub name: String,
+    /// The device's synthesized build + simulator configuration.
+    pub sim: SimConfig,
+}
+
+impl DeviceSpec {
+    pub fn u55c(id: usize) -> Self {
+        DeviceSpec { id, name: format!("u55c-{id}"), sim: SimConfig::u55c() }
+    }
+
+    pub fn u200(id: usize) -> Self {
+        DeviceSpec { id, name: format!("u200-{id}"), sim: SimConfig::u200() }
+    }
+
+    /// Can this device serve `topo` without re-synthesis?
+    pub fn admits(&self, topo: &Topology) -> bool {
+        self.sim.build.admits(topo).is_ok()
+    }
+
+    /// Modeled fabric latency of `topo` on this device (analytical model
+    /// cycles at the device's clock).
+    pub fn predicted_ms(&self, topo: &Topology) -> f64 {
+        let cycles = crate::analytical::LatencyModel::default().predict(topo).total_cycles();
+        self.sim.build.cycles_to_ms(cycles)
+    }
+}
+
+/// Parse a fleet spec like `"u55c:2,u200:2"` into device specs.
+pub fn parse_fleet(spec: &str) -> Result<Vec<DeviceSpec>> {
+    let mut devices = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (kind, count) = match part.split_once(':') {
+            Some((k, c)) => {
+                let n: usize =
+                    c.parse().map_err(|_| anyhow::anyhow!("bad device count '{c}' in '{part}'"))?;
+                (k, n)
+            }
+            None => (part, 1),
+        };
+        for _ in 0..count {
+            let id = devices.len();
+            match kind {
+                "u55c" => devices.push(DeviceSpec::u55c(id)),
+                "u200" => devices.push(DeviceSpec::u200(id)),
+                other => bail!("unknown device kind '{other}' (u55c | u200)"),
+            }
+        }
+    }
+    if devices.is_empty() {
+        bail!("fleet spec '{spec}' names no devices");
+    }
+    Ok(devices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_fleet_mixed() {
+        let f = parse_fleet("u55c:2,u200:1").unwrap();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[0].name, "u55c-0");
+        assert_eq!(f[2].name, "u200-2");
+        assert_eq!(f[2].sim.build.max_topology.heads, 6);
+        assert_eq!(f[1].id, 1);
+    }
+
+    #[test]
+    fn parse_fleet_bare_kind_and_errors() {
+        assert_eq!(parse_fleet("u55c").unwrap().len(), 1);
+        assert!(parse_fleet("v100:2").is_err());
+        assert!(parse_fleet("").is_err());
+        assert!(parse_fleet("u55c:x").is_err());
+    }
+
+    #[test]
+    fn heterogeneous_admission() {
+        let u55c = DeviceSpec::u55c(0);
+        let u200 = DeviceSpec::u200(1);
+        let h8 = Topology::new(64, 768, 8, 64);
+        let h6 = Topology::new(64, 768, 6, 64);
+        assert!(u55c.admits(&h8) && u55c.admits(&h6));
+        assert!(!u200.admits(&h8), "U200 caps at 6 heads");
+        assert!(u200.admits(&h6));
+    }
+
+    #[test]
+    fn predicted_latency_matches_analytical_headline() {
+        let d = DeviceSpec::u55c(0);
+        let ms = d.predicted_ms(&Topology::new(64, 768, 8, 64));
+        assert!((ms - 0.94).abs() < 0.005, "{ms}");
+    }
+}

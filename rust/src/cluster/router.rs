@@ -1,0 +1,539 @@
+//! The cluster router/dispatcher: one ingress over N device servers.
+//!
+//! Routing policy, in priority order (see [`order_candidates`]):
+//!
+//! 1. **Hot affinity** — the device the router last sent this topology
+//!    to needs no reprogramming; keeping a topology on its device is
+//!    `BatchPolicy::GroupByTopology` lifted to the fleet.
+//! 2. **Placement affinity** — the planner's preferred device order
+//!    (weight tiles pinned in BRAM).
+//! 3. **Least-loaded** — fewest requests waiting in the device's
+//!    ingress queue.
+//!
+//! Backpressure is failover, not failure: a full device queue bounces
+//! the request (operands returned, not cloned) to the next candidate,
+//! up to `max_retries` bounces, after which the router blocks on the
+//! best candidate rather than spin.  A topology no single device admits
+//! is head-sharded per the placement plan: two half-requests on two
+//! devices, rejoined with a host-side column concat ([`super::shard`]).
+
+use super::fleet::{FleetStats, RouterTotals};
+use super::placement::{PlacementPlan, PlacementPlanner, WorkloadProfile};
+use super::shard::ShardPlan;
+use super::DeviceSpec;
+use crate::accel::FamousAccelerator;
+use crate::config::Topology;
+use crate::coordinator::{
+    Coordinator, CoordinatorStats, Request, Response, SchedulerConfig, Server, ServerConfig,
+    ServerHandle, SubmitError,
+};
+use crate::metrics::OpCount;
+use anyhow::{anyhow, bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// Cluster tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Per-device scheduler (batching) configuration.
+    pub scheduler: SchedulerConfig,
+    /// Per-device server (ingress queue) configuration.
+    pub server: ServerConfig,
+    /// Backpressure bounces before blocking on the best candidate.
+    pub max_retries: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            scheduler: SchedulerConfig::default(),
+            server: ServerConfig::default(),
+            max_retries: 3,
+        }
+    }
+}
+
+/// One completed cluster request.
+#[derive(Clone, Debug)]
+pub struct ClusterResponse {
+    pub id: u64,
+    /// The topology as the client requested it (the full shape for
+    /// sharded requests).
+    pub topology: Topology,
+    /// Functional output, `SL × d_model` of the requested topology.
+    pub output: Vec<f32>,
+    /// Modeled fabric latency: the slower half for sharded requests
+    /// (halves run concurrently).
+    pub fabric_ms: f64,
+    /// Modeled throughput for this request's work.
+    pub gops: f64,
+    /// Whether any serving device reprogrammed for this request's batch.
+    pub reprogrammed: bool,
+    /// Devices that served it (two when sharded).
+    pub devices: Vec<usize>,
+    pub sharded: bool,
+}
+
+struct DeviceEndpoint {
+    spec: DeviceSpec,
+    handle: ServerHandle,
+}
+
+#[derive(Default)]
+struct RouterState {
+    /// Router's view of each device's currently-programmed topology.
+    last_topology: Vec<Option<Topology>>,
+    totals: RouterTotals,
+}
+
+struct Shared {
+    devices: Vec<DeviceEndpoint>,
+    plan: PlacementPlan,
+    max_retries: usize,
+    state: Mutex<RouterState>,
+}
+
+/// A running fleet: per-device servers plus the routing front-end.
+pub struct Cluster {
+    shared: Arc<Shared>,
+    /// `None` once a device has been drained via [`Cluster::stop_device`].
+    servers: Vec<Option<Server>>,
+    early_stats: Vec<Option<CoordinatorStats>>,
+}
+
+/// Cloneable client handle (safe to share across request threads).
+#[derive(Clone)]
+pub struct ClusterHandle {
+    shared: Arc<Shared>,
+}
+
+impl Cluster {
+    /// Start one coordinator server per device (sim-datapath backend —
+    /// the PJRT path needs per-process artifacts and is stubbed offline)
+    /// and plan placement for the expected workload.
+    pub fn start(
+        devices: Vec<DeviceSpec>,
+        workload: &WorkloadProfile,
+        config: ClusterConfig,
+    ) -> Result<Cluster> {
+        if devices.is_empty() {
+            bail!("cluster needs at least one device");
+        }
+        // Routing indexes devices by id; renumber to be safe.
+        let mut devices = devices;
+        for (i, d) in devices.iter_mut().enumerate() {
+            d.id = i;
+        }
+        let plan = PlacementPlanner::default().plan(&devices, workload);
+        let mut endpoints = Vec::with_capacity(devices.len());
+        let mut servers = Vec::with_capacity(devices.len());
+        for spec in devices {
+            let sim = spec.sim.clone();
+            let sched = config.scheduler;
+            let server = Server::start(
+                move || {
+                    let accel = FamousAccelerator::with_sim_datapath(sim);
+                    Coordinator::new(accel, sched)
+                },
+                config.server,
+            );
+            endpoints.push(DeviceEndpoint { spec, handle: server.handle() });
+            servers.push(Some(server));
+        }
+        let n = endpoints.len();
+        let shared = Arc::new(Shared {
+            devices: endpoints,
+            plan,
+            max_retries: config.max_retries,
+            state: Mutex::new(RouterState {
+                last_topology: vec![None; n],
+                totals: RouterTotals::default(),
+            }),
+        });
+        Ok(Cluster { shared, servers, early_stats: vec![None; n] })
+    }
+
+    pub fn handle(&self) -> ClusterHandle {
+        ClusterHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    pub fn plan(&self) -> &PlacementPlan {
+        &self.shared.plan
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.shared.devices.len()
+    }
+
+    /// Drain one device (elasticity / maintenance): its server shuts
+    /// down and subsequent routing fails over to the rest of the fleet.
+    /// Returns its stats, or None if already stopped.
+    pub fn stop_device(&mut self, id: usize) -> Option<CoordinatorStats> {
+        let server = self.servers.get_mut(id)?.take()?;
+        let stats = server.shutdown();
+        self.early_stats[id] = Some(stats.clone());
+        // Drop the router's affinity memory for the drained device so it
+        // stops ranking as "hot" for the topology it last served.
+        self.shared.state.lock().unwrap().last_topology[id] = None;
+        Some(stats)
+    }
+
+    /// Stop every device and assemble the fleet report.
+    pub fn shutdown(mut self) -> FleetStats {
+        let mut coord = Vec::with_capacity(self.servers.len());
+        for (i, server) in self.servers.into_iter().enumerate() {
+            let stats = match server {
+                Some(s) => s.shutdown(),
+                None => self.early_stats[i].take().unwrap_or_default(),
+            };
+            coord.push(stats);
+        }
+        let specs: Vec<DeviceSpec> =
+            self.shared.devices.iter().map(|d| d.spec.clone()).collect();
+        let totals = self.shared.state.lock().unwrap().totals.clone();
+        FleetStats::assemble(&specs, coord, totals)
+    }
+}
+
+/// Pure ranking input: one candidate device's routing signals.
+#[derive(Clone, Debug)]
+pub struct CandidateView {
+    pub id: usize,
+    /// Router last routed this topology here (no reprogramming needed).
+    pub hot: bool,
+    /// Position in the placement plan's preference list (usize::MAX if
+    /// the plan does not mention this device for the topology).
+    pub preference: usize,
+    /// Requests waiting in the device's ingress queue.
+    pub pending: usize,
+}
+
+/// Order candidates best-first: hot, then planner preference, then
+/// least-loaded, then id (determinism).  Pure — unit-tested directly.
+pub fn order_candidates(mut views: Vec<CandidateView>) -> Vec<usize> {
+    views.sort_by_key(|v| (!v.hot as u8, v.preference, v.pending, v.id));
+    views.into_iter().map(|v| v.id).collect()
+}
+
+impl ClusterHandle {
+    /// Serve one request, blocking until the response: routes to a
+    /// single device when possible, transparently head-shards otherwise.
+    pub fn call(&self, req: Request) -> Result<ClusterResponse> {
+        let topo = req.topology.clone();
+        if self.shared.devices.iter().any(|d| d.spec.admits(&topo)) {
+            let (resp, dev) = self.call_single(req, None)?;
+            let gops = resp.gops;
+            let mut st = self.shared.state.lock().unwrap();
+            st.totals.completed += 1;
+            drop(st);
+            return Ok(ClusterResponse {
+                id: resp.id,
+                topology: topo,
+                output: resp.output,
+                fabric_ms: resp.fabric_ms,
+                gops,
+                reprogrammed: resp.reprogrammed,
+                devices: vec![dev],
+                sharded: false,
+            });
+        }
+        let shard = self
+            .shared
+            .plan
+            .placement(&topo)
+            .and_then(|p| p.shard.clone())
+            .or_else(|| ShardPlan::plan(&topo));
+        match shard {
+            Some(s) if self.shared.devices.iter().any(|d| d.spec.admits(&s.half)) => {
+                self.call_sharded(req, s)
+            }
+            _ => {
+                self.shared.state.lock().unwrap().totals.rejected += 1;
+                bail!(
+                    "no device admits topology {topo} and no head-shard of it is servable"
+                );
+            }
+        }
+    }
+
+    /// Rank admitting devices for `topo`, best first.
+    fn rank(&self, topo: &Topology, exclude: Option<usize>) -> Vec<usize> {
+        let preferred = preferred_devices(&self.shared.plan, topo);
+        let st = self.shared.state.lock().unwrap();
+        let views: Vec<CandidateView> = self
+            .shared
+            .devices
+            .iter()
+            .filter(|d| Some(d.spec.id) != exclude && d.spec.admits(topo))
+            .map(|d| CandidateView {
+                id: d.spec.id,
+                hot: st.last_topology[d.spec.id].as_ref() == Some(topo),
+                preference: preferred
+                    .iter()
+                    .position(|&p| p == d.spec.id)
+                    .unwrap_or(usize::MAX),
+                pending: d.handle.pending(),
+            })
+            .collect();
+        drop(st);
+        order_candidates(views)
+    }
+
+    /// Route one single-device request with backpressure failover.
+    fn call_single(&self, req: Request, exclude: Option<usize>) -> Result<(Response, usize)> {
+        let topo = req.topology.clone();
+        let mut candidates = self.rank(&topo, exclude);
+        if candidates.is_empty() {
+            // Exclusion left nothing; fall back to the full fleet.
+            candidates = self.rank(&topo, None);
+        }
+        if candidates.is_empty() {
+            self.shared.state.lock().unwrap().totals.rejected += 1;
+            bail!("no device in the fleet admits topology {topo}");
+        }
+        let mut req = req;
+        let mut bounces = 0usize;
+        let mut idx = 0usize;
+        let mut bounced: Vec<usize> = Vec::new();
+        loop {
+            if bounces >= self.shared.max_retries {
+                // Enough spinning: block for queue space on the best
+                // candidate (backpressure propagates to the client).
+                // Prefer one that did not just bounce us — a bounce can
+                // mean the device is gone, not merely full, and blocking
+                // on a dead channel fails a still-servable request.
+                let dev = candidates
+                    .iter()
+                    .copied()
+                    .find(|d| !bounced.contains(d))
+                    .unwrap_or(candidates[0]);
+                let resp = self.shared.devices[dev]
+                    .handle
+                    .call_blocking(req)
+                    .map_err(|e| anyhow!("device {dev}: {e}"))?;
+                return Ok(self.record(resp, dev, &topo));
+            }
+            let dev = candidates[idx % candidates.len()];
+            match self.shared.devices[dev].handle.try_call(req) {
+                Ok(resp) => return Ok(self.record(resp, dev, &topo)),
+                Err(SubmitError::Busy(returned)) => {
+                    req = returned;
+                    bounces += 1;
+                    idx += 1;
+                    if !bounced.contains(&dev) {
+                        bounced.push(dev);
+                    }
+                    self.shared.state.lock().unwrap().totals.retries += 1;
+                }
+                Err(SubmitError::Failed(e)) => bail!("device {dev}: {e}"),
+            }
+        }
+    }
+
+    /// Two half-requests on (preferably) two devices, concat on the host.
+    fn call_sharded(&self, req: Request, shard: ShardPlan) -> Result<ClusterResponse> {
+        let (lo, hi) = shard.split_inputs(&req.inputs)?;
+        let req_lo = Request { id: req.id, topology: shard.half.clone(), inputs: lo };
+        let req_hi = Request { id: req.id, topology: shard.half.clone(), inputs: hi };
+        // Steer the high half away from the low half's likely device so
+        // the halves actually run concurrently when the fleet allows.
+        let low_primary = self.rank(&shard.half, None).first().copied();
+        let other = self.clone();
+        let hi_worker = std::thread::spawn(move || other.call_single(req_hi, low_primary));
+        let lo_result = self.call_single(req_lo, None);
+        let hi_result =
+            hi_worker.join().map_err(|_| anyhow!("shard worker thread panicked"))?;
+        let (lo_resp, lo_dev) = lo_result?;
+        let (hi_resp, hi_dev) = hi_result?;
+        let output = shard.concat_outputs(&lo_resp.output, &hi_resp.output)?;
+        let fabric_ms = lo_resp.fabric_ms.max(hi_resp.fabric_ms);
+        let gop = 2.0 * OpCount::paper_convention(&shard.half);
+        let mut st = self.shared.state.lock().unwrap();
+        st.totals.completed += 1;
+        st.totals.sharded += 1;
+        drop(st);
+        Ok(ClusterResponse {
+            id: req.id,
+            topology: shard.full.clone(),
+            output,
+            fabric_ms,
+            gops: gop / (fabric_ms * 1e-3),
+            reprogrammed: lo_resp.reprogrammed || hi_resp.reprogrammed,
+            devices: vec![lo_dev, hi_dev],
+            sharded: true,
+        })
+    }
+
+    /// Book-keeping after a device served a (sub-)request.
+    fn record(&self, resp: Response, dev: usize, topo: &Topology) -> (Response, usize) {
+        let preferred = preferred_devices(&self.shared.plan, topo);
+        let mut st = self.shared.state.lock().unwrap();
+        let hot = st.last_topology[dev].as_ref() == Some(topo);
+        let planned = preferred.first() == Some(&dev) || self.shared.plan.is_pinned(dev, topo);
+        if hot || planned {
+            st.totals.affinity_hits += 1;
+        } else {
+            st.totals.affinity_misses += 1;
+        }
+        st.last_topology[dev] = Some(topo.clone());
+        st.totals.total_gop += OpCount::paper_convention(topo);
+        (resp, dev)
+    }
+}
+
+/// The plan's device preference list for `topo` — including when `topo`
+/// is the half shape of a sharded placement.
+fn preferred_devices<'a>(plan: &'a PlacementPlan, topo: &Topology) -> &'a [usize] {
+    if let Some(p) = plan.placement(topo) {
+        return &p.devices;
+    }
+    for p in &plan.placements {
+        if let Some(s) = &p.shard {
+            if &s.half == topo {
+                return &p.devices;
+            }
+        }
+    }
+    &[]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testdata::MhaInputs;
+
+    fn req(id: u64, topo: &Topology) -> Request {
+        Request { id, topology: topo.clone(), inputs: MhaInputs::generate(topo) }
+    }
+
+    fn two_u55c(workload: &[Topology]) -> Cluster {
+        Cluster::start(
+            vec![DeviceSpec::u55c(0), DeviceSpec::u55c(1)],
+            &WorkloadProfile::uniform(workload),
+            ClusterConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn order_prefers_hot_then_plan_then_load() {
+        let v = |id, hot, preference, pending| CandidateView { id, hot, preference, pending };
+        // Hot beats everything, even a deep queue.
+        assert_eq!(
+            order_candidates(vec![v(0, false, 0, 0), v(1, true, usize::MAX, 9)]),
+            vec![1, 0]
+        );
+        // Plan preference beats load...
+        assert_eq!(
+            order_candidates(vec![v(0, false, usize::MAX, 0), v(1, false, 0, 5)]),
+            vec![1, 0]
+        );
+        // ...and load breaks preference ties, id breaks full ties.
+        assert_eq!(
+            order_candidates(vec![v(0, false, 1, 7), v(1, false, 1, 2), v(2, false, 1, 7)]),
+            vec![1, 0, 2]
+        );
+    }
+
+    #[test]
+    fn affinity_keeps_topologies_on_their_devices() {
+        let t1 = Topology::new(64, 768, 8, 64);
+        let t2 = Topology::new(32, 768, 8, 64);
+        let cluster = two_u55c(&[t1.clone(), t2.clone()]);
+        let h = cluster.handle();
+        // Interleaved sequential stream: affinity must pin each topology
+        // to one device, so per-device streams are homogeneous.
+        let mut device_of = std::collections::HashMap::new();
+        for i in 0..8u64 {
+            let t = if i % 2 == 0 { &t1 } else { &t2 };
+            let resp = h.call(req(i, t)).unwrap();
+            assert_eq!(resp.devices.len(), 1);
+            let prev = device_of.insert(t.clone(), resp.devices[0]);
+            if let Some(p) = prev {
+                assert_eq!(p, resp.devices[0], "topology moved devices");
+            }
+        }
+        assert_ne!(device_of[&t1], device_of[&t2], "both topologies on one device");
+        let fleet = cluster.shutdown();
+        // One reprogram per device, ever — the whole point of affinity.
+        assert_eq!(fleet.reconfigurations(), 2);
+        assert_eq!(fleet.totals.completed, 8);
+        assert_eq!(fleet.totals.affinity_hits, 8);
+        assert_eq!(fleet.totals.affinity_misses, 0);
+    }
+
+    #[test]
+    fn failover_when_device_unavailable() {
+        let t = Topology::new(64, 768, 8, 64);
+        let mut cluster = two_u55c(std::slice::from_ref(&t));
+        let h = cluster.handle();
+        // Prime affinity onto the planner's primary.
+        let first = h.call(req(0, &t)).unwrap();
+        let primary = first.devices[0];
+        // Drain that device: its ingress now bounces everything.
+        cluster.stop_device(primary).unwrap();
+        let resp = h.call(req(1, &t)).unwrap();
+        assert_eq!(resp.devices.len(), 1);
+        assert_ne!(resp.devices[0], primary, "must fail over to the live device");
+        let fleet = cluster.shutdown();
+        assert!(fleet.totals.retries >= 1, "failover goes through the bounce path");
+        assert_eq!(fleet.totals.completed, 2);
+    }
+
+    #[test]
+    fn sharded_request_served_and_reassembled() {
+        let large = Topology::new(16, 1024, 16, 64);
+        let cluster = two_u55c(std::slice::from_ref(&large));
+        let h = cluster.handle();
+        let inputs = MhaInputs::generate(&large);
+        let resp = h.call(Request { id: 7, topology: large.clone(), inputs: inputs.clone() }).unwrap();
+        assert!(resp.sharded);
+        assert_eq!(resp.devices.len(), 2);
+        assert_ne!(resp.devices[0], resp.devices[1], "halves should use both devices");
+        assert_eq!(resp.output.len(), 16 * 1024);
+        // Reference: the same two halves on one local accelerator.
+        let plan = ShardPlan::plan(&large).unwrap();
+        let (lo, hi) = plan.split_inputs(&inputs).unwrap();
+        let mut accel = FamousAccelerator::with_sim_datapath(crate::sim::SimConfig::u55c());
+        let lo_out = accel.run(&plan.half, &lo).unwrap().output;
+        let hi_out = accel.run(&plan.half, &hi).unwrap().output;
+        let want = plan.concat_outputs(&lo_out, &hi_out).unwrap();
+        assert_eq!(resp.output, want, "sharded output must be bit-identical");
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.sharded, 1);
+        assert_eq!(fleet.served(), 2, "one request, two device invocations");
+    }
+
+    #[test]
+    fn unservable_topology_rejected() {
+        let t = Topology::new(64, 768, 8, 64);
+        let cluster = two_u55c(std::slice::from_ref(&t));
+        let h = cluster.handle();
+        // SL 256 exceeds every synthesized max and head-sharding cannot
+        // reduce SL.
+        let err = h.call(req(0, &Topology::new(256, 768, 8, 64))).unwrap_err();
+        assert!(err.to_string().contains("no device admits"), "{err}");
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.rejected, 1);
+        assert_eq!(fleet.totals.completed, 0);
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let t1 = Topology::new(64, 768, 8, 64);
+        let t2 = Topology::new(32, 768, 8, 64);
+        let cluster = two_u55c(&[t1.clone(), t2.clone()]);
+        let mut joins = Vec::new();
+        for i in 0..12u64 {
+            let h = cluster.handle();
+            let t = if i % 2 == 0 { t1.clone() } else { t2.clone() };
+            joins.push(std::thread::spawn(move || h.call(req(i, &t)).unwrap()));
+        }
+        let mut ids: Vec<u64> = joins.into_iter().map(|j| j.join().unwrap().id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..12).collect::<Vec<_>>());
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.completed, 12);
+        assert_eq!(fleet.served(), 12);
+        assert_eq!(fleet.totals.rejected, 0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Head-group sharding of one MHA request across two devices.
+//!
+//! MHA heads are mutually independent after the QKV projections, so a
+//! request can be split into two head groups, each served as a smaller
+//! self-contained topology, with a host-side column concat at the end —
+//! the classic tensor-parallel attention split, restricted to the shapes
+//! the accelerator's `(SL, d_model, h)` register interface can express.
+//!
+//! Shapes: the full request `(SL, d, h)` becomes two half-requests
+//! `(SL, d/2, h/2)` with the per-head width `d_k = d/h` preserved.  Head
+//! group A owns embedding columns `[0, d/2)` and heads `[0, h/2)`; group
+//! B owns the rest.  Each group's projections contract over its own
+//! embedding slice (block-diagonal weight partitioning) — the partition
+//! the paper's per-head datapath makes natural, since a single card
+//! cannot hold the full-width weight tiles of an oversized `d_model` in
+//! the first place.  The single-device reference for a sharded request is
+//! therefore *the same two half-topology runs* executed back to back on
+//! one card; the cluster runs them on two cards concurrently and
+//! reassembles bit-identically (DESIGN.md §7, `rust/tests/cluster.rs`).
+
+use crate::config::Topology;
+use crate::testdata::MhaInputs;
+use anyhow::{bail, Result};
+
+/// How to split one oversized topology across two devices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// The topology as the client requested it.
+    pub full: Topology,
+    /// The per-device half topology (both halves are identical shapes).
+    pub half: Topology,
+}
+
+impl ShardPlan {
+    /// Plan a two-way head split of `full`, if its shape allows one:
+    /// even heads, even `d_model`, and a half that is still a valid
+    /// topology on the same tile size (which preserves `d_k` exactly).
+    pub fn plan(full: &Topology) -> Option<ShardPlan> {
+        if full.validate().is_err() || full.heads % 2 != 0 || full.d_model % 2 != 0 {
+            return None;
+        }
+        let half =
+            Topology::new(full.seq_len, full.d_model / 2, full.heads / 2, full.tile_size);
+        half.validate().ok()?;
+        debug_assert_eq!(half.d_k(), full.d_k());
+        Some(ShardPlan { full: full.clone(), half })
+    }
+
+    /// Slice the full request's operands into the two head groups'
+    /// operands (group A = low columns/heads, group B = high).
+    pub fn split_inputs(&self, inputs: &MhaInputs) -> Result<(MhaInputs, MhaInputs)> {
+        let (sl, dm, h) = (self.full.seq_len, self.full.d_model, self.full.heads);
+        let dk = self.full.d_k();
+        if inputs.x.len() != sl * dm || inputs.wq.len() != h * dk * dm {
+            bail!(
+                "operand shapes do not match topology {}: x has {} elems, wq {}",
+                self.full,
+                inputs.x.len(),
+                inputs.wq.len()
+            );
+        }
+        let (hd, cd) = (h / 2 * dk, dm / 2);
+        let side = |lo: bool| MhaInputs {
+            x: slice_block(&inputs.x, dm, 0, sl, col0(lo, cd), cd),
+            wq: slice_block(&inputs.wq, dm, col0(lo, hd), hd, col0(lo, cd), cd),
+            wk: slice_block(&inputs.wk, dm, col0(lo, hd), hd, col0(lo, cd), cd),
+            wv: slice_block(&inputs.wv, dm, col0(lo, hd), hd, col0(lo, cd), cd),
+            bq: slice_block(&inputs.bq, dk, col0(lo, h / 2), h / 2, 0, dk),
+            bk: slice_block(&inputs.bk, dk, col0(lo, h / 2), h / 2, 0, dk),
+            bv: slice_block(&inputs.bv, dk, col0(lo, h / 2), h / 2, 0, dk),
+        };
+        Ok((side(true), side(false)))
+    }
+
+    /// Reassemble the full `(SL, d_model)` output from the two halves'
+    /// `(SL, d_model/2)` outputs by column concatenation.
+    pub fn concat_outputs(&self, lo: &[f32], hi: &[f32]) -> Result<Vec<f32>> {
+        let (sl, half_w) = (self.full.seq_len, self.full.d_model / 2);
+        if lo.len() != sl * half_w || hi.len() != sl * half_w {
+            bail!(
+                "half outputs have {} / {} elems, expected {} each",
+                lo.len(),
+                hi.len(),
+                sl * half_w
+            );
+        }
+        let mut out = Vec::with_capacity(sl * self.full.d_model);
+        for r in 0..sl {
+            out.extend_from_slice(&lo[r * half_w..(r + 1) * half_w]);
+            out.extend_from_slice(&hi[r * half_w..(r + 1) * half_w]);
+        }
+        Ok(out)
+    }
+}
+
+/// Start column/row of a side: group A starts at 0, group B at `width`.
+fn col0(lo: bool, width: usize) -> usize {
+    if lo {
+        0
+    } else {
+        width
+    }
+}
+
+/// Copy the `[r0, r0+nrows) × [c0, c0+ncols)` block of a row-major
+/// matrix with `stride` columns.
+fn slice_block(m: &[f32], stride: usize, r0: usize, nrows: usize, c0: usize, ncols: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(nrows * ncols);
+    for r in r0..r0 + nrows {
+        out.extend_from_slice(&m[r * stride + c0..r * stride + c0 + ncols]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::{run, Gen};
+
+    #[test]
+    fn plans_bert_large_split() {
+        // BERT-large: d_model 1024, 16 heads, d_k 64.  Neither paper
+        // build admits d_model 1024; the halves (512, 8) fit everywhere.
+        let full = Topology::new(64, 1024, 16, 64);
+        let plan = ShardPlan::plan(&full).unwrap();
+        assert_eq!(plan.half, Topology::new(64, 512, 8, 64));
+        assert_eq!(plan.half.d_k(), full.d_k());
+    }
+
+    #[test]
+    fn rejects_unsplittable_shapes() {
+        // Odd heads.
+        assert!(ShardPlan::plan(&Topology::new(64, 768, 3, 64)).is_none());
+        // Half d_model not divisible by the tile size (704/2 = 352).
+        assert!(ShardPlan::plan(&Topology::new(64, 704, 22, 64)).is_none());
+        // Invalid full topology.
+        assert!(ShardPlan::plan(&Topology::new(0, 768, 8, 64)).is_none());
+    }
+
+    #[test]
+    fn split_shapes_match_half_topology() {
+        let full = Topology::new(16, 1024, 16, 64);
+        let plan = ShardPlan::plan(&full).unwrap();
+        let inputs = MhaInputs::generate(&full);
+        let (a, b) = plan.split_inputs(&inputs).unwrap();
+        let want = MhaInputs::generate(&plan.half);
+        for (got, reference) in [(&a, &want), (&b, &want)] {
+            assert_eq!(got.x.len(), reference.x.len());
+            assert_eq!(got.wq.len(), reference.wq.len());
+            assert_eq!(got.bq.len(), reference.bq.len());
+        }
+    }
+
+    #[test]
+    fn split_slices_correct_blocks() {
+        let full = Topology::new(4, 8, 2, 4);
+        let plan = ShardPlan::plan(&full).unwrap();
+        let inputs = MhaInputs::generate(&full);
+        let (a, b) = plan.split_inputs(&inputs).unwrap();
+        // x row 0, group A = cols 0..4, group B = cols 4..8.
+        assert_eq!(a.x[..4], inputs.x[..4]);
+        assert_eq!(b.x[..4], inputs.x[4..8]);
+        // wq: full is [2*4 rows, 8 cols]; group B owns rows 4.., cols 4...
+        assert_eq!(b.wq[0], inputs.wq[4 * 8 + 4]);
+        // biases: group B owns head row 1.
+        assert_eq!(b.bq[..4], inputs.bq[4..8]);
+    }
+
+    #[test]
+    fn concat_inverts_column_split() {
+        let full = Topology::new(4, 8, 2, 4);
+        let plan = ShardPlan::plan(&full).unwrap();
+        // Treat x itself as an "output" matrix: split its columns, then
+        // concat must reproduce it exactly.
+        let m = MhaInputs::generate(&full).x;
+        let lo = slice_block(&m, 8, 0, 4, 0, 4);
+        let hi = slice_block(&m, 8, 0, 4, 4, 4);
+        assert_eq!(plan.concat_outputs(&lo, &hi).unwrap(), m);
+    }
+
+    #[test]
+    fn shape_mismatches_error() {
+        let plan = ShardPlan::plan(&Topology::new(4, 8, 2, 4)).unwrap();
+        let wrong = MhaInputs::generate(&Topology::new(8, 8, 2, 4));
+        assert!(plan.split_inputs(&wrong).is_err());
+        assert!(plan.concat_outputs(&[0.0; 3], &[0.0; 16]).is_err());
+    }
+
+    #[test]
+    fn prop_split_concat_roundtrip_on_outputs() {
+        run("shard split/concat roundtrip", 50, |g: &mut Gen| {
+            let sl = *g.pick(&[2usize, 4, 8]);
+            let plan = ShardPlan::plan(&Topology::new(sl, 8, 2, 4)).unwrap();
+            let n = sl * 8;
+            let m: Vec<f32> = (0..n).map(|i| (g.i64_in(-100, 100) + i as i64) as f32).collect();
+            let lo = slice_block(&m, 8, 0, sl, 0, 4);
+            let hi = slice_block(&m, 8, 0, sl, 4, 4);
+            assert_eq!(plan.concat_outputs(&lo, &hi).unwrap(), m);
+        });
+    }
+}

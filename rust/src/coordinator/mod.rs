@@ -24,7 +24,7 @@ pub mod server;
 
 pub use model_desc::ModelDescriptor;
 pub use scheduler::{BatchPolicy, Request, Scheduler, SchedulerConfig};
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use server::{Server, ServerConfig, ServerHandle, SubmitError};
 
 use crate::accel::FamousAccelerator;
 use crate::config::Topology;

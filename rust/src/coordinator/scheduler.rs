@@ -53,6 +53,10 @@ pub struct Scheduler {
 impl Scheduler {
     pub fn new(config: SchedulerConfig) -> Self {
         assert!(config.max_batch > 0);
+        // A zero window would skip even the queue head: GroupByTopology
+        // could then return an empty batch and serving would never
+        // progress.  Window ≥ 1 guarantees the head is always served.
+        assert!(config.fairness_window > 0, "fairness_window must be ≥ 1");
         Scheduler { config, queue: VecDeque::new() }
     }
 
@@ -224,6 +228,74 @@ mod tests {
             }
             seen.sort();
             assert_eq!(seen, (0..n as u64).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn prop_grouping_reorders_only_within_fairness_window() {
+        // Bounded reordering (DESIGN.md §7): GroupByTopology may pull a
+        // request forward only from the first `fairness_window` queue
+        // positions — nothing beyond the window ever jumps the line.
+        run("bounded reordering", 300, |g: &mut Gen| {
+            let window = g.usize_in(1, 12);
+            let mut s = Scheduler::new(SchedulerConfig {
+                max_batch: g.usize_in(1, 10),
+                policy: BatchPolicy::GroupByTopology,
+                fairness_window: window,
+            });
+            let n = g.usize_in(1, 40);
+            let sls = [16usize, 32, 64, 128];
+            for i in 0..n {
+                s.push(req(i as u64, *g.pick(&sls)));
+            }
+            // Queue ids are 0..n in order; a batch may only contain ids
+            // from the first min(window, len) positions.
+            let mut front: Vec<u64> = (0..n as u64).collect();
+            while let Some(batch) = s.next_batch() {
+                let eligible = &front[..window.min(front.len())];
+                for r in &batch {
+                    assert!(
+                        eligible.contains(&r.id),
+                        "id {} pulled from beyond window {window}: {eligible:?}",
+                        r.id
+                    );
+                }
+                front.retain(|id| !batch.iter().any(|r| r.id == *id));
+            }
+            assert!(front.is_empty());
+        });
+    }
+
+    #[test]
+    fn prop_head_always_served_no_starvation() {
+        // Starvation-freedom (DESIGN.md §7): the queue head is in every
+        // batch, so every request is served within (queue position)
+        // batches of reaching the front, whatever topology mix follows.
+        run("head always served", 300, |g: &mut Gen| {
+            let mut s = Scheduler::new(SchedulerConfig {
+                max_batch: g.usize_in(1, 8),
+                policy: if g.bool() { BatchPolicy::Fifo } else { BatchPolicy::GroupByTopology },
+                fairness_window: g.usize_in(1, 16),
+            });
+            let n = g.usize_in(1, 40);
+            let sls = [16usize, 32, 64, 128];
+            for i in 0..n {
+                s.push(req(i as u64, *g.pick(&sls)));
+            }
+            let mut expected_head: Vec<u64> = (0..n as u64).collect();
+            let mut batches = 0;
+            while let Some(batch) = s.next_batch() {
+                batches += 1;
+                assert!(
+                    batch.iter().any(|r| r.id == expected_head[0]),
+                    "head {} skipped by batch {:?}",
+                    expected_head[0],
+                    batch.iter().map(|r| r.id).collect::<Vec<_>>()
+                );
+                expected_head.retain(|id| !batch.iter().any(|r| r.id == *id));
+            }
+            assert!(expected_head.is_empty(), "requests starved: {expected_head:?}");
+            assert!(batches <= n, "more batches than requests");
         });
     }
 

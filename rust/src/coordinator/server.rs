@@ -33,6 +33,31 @@ enum Msg {
     Shutdown,
 }
 
+/// Why a non-blocking submission did not produce a response.
+///
+/// The cluster router needs to distinguish "this device is busy, try
+/// another" (the request comes back untouched for re-dispatch) from
+/// "this device processed and failed the request" (admission or engine
+/// error — retrying elsewhere may still make sense, but the request is
+/// gone).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Ingress queue full or server gone: the request is handed back so
+    /// the caller can re-route it without cloning the operands.
+    Busy(Request),
+    /// The server accepted the message but serving failed.
+    Failed(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy(r) => write!(f, "device busy (backpressure) for request {}", r.id),
+            SubmitError::Failed(e) => write!(f, "{e}"),
+        }
+    }
+}
+
 /// Client-side handle: submit requests, await responses.
 pub struct ServerHandle {
     tx: BoundedSender<Msg>,
@@ -48,13 +73,32 @@ impl ServerHandle {
     /// Submit and block until served.  Errors if the queue is full
     /// (backpressure surfaced to the caller) or the server is down.
     pub fn call(&self, req: Request) -> Result<Response> {
+        self.try_call(req).map_err(|e| match e {
+            SubmitError::Busy(_) => anyhow!("server queue full or shut down (backpressure)"),
+            SubmitError::Failed(msg) => anyhow!(msg),
+        })
+    }
+
+    /// Non-blocking submit that returns the request on backpressure so a
+    /// router can re-dispatch it to another device (the cluster layer's
+    /// failover path).  Blocks only while the request is being served.
+    pub fn try_call(&self, req: Request) -> Result<Response, SubmitError> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .try_send(Msg::Job(req, rtx))
-            .map_err(|_| anyhow!("server queue full or shut down (backpressure)"))?;
-        rrx.recv()
-            .map_err(|_| anyhow!("server dropped request"))?
-            .map_err(|e| anyhow!(e))
+        if let Err(msg) = self.tx.try_send(Msg::Job(req, rtx)) {
+            let Msg::Job(req, _) = msg else { unreachable!("sent a Job") };
+            return Err(SubmitError::Busy(req));
+        }
+        match rrx.recv() {
+            Err(_) => Err(SubmitError::Failed("server dropped request".into())),
+            Ok(Err(e)) => Err(SubmitError::Failed(e)),
+            Ok(Ok(resp)) => Ok(resp),
+        }
+    }
+
+    /// Requests currently waiting in the ingress queue (load signal for
+    /// least-loaded routing).
+    pub fn pending(&self) -> usize {
+        self.tx.len()
     }
 
     /// Blocking submit (waits for queue space instead of failing).
@@ -226,6 +270,20 @@ mod tests {
         let srv = server();
         let err = srv.handle().call(req(9, 512)).unwrap_err(); // SL 512 > max 128
         assert!(err.to_string().contains("rejected"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn try_call_serves_and_reports_failures() {
+        let srv = server();
+        assert_eq!(srv.handle().pending(), 0);
+        let resp = srv.handle().try_call(req(1, 64)).unwrap();
+        assert_eq!(resp.id, 1);
+        // Inadmissible topology: the request is consumed, not bounced.
+        match srv.handle().try_call(req(2, 512)) {
+            Err(SubmitError::Failed(e)) => assert!(e.contains("rejected"), "{e}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
         srv.shutdown();
     }
 

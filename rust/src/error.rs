@@ -1,0 +1,30 @@
+//! Error-handling surface for the crate (DESIGN.md §2).
+//!
+//! The codebase standardizes on the `anyhow` API.  Offline, `anyhow`
+//! resolves to the vendored shim in `rust/vendor/anyhow` — this module
+//! re-exports the full surface under a crate-local name so downstream
+//! code (and any future swap back to the real crate) can write
+//! `use famous::error::{Result, bail}` without caring which
+//! implementation is underneath.
+
+pub use anyhow::{anyhow, bail, Context, Error, Result};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reexported_surface_is_usable() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged");
+            }
+            let v: Option<u32> = Some(9);
+            v.context("missing")
+        }
+        assert_eq!(f(false).unwrap(), 9);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged");
+        let e: Error = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+}

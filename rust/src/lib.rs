@@ -15,16 +15,22 @@
 //!   resource feasibility for one request.
 //! * [`coordinator`] — the host/MicroBlaze control flow as a request
 //!   router/batcher with runtime (h, d_model, SL) reprogramming.
+//! * [`cluster`] — scale-out: a fleet of heterogeneous simulated devices
+//!   behind one ingress, with placement planning, topology-affinity
+//!   routing, head-sharding of oversized requests, and fleet metrics.
 //! * [`baselines`] — measured CPU attention plus calibrated models of the
 //!   platforms the paper compares against (Tables II–IV).
 //!
 //! Substrates built from scratch (offline image; see DESIGN.md §2):
-//! [`jsonlite`], [`fixed`], [`rng`], [`proptest_lite`], [`exec`], [`cli`].
+//! [`jsonlite`], [`fixed`], [`rng`], [`proptest_lite`], [`exec`],
+//! [`cli`], [`error`] (plus the vendored `anyhow`/`xla` shims under
+//! `rust/vendor/`).
 
 pub mod analytical;
 pub mod benchlib;
 pub mod cli;
 pub mod config;
+pub mod error;
 pub mod exec;
 pub mod fixed;
 pub mod fpga;
@@ -37,6 +43,7 @@ pub mod testdata;
 // Layered on top (written after the substrates):
 pub mod accel;
 pub mod baselines;
+pub mod cluster;
 pub mod coordinator;
 pub mod report;
 pub mod runtime;

@@ -4,6 +4,7 @@
 use famous::accel::FamousAccelerator;
 use famous::analytical::{LatencyModel, TABLE1};
 use famous::cli::Parser;
+use famous::cluster::{parse_fleet, Cluster, ClusterConfig, WorkloadProfile};
 use famous::config::Topology;
 use famous::coordinator::{
     BatchPolicy, Coordinator, ModelDescriptor, Request, SchedulerConfig, Server, ServerConfig,
@@ -17,6 +18,7 @@ fn parser() -> Parser {
     Parser::new("famous", "FAMOUS attention accelerator (FPT'24) — full-system reproduction")
         .subcommand("run", "run one MHA invocation and print the report")
         .subcommand("serve", "serve a synthetic request stream through the coordinator")
+        .subcommand("cluster", "serve a mixed workload across a simulated FPGA fleet")
         .subcommand("table1", "reproduce Table I (all 12 tests)")
         .subcommand("resources", "print resource estimates / max-heads per device")
         .subcommand("trace", "dump the per-phase cycle trace as JSON")
@@ -25,7 +27,8 @@ fn parser() -> Parser {
         .opt_default("tile-size", "64", "synthesis tile size TS")
         .opt_default("device", "u55c", "u55c | u200")
         .opt_default("artifacts", "artifacts", "artifact directory")
-        .opt_default("requests", "32", "serve: number of synthetic requests")
+        .opt_default("requests", "32", "serve/cluster: number of synthetic requests")
+        .opt_default("fleet", "u55c:2,u200:2", "cluster: device fleet, e.g. u55c:4")
         .opt_default("model", "", "serve: model descriptor JSON path")
         .flag("sim-datapath", "use the rust int8 datapath instead of PJRT")
         .flag("double-buffer", "enable load/compute overlap in the tile loop")
@@ -155,6 +158,47 @@ fn cmd_serve(args: &famous::cli::Args) -> anyhow::Result<()> {
         stats.fabric_latency.percentile(50.0),
         stats.fabric_latency.percentile(99.0)
     );
+    Ok(())
+}
+
+fn cmd_cluster(args: &famous::cli::Args) -> anyhow::Result<()> {
+    let devices = parse_fleet(args.get_or("fleet", "u55c:2,u200:2"))?;
+    let n: usize = args.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(32);
+    // The paper's flexibility mix, fleet-scale: BERT-base shapes at two
+    // sequence lengths, a U200-friendly h=6 shape, and BERT-large —
+    // whose d_model 1024 no single build admits, so it head-shards.
+    let workload = vec![
+        Topology::new(64, 768, 8, 64),
+        Topology::new(32, 768, 8, 64),
+        Topology::new(64, 768, 6, 64),
+        Topology::new(64, 1024, 16, 64),
+    ];
+    let cluster = Cluster::start(
+        devices,
+        &WorkloadProfile::uniform(&workload),
+        ClusterConfig::default(),
+    )?;
+    println!("fleet of {} devices; {} requests over {} topologies", cluster.device_count(), n, workload.len());
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for i in 0..n {
+        let h = cluster.handle();
+        let topo = workload[i % workload.len()].clone();
+        joins.push(std::thread::spawn(move || {
+            let inputs = MhaInputs::generate(&topo);
+            h.call(Request { id: i as u64, topology: topo, inputs })
+        }));
+    }
+    let mut ok = 0;
+    for j in joins {
+        if j.join().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let fleet = cluster.shutdown();
+    print!("{}", fleet.render());
+    println!("served {ok}/{n} in {wall:.2}s wall ({:.1} req/s)", ok as f64 / wall);
     Ok(())
 }
 
@@ -299,6 +343,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("table1") => cmd_table1(&args),
         Some("resources") => cmd_resources(&args),
         Some("info") => cmd_info(&args),

@@ -85,6 +85,18 @@ impl LatencyStats {
         self.samples_ms.iter().copied().fold(0.0, f64::max)
     }
 
+    /// Sum of all samples (busy-time accounting for fleet makespans).
+    pub fn sum(&self) -> f64 {
+        self.samples_ms.iter().sum()
+    }
+
+    /// Fold another stats object into this one (fleet aggregation: the
+    /// cluster layer merges per-device `CoordinatorStats` latencies into
+    /// one distribution for cluster-wide percentiles).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_ms.extend_from_slice(&other.samples_ms);
+    }
+
     /// Percentile by nearest-rank (p in [0,100]).
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples_ms.is_empty() {
@@ -152,5 +164,23 @@ mod tests {
         let s = LatencyStats::default();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+        assert_eq!(s.sum(), 0.0);
+    }
+
+    #[test]
+    fn merge_concatenates_distributions() {
+        let mut a = LatencyStats::default();
+        let mut b = LatencyStats::default();
+        for v in [1.0, 2.0] {
+            a.record(v);
+        }
+        for v in [3.0, 4.0] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert!((a.sum() - 10.0).abs() < 1e-12);
+        assert_eq!(a.percentile(100.0), 4.0);
+        assert_eq!(a.min(), 1.0);
     }
 }

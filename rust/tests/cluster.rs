@@ -1,0 +1,189 @@
+//! Cluster acceptance tests (ISSUE 1): a mixed-topology workload on a
+//! 4-device fleet must be (a) bit-identical to single-device serving,
+//! (b) strictly faster in modeled aggregate throughput, and (c) cheaper
+//! in reconfigurations per request than one coordinator seeing the same
+//! interleaved stream.
+
+use famous::accel::FamousAccelerator;
+use famous::cluster::{Cluster, ClusterConfig, DeviceSpec, ShardPlan, WorkloadProfile};
+use famous::config::Topology;
+use famous::coordinator::{BatchPolicy, Coordinator, Request, SchedulerConfig};
+use famous::sim::SimConfig;
+use famous::testdata::MhaInputs;
+
+fn mixed_workload() -> Vec<Topology> {
+    vec![
+        Topology::new(64, 768, 8, 64),
+        Topology::new(32, 768, 8, 64),
+        Topology::new(64, 512, 8, 64),
+    ]
+}
+
+/// Same scheduler tuning for the lone coordinator and every cluster
+/// device: an online-serving window (bounded reordering), so neither
+/// side gets an offline-batching advantage.
+fn serving_sched() -> SchedulerConfig {
+    SchedulerConfig { max_batch: 4, policy: BatchPolicy::GroupByTopology, fairness_window: 4 }
+}
+
+#[test]
+fn four_device_cluster_acceptance() {
+    let topos = mixed_workload();
+    let n = 24usize;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| {
+            let t = topos[i % topos.len()].clone();
+            Request { id: i as u64, topology: t.clone(), inputs: MhaInputs::generate(&t) }
+        })
+        .collect();
+
+    // --- Single device: one coordinator, interleaved arrival order. ---
+    let mut single = Coordinator::new(
+        FamousAccelerator::with_sim_datapath(SimConfig::u55c()),
+        serving_sched(),
+    );
+    for r in &requests {
+        single.submit(r.clone()).unwrap();
+    }
+    let single_responses = single.serve_all().unwrap();
+    assert_eq!(single_responses.len(), n);
+    let single_busy_ms: f64 = single.stats.fabric_latency.sum();
+    let single_reconfigs = single.stats.reconfigurations;
+
+    // --- Cluster: 4 devices, same scheduler config, same stream. ---
+    let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+    let cluster = Cluster::start(
+        devices,
+        &WorkloadProfile::uniform(&topos),
+        ClusterConfig { scheduler: serving_sched(), ..ClusterConfig::default() },
+    )
+    .unwrap();
+    let h = cluster.handle();
+    let mut cluster_outputs = Vec::new();
+    for r in &requests {
+        let resp = h.call(r.clone()).unwrap();
+        assert!(!resp.sharded);
+        cluster_outputs.push((resp.id, resp.output));
+    }
+    let fleet = cluster.shutdown();
+
+    // (a) Every response bit-identical to the single-device output.
+    for (id, out) in &cluster_outputs {
+        let reference = single_responses.iter().find(|r| r.id == *id).unwrap();
+        assert_eq!(out, &reference.output, "request {id} diverged from single-device run");
+    }
+
+    // (b) Strictly higher modeled aggregate throughput: same total GOP
+    // over a strictly smaller makespan (the busiest device's fabric
+    // occupancy vs the lone device serving everything).
+    let makespan = fleet.makespan_ms();
+    assert!(makespan > 0.0);
+    assert!(
+        makespan < single_busy_ms,
+        "cluster makespan {makespan:.2} ms !< single-device busy {single_busy_ms:.2} ms"
+    );
+    let cluster_gops = fleet.cluster_gops();
+    let single_gops = fleet.totals.total_gop / (single_busy_ms * 1e-3);
+    assert!(
+        cluster_gops > single_gops,
+        "cluster {cluster_gops:.0} GOPS !> single {single_gops:.0} GOPS"
+    );
+
+    // (c) Fewer reconfigurations per request: affinity gives each device
+    // a homogeneous stream (one reprogram per topology-device pair),
+    // while the lone coordinator flips topologies inside its window.
+    let cluster_reconfigs = fleet.reconfigurations();
+    assert!(
+        cluster_reconfigs < single_reconfigs,
+        "cluster {cluster_reconfigs} reconfigs !< single {single_reconfigs}"
+    );
+    assert_eq!(fleet.totals.completed as usize, n);
+    assert!(fleet.reconfigs_per_request() < single_reconfigs as f64 / n as f64);
+    // Affinity should be near-perfect on a stable mix.
+    assert!(fleet.affinity_hit_rate() > 0.9, "hit rate {}", fleet.affinity_hit_rate());
+}
+
+#[test]
+fn cluster_shards_bert_large_on_heterogeneous_fleet() {
+    // Mixed U55C + U200 fleet; BERT-large (d_model 1024, h 16) fits no
+    // single build and must be head-sharded across two devices.
+    let large = Topology::new(64, 1024, 16, 64);
+    let base = Topology::new(64, 768, 6, 64);
+    let cluster = Cluster::start(
+        vec![
+            DeviceSpec::u55c(0),
+            DeviceSpec::u55c(1),
+            DeviceSpec::u200(2),
+            DeviceSpec::u200(3),
+        ],
+        &WorkloadProfile::uniform(&[large.clone(), base.clone()]),
+        ClusterConfig::default(),
+    )
+    .unwrap();
+    let h = cluster.handle();
+
+    let inputs = MhaInputs::generate(&large);
+    let resp =
+        h.call(Request { id: 1, topology: large.clone(), inputs: inputs.clone() }).unwrap();
+    assert!(resp.sharded);
+    assert_eq!(resp.output.len(), 64 * 1024);
+    // The halves are h=8 shapes, so only the U55Cs can serve them.
+    assert!(resp.devices.iter().all(|&d| d < 2), "halves on {:?}", resp.devices);
+
+    // Bit-identical to the same split served by one local accelerator.
+    let plan = ShardPlan::plan(&large).unwrap();
+    let (lo, hi) = plan.split_inputs(&inputs).unwrap();
+    let mut accel = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+    let want = plan
+        .concat_outputs(
+            &accel.run(&plan.half, &lo).unwrap().output,
+            &accel.run(&plan.half, &hi).unwrap().output,
+        )
+        .unwrap();
+    assert_eq!(resp.output, want);
+
+    // The h=6 shape is servable fleet-wide, including the U200s.
+    let r2 = h
+        .call(Request { id: 2, topology: base.clone(), inputs: MhaInputs::generate(&base) })
+        .unwrap();
+    assert!(!r2.sharded);
+
+    let fleet = cluster.shutdown();
+    assert_eq!(fleet.totals.sharded, 1);
+    assert_eq!(fleet.totals.completed, 2);
+    assert_eq!(fleet.served(), 3, "two half-invocations plus one whole");
+    assert!(fleet.render().contains("Fleet report"));
+}
+
+#[test]
+fn cluster_survives_backpressure_saturation() {
+    // Tiny ingress queues + concurrent clients: requests bounce between
+    // devices (or block) but none are lost or duplicated.
+    let topos = mixed_workload();
+    let cluster = Cluster::start(
+        (0..2).map(DeviceSpec::u55c).collect(),
+        &WorkloadProfile::uniform(&topos),
+        ClusterConfig {
+            scheduler: serving_sched(),
+            server: famous::coordinator::ServerConfig { queue_capacity: 1, ingest_burst: 1 },
+            max_retries: 2,
+        },
+    )
+    .unwrap();
+    let mut joins = Vec::new();
+    for i in 0..16u64 {
+        let h = cluster.handle();
+        let t = topos[i as usize % topos.len()].clone();
+        joins.push(std::thread::spawn(move || {
+            let inputs = MhaInputs::generate(&t);
+            h.call(Request { id: i, topology: t, inputs }).unwrap().id
+        }));
+    }
+    let mut ids: Vec<u64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    ids.sort();
+    assert_eq!(ids, (0..16).collect::<Vec<_>>());
+    let fleet = cluster.shutdown();
+    assert_eq!(fleet.totals.completed, 16);
+    assert_eq!(fleet.served(), 16);
+    assert_eq!(fleet.totals.rejected, 0);
+}

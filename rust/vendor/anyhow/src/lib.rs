@@ -1,0 +1,222 @@
+//! Offline shim of the `anyhow` crate — the subset this repository uses.
+//!
+//! The container image has no crates.io access, so the real `anyhow`
+//! cannot be fetched.  This crate reimplements the surface the codebase
+//! relies on with identical semantics:
+//!
+//! * [`Error`]: type-erased error holding a message chain.  Like real
+//!   `anyhow::Error` it deliberately does **not** implement
+//!   `std::error::Error`, which is what makes the blanket
+//!   `From<E: std::error::Error>` impl (and thus `?` on any std error)
+//!   possible.
+//! * [`Result<T>`] alias with `Error` as the default error type.
+//! * [`anyhow!`] / [`bail!`] macros.
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * `Error::msg`, `Display`, and the `{:#}` alternate format that
+//!   prints the whole cause chain (`outer: inner: root`).
+//!
+//! Swapping the real crate back in is a one-line Cargo.toml change; no
+//! call site would alter.
+
+use std::fmt;
+
+/// Type-erased error: a chain of messages, outermost context first.
+pub struct Error {
+    /// `chain[0]` is the outermost message; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the cause chain, outermost first (subset of
+    /// `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, colon-separated (anyhow's format).
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain.iter().skip(1).enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `?` on any std error converts into [`Error`], capturing its source
+/// chain.  (Sound only because `Error` itself is not `std::error::Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (subset of `anyhow::Context`).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_only() {
+        let e: Error = Err::<(), _>(io_err()).context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: file missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "file missing");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(n: i32) -> Result<i32> {
+            if n < 0 {
+                bail!("negative input {n}");
+            }
+            Err(anyhow!("always fails: {}", n))
+        }
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(3).unwrap_err().to_string(), "always fails: 3");
+        let from_value = anyhow!(String::from("plain"));
+        assert_eq!(from_value.to_string(), "plain");
+    }
+
+    #[test]
+    fn with_context_lazily_wraps() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "x.json")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading x.json: file missing");
+        assert_eq!(e.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert_eq!(v.context("missing field").unwrap_err().to_string(), "missing field");
+        assert_eq!(Some(7u8).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn error_msg_as_fn_item() {
+        let r: std::result::Result<(), String> = Err("boom".into());
+        let e = r.map_err(Error::msg).unwrap_err();
+        assert_eq!(e.to_string(), "boom");
+    }
+}
