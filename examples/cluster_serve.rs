@@ -92,6 +92,16 @@ fn main() -> anyhow::Result<()> {
             }
         }));
     }
+    // Observe the fleet mid-run (no drain): the live-snapshot path an
+    // operator dashboard would poll.
+    let snap = cluster.fleet_snapshot();
+    println!(
+        "-- live snapshot -- {} completed, {} device invocations, {} reconfigs, {:.0}% cache hits",
+        snap.totals.completed,
+        snap.served(),
+        snap.reconfigurations(),
+        snap.program_cache_hit_rate() * 100.0
+    );
     for j in joins {
         j.join().unwrap();
     }

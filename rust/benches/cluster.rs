@@ -3,13 +3,15 @@
 //! The workload is a fixed batch of mixed-topology requests (the
 //! flexibility mix of Table I shapes).  For each fleet size we measure
 //! host wall time and report the *modeled* fabric metrics: cluster GOPS
-//! over the makespan (the busiest device's fabric occupancy),
-//! reconfigurations per request, and affinity hit rate.  Scaling the
-//! fleet cuts the makespan until each of the 4 workload topologies owns
-//! a device (affinity deliberately serializes a topology onto its home
-//! device to avoid reprogramming), so expect near-linear speedup to 4
-//! devices and a plateau at 8 — while reconfigurations stay flat in
-//! absolute terms (≈ one per topology-device pair, not per request).
+//! over the makespan (the busiest device's fabric occupancy, counted as
+//! Σ per-batch makespan now that a same-topology batch streams through
+//! the fabric as one programmed pipeline — DESIGN.md §9), reconfigs per
+//! request, and affinity hit rate.  Under batch-makespan accounting a
+//! lone device amortizes whole batches, so fleet speedup saturates
+//! earlier than the pre-batching near-linear curve; the win shows in
+//! reconfigurations (flat: ≈ one per topology-device pair, not per
+//! request) and in the per-device batch counts.  See benches/pipeline.rs
+//! for the single-device serial-vs-batched and cold-vs-warm-cache view.
 //!
 //!     cargo bench --bench cluster
 

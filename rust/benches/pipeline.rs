@@ -1,0 +1,94 @@
+//! Program/execute pipeline bench: serial vs batched execution and
+//! cold vs warm `ProgramCache` on one simulated device.
+//!
+//! Three modes over the same batch of same-topology requests (distinct
+//! inputs, shared weights — the serving-a-model case):
+//!
+//! * **serial / cold** — cache capacity 0: every request re-runs the
+//!   cycle-level timing sim and re-quantizes the weights, i.e. the
+//!   pre-split behavior.
+//! * **serial / warm** — default cache: one timing sim for the whole
+//!   loop, but requests still execute one at a time.
+//! * **batched / warm** — `FamousAccelerator::run_batch`: one timing
+//!   sim, one weight preparation, requests fanned out over the worker
+//!   pool.
+//!
+//! Outputs are asserted bit-identical across all three, and the
+//! `timing_sims_run` counters are asserted (cold = one per request,
+//! warm = exactly one).
+//!
+//!     cargo bench --bench pipeline
+
+use famous::accel::{FamousAccelerator, ProgramCache};
+use famous::config::Topology;
+use famous::report::Table;
+use famous::sim::SimConfig;
+use famous::testdata::{gen_matrix, MhaInputs};
+use std::time::Instant;
+
+const BATCH: usize = 16;
+
+fn requests(topo: &Topology) -> Vec<MhaInputs> {
+    (0..BATCH as u64)
+        .map(|i| {
+            let mut inp = MhaInputs::generate(topo);
+            inp.x = gen_matrix(1000 + i, topo.seq_len, topo.d_model);
+            inp
+        })
+        .collect()
+}
+
+fn main() {
+    let topo = Topology::new(64, 768, 8, 64);
+    let reqs = requests(&topo);
+    let mut t = Table::new(
+        format!("Pipeline — {BATCH} requests of {topo}, sim datapath"),
+        &["mode", "wall ms", "req/s", "timing sims", "speedup"],
+    );
+
+    // serial / cold: every invocation re-programs.
+    let mut cold = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+    cold.programs = ProgramCache::new(0);
+    let t0 = Instant::now();
+    let cold_outputs: Vec<Vec<f32>> =
+        reqs.iter().map(|inp| cold.run(&topo, inp).expect("served").output).collect();
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(cold.timing_sims_run as usize, BATCH, "cold cache re-sims every request");
+
+    // serial / warm: program once, execute one at a time.
+    let mut warm = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+    let t0 = Instant::now();
+    let warm_outputs: Vec<Vec<f32>> =
+        reqs.iter().map(|inp| warm.run(&topo, inp).expect("served").output).collect();
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(warm.timing_sims_run, 1, "warm cache programs once");
+
+    // batched / warm: program once, execute in parallel.
+    let mut batched = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+    let refs: Vec<&MhaInputs> = reqs.iter().collect();
+    let t0 = Instant::now();
+    let batch_reports = batched.run_batch(&topo, &refs).expect("served");
+    let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(batched.timing_sims_run, 1, "batch programs once");
+
+    // Bit-identity across all three paths.
+    for ((c, w), b) in cold_outputs.iter().zip(&warm_outputs).zip(&batch_reports) {
+        assert_eq!(c, w, "warm-cache output diverged");
+        assert_eq!(c, &b.output, "batched output diverged");
+    }
+
+    let row = |t: &mut Table, mode: &str, ms: f64, sims: u64| {
+        t.row(vec![
+            mode.into(),
+            format!("{ms:.1}"),
+            format!("{:.1}", BATCH as f64 / (ms * 1e-3)),
+            sims.to_string(),
+            format!("{:.2}x", cold_ms / ms),
+        ]);
+    };
+    row(&mut t, "serial / cold cache", cold_ms, cold.timing_sims_run);
+    row(&mut t, "serial / warm cache", warm_ms, warm.timing_sims_run);
+    row(&mut t, "batched / warm cache", batch_ms, batched.timing_sims_run);
+    print!("{}", t.render());
+    println!("(outputs bit-identical across all three modes; wall times are host-side)");
+}

@@ -8,11 +8,14 @@
 //! affinity hit rates, and the modeled GOP of all work dispatched.
 //!
 //! Throughput is *modeled*, like every latency in this repository: the
-//! cluster's makespan is the busiest device's total fabric occupancy, so
-//! `cluster_gops = Σ GOP / max_d Σ fabric_ms(d)` — the steady-state rate
-//! an operator would see if the fabric were the bottleneck.  Wall-clock
-//! rates (host threading, channel overhead) are reported separately by
-//! the example/bench harnesses.
+//! cluster's makespan is the busiest device's total fabric occupancy,
+//! where a same-topology batch occupies its device for the batch's
+//! makespan (max over the batch — one programmed pipeline), not the sum
+//! of its per-request latencies.  `cluster_gops = Σ GOP / max_d Σ
+//! batch_makespan(d)` — the steady-state rate an operator would see if
+//! the fabric were the bottleneck.  Wall-clock rates (host threading,
+//! channel overhead) are reported separately by the example/bench
+//! harnesses.
 
 use super::DeviceSpec;
 use crate::coordinator::CoordinatorStats;
@@ -52,9 +55,19 @@ pub struct DeviceReport {
 }
 
 impl DeviceReport {
-    /// Total modeled fabric occupancy of this device.
+    /// Total modeled fabric occupancy of this device: Σ per-batch
+    /// makespan.  A programmed same-topology batch streams through the
+    /// fabric as one pipeline, so it occupies the device for the max of
+    /// its per-request latencies (all identical at one topology), not
+    /// their sum — see DESIGN.md §9.
     pub fn busy_ms(&self) -> f64 {
-        self.stats.fabric_latency.sum()
+        self.stats.batch_makespan_ms
+    }
+
+    /// Fraction of program phases this device served from its
+    /// topology-keyed cache (no timing sim).
+    pub fn program_cache_hit_rate(&self) -> f64 {
+        self.stats.program_cache_hit_rate()
     }
 }
 
@@ -112,6 +125,25 @@ impl FleetStats {
         self.devices.iter().map(|d| d.stats.batches).sum()
     }
 
+    /// Timing simulations run fleet-wide (program-cache misses).
+    pub fn timing_sims(&self) -> u64 {
+        self.devices.iter().map(|d| d.stats.timing_sims).sum()
+    }
+
+    /// Program phases served from a cache fleet-wide.
+    pub fn program_cache_hits(&self) -> u64 {
+        self.devices.iter().map(|d| d.stats.program_cache_hits).sum()
+    }
+
+    /// Fleet-wide program-cache hit rate.
+    pub fn program_cache_hit_rate(&self) -> f64 {
+        let total = self.program_cache_hits() + self.timing_sims();
+        if total == 0 {
+            return 0.0;
+        }
+        self.program_cache_hits() as f64 / total as f64
+    }
+
     /// Reconfigurations per client-visible request.
     pub fn reconfigs_per_request(&self) -> f64 {
         self.reconfigurations() as f64 / (self.totals.completed.max(1)) as f64
@@ -153,7 +185,10 @@ impl FleetStats {
     pub fn render(&self) -> String {
         let mut t = Table::new(
             "Fleet report — per device",
-            &["device", "part", "served", "batches", "reconf", "busy ms", "occ %", "LUT %", "BRAM %"],
+            &[
+                "device", "part", "served", "batches", "reconf", "sims", "cache %", "busy ms",
+                "occ %", "LUT %", "BRAM %",
+            ],
         );
         for d in &self.devices {
             t.row(vec![
@@ -162,6 +197,8 @@ impl FleetStats {
                 d.stats.served.to_string(),
                 d.stats.batches.to_string(),
                 d.stats.reconfigurations.to_string(),
+                d.stats.timing_sims.to_string(),
+                format!("{:.0}", d.program_cache_hit_rate() * 100.0),
                 fmt_f(d.busy_ms()),
                 format!("{:.0}", self.occupancy(d.id) * 100.0),
                 format!("{:.0}", d.utilization.lut_pct),
@@ -177,11 +214,18 @@ impl FleetStats {
             self.served()
         ));
         out.push_str(&format!(
-            "modeled GOPS {:.0} over makespan {:.2} ms; fabric p50 {:.3} ms p99 {:.3} ms\n",
+            "modeled GOPS {:.0} over makespan {:.2} ms (batch makespan = max-of-batch); \
+             fabric p50 {:.3} ms p99 {:.3} ms\n",
             self.cluster_gops(),
             self.makespan_ms(),
             self.fabric_latency.percentile(50.0),
             self.fabric_latency.percentile(99.0)
+        ));
+        out.push_str(&format!(
+            "program cache: {} hits / {} timing sims ({:.0}% hit rate)\n",
+            self.program_cache_hits(),
+            self.timing_sims(),
+            self.program_cache_hit_rate() * 100.0
         ));
         out.push_str(&format!(
             "reconfigurations: {} total, {:.2} per request; affinity {:.0}% ({} hits / {} misses); {} retries\n",
@@ -207,6 +251,10 @@ mod tests {
             reconfigurations: reconf,
             rejected: 0,
             fabric_latency: LatencyStats::default(),
+            // One-request batches: each batch's makespan is its latency.
+            timing_sims: reconf,
+            program_cache_hits: served.saturating_sub(reconf),
+            batch_makespan_ms: lat.iter().sum(),
         };
         for &v in lat {
             s.fabric_latency.record(v);
@@ -261,6 +309,17 @@ mod tests {
         assert!(s.contains("u55c-0"));
         assert!(s.contains("modeled GOPS"));
         assert!(s.contains("affinity 80%"));
+        assert!(s.contains("program cache"));
+    }
+
+    #[test]
+    fn program_cache_rollup() {
+        let f = two_device_fleet();
+        assert_eq!(f.timing_sims(), 3);
+        assert_eq!(f.program_cache_hits(), 2);
+        assert!((f.program_cache_hit_rate() - 0.4).abs() < 1e-12);
+        assert!((f.devices[0].program_cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(f.devices[1].program_cache_hit_rate(), 0.0);
     }
 
     #[test]

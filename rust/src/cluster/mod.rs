@@ -20,8 +20,10 @@
 //!   fallback, and backpressure-aware failover when a device queue is
 //!   full.
 //! * [`fleet`] — metrics: per-device `CoordinatorStats` aggregated into
-//!   cluster GOPS, occupancy, p50/p99 fabric latency, and
-//!   reconfigurations per request.
+//!   cluster GOPS (over batch makespans — max-of-batch, DESIGN.md §9),
+//!   occupancy, p50/p99 fabric latency, program-cache hit rates, and
+//!   reconfigurations per request; available mid-run via
+//!   [`router::Cluster::fleet_snapshot`] as well as at shutdown.
 //!
 //! Invariants (tested in `rust/tests/cluster.rs`, DESIGN.md §7): every
 //! cluster response is bit-identical to a single-device run of the same

@@ -13,10 +13,17 @@
 //!   fairness window) to minimize switches.
 //! * [`server`] — a threaded front-end: bounded ingress channel
 //!   (backpressure), worker thread owning the accelerator, per-request
-//!   response channels.
+//!   response channels, and live stats snapshots for fleet observers.
 //!
 //! [`Coordinator`] is the synchronous core — directly testable, and what
-//! the server thread drives.
+//! the server thread drives.  Serving follows the accelerator's
+//! program/execute split (DESIGN.md §9): each batch is programmed once
+//! (topology-keyed cache, so repeat topologies run zero timing sims) and
+//! executed whole through [`FamousAccelerator::run_batch`] — on the sim
+//! datapath that fans requests out over a worker pool with one shared
+//! set of prepared weight buffers.  A batch occupies the modeled fabric
+//! for its *makespan* (max over the batch, all same-topology requests
+//! being identical in timing), not the sum of its per-request latencies.
 
 pub mod model_desc;
 pub mod scheduler;
@@ -52,6 +59,25 @@ pub struct CoordinatorStats {
     pub reconfigurations: u64,
     pub rejected: u64,
     pub fabric_latency: LatencyStats,
+    /// Timing simulations actually run (program-cache misses).
+    pub timing_sims: u64,
+    /// Program requests served from the topology-keyed cache.
+    pub program_cache_hits: u64,
+    /// Modeled fabric occupancy: Σ per-batch makespan, where a batch's
+    /// makespan is the max over its requests (a programmed same-topology
+    /// batch streams through the fabric as one pipeline), not the sum.
+    pub batch_makespan_ms: f64,
+}
+
+impl CoordinatorStats {
+    /// Fraction of program requests served without a timing sim.
+    pub fn program_cache_hit_rate(&self) -> f64 {
+        let total = self.program_cache_hits + self.timing_sims;
+        if total == 0 {
+            return 0.0;
+        }
+        self.program_cache_hits as f64 / total as f64
+    }
 }
 
 /// The synchronous serving core: scheduler + accelerator.
@@ -83,8 +109,9 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Serve the next batch (all same topology).  Returns the responses,
-    /// or None if the queue is empty.
+    /// Serve the next batch (all same topology): program once, execute
+    /// the whole batch through the accelerator's batched entry point.
+    /// Returns the responses, or None if the queue is empty.
     pub fn serve_next_batch(&mut self) -> Result<Option<Vec<Response>>> {
         let Some(batch) = self.scheduler.next_batch() else { return Ok(None) };
         let topo = batch[0].topology.clone();
@@ -93,11 +120,23 @@ impl Coordinator {
             self.stats.reconfigurations += 1;
             self.last_topology = Some(topo.clone());
         }
+        let input_refs: Vec<&crate::testdata::MhaInputs> =
+            batch.iter().map(|r| &r.inputs).collect();
+        let reports = self.accel.run_batch(&topo, &input_refs);
+        drop(input_refs);
+        // Mirror the accelerator's program-phase counters before the
+        // error check: a timing sim that ran ahead of a backend failure
+        // must still be counted (the accel is owned exclusively by this
+        // coordinator, so absolute copies are exact).
+        self.stats.timing_sims = self.accel.timing_sims_run;
+        self.stats.program_cache_hits = self.accel.program_cache_hits;
+        let reports = reports?;
+        let mut batch_makespan = 0.0f64;
         let mut responses = Vec::with_capacity(batch.len());
-        for req in batch {
-            let report = self.accel.run(&req.topology, &req.inputs)?;
+        for (req, report) in batch.into_iter().zip(reports) {
             self.stats.served += 1;
             self.stats.fabric_latency.record(report.latency_ms);
+            batch_makespan = batch_makespan.max(report.latency_ms);
             responses.push(Response {
                 id: req.id,
                 topology: req.topology,
@@ -108,6 +147,7 @@ impl Coordinator {
             });
         }
         self.stats.batches += 1;
+        self.stats.batch_makespan_ms += batch_makespan;
         Ok(Some(responses))
     }
 
@@ -202,5 +242,29 @@ mod tests {
     fn empty_queue_returns_none() {
         let mut c = coordinator(BatchPolicy::Fifo);
         assert!(c.serve_next_batch().unwrap().is_none());
+    }
+
+    #[test]
+    fn batch_serving_programs_once_per_topology() {
+        let mut c = coordinator(BatchPolicy::GroupByTopology);
+        let t = Topology::new(32, 768, 8, 64);
+        for i in 0..6 {
+            c.submit(req(i, t.clone())).unwrap();
+        }
+        c.serve_all().unwrap();
+        assert_eq!(c.stats.timing_sims, 1, "one program for the whole batch");
+        assert_eq!(c.stats.batches, 1);
+        // Batch occupies the fabric for its makespan (one invocation of a
+        // same-topology batch), not the sum of per-request latencies.
+        assert!((c.stats.batch_makespan_ms - c.stats.fabric_latency.mean()).abs() < 1e-12);
+        assert!(c.stats.batch_makespan_ms < c.stats.fabric_latency.sum());
+        // A second same-topology wave runs zero new timing sims.
+        for i in 6..10 {
+            c.submit(req(i, t.clone())).unwrap();
+        }
+        c.serve_all().unwrap();
+        assert_eq!(c.stats.timing_sims, 1);
+        assert!(c.stats.program_cache_hits >= 1);
+        assert!(c.stats.program_cache_hit_rate() > 0.0);
     }
 }

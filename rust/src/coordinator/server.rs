@@ -30,6 +30,9 @@ impl Default for ServerConfig {
 
 enum Msg {
     Job(Request, mpsc::Sender<Result<Response, String>>),
+    /// Live stats snapshot (answered after the current serving round, so
+    /// the caller observes every job submitted before it).
+    Stats(mpsc::Sender<super::CoordinatorStats>),
     Shutdown,
 }
 
@@ -101,6 +104,24 @@ impl ServerHandle {
         self.tx.len()
     }
 
+    /// Enqueue a stats-snapshot request without waiting for the reply.
+    /// Lets a fleet observer fan the request out to every device first
+    /// and then collect, so total latency is the slowest device's round
+    /// rather than the sum — assuming ingress queues have space: the
+    /// request shares the bounded job channel, so a saturated device
+    /// blocks the send until a slot frees.
+    pub fn request_stats(&self) -> Result<mpsc::Receiver<super::CoordinatorStats>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Stats(rtx)).map_err(|_| anyhow!("server shut down"))?;
+        Ok(rrx)
+    }
+
+    /// Live (pre-shutdown) snapshot of the coordinator's serving stats.
+    /// Blocks until the worker finishes its current round.
+    pub fn stats(&self) -> Result<super::CoordinatorStats> {
+        self.request_stats()?.recv().map_err(|_| anyhow!("server dropped stats request"))
+    }
+
     /// Blocking submit (waits for queue space instead of failing).
     pub fn call_blocking(&self, req: Request) -> Result<Response> {
         let (rtx, rrx) = mpsc::channel();
@@ -143,9 +164,11 @@ impl Server {
                     let mut msgs = vec![first];
                     msgs.extend(rx.drain_up_to(config.ingest_burst));
                     let mut shutdown = false;
+                    let mut stats_waiters: Vec<mpsc::Sender<super::CoordinatorStats>> = Vec::new();
                     for m in msgs {
                         match m {
                             Msg::Shutdown => shutdown = true,
+                            Msg::Stats(reply) => stats_waiters.push(reply),
                             Msg::Job(req, reply) => {
                                 let id = req.id;
                                 match coordinator.submit(req) {
@@ -179,6 +202,10 @@ impl Server {
                                 break 'outer;
                             }
                         }
+                    }
+                    // Stats snapshots reflect the round just served.
+                    for reply in stats_waiters {
+                        let _ = reply.send(coordinator.stats.clone());
                     }
                     if shutdown {
                         break;
@@ -285,6 +312,22 @@ mod tests {
             other => panic!("expected Failed, got {other:?}"),
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn live_stats_snapshot_mid_run() {
+        let srv = server();
+        srv.handle().call(req(1, 64)).unwrap();
+        let snap = srv.handle().stats().unwrap();
+        assert_eq!(snap.served, 1);
+        assert_eq!(snap.timing_sims, 1);
+        srv.handle().call(req(2, 64)).unwrap();
+        let snap2 = srv.handle().stats().unwrap();
+        assert_eq!(snap2.served, 2);
+        assert_eq!(snap2.timing_sims, 1, "repeat topology hits the program cache");
+        assert!(snap2.program_cache_hits >= 1);
+        let final_stats = srv.shutdown();
+        assert_eq!(final_stats.served, 2);
     }
 
     #[test]

@@ -124,6 +124,12 @@ fn worker_loop(s: Arc<Shared>) {
         struct Guard<'a>(&'a Shared);
         impl Drop for Guard<'_> {
             fn drop(&mut self) {
+                // Decrement under the queue lock: wait_idle evaluates its
+                // predicate while holding it, so an unlocked decrement +
+                // notify could land in the window between a waiter's
+                // predicate check and its park — a lost wakeup that would
+                // hang parallel_map (and with it the serving batch path).
+                let _q = self.0.queue.lock().unwrap();
                 self.0.in_flight.fetch_sub(1, Ordering::SeqCst);
                 self.0.done.notify_all();
             }

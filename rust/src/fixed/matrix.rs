@@ -66,24 +66,55 @@ pub fn matmul_i32(a: &FxMatrix, b: &FxMatrix) -> Vec<i32> {
 }
 
 /// Same contraction with the FAMOUS schedule: reduce over column tiles of
-/// width `ts`, accumulating partials — bit-identical to `matmul_i32`.
+/// width `ts` (a narrower tail tile when `ts` does not divide the
+/// reduction dim), accumulating partials — bit-identical to `matmul_i32`.
 pub fn matmul_i32_tiled(a: &FxMatrix, b: &FxMatrix, ts: usize) -> Vec<i32> {
     assert_eq!(a.cols, b.cols, "reduction dim mismatch");
-    assert_eq!(a.cols % ts, 0, "cols {} not a multiple of tile {}", a.cols, ts);
+    assert!(ts > 0, "tile size must be positive");
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut out = vec![0i32; m * n];
-    for t in 0..k / ts {
-        let base = t * ts;
+    let mut base = 0;
+    while base < k {
+        let width = ts.min(k - base);
         for i in 0..m {
-            let arow = &a.row(i)[base..base + ts];
+            let arow = &a.row(i)[base..base + width];
             for j in 0..n {
-                let brow = &b.row(j)[base..base + ts];
+                let brow = &b.row(j)[base..base + width];
                 let mut acc = 0i32;
-                for l in 0..ts {
+                for l in 0..width {
                     acc += arow[l] as i32 * brow[l] as i32;
                 }
                 out[i * n + j] += acc;
             }
+        }
+        base += ts;
+    }
+    out
+}
+
+/// Widen an int8 operand buffer to i16 (the one-time prep the fast GEMM
+/// kernel wants; exposed so batch paths can widen weights once and reuse
+/// them across requests).
+pub fn widen_i16(data: &[i8]) -> Vec<i16> {
+    data.iter().map(|&v| v as i16).collect()
+}
+
+/// The fast GEMM inner kernel over pre-widened operands: `a16` is (m×k)
+/// row-major, `b16` is (n×k) row-major (we compute `a @ b.T`).  Exact
+/// i32 accumulation — bit-identical to [`matmul_i32`].
+pub fn matmul_i32_widened(a16: &[i16], b16: &[i16], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a16.len(), m * k, "a16 shape mismatch");
+    assert_eq!(b16.len(), n * k, "b16 shape mismatch");
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let arow = &a16[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b16[j * k..(j + 1) * k];
+            // zip over equal-length slices: bounds checks vanish and LLVM
+            // vectorizes the widening multiply-add (pmaddwd class).
+            let acc: i32 = arow.iter().zip(brow).map(|(&x, &y)| x as i32 * y as i32).sum();
+            orow[j] = acc;
         }
     }
     out
@@ -96,25 +127,7 @@ pub fn matmul_i32_tiled(a: &FxMatrix, b: &FxMatrix, ts: usize) -> Vec<i32> {
 pub fn matmul_i32_fast(a: &FxMatrix, b: &FxMatrix) -> Vec<i32> {
     assert_eq!(a.cols, b.cols, "reduction dim mismatch: {} vs {}", a.cols, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.rows);
-    let a16: Vec<i16> = a.data.iter().map(|&v| v as i16).collect();
-    let b16: Vec<i16> = b.data.iter().map(|&v| v as i16).collect();
-    let mut out = vec![0i32; m * n];
-    for i in 0..m {
-        let arow = &a16[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b16[j * k..(j + 1) * k];
-            // zip over equal-length slices: bounds checks vanish and LLVM
-            // vectorizes the widening multiply-add (pmaddwd class).
-            let acc: i32 = arow
-                .iter()
-                .zip(brow)
-                .map(|(&x, &y)| x as i32 * y as i32)
-                .sum();
-            orow[j] = acc;
-        }
-    }
-    out
+    matmul_i32_widened(&widen_i16(&a.data), &widen_i16(&b.data), m, k, n)
 }
 
 #[cfg(test)]
@@ -152,9 +165,19 @@ mod tests {
         let a = rand_mat(1, 7, 24);
         let b = rand_mat(2, 5, 24);
         let want = matmul_i32(&a, &b);
-        for ts in [1, 2, 3, 4, 6, 8, 12, 24] {
+        // Dividing and non-dividing tile widths: 5/7/9/25/100 exercise
+        // the tail tile (cols % ts != 0, including ts > cols).
+        for ts in [1, 2, 3, 4, 5, 6, 7, 8, 9, 12, 24, 25, 100] {
             assert_eq!(matmul_i32_tiled(&a, &b, ts), want, "ts={ts}");
         }
+    }
+
+    #[test]
+    fn widened_kernel_matches_direct() {
+        let a = rand_mat(7, 6, 19);
+        let b = rand_mat(8, 4, 19);
+        let got = matmul_i32_widened(&widen_i16(&a.data), &widen_i16(&b.data), 6, 19, 4);
+        assert_eq!(got, matmul_i32(&a, &b));
     }
 
     #[test]

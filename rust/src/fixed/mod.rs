@@ -18,7 +18,9 @@ mod mac;
 mod matrix;
 
 pub use mac::Dsp48Mac;
-pub use matrix::{matmul_i32, matmul_i32_fast, matmul_i32_tiled, FxMatrix};
+pub use matrix::{
+    matmul_i32, matmul_i32_fast, matmul_i32_tiled, matmul_i32_widened, widen_i16, FxMatrix,
+};
 
 /// A fixed-point value: `value = mantissa * 2^-frac_bits`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -158,6 +158,13 @@ fn cmd_serve(args: &famous::cli::Args) -> anyhow::Result<()> {
         stats.fabric_latency.percentile(50.0),
         stats.fabric_latency.percentile(99.0)
     );
+    println!(
+        "program cache: {} hits / {} timing sims ({:.0}% hit); modeled batch makespan {:.2} ms",
+        stats.program_cache_hits,
+        stats.timing_sims,
+        stats.program_cache_hit_rate() * 100.0,
+        stats.batch_makespan_ms
+    );
     Ok(())
 }
 

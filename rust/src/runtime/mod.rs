@@ -18,14 +18,28 @@ mod manifest;
 pub use manifest::{ArtifactEntry, Manifest};
 
 use crate::config::Topology;
+use crate::exec::ThreadPool;
+use crate::sim::PreparedWeights;
 use crate::testdata::MhaInputs;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// A functional MHA engine: topology + operands → (SL × d_model) output.
 pub trait Backend {
     fn run_mha(&mut self, topo: &Topology, inputs: &MhaInputs) -> Result<Vec<f32>>;
+
+    /// Batched entry point: one programmed topology, many requests.
+    /// Outputs are returned in request order and must be bit-identical to
+    /// running each request through [`Backend::run_mha`] — the default
+    /// implementation simply does that.  Engines with per-topology state
+    /// (weight staging, compiled executables) override this to pay the
+    /// programming cost once per batch.
+    fn run_mha_batch(&mut self, topo: &Topology, inputs: &[&MhaInputs]) -> Result<Vec<Vec<f32>>> {
+        inputs.iter().map(|&inp| self.run_mha(topo, inp)).collect()
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -189,26 +203,85 @@ impl Backend for Runtime {
 /// Functional backend running the simulator's int8 datapath — used when
 /// artifacts are unavailable and as an independent cross-check of the
 /// PJRT path.
+///
+/// Purely functional: timing lives in [`crate::accel::ProgramImage`]
+/// (program phase), so executing a request here runs no cycle-level
+/// simulation.  The batch path quantizes and widens the weight operands
+/// once per batch ([`PreparedWeights`]) and fans the per-request GEMMs
+/// out over a worker pool; outputs are bit-identical to the sequential
+/// path (exact integer GEMM + identical f32 op order per request).
 pub struct SimBackend {
     pub config: crate::sim::SimConfig,
+    /// Workers for the batch path, created on first use.
+    pool: Option<ThreadPool>,
 }
 
 impl SimBackend {
     pub fn new(config: crate::sim::SimConfig) -> Self {
-        SimBackend { config }
+        SimBackend { config, pool: None }
+    }
+
+    fn admit(&self, topo: &Topology) -> Result<()> {
+        self.config.build.admits(topo).map_err(|e| anyhow!("sim: rejected: {e}"))
     }
 }
 
 impl Backend for SimBackend {
     fn run_mha(&mut self, topo: &Topology, inputs: &MhaInputs) -> Result<Vec<f32>> {
-        let mut sim = crate::sim::Simulator::new(self.config.clone());
-        let r = sim.run(topo, inputs).map_err(|e| anyhow!("sim: {e}"))?;
-        r.output.ok_or_else(|| anyhow!("simulator produced no functional output"))
+        self.admit(topo)?;
+        let prepared = PreparedWeights::prepare(&self.config, topo, inputs);
+        let x = prepared.quantize_input(&inputs.x);
+        Ok(prepared.execute(&x))
+    }
+
+    /// One weight preparation, N parallel executions.  Requests whose
+    /// weight operands differ from the batch head's fall back to their
+    /// own preparation (still inside the parallel map), preserving
+    /// bit-identity with the sequential path unconditionally.
+    fn run_mha_batch(&mut self, topo: &Topology, inputs: &[&MhaInputs]) -> Result<Vec<Vec<f32>>> {
+        let Some(first) = inputs.first().copied() else { return Ok(Vec::new()) };
+        if inputs.len() == 1 {
+            return Ok(vec![self.run_mha(topo, first)?]);
+        }
+        self.admit(topo)?;
+        let shared = Arc::new(PreparedWeights::prepare(&self.config, topo, first));
+        let config = self.config.clone();
+        let items: Vec<BatchItem> = inputs
+            .iter()
+            .map(|&inp| {
+                if PreparedWeights::same_weights(first, inp) {
+                    BatchItem::Shared { x: inp.x.clone() }
+                } else {
+                    BatchItem::Own { inputs: inp.clone() }
+                }
+            })
+            .collect();
+        let pool = self.pool.get_or_insert_with(ThreadPool::default_size);
+        let topo = topo.clone();
+        let outputs = pool.parallel_map(items, move |item| match item {
+            BatchItem::Shared { x } => {
+                let xq = shared.quantize_input(&x);
+                shared.execute(&xq)
+            }
+            BatchItem::Own { inputs } => {
+                let own = PreparedWeights::prepare(&config, &topo, &inputs);
+                let xq = own.quantize_input(&inputs.x);
+                own.execute(&xq)
+            }
+        });
+        Ok(outputs)
     }
 
     fn name(&self) -> &'static str {
         "sim"
     }
+}
+
+/// One request's share of a batch: its input plus either the batch-shared
+/// prepared weights or (weight-divergent requests) its own operands.
+enum BatchItem {
+    Shared { x: Vec<f32> },
+    Own { inputs: MhaInputs },
 }
 
 #[cfg(test)]
@@ -238,5 +311,64 @@ mod tests {
     #[test]
     fn runtime_load_missing_dir_errors() {
         assert!(Runtime::load("/nonexistent/path").is_err());
+    }
+
+    #[test]
+    fn sim_backend_batch_bit_identical_to_sequential() {
+        let topo = Topology::new(8, 256, 4, 64);
+        let mut requests = Vec::new();
+        for i in 0..5u64 {
+            let mut inp = MhaInputs::generate(&topo);
+            inp.x = crate::testdata::gen_matrix(100 + i, topo.seq_len, topo.d_model);
+            requests.push(inp);
+        }
+        // One weight-divergent request exercises the own-preparation path.
+        requests[3].wq[7] = -requests[3].wq[7] + 0.25;
+
+        let mut seq = SimBackend::new(SimConfig::u55c());
+        let want: Vec<Vec<f32>> =
+            requests.iter().map(|inp| seq.run_mha(&topo, inp).unwrap()).collect();
+
+        let mut batched = SimBackend::new(SimConfig::u55c());
+        let refs: Vec<&MhaInputs> = requests.iter().collect();
+        let got = batched.run_mha_batch(&topo, &refs).unwrap();
+
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            let gb: Vec<u32> = g.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = w.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "batched output diverged from sequential");
+        }
+    }
+
+    #[test]
+    fn sim_backend_batch_empty_and_rejection() {
+        let mut b = SimBackend::new(SimConfig::u55c());
+        let topo = Topology::new(8, 256, 4, 64);
+        assert!(b.run_mha_batch(&topo, &[]).unwrap().is_empty());
+        let bad = Topology::new(64, 1024, 8, 64);
+        let inp = MhaInputs::generate(&bad);
+        assert!(b.run_mha_batch(&bad, &[&inp]).is_err());
+    }
+
+    #[test]
+    fn default_batch_impl_loops_single_shot() {
+        // A Backend without an override serves batches via run_mha.
+        struct Counting(u64);
+        impl Backend for Counting {
+            fn run_mha(&mut self, topo: &Topology, _i: &MhaInputs) -> Result<Vec<f32>> {
+                self.0 += 1;
+                Ok(vec![0.0; topo.output_elems()])
+            }
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+        }
+        let topo = Topology::new(4, 32, 2, 16);
+        let inp = MhaInputs::generate(&topo);
+        let mut c = Counting(0);
+        let out = c.run_mha_batch(&topo, &[&inp, &inp, &inp]).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(c.0, 3);
     }
 }

@@ -2,13 +2,13 @@
 //! functional datapath, and emits per-phase cycle traces.
 
 use crate::config::{AcceleratorConfig, Topology};
-use crate::fixed::{FxMatrix, Quantizer};
+use crate::fixed::{matmul_i32_widened, widen_i16, FxMatrix, Quantizer};
 use crate::jsonlite::Json;
 use crate::testdata::MhaInputs;
 
 use super::axi::AxiMaster;
 use super::controller::{Controller, CtrlError};
-use super::modules::{HeadParams, QkPm, QkvPm, SvPm};
+use super::modules::{QkPm, QkvPm, SvPm};
 use super::softmax_unit::SoftmaxUnit;
 
 /// Scale convention for the QKᵀ scores (see ref.py's `scale_mode`).
@@ -298,7 +298,11 @@ impl Simulator {
 
         // Functional datapath (all heads; fabric runs them in parallel,
         // we compute them sequentially — same result).
-        let output = inputs.map(|inp| self.run_functional(topo, inp, &qkv, &qk, &sv));
+        let output = inputs.map(|inp| {
+            let prepared = PreparedWeights::prepare(&self.config, topo, inp);
+            let x = prepared.quantize_input(&inp.x);
+            prepared.execute(&x)
+        });
 
         let macs = (qkv.macs(dm as usize) + qk.macs() + sv.macs()) * topo.heads as u64;
         self.controller.finish(now);
@@ -313,39 +317,128 @@ impl Simulator {
             hbm_beats: axi.beats,
         })
     }
+}
 
-    fn run_functional(
-        &self,
-        topo: &Topology,
-        inp: &MhaInputs,
-        qkv: &QkvPm,
-        qk: &QkPm,
-        sv: &SvPm,
-    ) -> Vec<f32> {
-        let (sln, dmn, h, dkn) = (topo.seq_len, topo.d_model, topo.heads, topo.d_k());
+/// One head's weights and biases, quantized and pre-widened once — the
+/// host-side analogue of weight tiles staged in BRAM.
+#[derive(Clone, Debug)]
+pub struct PreparedHead {
+    pub wq16: Vec<i16>,
+    pub wk16: Vec<i16>,
+    pub wv16: Vec<i16>,
+    pub bq: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub bv: Vec<f32>,
+}
+
+/// Topology-programmed weight state for the functional datapath: built
+/// once per (topology, weight set), then executed against any number of
+/// inputs.  Plain owned data (`Send + Sync`), so a batch path can share
+/// one instance across worker threads via `Arc`.
+///
+/// Bit-identity contract: `execute` runs the exact same widened-i16 GEMM
+/// kernel ([`matmul_i32_widened`]) and the same f32 dequant/softmax/SV op
+/// order as the sequential per-request path, so outputs are byte-for-byte
+/// identical however requests are grouped or scheduled.
+#[derive(Clone, Debug)]
+pub struct PreparedWeights {
+    pub topology: Topology,
+    heads: Vec<PreparedHead>,
+    /// Product of the x and w quantization grid steps.
+    scale2: f32,
+    /// Score scaling multiplier (1/√d_k or 1/d_model per `ScaleMode`).
+    score_scale: f32,
+    softmax_lut_bits: Option<u32>,
+    causal: bool,
+}
+
+impl PreparedWeights {
+    /// Quantize + widen every head's weights for `topo` under `config`'s
+    /// numerics (scale mode, softmax realization, masking).
+    pub fn prepare(config: &SimConfig, topo: &Topology, inp: &MhaInputs) -> Self {
+        let (dmn, h, dkn) = (topo.d_model, topo.heads, topo.d_k());
         let quant = Quantizer::grid64();
-        let scale2 = quant.scale * quant.scale;
-        let x = FxMatrix::from_f32(&inp.x, sln, dmn, &quant);
+        let score_scale = match config.scale_mode {
+            ScaleMode::SqrtDk => 1.0 / (dkn as f32).sqrt(),
+            ScaleMode::DModel => 1.0 / dmn as f32,
+        };
+        let heads = (0..h)
+            .map(|head| {
+                let wslice = |w: &[f32]| {
+                    widen_i16(&quant.quantize_vec(&w[head * dkn * dmn..(head + 1) * dkn * dmn]))
+                };
+                let bslice = |b: &[f32]| {
+                    b[head * dkn..(head + 1) * dkn]
+                        .iter()
+                        .map(|&v| quant.fake_quant(v))
+                        .collect::<Vec<f32>>()
+                };
+                PreparedHead {
+                    wq16: wslice(&inp.wq),
+                    wk16: wslice(&inp.wk),
+                    wv16: wslice(&inp.wv),
+                    bq: bslice(&inp.bq),
+                    bk: bslice(&inp.bk),
+                    bv: bslice(&inp.bv),
+                }
+            })
+            .collect();
+        PreparedWeights {
+            topology: topo.clone(),
+            heads,
+            scale2: quant.scale * quant.scale,
+            score_scale,
+            softmax_lut_bits: config.softmax_lut_bits,
+            causal: config.causal,
+        }
+    }
+
+    /// Do two requests carry identical weight operands?  (A batch path
+    /// may only share prepared buffers across requests whose weights are
+    /// identical; `x` is free to differ.)
+    pub fn same_weights(a: &MhaInputs, b: &MhaInputs) -> bool {
+        a.wq == b.wq
+            && a.wk == b.wk
+            && a.wv == b.wv
+            && a.bq == b.bq
+            && a.bk == b.bk
+            && a.bv == b.bv
+    }
+
+    /// Quantize one request's input operand for [`Self::execute`].
+    pub fn quantize_input(&self, x: &[f32]) -> FxMatrix {
+        FxMatrix::from_f32(x, self.topology.seq_len, self.topology.d_model, &Quantizer::grid64())
+    }
+
+    /// Run one request through the functional datapath (all heads) against
+    /// the prepared weights.
+    pub fn execute(&self, x: &FxMatrix) -> Vec<f32> {
+        let topo = &self.topology;
+        let (sln, dmn, dkn) = (topo.seq_len, topo.d_model, topo.d_k());
+        assert_eq!(x.rows, sln, "input rows != SL");
+        assert_eq!(x.cols, dmn, "input cols != d_model");
+        let x16 = widen_i16(&x.data);
+        let softmax = match self.softmax_lut_bits {
+            Some(bits) => SoftmaxUnit::lut(bits),
+            None => SoftmaxUnit::exact(),
+        };
+        let qk = if self.causal {
+            QkPm::causal(sln, dkn, self.score_scale, softmax)
+        } else {
+            QkPm::new(sln, dkn, self.score_scale, softmax)
+        };
+        let sv = SvPm::new(sln, dkn);
         let mut out = vec![0f32; sln * dmn];
-        for head in 0..h {
-            let wslice = |w: &[f32]| {
-                FxMatrix::from_f32(&w[head * dkn * dmn..(head + 1) * dkn * dmn], dkn, dmn, &quant)
+        for (head, hp) in self.heads.iter().enumerate() {
+            let deq = |acc: Vec<i32>, bias: &[f32]| -> Vec<f32> {
+                acc.iter()
+                    .enumerate()
+                    .map(|(idx, &v)| v as f32 * self.scale2 + bias[idx % dkn])
+                    .collect()
             };
-            let bslice = |b: &[f32]| {
-                b[head * dkn..(head + 1) * dkn]
-                    .iter()
-                    .map(|&v| quant.fake_quant(v))
-                    .collect::<Vec<f32>>()
-            };
-            let params = HeadParams {
-                wq: wslice(&inp.wq),
-                wk: wslice(&inp.wk),
-                wv: wslice(&inp.wv),
-                bq: bslice(&inp.bq),
-                bk: bslice(&inp.bk),
-                bv: bslice(&inp.bv),
-            };
-            let (q, k, v) = qkv.run(&x, &params, scale2);
+            let q = deq(matmul_i32_widened(&x16, &hp.wq16, sln, dmn, dkn), &hp.bq);
+            let k = deq(matmul_i32_widened(&x16, &hp.wk16, sln, dmn, dkn), &hp.bk);
+            let v = deq(matmul_i32_widened(&x16, &hp.wv16, sln, dmn, dkn), &hp.bv);
             let s = qk.run(&q, &k);
             let o = sv.run(&s, &v);
             // Concatenate along features: out[:, head*dk..(head+1)*dk].
@@ -456,6 +549,68 @@ mod tests {
             c.build.max_topology = Topology::new(128, 768, 8, 16);
             c
         }
+    }
+
+    #[test]
+    fn prepared_path_matches_module_path() {
+        // The prepared-weight datapath (program once, execute many) must
+        // agree bit-for-bit with the per-head module path — the invariant
+        // the batched serving path rests on.
+        use super::super::modules::HeadParams;
+        let topo = Topology::new(8, 64, 2, 16);
+        let inputs = MhaInputs::generate(&topo);
+        let cfg = SimConfig::u55c();
+        let prepared = PreparedWeights::prepare(&cfg, &topo, &inputs);
+        let x = prepared.quantize_input(&inputs.x);
+        let got = prepared.execute(&x);
+
+        let (sln, dmn, h, dkn) = (topo.seq_len, topo.d_model, topo.heads, topo.d_k());
+        let quant = Quantizer::grid64();
+        let scale2 = quant.scale * quant.scale;
+        let xq = FxMatrix::from_f32(&inputs.x, sln, dmn, &quant);
+        let qkv = QkvPm::new(sln, dkn, topo.tile_size, topo.n_tiles());
+        let qk = QkPm::new(sln, dkn, 1.0 / (dkn as f32).sqrt(), SoftmaxUnit::exact());
+        let sv = SvPm::new(sln, dkn);
+        let mut want = vec![0f32; sln * dmn];
+        for head in 0..h {
+            let wslice = |w: &[f32]| {
+                FxMatrix::from_f32(&w[head * dkn * dmn..(head + 1) * dkn * dmn], dkn, dmn, &quant)
+            };
+            let bslice = |b: &[f32]| {
+                b[head * dkn..(head + 1) * dkn]
+                    .iter()
+                    .map(|&v| quant.fake_quant(v))
+                    .collect::<Vec<f32>>()
+            };
+            let params = HeadParams {
+                wq: wslice(&inputs.wq),
+                wk: wslice(&inputs.wk),
+                wv: wslice(&inputs.wv),
+                bq: bslice(&inputs.bq),
+                bk: bslice(&inputs.bk),
+                bv: bslice(&inputs.bv),
+            };
+            let (q, k, v) = qkv.run(&xq, &params, scale2);
+            let s = qk.run(&q, &k);
+            let o = sv.run(&s, &v);
+            for i in 0..sln {
+                want[i * dmn + head * dkn..i * dmn + (head + 1) * dkn]
+                    .copy_from_slice(&o[i * dkn..(i + 1) * dkn]);
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn same_weights_detects_divergence() {
+        let topo = Topology::new(4, 32, 2, 16);
+        let a = MhaInputs::generate(&topo);
+        let mut b = a.clone();
+        assert!(PreparedWeights::same_weights(&a, &b));
+        b.x[0] += 1.0; // inputs may differ
+        assert!(PreparedWeights::same_weights(&a, &b));
+        b.wq[0] += 1.0; // weights may not
+        assert!(!PreparedWeights::same_weights(&a, &b));
     }
 
     #[test]

@@ -27,5 +27,7 @@ pub mod modules;
 pub mod softmax_unit;
 
 pub use controller::{ControlRegs, Controller, CtrlError};
-pub use engine::{CycleTrace, PhaseEvent, SimConfig, SimResult, Simulator};
+pub use engine::{
+    CycleTrace, PhaseEvent, PreparedHead, PreparedWeights, SimConfig, SimResult, Simulator,
+};
 pub use softmax_unit::SoftmaxUnit;

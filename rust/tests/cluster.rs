@@ -47,7 +47,9 @@ fn four_device_cluster_acceptance() {
     }
     let single_responses = single.serve_all().unwrap();
     assert_eq!(single_responses.len(), n);
-    let single_busy_ms: f64 = single.stats.fabric_latency.sum();
+    // Same occupancy convention as the fleet: Σ per-batch makespan
+    // (max-of-batch), so the comparison is like-for-like.
+    let single_busy_ms: f64 = single.stats.batch_makespan_ms;
     let single_reconfigs = single.stats.reconfigurations;
 
     // --- Cluster: 4 devices, same scheduler config, same stream. ---

@@ -1,0 +1,137 @@
+//! Program/execute split acceptance (ISSUE 2): batched execution is
+//! bit-identical to sequential, a warm `ProgramCache` runs zero timing
+//! sims on repeat topologies, and the cache evicts LRU at capacity —
+//! end-to-end through the coordinator, not just the accelerator.
+
+use famous::accel::{FamousAccelerator, ProgramCache};
+use famous::config::Topology;
+use famous::coordinator::{BatchPolicy, Coordinator, Request, SchedulerConfig};
+use famous::sim::SimConfig;
+use famous::testdata::{gen_matrix, MhaInputs};
+
+fn topo() -> Topology {
+    Topology::new(16, 768, 8, 64)
+}
+
+/// Distinct-input requests of one topology (shared weights — the
+/// serving-a-model case), with one weight-divergent straggler.
+fn mixed_weight_requests(topo: &Topology, n: u64) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let mut inputs = MhaInputs::generate(topo);
+            inputs.x = gen_matrix(2000 + i, topo.seq_len, topo.d_model);
+            if i == n - 1 {
+                inputs.wk[3] = -inputs.wk[3] + 0.5;
+            }
+            Request { id: i, topology: topo.clone(), inputs }
+        })
+        .collect()
+}
+
+#[test]
+fn batched_bit_identical_to_sequential() {
+    let topo = topo();
+    let requests = mixed_weight_requests(&topo, 6);
+
+    // Sequential reference: one run() per request on a fresh device.
+    let mut serial = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+    let want: Vec<Vec<f32>> = requests
+        .iter()
+        .map(|r| serial.run(&topo, &r.inputs).unwrap().output)
+        .collect();
+
+    // Batched path through the coordinator (GroupByTopology pulls all six
+    // into one batch).
+    let mut coord = Coordinator::new(
+        FamousAccelerator::with_sim_datapath(SimConfig::u55c()),
+        SchedulerConfig {
+            max_batch: 16,
+            policy: BatchPolicy::GroupByTopology,
+            fairness_window: 64,
+        },
+    );
+    for r in &requests {
+        coord.submit(r.clone()).unwrap();
+    }
+    let responses = coord.serve_all().unwrap();
+    assert_eq!(responses.len(), requests.len());
+    assert_eq!(coord.stats.batches, 1, "one batch for one topology");
+
+    for resp in &responses {
+        let reference = &want[resp.id as usize];
+        // Byte-for-byte: compare f32 bit patterns, not approximate values.
+        let got: Vec<u32> = resp.output.iter().map(|v| v.to_bits()).collect();
+        let exp: Vec<u32> = reference.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, exp, "request {} diverged from the sequential path", resp.id);
+    }
+}
+
+#[test]
+fn warm_cache_batch_runs_exactly_one_timing_sim() {
+    let topo = topo();
+    let mut coord = Coordinator::new(
+        FamousAccelerator::with_sim_datapath(SimConfig::u55c()),
+        SchedulerConfig {
+            max_batch: 8,
+            policy: BatchPolicy::GroupByTopology,
+            fairness_window: 64,
+        },
+    );
+    for r in mixed_weight_requests(&topo, 5) {
+        coord.submit(r).unwrap();
+    }
+    coord.serve_all().unwrap();
+    assert_eq!(coord.stats.timing_sims, 1, "cold batch: one program, one sim");
+    assert_eq!(coord.accel.timing_sims_run, 1);
+
+    // Second same-topology batch: warm cache, zero new timing sims.
+    for r in mixed_weight_requests(&topo, 5) {
+        let r = Request { id: r.id + 100, ..r };
+        coord.submit(r).unwrap();
+    }
+    coord.serve_all().unwrap();
+    assert_eq!(coord.stats.served, 10);
+    assert_eq!(coord.stats.timing_sims, 1, "warm batch must run zero timing sims");
+    assert!(coord.stats.program_cache_hits >= 1);
+}
+
+#[test]
+fn program_cache_evicts_lru_at_capacity() {
+    let mut accel = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+    accel.programs = ProgramCache::new(2);
+    let t1 = Topology::new(16, 768, 8, 64);
+    let t2 = Topology::new(32, 768, 8, 64);
+    let t3 = Topology::new(64, 768, 8, 64);
+
+    accel.program(&t1).unwrap();
+    accel.program(&t2).unwrap();
+    assert_eq!(accel.timing_sims_run, 2);
+    assert_eq!(accel.programs.len(), 2);
+
+    // t3 evicts the least recently used entry (t1).
+    accel.program(&t3).unwrap();
+    assert_eq!(accel.timing_sims_run, 3);
+    assert_eq!(accel.programs.len(), 2);
+    assert_eq!(accel.programs.topologies(), vec![t2.clone(), t3.clone()]);
+
+    // t2 is still cached; t1 must re-sim.
+    accel.program(&t2).unwrap();
+    assert_eq!(accel.timing_sims_run, 3);
+    accel.program(&t1).unwrap();
+    assert_eq!(accel.timing_sims_run, 4);
+}
+
+#[test]
+fn cached_timing_matches_fresh_simulation() {
+    // The cached image must report the same timing the simulator would
+    // produce fresh — the cache is a memo, not an approximation.
+    let mut accel = FamousAccelerator::with_sim_datapath(SimConfig::u55c());
+    let t = Topology::new(64, 768, 8, 64);
+    let first = accel.program(&t).unwrap();
+    let cached = accel.program(&t).unwrap();
+    assert_eq!(first.cycles(), cached.cycles());
+    let fresh = famous::sim::Simulator::new(SimConfig::u55c()).run_timing(&t).unwrap();
+    assert_eq!(cached.cycles(), fresh.cycles);
+    assert_eq!(cached.sim.trace.total(), fresh.trace.total());
+    assert_eq!(accel.timing_sims_run, 1);
+}
