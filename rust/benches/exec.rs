@@ -1,0 +1,120 @@
+//! Execute-path bench: the PR-2 allocating serial path vs the reusable
+//! workspace vs head-parallel execution, over the Test-1 topology family
+//! (d_model = 768, TS = 64; SL ∈ {16, 64, 128}, h ∈ {4, 8}).
+//!
+//! Every mode's output is asserted bit-identical to the allocating
+//! serial reference before timing, and on the headline Test-1 shape
+//! (SL=64, h=8) the head-parallel workspace path must beat the PR-2
+//! serial path outright.
+//!
+//! Results are written machine-readable to `BENCH_exec.json` at the repo
+//! root so the perf trajectory is tracked across PRs (EXPERIMENTS.md
+//! §Perf documents the schema and the current numbers).
+//!
+//!     cargo bench --bench exec
+
+use famous::benchlib::{bench, black_box};
+use famous::config::Topology;
+use famous::exec::ThreadPool;
+use famous::jsonlite::Json;
+use famous::report::Table;
+use famous::sim::{PreparedWeights, SimConfig, Workspace};
+use famous::testdata::MhaInputs;
+
+fn assert_bits(want: &[f32], got: &[f32], what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: length diverged");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: output diverged at element {i}");
+    }
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let pool = ThreadPool::new(cores.max(2));
+    let handle = pool.handle();
+    let mut table = Table::new(
+        format!("Execute path — serial vs workspace vs head-parallel ({cores} cores)"),
+        &["topology", "alloc serial ms", "warm serial ms", "head-par ms", "lanes", "speedup"],
+    );
+    let mut results = Vec::new();
+
+    for &(sl, h) in &[(16usize, 4usize), (16, 8), (64, 4), (64, 8), (128, 4), (128, 8)] {
+        let topo = Topology::new(sl, 768, h, 64);
+        let inputs = MhaInputs::generate(&topo);
+        let prepared = PreparedWeights::prepare(&SimConfig::u55c(), &topo, &inputs);
+        let x = prepared.quantize_input(&inputs.x);
+        let lanes = h.min(cores);
+        let (warmup, iters) = if sl >= 128 { (2, 10) } else { (3, 20) };
+
+        // Reference output; every mode must reproduce it bit-for-bit.
+        let want = prepared.execute(&x);
+
+        // PR-2 path: allocate every intermediate per request.
+        let alloc = bench(warmup, iters, || {
+            black_box(prepared.execute(&x));
+        });
+
+        // Warm workspace, serial heads (zero allocations per request).
+        let mut ws = Workspace::new();
+        prepared.execute_into(&x, &mut ws);
+        assert_bits(&want, ws.output(), "warm serial");
+        let warm = bench(warmup, iters, || {
+            prepared.execute_into(&x, &mut ws);
+        });
+        assert_bits(&want, ws.output(), "warm serial (post-bench)");
+
+        // Head-parallel over the shared pool.
+        let mut wsp = Workspace::new();
+        prepared.execute_parallel(&x, &mut wsp, &handle, lanes);
+        assert_bits(&want, wsp.output(), "head-parallel");
+        let par = bench(warmup, iters, || {
+            prepared.execute_parallel(&x, &mut wsp, &handle, lanes);
+        });
+        assert_bits(&want, wsp.output(), "head-parallel (post-bench)");
+
+        // Acceptance: on the Test-1 headline shape the head-parallel
+        // workspace path must beat the PR-2 allocating serial path.
+        if sl == 64 && h == 8 && lanes > 1 {
+            assert!(
+                par.mean_ms < alloc.mean_ms,
+                "head-parallel ({:.3} ms) did not beat the serial path ({:.3} ms)",
+                par.mean_ms,
+                alloc.mean_ms
+            );
+        }
+
+        table.row(vec![
+            format!("SL={sl} h={h}"),
+            format!("{:.3}", alloc.mean_ms),
+            format!("{:.3}", warm.mean_ms),
+            format!("{:.3}", par.mean_ms),
+            lanes.to_string(),
+            format!("{:.2}x", alloc.mean_ms / par.mean_ms),
+        ]);
+        results.push(Json::obj([
+            ("seq_len", Json::from(sl as f64)),
+            ("d_model", Json::from(768.0)),
+            ("heads", Json::from(h as f64)),
+            ("lanes", Json::from(lanes as f64)),
+            ("serial_alloc_ms", Json::from(alloc.mean_ms)),
+            ("serial_warm_ms", Json::from(warm.mean_ms)),
+            ("head_parallel_ms", Json::from(par.mean_ms)),
+            ("speedup_vs_alloc", Json::from(alloc.mean_ms / par.mean_ms)),
+            ("bit_identical", Json::from(true)),
+        ]));
+    }
+
+    print!("{}", table.render());
+    println!("(outputs bit-identical across all modes; wall times are host-side)");
+
+    let out = Json::obj([
+        ("bench", Json::from("exec")),
+        ("unit", Json::from("ms_mean_wall")),
+        ("measured", Json::from(true)),
+        ("cores", Json::from(cores as f64)),
+        ("results", Json::arr(results)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_exec.json");
+    std::fs::write(path, out.to_string() + "\n").expect("write BENCH_exec.json");
+    println!("wrote {path}");
+}

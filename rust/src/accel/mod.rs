@@ -16,8 +16,12 @@
 //!   counter proves it.
 //! * **execute** — per request.  [`Self::run`] executes one request
 //!   against the programmed image; [`Self::run_batch`] executes a whole
-//!   same-topology batch through the backend's batched entry point
-//!   (parallel + weight-reusing on the sim datapath).
+//!   same-topology batch through the backend's batched entry point.  On
+//!   the sim datapath both are head-parallel and allocation-free when
+//!   warm: requests execute into resident `sim::Workspace` arenas with
+//!   the heads fanned out across the shared worker pool, mirroring the
+//!   fabric's `h` concurrent head pipelines (DESIGN.md §10).  Outputs
+//!   stay bit-identical to the serial path in every mode.
 
 use crate::config::Topology;
 use crate::fpga::resources::{ResourceEstimate, ResourceModel, Utilization};

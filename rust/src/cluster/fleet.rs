@@ -42,6 +42,32 @@ pub struct RouterTotals {
     pub total_gop: f64,
 }
 
+/// Liveness of one device at report time.  Distinguishes "zeroed stats
+/// because the device sat idle" from "zeroed stats because its worker is
+/// gone" — the two rendered identically before the health flag existed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeviceHealth {
+    /// Server running and answering stats requests.
+    #[default]
+    Live,
+    /// Drained deliberately (maintenance / elasticity); its stats are the
+    /// final pre-drain roll-up.
+    Stopped,
+    /// Worker died or stopped answering: zeroed stats mean *unknown*,
+    /// not idle.
+    Failed,
+}
+
+impl DeviceHealth {
+    pub fn label(self) -> &'static str {
+        match self {
+            DeviceHealth::Live => "live",
+            DeviceHealth::Stopped => "stopped",
+            DeviceHealth::Failed => "FAILED",
+        }
+    }
+}
+
 /// One device's roll-up.
 #[derive(Clone, Debug)]
 pub struct DeviceReport {
@@ -52,6 +78,8 @@ pub struct DeviceReport {
     pub stats: CoordinatorStats,
     /// Static post-synthesis resource utilization of the build.
     pub utilization: Utilization,
+    /// Liveness at report time (see [`DeviceHealth`]).
+    pub health: DeviceHealth,
 }
 
 impl DeviceReport {
@@ -81,19 +109,34 @@ pub struct FleetStats {
 }
 
 impl FleetStats {
-    /// Build the report from per-device stats + router counters.
+    /// Build the report from per-device stats + router counters, every
+    /// device presumed live (the pre-health-flag behavior).
     pub fn assemble(
         specs: &[DeviceSpec],
         coord: Vec<CoordinatorStats>,
         totals: RouterTotals,
     ) -> FleetStats {
+        let health = vec![DeviceHealth::Live; specs.len()];
+        Self::assemble_with_health(specs, coord, health, totals)
+    }
+
+    /// Build the report with explicit per-device health (what
+    /// `Cluster::fleet_snapshot` observed when collecting the stats).
+    pub fn assemble_with_health(
+        specs: &[DeviceSpec],
+        coord: Vec<CoordinatorStats>,
+        health: Vec<DeviceHealth>,
+        totals: RouterTotals,
+    ) -> FleetStats {
         assert_eq!(specs.len(), coord.len());
+        assert_eq!(specs.len(), health.len());
         let rm = ResourceModel::default();
         let mut fabric = LatencyStats::default();
         let devices = specs
             .iter()
             .zip(coord)
-            .map(|(spec, stats)| {
+            .zip(health)
+            .map(|((spec, stats), health)| {
                 fabric.merge(&stats.fabric_latency);
                 // Same synthesis-point convention as accel::resources():
                 // resources are set by the synthesized maxima at SL=64.
@@ -106,10 +149,21 @@ impl FleetStats {
                     part: spec.sim.build.device.part.clone(),
                     stats,
                     utilization,
+                    health,
                 }
             })
             .collect();
         FleetStats { devices, fabric_latency: fabric, totals }
+    }
+
+    /// Devices currently able to serve.
+    pub fn live_devices(&self) -> usize {
+        self.devices.iter().filter(|d| d.health == DeviceHealth::Live).count()
+    }
+
+    /// Devices whose stats cannot be trusted (worker crashed mid-run).
+    pub fn failed_devices(&self) -> usize {
+        self.devices.iter().filter(|d| d.health == DeviceHealth::Failed).count()
     }
 
     /// Device invocations served (≥ completed when requests shard).
@@ -186,14 +240,15 @@ impl FleetStats {
         let mut t = Table::new(
             "Fleet report — per device",
             &[
-                "device", "part", "served", "batches", "reconf", "sims", "cache %", "busy ms",
-                "occ %", "LUT %", "BRAM %",
+                "device", "part", "health", "served", "batches", "reconf", "sims", "cache %",
+                "busy ms", "occ %", "LUT %", "BRAM %",
             ],
         );
         for d in &self.devices {
             t.row(vec![
                 d.name.clone(),
                 d.part.clone(),
+                d.health.label().to_string(),
                 d.stats.served.to_string(),
                 d.stats.batches.to_string(),
                 d.stats.reconfigurations.to_string(),
@@ -227,6 +282,12 @@ impl FleetStats {
             self.timing_sims(),
             self.program_cache_hit_rate() * 100.0
         ));
+        if self.failed_devices() > 0 {
+            out.push_str(&format!(
+                "WARNING: {} device(s) FAILED — their zeroed stats are unknowns, not idleness\n",
+                self.failed_devices()
+            ));
+        }
         out.push_str(&format!(
             "reconfigurations: {} total, {:.2} per request; affinity {:.0}% ({} hits / {} misses); {} retries\n",
             self.reconfigurations(),
@@ -320,6 +381,37 @@ mod tests {
         assert!((f.program_cache_hit_rate() - 0.4).abs() < 1e-12);
         assert!((f.devices[0].program_cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(f.devices[1].program_cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn health_flag_distinguishes_failed_from_idle() {
+        let specs = vec![DeviceSpec::u55c(0), DeviceSpec::u55c(1), DeviceSpec::u200(2)];
+        // Device 1 is idle (zero stats, live); device 2 crashed (zero
+        // stats, failed) — same numbers, different meaning.
+        let coord = vec![
+            stats(3, 1, &[1.0, 1.0, 2.0]),
+            CoordinatorStats::default(),
+            CoordinatorStats::default(),
+        ];
+        let health = vec![DeviceHealth::Live, DeviceHealth::Live, DeviceHealth::Failed];
+        let f = FleetStats::assemble_with_health(&specs, coord, health, RouterTotals::default());
+        assert_eq!(f.live_devices(), 2);
+        assert_eq!(f.failed_devices(), 1);
+        assert_eq!(f.devices[1].health, DeviceHealth::Live);
+        assert_eq!(f.devices[2].health, DeviceHealth::Failed);
+        let s = f.render();
+        assert!(s.contains("health"), "{s}");
+        assert!(s.contains("FAILED"), "{s}");
+        assert!(s.contains("WARNING: 1 device(s) FAILED"), "{s}");
+    }
+
+    #[test]
+    fn assemble_defaults_to_live() {
+        let f = two_device_fleet();
+        assert_eq!(f.live_devices(), 2);
+        assert_eq!(f.failed_devices(), 0);
+        assert!(f.devices.iter().all(|d| d.health == DeviceHealth::Live));
+        assert!(!f.render().contains("WARNING"));
     }
 
     #[test]

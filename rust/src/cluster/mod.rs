@@ -36,7 +36,7 @@ pub mod placement;
 pub mod router;
 pub mod shard;
 
-pub use fleet::{DeviceReport, FleetStats};
+pub use fleet::{DeviceHealth, DeviceReport, FleetStats};
 pub use placement::{PlacementPlan, PlacementPlanner, TopologyPlacement, WorkloadProfile};
 pub use router::{Cluster, ClusterConfig, ClusterHandle, ClusterResponse};
 pub use shard::ShardPlan;

@@ -17,7 +17,7 @@
 //! is head-sharded per the placement plan: two half-requests on two
 //! devices, rejoined with a host-side column concat ([`super::shard`]).
 
-use super::fleet::{FleetStats, RouterTotals};
+use super::fleet::{DeviceHealth, FleetStats, RouterTotals};
 use super::placement::{PlacementPlan, PlacementPlanner, WorkloadProfile};
 use super::shard::ShardPlan;
 use super::DeviceSpec;
@@ -185,42 +185,81 @@ impl Cluster {
     /// before any reply is awaited, so absent ingress backpressure the
     /// snapshot costs the slowest device's round, not the sum (a device
     /// with a full ingress queue still blocks its send — the request
-    /// shares the bounded job channel).  A device whose worker has died
-    /// reports default (zero) stats — its clients will already have
-    /// seen the engine error.
+    /// shares the bounded job channel).  Each device carries a
+    /// [`DeviceHealth`] flag: a deliberately drained device reports
+    /// `Stopped` with its final stats, while one whose worker died
+    /// reports `Failed` with default (zero) stats — zeroed *unknowns*,
+    /// no longer indistinguishable from an idle device.
     pub fn fleet_snapshot(&self) -> FleetStats {
+        let mut health = Vec::with_capacity(self.servers.len());
         let pending: Vec<Option<std::sync::mpsc::Receiver<CoordinatorStats>>> = self
             .servers
             .iter()
-            .map(|server| server.as_ref().and_then(|s| s.handle().request_stats().ok()))
+            .map(|server| match server {
+                None => {
+                    health.push(DeviceHealth::Stopped);
+                    None
+                }
+                Some(s) => match s.handle().request_stats() {
+                    Ok(rx) => {
+                        health.push(DeviceHealth::Live);
+                        Some(rx)
+                    }
+                    Err(_) => {
+                        health.push(DeviceHealth::Failed);
+                        None
+                    }
+                },
+            })
             .collect();
         let coord: Vec<CoordinatorStats> = pending
             .into_iter()
             .enumerate()
             .map(|(i, rx)| match rx {
-                Some(rx) => rx.recv().unwrap_or_default(),
+                Some(rx) => rx.recv().unwrap_or_else(|_| {
+                    // Worker died between the request and the reply.
+                    health[i] = DeviceHealth::Failed;
+                    CoordinatorStats::default()
+                }),
                 None => self.early_stats[i].clone().unwrap_or_default(),
             })
             .collect();
         let specs: Vec<DeviceSpec> = self.shared.devices.iter().map(|d| d.spec.clone()).collect();
         let totals = self.shared.state.lock().unwrap().totals.clone();
-        FleetStats::assemble(&specs, coord, totals)
+        FleetStats::assemble_with_health(&specs, coord, health, totals)
     }
 
-    /// Stop every device and assemble the fleet report.
+    /// Stop every device and assemble the fleet report.  Devices that
+    /// served until this clean shutdown report `Live`; ones drained
+    /// earlier via [`Self::stop_device`] report `Stopped`; ones whose
+    /// worker had already died (engine failure) report `Failed` — their
+    /// joined stats stop at the crash.
     pub fn shutdown(mut self) -> FleetStats {
         let mut coord = Vec::with_capacity(self.servers.len());
+        let mut health = Vec::with_capacity(self.servers.len());
         for (i, server) in self.servers.into_iter().enumerate() {
             let stats = match server {
-                Some(s) => s.shutdown(),
-                None => self.early_stats[i].take().unwrap_or_default(),
+                Some(s) => {
+                    // Probe before sending the shutdown message: a closed
+                    // ingress here means the worker exited on its own.
+                    health.push(if s.handle().is_alive() {
+                        DeviceHealth::Live
+                    } else {
+                        DeviceHealth::Failed
+                    });
+                    s.shutdown()
+                }
+                None => {
+                    health.push(DeviceHealth::Stopped);
+                    self.early_stats[i].take().unwrap_or_default()
+                }
             };
             coord.push(stats);
         }
         let specs: Vec<DeviceSpec> =
             self.shared.devices.iter().map(|d| d.spec.clone()).collect();
         let totals = self.shared.state.lock().unwrap().totals.clone();
-        FleetStats::assemble(&specs, coord, totals)
+        FleetStats::assemble_with_health(&specs, coord, health, totals)
     }
 }
 
@@ -545,14 +584,22 @@ mod tests {
         assert_eq!(snap.served(), 2);
         assert!(snap.makespan_ms() > 0.0);
         assert!(snap.timing_sims() >= 1);
-        // Snapshots keep working after a device drains (early stats).
+        assert_eq!(snap.live_devices(), 2, "both devices up -> both live");
+        // Snapshots keep working after a device drains (early stats),
+        // and the drained device is flagged, not shown as a zeroed peer.
         cluster.stop_device(0).unwrap();
         let snap2 = cluster.fleet_snapshot();
         assert_eq!(snap2.totals.completed, 2);
         assert_eq!(snap2.served(), 2);
+        assert_eq!(snap2.devices[0].health, DeviceHealth::Stopped);
+        assert_eq!(snap2.devices[1].health, DeviceHealth::Live);
+        assert_eq!(snap2.live_devices(), 1);
+        assert_eq!(snap2.failed_devices(), 0);
         let fleet = cluster.shutdown();
         assert_eq!(fleet.totals.completed, 2);
         assert_eq!(fleet.served(), snap.served());
+        assert_eq!(fleet.devices[0].health, DeviceHealth::Stopped);
+        assert_eq!(fleet.devices[1].health, DeviceHealth::Live);
     }
 
     #[test]

@@ -104,6 +104,14 @@ impl ServerHandle {
         self.tx.len()
     }
 
+    /// Is the worker still serving?  False once it exited — whether by a
+    /// clean shutdown or an engine failure (the worker owns the ingress
+    /// receiver, so its exit closes the channel).  The cluster layer uses
+    /// this to tell a crashed device from a live one at shutdown time.
+    pub fn is_alive(&self) -> bool {
+        !self.tx.is_closed()
+    }
+
     /// Enqueue a stats-snapshot request without waiting for the reply.
     /// Lets a fleet observer fan the request out to every device first
     /// and then collect, so total latency is the slowest device's round
@@ -328,6 +336,17 @@ mod tests {
         assert!(snap2.program_cache_hits >= 1);
         let final_stats = srv.shutdown();
         assert_eq!(final_stats.served, 2);
+    }
+
+    #[test]
+    fn handle_reports_liveness() {
+        let srv = server();
+        let h = srv.handle();
+        assert!(h.is_alive());
+        srv.handle().call(req(1, 64)).unwrap();
+        assert!(h.is_alive(), "serving does not close the ingress");
+        srv.shutdown();
+        assert!(!h.is_alive(), "worker exit closes the ingress");
     }
 
     #[test]

@@ -3,9 +3,10 @@
 //! these primitives instead).
 //!
 //! The pool is deliberately simple: a shared injector queue guarded by a
-//! mutex + condvar.  The coordinator's hot path batches work coarsely
-//! (one job per request batch), so queue contention is negligible — see
-//! EXPERIMENTS.md §Perf for measurements.
+//! mutex + condvar.  The serving hot path batches work coarsely (one job
+//! per request, a handful of head-lane jobs inside each — see
+//! [`PoolHandle::scoped_mut`] and DESIGN.md §10), so queue contention is
+//! negligible — see EXPERIMENTS.md §Perf for measurements.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -56,12 +57,31 @@ impl ThreadPool {
         Self::new(n.max(2))
     }
 
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Cheap cloneable submission handle (no join rights): lets jobs
+    /// running *on* the pool fan further work out to it — the head-level
+    /// lanes of the two-level MHA execute path.
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle { shared: Arc::clone(&self.shared) }
+    }
+
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
-        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(Box::new(job));
-        drop(q);
-        self.shared.available.notify_one();
+        spawn_on(&self.shared, job);
+    }
+
+    /// Run `f(i, &mut items[i])` for every item on the pool, returning
+    /// only when all invocations have finished.  See
+    /// [`PoolHandle::scoped_mut`].
+    pub fn scoped_mut<T, F>(&self, items: &mut [T], f: &F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        scoped_mut_on(&self.shared, items, f);
     }
 
     /// Block until every spawned job has finished.
@@ -106,6 +126,35 @@ impl ThreadPool {
     }
 }
 
+fn spawn_on(shared: &Shared, job: impl FnOnce() + Send + 'static) {
+    shared.in_flight.fetch_add(1, Ordering::SeqCst);
+    let mut q = shared.queue.lock().unwrap();
+    q.push_back(Box::new(job));
+    drop(q);
+    shared.available.notify_one();
+}
+
+/// Execute one dequeued job with the in-flight accounting both the
+/// workers and the help-while-waiting loop need.
+fn run_job(s: &Shared, job: Job) {
+    // A panicking job must not wedge wait_idle: decrement via guard.
+    struct Guard<'a>(&'a Shared);
+    impl Drop for Guard<'_> {
+        fn drop(&mut self) {
+            // Decrement under the queue lock: wait_idle evaluates its
+            // predicate while holding it, so an unlocked decrement +
+            // notify could land in the window between a waiter's
+            // predicate check and its park — a lost wakeup that would
+            // hang parallel_map (and with it the serving batch path).
+            let _q = self.0.queue.lock().unwrap();
+            self.0.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.0.done.notify_all();
+        }
+    }
+    let _g = Guard(s);
+    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+}
+
 fn worker_loop(s: Arc<Shared>) {
     loop {
         let job = {
@@ -120,22 +169,151 @@ fn worker_loop(s: Arc<Shared>) {
                 q = s.available.wait(q).unwrap();
             }
         };
-        // A panicking job must not wedge wait_idle: decrement via guard.
-        struct Guard<'a>(&'a Shared);
-        impl Drop for Guard<'_> {
-            fn drop(&mut self) {
-                // Decrement under the queue lock: wait_idle evaluates its
-                // predicate while holding it, so an unlocked decrement +
-                // notify could land in the window between a waiter's
-                // predicate check and its park — a lost wakeup that would
-                // hang parallel_map (and with it the serving batch path).
-                let _q = self.0.queue.lock().unwrap();
-                self.0.in_flight.fetch_sub(1, Ordering::SeqCst);
-                self.0.done.notify_all();
+        run_job(&s, job);
+    }
+}
+
+/// Submission-only handle to a [`ThreadPool`] (cloneable, `Send + Sync`).
+#[derive(Clone)]
+pub struct PoolHandle {
+    shared: Arc<Shared>,
+}
+
+impl PoolHandle {
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        spawn_on(&self.shared, job);
+    }
+
+    /// Run `f(i, &mut items[i])` for every item on the pool, blocking
+    /// until all invocations have finished.  The calling thread takes
+    /// item 0 itself and *helps* — it executes queued pool jobs while its
+    /// own are outstanding — so a scoped call issued from inside a pool
+    /// job (nested parallelism: batch-level jobs fanning out head-level
+    /// lanes) always makes progress instead of deadlocking on a pool
+    /// whose every worker is itself waiting.
+    ///
+    /// A panic in any invocation is re-raised here — with its original
+    /// payload — after all items have completed or unwound.
+    pub fn scoped_mut<T, F>(&self, items: &mut [T], f: &F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        scoped_mut_on(&self.shared, items, f);
+    }
+}
+
+/// Completion latch for one `scoped_mut` call.
+struct ScopeLatch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// First spawned job's panic payload, re-raised by the caller.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl ScopeLatch {
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+}
+
+// Send-erased pointers for the scoped jobs.  Soundness rests on
+// `scoped_mut_on` not returning until every job has run: the pointees
+// (the items slice and the closure, both borrowed by the caller)
+// outlive every dereference.
+struct ErasedConst(*const ());
+unsafe impl Send for ErasedConst {}
+struct ErasedMut(*mut ());
+unsafe impl Send for ErasedMut {}
+
+fn scoped_mut_on<T, F>(shared: &Arc<Shared>, items: &mut [T], f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    // Monomorphic shim behind type-erased pointers: the spawned closures
+    // then mention neither `T` nor `F`, so they satisfy `spawn`'s
+    // `'static` bound even though both borrow from the caller.
+    unsafe fn shim<T, F: Fn(usize, &mut T)>(f: *const (), i: usize, item: *mut ()) {
+        let f = unsafe { &*(f as *const F) };
+        f(i, unsafe { &mut *(item as *mut T) });
+    }
+    let call: unsafe fn(*const (), usize, *mut ()) = shim::<T, F>;
+    let base = items.as_mut_ptr();
+    let latch = Arc::new(ScopeLatch {
+        remaining: Mutex::new(n - 1),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    for i in 1..n {
+        let item = ErasedMut(unsafe { base.add(i) } as *mut ());
+        let fdata = ErasedConst(f as *const F as *const ());
+        let latch = Arc::clone(&latch);
+        spawn_on(shared, move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                call(fdata.0, i, item.0)
+            }));
+            if let Err(p) = r {
+                let mut slot = latch.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            latch.count_down();
+        });
+    }
+    // The caller's share: item 0, inline (no queue round-trip).  Via
+    // `base`, not a fresh `&mut items[0]`, so the raw pointers handed to
+    // the jobs stay valid under strict aliasing.
+    let first = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        f(0, unsafe { &mut *base })
+    }));
+    // Help while waiting: run queued jobs instead of parking a worker
+    // that could be working.  Pop from the *back* — our lane jobs were
+    // enqueued last, so LIFO stealing drains them first rather than
+    // pulling an older foreign batch job onto this stack (which would
+    // nest a whole request and stall our own lanes behind it); workers
+    // proper keep FIFO order via pop_front.
+    loop {
+        if latch.is_done() {
+            break;
+        }
+        let job = shared.queue.lock().unwrap().pop_back();
+        match job {
+            Some(job) => run_job(shared, job),
+            None => {
+                let g = latch.remaining.lock().unwrap();
+                if *g == 0 {
+                    break;
+                }
+                // Timed wait: our jobs are all enqueued before this loop,
+                // so a count_down wakeup suffices; the timeout only guards
+                // against a theoretical missed notify.
+                let _ = latch
+                    .done
+                    .wait_timeout(g, std::time::Duration::from_micros(500))
+                    .unwrap();
             }
         }
-        let _g = Guard(&s);
-        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+    if let Err(p) = first {
+        std::panic::resume_unwind(p);
+    }
+    let payload = latch.panic.lock().unwrap().take();
+    if let Some(p) = payload {
+        std::panic::resume_unwind(p);
     }
 }
 
@@ -222,6 +400,12 @@ impl<T> BoundedSender<T> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Has the receiving side hung up?  True once the receiver dropped
+    /// (or called `close`) — every subsequent send fails.
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::SeqCst)
     }
 }
 
@@ -319,6 +503,63 @@ mod tests {
     }
 
     #[test]
+    fn scoped_mut_runs_every_item() {
+        let pool = ThreadPool::new(3);
+        let mut items: Vec<u64> = (0..17).collect();
+        pool.scoped_mut(&mut items, &|i, v: &mut u64| {
+            *v += i as u64 * 100;
+        });
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 101);
+        }
+    }
+
+    #[test]
+    fn scoped_mut_on_single_worker_pool() {
+        let pool = ThreadPool::new(1);
+        let mut items = vec![0u64; 8];
+        pool.handle().scoped_mut(&mut items, &|i, v: &mut u64| *v = i as u64 + 1);
+        assert_eq!(items, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_mut_empty_and_singleton() {
+        let pool = ThreadPool::new(2);
+        let mut empty: Vec<u32> = Vec::new();
+        pool.scoped_mut(&mut empty, &|_, _: &mut u32| unreachable!());
+        let mut one = vec![7u32];
+        pool.scoped_mut(&mut one, &|i, v: &mut u32| *v += i as u32 + 1);
+        assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn nested_scoped_inside_pool_jobs_makes_progress() {
+        // Batch-level parallel_map whose jobs each run a head-level scope
+        // on the same (undersized) pool: the help-while-waiting loop must
+        // prevent the all-workers-waiting deadlock.
+        let pool = ThreadPool::new(2);
+        let handle = pool.handle();
+        let out = pool.parallel_map((0..6).collect(), move |x: i32| {
+            let mut items = vec![0i32; 4];
+            handle.scoped_mut(&mut items, &|i, v: &mut i32| *v = x * 10 + i as i32);
+            items.iter().sum::<i32>()
+        });
+        assert_eq!(out, (0..6).map(|x| x * 40 + 6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom in lane 3")]
+    fn scoped_mut_propagates_job_panic_payload() {
+        let pool = ThreadPool::new(2);
+        let mut items = vec![0u8; 4];
+        pool.scoped_mut(&mut items, &|i, _v: &mut u8| {
+            if i == 3 {
+                panic!("boom in lane {i}")
+            }
+        });
+    }
+
+    #[test]
     fn channel_fifo() {
         let (tx, rx) = bounded(8);
         for i in 0..5 {
@@ -335,6 +576,14 @@ mod tests {
         assert!(tx.try_send(1).is_ok());
         assert!(tx.try_send(2).is_ok());
         assert_eq!(tx.try_send(3), Err(3)); // full
+    }
+
+    #[test]
+    fn sender_observes_receiver_drop() {
+        let (tx, rx) = bounded::<i32>(1);
+        assert!(!tx.is_closed());
+        drop(rx);
+        assert!(tx.is_closed());
     }
 
     #[test]

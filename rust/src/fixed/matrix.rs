@@ -96,27 +96,79 @@ pub fn matmul_i32_tiled(a: &FxMatrix, b: &FxMatrix, ts: usize) -> Vec<i32> {
 /// kernel wants; exposed so batch paths can widen weights once and reuse
 /// them across requests).
 pub fn widen_i16(data: &[i8]) -> Vec<i16> {
-    data.iter().map(|&v| v as i16).collect()
+    let mut out = Vec::new();
+    widen_i16_into(data, &mut out);
+    out
 }
 
-/// The fast GEMM inner kernel over pre-widened operands: `a16` is (m×k)
-/// row-major, `b16` is (n×k) row-major (we compute `a @ b.T`).  Exact
-/// i32 accumulation — bit-identical to [`matmul_i32`].
-pub fn matmul_i32_widened(a16: &[i16], b16: &[i16], m: usize, k: usize, n: usize) -> Vec<i32> {
+/// Widen into a caller-owned buffer — the workspace path: no allocation
+/// when `dst` already has the capacity (warm requests, `sim::Workspace`).
+pub fn widen_i16_into(src: &[i8], dst: &mut Vec<i16>) {
+    dst.resize(src.len(), 0);
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as i16;
+    }
+}
+
+/// The fast GEMM inner kernel over pre-widened operands, writing into a
+/// caller-owned buffer: `a16` is (m×k) row-major, `b16` is (n×k)
+/// row-major (we compute `a @ b.T`).
+///
+/// Output columns are register-blocked four wide: one pass over an `a`
+/// row feeds four independent i32 accumulator chains (i16×i16→i32
+/// multiply-adds LLVM lowers to `pmaddwd`-class SIMD), so `a16` is
+/// streamed n/4 times instead of n.  Integer addition is order-free, so
+/// any blocking stays bit-identical to [`matmul_i32`].  Measured numbers
+/// in EXPERIMENTS.md §Perf.
+pub fn matmul_i32_widened_into(
+    a16: &[i16],
+    b16: &[i16],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
     assert_eq!(a16.len(), m * k, "a16 shape mismatch");
     assert_eq!(b16.len(), n * k, "b16 shape mismatch");
-    let mut out = vec![0i32; m * n];
+    assert_eq!(out.len(), m * n, "out shape mismatch");
     for i in 0..m {
         let arow = &a16[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b16[j * k..(j + 1) * k];
+            let b1 = &b16[(j + 1) * k..(j + 2) * k];
+            let b2 = &b16[(j + 2) * k..(j + 3) * k];
+            let b3 = &b16[(j + 3) * k..(j + 4) * k];
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            // zip over equal-length slices: bounds checks vanish and the
+            // four chains vectorize independently.
+            for ((((&x, &y0), &y1), &y2), &y3) in arow.iter().zip(b0).zip(b1).zip(b2).zip(b3) {
+                let x = x as i32;
+                a0 += x * y0 as i32;
+                a1 += x * y1 as i32;
+                a2 += x * y2 as i32;
+                a3 += x * y3 as i32;
+            }
+            orow[j] = a0;
+            orow[j + 1] = a1;
+            orow[j + 2] = a2;
+            orow[j + 3] = a3;
+            j += 4;
+        }
+        while j < n {
             let brow = &b16[j * k..(j + 1) * k];
-            // zip over equal-length slices: bounds checks vanish and LLVM
-            // vectorizes the widening multiply-add (pmaddwd class).
-            let acc: i32 = arow.iter().zip(brow).map(|(&x, &y)| x as i32 * y as i32).sum();
-            orow[j] = acc;
+            orow[j] = arow.iter().zip(brow).map(|(&x, &y)| x as i32 * y as i32).sum();
+            j += 1;
         }
     }
+}
+
+/// Allocating wrapper over [`matmul_i32_widened_into`] — bit-identical to
+/// [`matmul_i32`].
+pub fn matmul_i32_widened(a16: &[i16], b16: &[i16], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    matmul_i32_widened_into(a16, b16, m, k, n, &mut out);
     out
 }
 
@@ -178,6 +230,31 @@ mod tests {
         let b = rand_mat(8, 4, 19);
         let got = matmul_i32_widened(&widen_i16(&a.data), &widen_i16(&b.data), 6, 19, 4);
         assert_eq!(got, matmul_i32(&a, &b));
+    }
+
+    #[test]
+    fn blocked_kernel_matches_direct_all_widths() {
+        // n = 1..9 exercises empty/partial/multiple 4-wide blocks + tails.
+        for n in 1..=9 {
+            let a = rand_mat(11 + n as u64, 5, 23);
+            let b = rand_mat(29 + n as u64, n, 23);
+            let mut out = vec![0i32; 5 * n];
+            matmul_i32_widened_into(&widen_i16(&a.data), &widen_i16(&b.data), 5, 23, n, &mut out);
+            assert_eq!(out, matmul_i32(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn widen_into_reuses_capacity() {
+        let src: Vec<i8> = (0..64).map(|v| v as i8 - 32).collect();
+        let mut dst = Vec::new();
+        widen_i16_into(&src, &mut dst);
+        assert_eq!(dst, widen_i16(&src));
+        let (ptr, cap) = (dst.as_ptr() as usize, dst.capacity());
+        widen_i16_into(&src[..32], &mut dst);
+        assert_eq!(dst, widen_i16(&src[..32]));
+        widen_i16_into(&src, &mut dst);
+        assert_eq!((dst.as_ptr() as usize, dst.capacity()), (ptr, cap), "re-widen reallocated");
     }
 
     #[test]

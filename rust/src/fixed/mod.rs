@@ -19,7 +19,8 @@ mod matrix;
 
 pub use mac::Dsp48Mac;
 pub use matrix::{
-    matmul_i32, matmul_i32_fast, matmul_i32_tiled, matmul_i32_widened, widen_i16, FxMatrix,
+    matmul_i32, matmul_i32_fast, matmul_i32_tiled, matmul_i32_widened, matmul_i32_widened_into,
+    widen_i16, widen_i16_into, FxMatrix,
 };
 
 /// A fixed-point value: `value = mantissa * 2^-frac_bits`.

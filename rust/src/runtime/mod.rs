@@ -18,8 +18,8 @@ mod manifest;
 pub use manifest::{ArtifactEntry, Manifest};
 
 use crate::config::Topology;
-use crate::exec::ThreadPool;
-use crate::sim::PreparedWeights;
+use crate::exec::{PoolHandle, ThreadPool};
+use crate::sim::{PreparedWeights, Workspace};
 use crate::testdata::MhaInputs;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -206,24 +206,91 @@ impl Backend for Runtime {
 ///
 /// Purely functional: timing lives in [`crate::accel::ProgramImage`]
 /// (program phase), so executing a request here runs no cycle-level
-/// simulation.  The batch path quantizes and widens the weight operands
-/// once per batch ([`PreparedWeights`]) and fans the per-request GEMMs
-/// out over a worker pool; outputs are bit-identical to the sequential
-/// path (exact integer GEMM + identical f32 op order per request).
+/// simulation.  Requests execute through resident [`Workspace`]s (one
+/// owned by the backend for the single-shot path, one thread-local per
+/// pool worker for the batch path), so warm requests allocate nothing on
+/// the execute path.
+///
+/// Parallelism is two-level over one shared pool sized to
+/// `min(batch × heads, cores)`: the batch fans out across workers, and
+/// whatever headroom the batch leaves becomes head lanes *inside* each
+/// request ([`PreparedWeights::execute_parallel`]).  A single request
+/// therefore also runs head-parallel — the software mirror of the
+/// fabric's `h` concurrent head pipelines.  Outputs are bit-identical to
+/// the sequential path (exact integer GEMM, per-head f32 op order
+/// untouched, disjoint output stripes).
 pub struct SimBackend {
     pub config: crate::sim::SimConfig,
-    /// Workers for the batch path, created on first use.
+    /// Shared workers for batch fan-out and head lanes; created on first
+    /// use, re-created larger when a batch wants more concurrency.
     pool: Option<ThreadPool>,
+    /// Resident scratch for the single-request path.
+    workspace: Workspace,
+}
+
+thread_local! {
+    /// Per-pool-worker scratch, resident across requests and batches —
+    /// the host-side version of keeping buffers staged between requests
+    /// (Peng et al., PAPERS.md).
+    static WORKER_WS: std::cell::RefCell<Workspace> = std::cell::RefCell::new(Workspace::new());
 }
 
 impl SimBackend {
     pub fn new(config: crate::sim::SimConfig) -> Self {
-        SimBackend { config, pool: None }
+        SimBackend { config, pool: None, workspace: Workspace::new() }
     }
 
     fn admit(&self, topo: &Topology) -> Result<()> {
         self.config.build.admits(topo).map_err(|e| anyhow!("sim: rejected: {e}"))
     }
+
+    fn cores() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    /// The shared pool, grown to at least `want` workers (capped at the
+    /// machine) — closes the ROADMAP "size the pool to the batch" item.
+    fn pool_for(&mut self, want: usize) -> &ThreadPool {
+        let want = want.clamp(1, Self::cores());
+        let rebuild = match &self.pool {
+            Some(p) => p.threads() < want,
+            None => true,
+        };
+        if rebuild {
+            self.pool = Some(ThreadPool::new(want));
+        }
+        self.pool.as_ref().expect("pool just ensured")
+    }
+}
+
+/// Execute one request into a worker's resident workspace, head-parallel
+/// when `lanes > 1`.  Falls back to a fresh workspace when the
+/// thread-local one is already borrowed — a worker waiting on its head
+/// lanes may help-execute *another* batch job (see
+/// [`crate::exec::PoolHandle::scoped_mut`]), re-entering this function on
+/// the same thread.
+fn execute_on_worker(
+    prepared: &PreparedWeights,
+    x: &[f32],
+    pool: &PoolHandle,
+    lanes: usize,
+) -> Vec<f32> {
+    let xq = prepared.quantize_input(x);
+    WORKER_WS.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut ws) => {
+            if lanes > 1 {
+                prepared.execute_parallel(&xq, &mut ws, pool, lanes);
+            } else {
+                prepared.execute_into(&xq, &mut ws);
+            }
+            ws.output().to_vec()
+        }
+        Err(_) => {
+            let mut ws = Workspace::new();
+            prepared.execute_into(&xq, &mut ws);
+            ws.take_output()
+        }
+    })
 }
 
 impl Backend for SimBackend {
@@ -231,19 +298,27 @@ impl Backend for SimBackend {
         self.admit(topo)?;
         let prepared = PreparedWeights::prepare(&self.config, topo, inputs);
         let x = prepared.quantize_input(&inputs.x);
-        Ok(prepared.execute(&x))
+        let lanes = topo.heads.min(Self::cores());
+        if lanes > 1 {
+            let handle = self.pool_for(lanes).handle();
+            prepared.execute_parallel(&x, &mut self.workspace, &handle, lanes);
+        } else {
+            prepared.execute_into(&x, &mut self.workspace);
+        }
+        Ok(self.workspace.output().to_vec())
     }
 
-    /// One weight preparation, N parallel executions.  Requests whose
-    /// weight operands differ from the batch head's fall back to their
-    /// own preparation (still inside the parallel map), preserving
-    /// bit-identity with the sequential path unconditionally.
+    /// One weight preparation, N executions under the two-level split.
+    /// Requests whose weight operands differ from the batch head's fall
+    /// back to their own preparation (still inside the parallel map),
+    /// preserving bit-identity with the sequential path unconditionally.
     fn run_mha_batch(&mut self, topo: &Topology, inputs: &[&MhaInputs]) -> Result<Vec<Vec<f32>>> {
         let Some(first) = inputs.first().copied() else { return Ok(Vec::new()) };
         if inputs.len() == 1 {
             return Ok(vec![self.run_mha(topo, first)?]);
         }
         self.admit(topo)?;
+        let batch = inputs.len();
         let shared = Arc::new(PreparedWeights::prepare(&self.config, topo, first));
         let config = self.config.clone();
         let items: Vec<BatchItem> = inputs
@@ -256,17 +331,17 @@ impl Backend for SimBackend {
                 }
             })
             .collect();
-        let pool = self.pool.get_or_insert_with(ThreadPool::default_size);
+        let pool = self.pool_for(batch * topo.heads.max(1));
+        // Headroom the batch leaves on the pool becomes head lanes inside
+        // each request (the caller's helping share counts as one worker).
+        let lanes = (pool.threads() / batch).clamp(1, topo.heads.max(1));
+        let handle = pool.handle();
         let topo = topo.clone();
         let outputs = pool.parallel_map(items, move |item| match item {
-            BatchItem::Shared { x } => {
-                let xq = shared.quantize_input(&x);
-                shared.execute(&xq)
-            }
+            BatchItem::Shared { x } => execute_on_worker(&shared, &x, &handle, lanes),
             BatchItem::Own { inputs } => {
                 let own = PreparedWeights::prepare(&config, &topo, &inputs);
-                let xq = own.quantize_input(&inputs.x);
-                own.execute(&xq)
+                execute_on_worker(&own, &inputs.x, &handle, lanes)
             }
         });
         Ok(outputs)
@@ -339,6 +414,30 @@ mod tests {
             let wb: Vec<u32> = w.iter().map(|v| v.to_bits()).collect();
             assert_eq!(gb, wb, "batched output diverged from sequential");
         }
+    }
+
+    #[test]
+    fn sim_backend_repeat_requests_identical_and_pool_grows_only() {
+        let mut b = SimBackend::new(SimConfig::u55c());
+        let topo = Topology::new(16, 768, 8, 64);
+        let inputs = MhaInputs::generate(&topo);
+        // Head-parallel single-shot path: repeat requests bit-identical.
+        let o1 = b.run_mha(&topo, &inputs).unwrap();
+        let o2 = b.run_mha(&topo, &inputs).unwrap();
+        assert_eq!(o1, o2);
+        let after_single = b.pool.as_ref().map(|p| p.threads());
+        // A batch sizes the pool to min(batch × heads, cores) — never
+        // smaller than what the single-shot path already built.
+        let refs: Vec<&MhaInputs> = vec![&inputs; 4];
+        let outs = b.run_mha_batch(&topo, &refs).unwrap();
+        for o in &outs {
+            assert_eq!(o, &o1);
+        }
+        let after_batch = b.pool.as_ref().map(|p| p.threads()).unwrap();
+        if let Some(n) = after_single {
+            assert!(after_batch >= n, "pool shrank: {after_batch} < {n}");
+        }
+        assert!(after_batch <= SimBackend::cores());
     }
 
     #[test]

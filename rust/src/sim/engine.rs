@@ -2,7 +2,8 @@
 //! functional datapath, and emits per-phase cycle traces.
 
 use crate::config::{AcceleratorConfig, Topology};
-use crate::fixed::{matmul_i32_widened, widen_i16, FxMatrix, Quantizer};
+use crate::exec::PoolHandle;
+use crate::fixed::{matmul_i32_widened_into, widen_i16, widen_i16_into, FxMatrix, Quantizer};
 use crate::jsonlite::Json;
 use crate::testdata::MhaInputs;
 
@@ -10,6 +11,7 @@ use super::axi::AxiMaster;
 use super::controller::{Controller, CtrlError};
 use super::modules::{QkPm, QkvPm, SvPm};
 use super::softmax_unit::SoftmaxUnit;
+use super::workspace::{HeadScratch, Workspace};
 
 /// Scale convention for the QKᵀ scores (see ref.py's `scale_mode`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -336,20 +338,24 @@ pub struct PreparedHead {
 /// inputs.  Plain owned data (`Send + Sync`), so a batch path can share
 /// one instance across worker threads via `Arc`.
 ///
-/// Bit-identity contract: `execute` runs the exact same widened-i16 GEMM
-/// kernel ([`matmul_i32_widened`]) and the same f32 dequant/softmax/SV op
-/// order as the sequential per-request path, so outputs are byte-for-byte
-/// identical however requests are grouped or scheduled.
+/// Bit-identity contract: every execute flavor — allocating
+/// ([`Self::execute`]), workspace ([`Self::execute_into`]) and
+/// head-parallel ([`Self::execute_parallel`]) — runs the exact same
+/// per-head pipeline ([`Self::run_head`]: exact-integer widened GEMM, the
+/// same f32 dequant/softmax/SV op order), and each head writes a disjoint
+/// `d_k`-wide output stripe, so outputs are byte-for-byte identical
+/// however heads or requests are grouped or scheduled (DESIGN.md §10).
 #[derive(Clone, Debug)]
 pub struct PreparedWeights {
     pub topology: Topology,
     heads: Vec<PreparedHead>,
     /// Product of the x and w quantization grid steps.
     scale2: f32,
-    /// Score scaling multiplier (1/√d_k or 1/d_model per `ScaleMode`).
-    score_scale: f32,
-    softmax_lut_bits: Option<u32>,
-    causal: bool,
+    /// Score module (scale + softmax realization + masking), fixed at
+    /// prepare time so warm executes rebuild nothing — a LUT softmax
+    /// would otherwise re-allocate its table per request.
+    qk: QkPm,
+    sv: SvPm,
 }
 
 impl PreparedWeights {
@@ -383,13 +389,21 @@ impl PreparedWeights {
                 }
             })
             .collect();
+        let softmax = match config.softmax_lut_bits {
+            Some(bits) => SoftmaxUnit::lut(bits),
+            None => SoftmaxUnit::exact(),
+        };
+        let qk = if config.causal {
+            QkPm::causal(topo.seq_len, dkn, score_scale, softmax)
+        } else {
+            QkPm::new(topo.seq_len, dkn, score_scale, softmax)
+        };
         PreparedWeights {
             topology: topo.clone(),
             heads,
             scale2: quant.scale * quant.scale,
-            score_scale,
-            softmax_lut_bits: config.softmax_lut_bits,
-            causal: config.causal,
+            qk,
+            sv: SvPm::new(topo.seq_len, dkn),
         }
     }
 
@@ -411,43 +425,116 @@ impl PreparedWeights {
     }
 
     /// Run one request through the functional datapath (all heads) against
-    /// the prepared weights.
+    /// the prepared weights.  Allocating wrapper over
+    /// [`Self::execute_into`]; serving paths hold a [`Workspace`] instead.
     pub fn execute(&self, x: &FxMatrix) -> Vec<f32> {
+        let mut ws = Workspace::new();
+        self.execute_into(x, &mut ws);
+        ws.take_output()
+    }
+
+    /// Serial execute into a reusable workspace: heads run one after
+    /// another through lane 0.  A warm call (workspace already sized for
+    /// this or a larger topology) performs zero heap allocations.
+    pub fn execute_into(&self, x: &FxMatrix, ws: &mut Workspace) {
         let topo = &self.topology;
         let (sln, dmn, dkn) = (topo.seq_len, topo.d_model, topo.d_k());
         assert_eq!(x.rows, sln, "input rows != SL");
         assert_eq!(x.cols, dmn, "input cols != d_model");
-        let x16 = widen_i16(&x.data);
-        let softmax = match self.softmax_lut_bits {
-            Some(bits) => SoftmaxUnit::lut(bits),
-            None => SoftmaxUnit::exact(),
-        };
-        let qk = if self.causal {
-            QkPm::causal(sln, dkn, self.score_scale, softmax)
-        } else {
-            QkPm::new(sln, dkn, self.score_scale, softmax)
-        };
-        let sv = SvPm::new(sln, dkn);
-        let mut out = vec![0f32; sln * dmn];
-        for (head, hp) in self.heads.iter().enumerate() {
-            let deq = |acc: Vec<i32>, bias: &[f32]| -> Vec<f32> {
-                acc.iter()
-                    .enumerate()
-                    .map(|(idx, &v)| v as f32 * self.scale2 + bias[idx % dkn])
-                    .collect()
-            };
-            let q = deq(matmul_i32_widened(&x16, &hp.wq16, sln, dmn, dkn), &hp.bq);
-            let k = deq(matmul_i32_widened(&x16, &hp.wk16, sln, dmn, dkn), &hp.bk);
-            let v = deq(matmul_i32_widened(&x16, &hp.wv16, sln, dmn, dkn), &hp.bv);
-            let s = qk.run(&q, &k);
-            let o = sv.run(&s, &v);
+        ws.ensure(topo, 1);
+        widen_i16_into(&x.data, &mut ws.x16);
+        let Workspace { x16, lanes, out } = ws;
+        let x16: &[i16] = x16.as_slice();
+        let lane = &mut lanes[0];
+        for head in 0..self.heads.len() {
+            self.run_head(head, x16, lane);
             // Concatenate along features: out[:, head*dk..(head+1)*dk].
             for i in 0..sln {
                 out[i * dmn + head * dkn..i * dmn + (head + 1) * dkn]
-                    .copy_from_slice(&o[i * dkn..(i + 1) * dkn]);
+                    .copy_from_slice(&lane.o[i * dkn..(i + 1) * dkn]);
             }
         }
-        out
+    }
+
+    /// Head-parallel execute: heads are dealt round-robin onto `lanes`
+    /// scratch lanes and run concurrently on `pool`, each writing its
+    /// disjoint `d_k`-wide stripe of every output row.  Bit-identical to
+    /// [`Self::execute_into`]: the per-head pipeline is the same code and
+    /// stripe writes never overlap, so scheduling cannot reorder any
+    /// floating-point operation *within* a head (DESIGN.md §10).
+    pub fn execute_parallel(
+        &self,
+        x: &FxMatrix,
+        ws: &mut Workspace,
+        pool: &PoolHandle,
+        lanes: usize,
+    ) {
+        let topo = &self.topology;
+        let (sln, dmn, dkn, h) = (topo.seq_len, topo.d_model, topo.d_k(), topo.heads);
+        let lanes = lanes.clamp(1, h);
+        if lanes <= 1 {
+            return self.execute_into(x, ws);
+        }
+        assert_eq!(x.rows, sln, "input rows != SL");
+        assert_eq!(x.cols, dmn, "input cols != d_model");
+        ws.ensure(topo, lanes);
+        widen_i16_into(&x.data, &mut ws.x16);
+        let Workspace { x16, lanes: scratch, out } = ws;
+        let x16: &[i16] = x16.as_slice();
+        let out_ptr = StripePtr(out.as_mut_ptr());
+        let f = |lane_idx: usize, lane: &mut HeadScratch| {
+            for head in (lane_idx..h).step_by(lanes) {
+                self.run_head(head, x16, lane);
+                // SAFETY: each head owns the disjoint column stripe
+                // [head·d_k, (head+1)·d_k) of every output row, and each
+                // head is processed by exactly one lane (head ≡ lane_idx
+                // mod lanes), so no two lanes write the same element; the
+                // pointer outlives the jobs because scoped_mut joins every
+                // job before returning.
+                unsafe {
+                    for i in 0..sln {
+                        std::ptr::copy_nonoverlapping(
+                            lane.o.as_ptr().add(i * dkn),
+                            out_ptr.0.add(i * dmn + head * dkn),
+                            dkn,
+                        );
+                    }
+                }
+            }
+        };
+        pool.scoped_mut(&mut scratch[..lanes], &f);
+    }
+
+    /// One head through QKV → scores → SV, entirely inside `lane`.  The
+    /// single source of per-head arithmetic — every execute flavor calls
+    /// this, which is what makes them bit-identical.
+    fn run_head(&self, head: usize, x16: &[i16], lane: &mut HeadScratch) {
+        let topo = &self.topology;
+        let (sln, dmn, dkn) = (topo.seq_len, topo.d_model, topo.d_k());
+        let hp = &self.heads[head];
+        matmul_i32_widened_into(x16, &hp.wq16, sln, dmn, dkn, &mut lane.acc);
+        dequant_into(&lane.acc, &hp.bq, self.scale2, dkn, &mut lane.q);
+        matmul_i32_widened_into(x16, &hp.wk16, sln, dmn, dkn, &mut lane.acc);
+        dequant_into(&lane.acc, &hp.bk, self.scale2, dkn, &mut lane.k);
+        matmul_i32_widened_into(x16, &hp.wv16, sln, dmn, dkn, &mut lane.acc);
+        dequant_into(&lane.acc, &hp.bv, self.scale2, dkn, &mut lane.v);
+        self.qk.run_into(&lane.q, &lane.k, &mut lane.s);
+        self.sv.run_into(&lane.s, &lane.v, &mut lane.o);
+    }
+}
+
+/// `Send + Sync` wrapper for the shared output pointer of the
+/// head-parallel path; lanes write disjoint stripes (see the SAFETY note
+/// in [`PreparedWeights::execute_parallel`]).
+struct StripePtr(*mut f32);
+unsafe impl Send for StripePtr {}
+unsafe impl Sync for StripePtr {}
+
+/// Dequantize an i32 GEMM accumulator into f32 with per-feature bias —
+/// identical element order and arithmetic to the pre-workspace path.
+fn dequant_into(acc: &[i32], bias: &[f32], scale2: f32, dk: usize, out: &mut [f32]) {
+    for (idx, (o, &a)) in out.iter_mut().zip(acc).enumerate() {
+        *o = a as f32 * scale2 + bias[idx % dk];
     }
 }
 
@@ -599,6 +686,56 @@ mod tests {
             }
         }
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn execute_flavors_bit_identical() {
+        use crate::exec::ThreadPool;
+        let topo = Topology::new(6, 64, 4, 16);
+        let inputs = MhaInputs::generate(&topo);
+        for (causal, lut) in [(false, None), (true, None), (false, Some(8))] {
+            let mut cfg = SimConfig::u55c();
+            cfg.causal = causal;
+            cfg.softmax_lut_bits = lut;
+            let prepared = PreparedWeights::prepare(&cfg, &topo, &inputs);
+            let x = prepared.quantize_input(&inputs.x);
+            let want = prepared.execute(&x);
+            let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            let mut ws = Workspace::new();
+            prepared.execute_into(&x, &mut ws);
+            assert_eq!(bits(ws.output()), bits(&want), "serial workspace diverged");
+            for threads in [1, 3] {
+                let pool = ThreadPool::new(threads);
+                for lanes in [1, 2, 3, 4, 9] {
+                    let mut wsp = Workspace::new();
+                    prepared.execute_parallel(&x, &mut wsp, &pool.handle(), lanes);
+                    assert_eq!(
+                        bits(wsp.output()),
+                        bits(&want),
+                        "head-parallel diverged (threads={threads}, lanes={lanes})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_execute_reuses_every_buffer() {
+        let topo = Topology::new(8, 64, 2, 16);
+        let inputs = MhaInputs::generate(&topo);
+        let prepared = PreparedWeights::prepare(&SimConfig::u55c(), &topo, &inputs);
+        let x1 = prepared.quantize_input(&inputs.x);
+        let mut inp2 = inputs.clone();
+        inp2.x = crate::testdata::gen_matrix(42, topo.seq_len, topo.d_model);
+        let x2 = prepared.quantize_input(&inp2.x);
+        let mut ws = Workspace::new();
+        prepared.execute_into(&x1, &mut ws);
+        let fp = ws.footprint();
+        prepared.execute_into(&x2, &mut ws);
+        assert_eq!(ws.footprint(), fp, "warm request reallocated a buffer");
+        prepared.execute_into(&x1, &mut ws);
+        assert_eq!(ws.footprint(), fp);
+        assert_eq!(ws.output(), prepared.execute(&x1));
     }
 
     #[test]

@@ -25,9 +25,11 @@ pub mod controller;
 pub mod engine;
 pub mod modules;
 pub mod softmax_unit;
+pub mod workspace;
 
 pub use controller::{ControlRegs, Controller, CtrlError};
 pub use engine::{
     CycleTrace, PhaseEvent, PreparedHead, PreparedWeights, SimConfig, SimResult, Simulator,
 };
 pub use softmax_unit::SoftmaxUnit;
+pub use workspace::{HeadScratch, Workspace};

@@ -99,6 +99,7 @@ impl QkvPm {
 // ------------------------------------------------------------------- QK_PM
 
 /// Score module (Algorithm 2) with fused scale + softmax.
+#[derive(Clone, Debug)]
 pub struct QkPm {
     pub seq_len: usize,
     pub d_k: usize,
@@ -136,25 +137,63 @@ impl QkPm {
 
     /// S = softmax(scale · Q Kᵀ); Q,K are (SL × d_k) row-major f32.
     pub fn run(&self, q: &[f32], k: &[f32]) -> Vec<f32> {
+        let mut s = vec![0f32; self.seq_len * self.seq_len];
+        self.run_into(q, k, &mut s);
+        s
+    }
+
+    /// [`Self::run`] into a caller-owned score buffer (SL × SL) — the
+    /// allocation-free workspace path.  Score columns are blocked four
+    /// wide: one pass over a Q row feeds four independent accumulator
+    /// chains (ILP — strict FP semantics forbid vectorizing a single f32
+    /// reduction, but not running four side by side).  The per-(i, j)
+    /// reduction order over d_k is unchanged, so results are bit-identical
+    /// to the scalar form.
+    pub fn run_into(&self, q: &[f32], k: &[f32], s: &mut [f32]) {
         let (sl, dk) = (self.seq_len, self.d_k);
         assert_eq!(q.len(), sl * dk);
         assert_eq!(k.len(), sl * dk);
-        let mut s = vec![0f32; sl * sl];
+        assert_eq!(s.len(), sl * sl);
         for i in 0..sl {
             let qrow = &q[i * dk..(i + 1) * dk];
-            for j in 0..sl {
+            let srow = &mut s[i * sl..(i + 1) * sl];
+            let mut j = 0;
+            while j + 4 <= sl {
+                let k0 = &k[j * dk..(j + 1) * dk];
+                let k1 = &k[(j + 1) * dk..(j + 2) * dk];
+                let k2 = &k[(j + 2) * dk..(j + 3) * dk];
+                let k3 = &k[(j + 3) * dk..(j + 4) * dk];
+                let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+                for ((((&qv, &b0), &b1), &b2), &b3) in
+                    qrow.iter().zip(k0).zip(k1).zip(k2).zip(k3)
+                {
+                    a0 += qv * b0;
+                    a1 += qv * b1;
+                    a2 += qv * b2;
+                    a3 += qv * b3;
+                }
+                for (jj, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                    srow[j + jj] = self.score(i, j + jj, acc);
+                }
+                j += 4;
+            }
+            while j < sl {
                 let krow = &k[j * dk..(j + 1) * dk];
-                // zip over equal slices -> vectorized f32 dot product.
                 let acc: f32 = qrow.iter().zip(krow).map(|(&a, &b)| a * b).sum();
-                s[i * sl + j] = if self.causal && j > i {
-                    -1e9 // decoder mask: future positions excluded
-                } else {
-                    acc * self.scale
-                };
+                srow[j] = self.score(i, j, acc);
+                j += 1;
             }
         }
-        self.softmax.rows(&mut s, sl, sl);
-        s
+        self.softmax.rows(s, sl, sl);
+    }
+
+    #[inline]
+    fn score(&self, i: usize, j: usize, acc: f32) -> f32 {
+        if self.causal && j > i {
+            -1e9 // decoder mask: future positions excluded
+        } else {
+            acc * self.scale
+        }
     }
 
     pub fn macs(&self) -> u64 {
@@ -165,6 +204,7 @@ impl QkPm {
 // ------------------------------------------------------------------- SV_PM
 
 /// Weighted-value module (Algorithm 3).
+#[derive(Clone, Debug)]
 pub struct SvPm {
     pub seq_len: usize,
     pub d_k: usize,
@@ -191,22 +231,34 @@ impl SvPm {
 
     /// O = S · V; S is (SL × SL), V is (SL × d_k), both row-major f32.
     pub fn run(&self, s: &[f32], v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.seq_len * self.d_k];
+        self.run_into(s, v, &mut out);
+        out
+    }
+
+    /// [`Self::run`] into a caller-owned output buffer (SL × d_k) — a
+    /// branch-free streaming axpy: each score scales one V row into the
+    /// output row, with no per-score `w == 0` test (the data-dependent
+    /// branch defeated vectorization; the output elements are independent
+    /// accumulators, so the inner loop vectorizes even under strict FP
+    /// semantics).  Adding a `w == 0` term contributes `±0.0`, which
+    /// changes no finite sum except the sign of an exact negative zero —
+    /// see DESIGN.md §10.
+    pub fn run_into(&self, s: &[f32], v: &[f32], out: &mut [f32]) {
         let (sl, dk) = (self.seq_len, self.d_k);
         assert_eq!(s.len(), sl * sl);
         assert_eq!(v.len(), sl * dk);
-        let mut out = vec![0f32; sl * dk];
+        assert_eq!(out.len(), sl * dk);
         for i in 0..sl {
-            for l in 0..sl {
-                let w = s[i * sl + l];
-                if w == 0.0 {
-                    continue;
-                }
-                for j in 0..dk {
-                    out[i * dk + j] += w * v[l * dk + j];
+            let orow = &mut out[i * dk..(i + 1) * dk];
+            orow.fill(0.0);
+            for (l, &w) in s[i * sl..(i + 1) * sl].iter().enumerate() {
+                let vrow = &v[l * dk..(l + 1) * dk];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += w * vv;
                 }
             }
         }
-        out
     }
 
     pub fn macs(&self) -> u64 {
@@ -287,6 +339,57 @@ mod tests {
     }
 
     #[test]
+    fn blocked_kernels_bit_match_scalar_reference() {
+        // The blocked QK kernel and the branchless SV axpy must be
+        // bit-identical to the straightforward scalar algorithms they
+        // replaced, for every column-block residue (sl % 4 ∈ {0..3}).
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for sl in [3usize, 4, 5, 6, 7, 8] {
+            let dk = 5;
+            let q: Vec<f32> = (0..sl * dk).map(|i| ((i * 13 % 31) as f32 - 15.0) / 16.0).collect();
+            let k: Vec<f32> = (0..sl * dk).map(|i| ((i * 7 % 29) as f32 - 14.0) / 16.0).collect();
+            let v: Vec<f32> = (0..sl * dk).map(|i| ((i * 11 % 23) as f32 - 11.0) / 16.0).collect();
+            for causal in [false, true] {
+                let qk = if causal {
+                    QkPm::causal(sl, dk, 0.37, SoftmaxUnit::exact())
+                } else {
+                    QkPm::new(sl, dk, 0.37, SoftmaxUnit::exact())
+                };
+                // Pre-PR-3 scalar score path: one ordered dot per (i, j).
+                let mut want_s = vec![0f32; sl * sl];
+                for i in 0..sl {
+                    for j in 0..sl {
+                        let acc: f32 = q[i * dk..(i + 1) * dk]
+                            .iter()
+                            .zip(&k[j * dk..(j + 1) * dk])
+                            .map(|(&a, &b)| a * b)
+                            .sum();
+                        want_s[i * sl + j] =
+                            if causal && j > i { -1e9 } else { acc * qk.scale };
+                    }
+                }
+                qk.softmax.rows(&mut want_s, sl, sl);
+                let got_s = qk.run(&q, &k);
+                assert_eq!(bits(&got_s), bits(&want_s), "QK sl={sl} causal={causal}");
+
+                // Scalar axpy reference for SV (same summation order).
+                let mut want_o = vec![0f32; sl * dk];
+                for i in 0..sl {
+                    for l in 0..sl {
+                        let w = want_s[i * sl + l];
+                        for j in 0..dk {
+                            want_o[i * dk + j] += w * v[l * dk + j];
+                        }
+                    }
+                }
+                let sv = SvPm::new(sl, dk);
+                let got_o = sv.run(&want_s, &v);
+                assert_eq!(bits(&got_o), bits(&want_o), "SV sl={sl} causal={causal}");
+            }
+        }
+    }
+
+    #[test]
     fn causal_masks_future_positions() {
         let qk = QkPm::causal(3, 2, 1.0, SoftmaxUnit::exact());
         let q = vec![1.0, 0.0, 0.5, 0.5, 0.0, 1.0];
@@ -296,7 +399,7 @@ mod tests {
         assert!((s[0] - 1.0).abs() < 1e-6);
         assert_eq!(&s[1..3], &[0.0, 0.0]);
         // Row 1: positions 0,1 only.
-        assert_eq!(s[1 * 3 + 2], 0.0);
+        assert_eq!(s[3 + 2], 0.0);
         assert!((s[3] + s[4] - 1.0).abs() < 1e-6);
         // Row 2: full attention, still stochastic.
         let sum: f32 = s[6..9].iter().sum();

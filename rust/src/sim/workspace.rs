@@ -1,0 +1,146 @@
+//! Reusable scratch for the functional datapath.
+//!
+//! The FAMOUS fabric keeps every intermediate (`Q/K/V`, scores, head
+//! outputs) resident in BRAM across invocations; the pre-PR-3 software
+//! hot path instead re-allocated all of them per request.  A
+//! [`Workspace`] is the host-side analogue of those resident buffers: a
+//! per-worker arena [`PreparedWeights`](super::PreparedWeights) executes
+//! into, so a *warm* request — same (or smaller) topology as one the
+//! workspace has already served — performs **zero heap allocations** on
+//! the execute path.  Tests pin this via [`Workspace::footprint`]
+//! (buffer pointers and capacities must be stable across warm requests).
+//!
+//! Head-parallel execution gives each concurrent head lane its own
+//! [`HeadScratch`], so lanes never share mutable state; the output is a
+//! single buffer written in disjoint per-head column stripes (DESIGN.md
+//! §10).
+
+use crate::config::Topology;
+
+/// One head lane's scratch: everything a single head's pipeline touches.
+#[derive(Clone, Debug, Default)]
+pub struct HeadScratch {
+    /// i32 GEMM accumulator (SL × d_k), reused for Q, K and V in turn.
+    pub(crate) acc: Vec<i32>,
+    /// Dequantized projections (SL × d_k each).
+    pub(crate) q: Vec<f32>,
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    /// Score matrix (SL × SL).
+    pub(crate) s: Vec<f32>,
+    /// Head output (SL × d_k) before the stripe copy into the request
+    /// output.
+    pub(crate) o: Vec<f32>,
+}
+
+impl HeadScratch {
+    fn ensure(&mut self, sl: usize, dk: usize) {
+        self.acc.resize(sl * dk, 0);
+        self.q.resize(sl * dk, 0.0);
+        self.k.resize(sl * dk, 0.0);
+        self.v.resize(sl * dk, 0.0);
+        self.s.resize(sl * sl, 0.0);
+        self.o.resize(sl * dk, 0.0);
+    }
+}
+
+/// Reusable execute-path arena: widened input, per-head lanes, output.
+#[derive(Clone, Debug, Default)]
+pub struct Workspace {
+    /// Input widened to i16 once per request (SL × d_model), shared by
+    /// all three projections of every head.
+    pub(crate) x16: Vec<i16>,
+    /// Per-head scratch lanes; a head-parallel execute with `l` lanes
+    /// uses the first `l`, the serial path uses lane 0 for every head.
+    pub(crate) lanes: Vec<HeadScratch>,
+    /// Request output (SL × d_model, heads concatenated).
+    pub(crate) out: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size every buffer for `topo` with `lanes` head lanes.  `Vec::resize`
+    /// never shrinks capacity, so buffers only grow: a warm call with a
+    /// previously-seen (or smaller) topology allocates nothing.
+    pub(crate) fn ensure(&mut self, topo: &Topology, lanes: usize) {
+        let (sl, dm, dk) = (topo.seq_len, topo.d_model, topo.d_k());
+        self.x16.resize(sl * dm, 0);
+        self.out.resize(sl * dm, 0.0);
+        if self.lanes.len() < lanes {
+            self.lanes.resize_with(lanes, HeadScratch::default);
+        }
+        for lane in &mut self.lanes[..lanes] {
+            lane.ensure(sl, dk);
+        }
+    }
+
+    /// The output of the most recent `execute_into`/`execute_parallel`.
+    pub fn output(&self) -> &[f32] {
+        &self.out
+    }
+
+    /// Move the output out, leaving an empty buffer (the next warm call
+    /// re-grows it — used by the allocating `execute` wrapper, not by
+    /// serving paths).
+    pub fn take_output(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.out)
+    }
+
+    /// (pointer, capacity) of every buffer.  The workspace-reuse tests
+    /// assert this is stable across warm requests — the "zero heap
+    /// allocations on the warm execute path" contract.
+    pub fn footprint(&self) -> Vec<(usize, usize)> {
+        let mut fp = vec![
+            (self.x16.as_ptr() as usize, self.x16.capacity()),
+            (self.out.as_ptr() as usize, self.out.capacity()),
+        ];
+        for l in &self.lanes {
+            fp.push((l.acc.as_ptr() as usize, l.acc.capacity()));
+            fp.push((l.q.as_ptr() as usize, l.q.capacity()));
+            fp.push((l.k.as_ptr() as usize, l.k.capacity()));
+            fp.push((l.v.as_ptr() as usize, l.v.capacity()));
+            fp.push((l.s.as_ptr() as usize, l.s.capacity()));
+            fp.push((l.o.as_ptr() as usize, l.o.capacity()));
+        }
+        fp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_grows_then_stays_put() {
+        let mut ws = Workspace::new();
+        let small = Topology::new(8, 64, 2, 16);
+        let large = Topology::new(16, 64, 2, 16);
+        ws.ensure(&large, 2);
+        let fp = ws.footprint();
+        assert_eq!(ws.lanes.len(), 2);
+        assert_eq!(ws.x16.len(), 16 * 64);
+        // Warm re-ensure (same + smaller topology): nothing moves.
+        ws.ensure(&large, 2);
+        assert_eq!(ws.footprint(), fp);
+        ws.ensure(&small, 1);
+        ws.ensure(&large, 2);
+        assert_eq!(ws.footprint(), fp, "shrink + regrow must stay in capacity");
+    }
+
+    #[test]
+    fn take_output_then_warm_up_again() {
+        let mut ws = Workspace::new();
+        let topo = Topology::new(4, 32, 2, 16);
+        ws.ensure(&topo, 1);
+        ws.out[0] = 7.0;
+        let out = ws.take_output();
+        assert_eq!(out.len(), 4 * 32);
+        assert_eq!(out[0], 7.0);
+        assert!(ws.output().is_empty());
+        ws.ensure(&topo, 1);
+        assert_eq!(ws.output().len(), 4 * 32);
+    }
+}

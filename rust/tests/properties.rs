@@ -209,3 +209,93 @@ fn prop_admission_is_exactly_the_box() {
         assert_eq!(build.admits(&topo).is_ok(), valid && inside, "{topo}");
     });
 }
+
+// ------------------------------------------------ execute path (PR 3)
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn prop_head_parallel_workspace_bit_identical_to_serial() {
+    // The PR-3 invariant: workspace reuse and head parallelism (any lane
+    // count, any pool size including a 1-thread pool) never change a
+    // single output bit vs the allocating serial path, across random
+    // topologies, weights, numerics configs and thread counts.
+    use famous::exec::ThreadPool;
+    use famous::sim::{PreparedWeights, Workspace};
+    use famous::testdata::MhaInputs;
+    run("head-parallel == serial", 30, |g: &mut Gen| {
+        let heads = *g.pick(&[1usize, 2, 3, 4]);
+        let dk = *g.pick(&[4usize, 8, 16]);
+        let sl = g.usize_in(2, 12);
+        let dm = heads * dk;
+        let topo = Topology::new(sl, dm, heads, dm);
+        let mut inputs = MhaInputs::generate(&topo);
+        for _ in 0..4 {
+            let i = g.usize_in(0, inputs.x.len() - 1);
+            inputs.x[i] = g.f64_in(-1.0, 1.0) as f32;
+            let j = g.usize_in(0, inputs.wq.len() - 1);
+            inputs.wq[j] = g.f64_in(-1.0, 1.0) as f32;
+        }
+        let mut cfg = SimConfig::u55c();
+        cfg.causal = g.bool();
+        if g.bool() {
+            cfg.softmax_lut_bits = Some(8);
+        }
+        let prepared = PreparedWeights::prepare(&cfg, &topo, &inputs);
+        let x = prepared.quantize_input(&inputs.x);
+        let want = prepared.execute(&x);
+
+        let mut ws = Workspace::new();
+        prepared.execute_into(&x, &mut ws);
+        assert_eq!(bits(ws.output()), bits(&want), "workspace serial diverged ({topo})");
+
+        let threads = g.usize_in(1, 3);
+        let lanes = g.usize_in(1, heads + 1);
+        let pool = ThreadPool::new(threads);
+        let mut wsp = Workspace::new();
+        prepared.execute_parallel(&x, &mut wsp, &pool.handle(), lanes);
+        assert_eq!(
+            bits(wsp.output()),
+            bits(&want),
+            "head-parallel diverged ({topo}, threads={threads}, lanes={lanes})"
+        );
+        // Warm re-run on the same workspaces: still identical.
+        prepared.execute_parallel(&x, &mut wsp, &pool.handle(), lanes);
+        assert_eq!(bits(wsp.output()), bits(&want), "warm head-parallel diverged ({topo})");
+    });
+}
+
+#[test]
+fn warm_workspace_requests_allocate_nothing() {
+    // A second same-topology request must leave every buffer pointer and
+    // capacity untouched — the zero-allocation contract of the warm
+    // execute path, for both the serial and the head-parallel flavor.
+    use famous::exec::ThreadPool;
+    use famous::sim::{PreparedWeights, Workspace};
+    use famous::testdata::{gen_matrix, MhaInputs};
+    let topo = Topology::new(16, 256, 4, 64);
+    let inputs = MhaInputs::generate(&topo);
+    let prepared = PreparedWeights::prepare(&SimConfig::u55c(), &topo, &inputs);
+    let x1 = prepared.quantize_input(&inputs.x);
+    let x2 = prepared.quantize_input(&gen_matrix(99, topo.seq_len, topo.d_model));
+
+    let mut ws = Workspace::new();
+    prepared.execute_into(&x1, &mut ws);
+    let fp = ws.footprint();
+    prepared.execute_into(&x2, &mut ws);
+    assert_eq!(ws.footprint(), fp, "warm serial request reallocated a buffer");
+    prepared.execute_into(&x1, &mut ws);
+    assert_eq!(ws.footprint(), fp);
+    assert_eq!(bits(ws.output()), bits(&prepared.execute(&x1)));
+
+    let pool = ThreadPool::new(3);
+    let mut wsp = Workspace::new();
+    prepared.execute_parallel(&x1, &mut wsp, &pool.handle(), 4);
+    let fpp = wsp.footprint();
+    assert!(fpp.len() > fp.len(), "parallel workspace has one lane per head");
+    prepared.execute_parallel(&x2, &mut wsp, &pool.handle(), 4);
+    assert_eq!(wsp.footprint(), fpp, "warm parallel request reallocated a buffer");
+    assert_eq!(bits(wsp.output()), bits(&prepared.execute(&x2)));
+}
