@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
                 let id = (client * REQS_PER_CLIENT + k) as u64;
                 let inputs = MhaInputs::generate(topo);
                 let resp = h
-                    .call(Request { id, topology: topo.clone(), inputs: inputs.clone() })
+                    .call(Request::new(id, topo.clone(), inputs.clone()))
                     .expect("request served");
                 outputs.lock().unwrap().push((*name, topo.clone(), inputs, resp));
             }

@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
                 let inputs = MhaInputs::generate(topo);
                 let treq = Instant::now();
                 let resp = h
-                    .call_blocking(Request { id, topology: topo.clone(), inputs })
+                    .call_blocking(Request::new(id, topo.clone(), inputs))
                     .expect("request served");
                 wall_stats.lock().unwrap().record(treq.elapsed().as_secs_f64() * 1e3);
                 outputs.lock().unwrap().push((resp.topology.clone(), resp.output, *app));

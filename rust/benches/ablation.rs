@@ -156,14 +156,14 @@ fn batching_ablation() {
             fairness_window: window,
         });
         for (i, topo) in stream.iter().enumerate() {
-            s.push(Request {
-                id: i as u64,
-                topology: topo.clone(),
-                inputs: MhaInputs {
+            s.push(Request::new(
+                i as u64,
+                topo.clone(),
+                MhaInputs {
                     x: vec![], wq: vec![], wk: vec![], wv: vec![],
                     bq: vec![], bk: vec![], bv: vec![],
                 },
-            });
+            ));
         }
         let mut switches = 0;
         let mut last = None;

@@ -1,97 +1,155 @@
-//! Cluster scaling bench: fixed offered load, 1 → 8 devices.
+//! Cluster bench: arrival-process load over 1 → 8 devices, plus the
+//! QoS policy face-off.
 //!
-//! The workload is a fixed batch of mixed-topology requests (the
-//! flexibility mix of Table I shapes).  For each fleet size we measure
-//! host wall time and report the *modeled* fabric metrics: cluster GOPS
-//! over the makespan (the busiest device's fabric occupancy, counted as
-//! Σ per-batch makespan now that a same-topology batch streams through
-//! the fabric as one programmed pipeline — DESIGN.md §9), reconfigs per
-//! request, and affinity hit rate.  Under batch-makespan accounting a
-//! lone device amortizes whole batches, so fleet speedup saturates
-//! earlier than the pre-batching near-linear curve; the win shows in
-//! reconfigurations (flat: ≈ one per topology-device pair, not per
-//! request) and in the per-device batch counts.  See benches/pipeline.rs
-//! for the single-device serial-vs-batched and cold-vs-warm-cache view.
+//! PR 1–3 replayed a uniform closed-loop batch (every client holds one
+//! request in flight), which self-throttles to the service rate and
+//! never exercises tails.  This bench drives the fleet with the seeded
+//! *open-loop* generator instead ([`famous::cluster::loadgen`]): a
+//! bursty MMPP at a fixed absolute rate on the virtual clock, mixed
+//! priority classes with deadline budgets.  Small fleets run
+//! supercritical and miss/shed; eight devices absorb the same offered
+//! load comfortably — the serving-value curve the paper's GOPS numbers
+//! imply but never show.
+//!
+//! The second table replays one identical trace through the PR-1
+//! FIFO/affinity policy and the QoS `SlackEdf` + EDF policy on four
+//! devices and asserts the acceptance criterion outright: at equal
+//! offered load, EDF+slack yields strictly fewer SLO violations.
 //!
 //!     cargo bench --bench cluster
 
-use famous::cluster::{Cluster, ClusterConfig, DeviceSpec, WorkloadProfile};
+use famous::cluster::loadgen::rate_for_utilization;
+use famous::cluster::{
+    Arrival, Cluster, ClusterConfig, DeviceSpec, FleetStats, LoadGen, LoadGenConfig, QosOutcome,
+    QosPolicy, WorkloadProfile,
+};
 use famous::config::Topology;
-use famous::coordinator::Request;
+use famous::coordinator::{BatchPolicy, Priority, SchedulerConfig};
 use famous::report::{fmt_f, Table};
-use famous::testdata::MhaInputs;
 use std::time::Instant;
 
-const OFFERED_REQUESTS: usize = 64;
+const OFFERED_REQUESTS: usize = 96;
+const SEED: u64 = 0xbe57_10ad;
 
-fn workload_mix() -> Vec<Topology> {
+fn workload_mix() -> Vec<(Topology, f64)> {
     vec![
-        Topology::new(64, 768, 8, 64),
-        Topology::new(32, 768, 8, 64),
-        Topology::new(64, 512, 8, 64),
-        Topology::new(128, 768, 8, 64),
+        (Topology::new(64, 768, 8, 64), 3.0),
+        (Topology::new(32, 768, 8, 64), 2.0),
+        (Topology::new(64, 512, 8, 64), 2.0),
+        (Topology::new(128, 768, 8, 64), 1.0),
     ]
 }
 
-fn main() {
+/// Replay one arrival trace through a fleet; returns the fleet report
+/// and the host wall seconds.
+fn replay(n_devices: usize, policy: QosPolicy, arrivals: &[Arrival]) -> (FleetStats, f64) {
     let mix = workload_mix();
+    let scheduler = SchedulerConfig {
+        max_batch: 8,
+        policy: match policy {
+            QosPolicy::SlackEdf => BatchPolicy::EdfWithinWindow,
+            QosPolicy::Affinity => BatchPolicy::GroupByTopology,
+        },
+        fairness_window: 16,
+    };
+    let mut workload = WorkloadProfile::default();
+    for (t, share) in &mix {
+        workload.push(t.clone(), *share);
+    }
+    let devices: Vec<DeviceSpec> = (0..n_devices).map(DeviceSpec::u55c).collect();
+    let cluster = Cluster::start(
+        devices,
+        &workload,
+        ClusterConfig { scheduler, qos: policy, ..ClusterConfig::default() },
+    )
+    .expect("cluster start");
+    let h = cluster.handle();
+    let t0 = Instant::now();
+    for (i, a) in arrivals.iter().enumerate() {
+        // Served or explicitly shed — both are valid QoS outcomes here.
+        let _outcome: QosOutcome = h.call_qos(a.materialize(i as u64)).expect("served");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (cluster.shutdown(), wall)
+}
+
+fn violations(f: &FleetStats) -> u64 {
+    Priority::ALL.iter().map(|&p| f.totals.slo.violations(p)).sum()
+}
+
+fn main() {
+    // Fixed offered load: what four devices would see at ρ = 0.9 —
+    // heavy for 1–2 devices, comfortable for 8.  One seeded trace (the
+    // shared bursty preset) is replayed by every configuration.
+    let four: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+    let rate_hz = rate_for_utilization(&four, &workload_mix(), 0.9);
+    let arrivals = LoadGen::new(LoadGenConfig::bursty_preset(&four, workload_mix(), 0.9, SEED))
+        .generate_n(OFFERED_REQUESTS);
+
     let mut t = Table::new(
-        format!("Cluster scaling — {OFFERED_REQUESTS} mixed requests, U55C fleet"),
+        format!(
+            "Cluster scaling — {OFFERED_REQUESTS} bursty requests at {rate_hz:.0} req/s offered"
+        ),
         &[
             "devices",
             "wall s",
             "makespan ms",
             "GOPS",
-            "speedup",
-            "reconf",
+            "miss %",
+            "shed",
             "reconf/req",
             "affinity %",
         ],
     );
-    let mut base_makespan = 0.0f64;
+    // The 4-device SlackEdf run doubles as the face-off's EDF side (the
+    // trace is deterministic, so re-running it would be pure waste).
+    let mut edf4: Option<FleetStats> = None;
     for n in [1usize, 2, 4, 8] {
-        let devices: Vec<DeviceSpec> = (0..n).map(DeviceSpec::u55c).collect();
-        let cluster = Cluster::start(
-            devices,
-            &WorkloadProfile::uniform(&mix),
-            ClusterConfig::default(),
-        )
-        .expect("cluster start");
-        let t0 = Instant::now();
-        let mut joins = Vec::new();
-        for i in 0..OFFERED_REQUESTS {
-            let h = cluster.handle();
-            let topo = mix[i % mix.len()].clone();
-            joins.push(std::thread::spawn(move || {
-                let inputs = MhaInputs::generate(&topo);
-                h.call(Request { id: i as u64, topology: topo, inputs }).expect("served")
-            }));
-        }
-        for j in joins {
-            j.join().unwrap();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let fleet = cluster.shutdown();
-        assert_eq!(fleet.totals.completed as usize, OFFERED_REQUESTS);
-        let makespan = fleet.makespan_ms();
-        if n == 1 {
-            base_makespan = makespan;
-        }
+        let (fleet, wall) = replay(n, QosPolicy::SlackEdf, &arrivals);
         t.row(vec![
             n.to_string(),
             format!("{wall:.2}"),
-            fmt_f(makespan),
+            fmt_f(fleet.makespan_ms()),
             fmt_f(fleet.cluster_gops()),
-            if base_makespan > 0.0 {
-                format!("{:.2}x", base_makespan / makespan)
-            } else {
-                "-".into()
-            },
-            fleet.reconfigurations().to_string(),
+            format!("{:.1}", fleet.totals.slo.overall_miss_rate() * 100.0),
+            fleet.totals.slo.total_shed().to_string(),
             format!("{:.3}", fleet.reconfigs_per_request()),
             format!("{:.0}", fleet.affinity_hit_rate() * 100.0),
         ]);
+        if n == 4 {
+            edf4 = Some(fleet);
+        }
     }
     print!("{}", t.render());
-    println!("(GOPS/makespan are modeled fabric quantities; wall s is host thread overhead)");
+    println!("(GOPS/makespan/miss are modeled fabric quantities; wall s is host overhead)");
+
+    // --- QoS face-off: one trace, two policies, four devices. ---------
+    let edf = edf4.expect("4-device row ran");
+    let (fifo, _) = replay(4, QosPolicy::Affinity, &arrivals);
+    let mut q = Table::new(
+        "QoS policy face-off — 4 devices, identical trace",
+        &["policy", "miss %", "missed", "shed", "p99 high ms", "violations"],
+    );
+    for (name, f) in [("fifo/affinity", &fifo), ("edf+slack", &edf)] {
+        q.row(vec![
+            name.to_string(),
+            format!("{:.1}", f.totals.slo.overall_miss_rate() * 100.0),
+            f.totals.slo.total_missed().to_string(),
+            f.totals.slo.total_shed().to_string(),
+            fmt_f(f.totals.slo.sojourn[Priority::High.index()].percentile(99.0)),
+            violations(f).to_string(),
+        ]);
+    }
+    print!("{}", q.render());
+    assert!(
+        violations(&edf) < violations(&fifo),
+        "EDF+slack must strictly beat FIFO/affinity at equal offered load: {} !< {}",
+        violations(&edf),
+        violations(&fifo)
+    );
+    println!(
+        "EDF+slack violations {} < FIFO/affinity {} at equal offered load (asserted)",
+        violations(&edf),
+        violations(&fifo)
+    );
 }

@@ -117,7 +117,7 @@ fn main() {
                 Topology::new(32, 768, 8, 64)
             };
             let inp = MhaInputs::generate(&tp);
-            coord.submit(Request { id: i, topology: tp, inputs: inp }).unwrap();
+            coord.submit(Request::new(i, tp, inp)).unwrap();
         }
         black_box(coord.serve_all().unwrap());
     });

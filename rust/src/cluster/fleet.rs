@@ -18,7 +18,7 @@
 //! harnesses.
 
 use super::DeviceSpec;
-use crate::coordinator::CoordinatorStats;
+use crate::coordinator::{CoordinatorStats, Priority};
 use crate::fpga::resources::{ResourceModel, Utilization};
 use crate::metrics::LatencyStats;
 use crate::report::{fmt_f, Table};
@@ -40,6 +40,104 @@ pub struct RouterTotals {
     /// Modeled GOP dispatched (paper op-counting convention, per
     /// sub-request — DESIGN.md §5).
     pub total_gop: f64,
+    /// Per-priority SLO counters (QoS serving, DESIGN.md §11).
+    pub slo: SloStats,
+}
+
+/// Per-priority SLO roll-up.  Latencies are modeled *sojourn* times on
+/// the router's virtual clock — queue wait under the backlog model plus
+/// modeled fabric service — and deadline verdicts compare that
+/// completion estimate against the request's absolute deadline.  Like
+/// every latency in this repository, these are modeled quantities:
+/// deterministic for a fixed request trace, which is what lets the soak
+/// suite assert exact reproducibility.
+#[derive(Clone, Debug, Default)]
+pub struct SloStats {
+    /// Modeled sojourn (completion − arrival) per priority class,
+    /// indexed by [`Priority::index`].
+    pub sojourn: [LatencyStats; 3],
+    /// Completed with the deadline met / missed, per class.
+    pub met: [u64; 3],
+    pub missed: [u64; 3],
+    /// Completed requests that carried no deadline, per class.
+    pub best_effort: [u64; 3],
+    /// Shed at ingress (provably late under the backlog model; the
+    /// router sheds only `Low`), per class.
+    pub shed: [u64; 3],
+}
+
+impl SloStats {
+    /// Record a completed request.  `missed` is `None` for best-effort
+    /// traffic (no deadline), otherwise whether the deadline was missed.
+    pub fn record_completion(&mut self, p: Priority, sojourn_ms: f64, missed: Option<bool>) {
+        let i = p.index();
+        self.sojourn[i].record(sojourn_ms);
+        match missed {
+            None => self.best_effort[i] += 1,
+            Some(false) => self.met[i] += 1,
+            Some(true) => self.missed[i] += 1,
+        }
+    }
+
+    pub fn record_shed(&mut self, p: Priority) {
+        self.shed[p.index()] += 1;
+    }
+
+    /// Requests of this class that carried a deadline (completed or
+    /// shed).
+    pub fn deadline_demand(&self, p: Priority) -> u64 {
+        let i = p.index();
+        self.met[i] + self.missed[i] + self.shed[i]
+    }
+
+    /// SLO violations for this class: completed late, or shed.
+    pub fn violations(&self, p: Priority) -> u64 {
+        let i = p.index();
+        self.missed[i] + self.shed[i]
+    }
+
+    /// Deadline-miss rate for one class (violations / deadline demand).
+    pub fn miss_rate(&self, p: Priority) -> f64 {
+        let demand = self.deadline_demand(p);
+        if demand == 0 {
+            return 0.0;
+        }
+        self.violations(p) as f64 / demand as f64
+    }
+
+    /// Fleet-wide miss rate over every deadline-bearing request.
+    pub fn overall_miss_rate(&self) -> f64 {
+        let demand: u64 = Priority::ALL.iter().map(|&p| self.deadline_demand(p)).sum();
+        if demand == 0 {
+            return 0.0;
+        }
+        let violations: u64 = Priority::ALL.iter().map(|&p| self.violations(p)).sum();
+        violations as f64 / demand as f64
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    pub fn total_missed(&self) -> u64 {
+        self.missed.iter().sum()
+    }
+
+    /// Completed requests of this class (any deadline state).
+    pub fn served(&self, p: Priority) -> u64 {
+        self.sojourn[p.index()].count() as u64
+    }
+
+    /// Has any QoS-*signalled* traffic been recorded — a deadline, a
+    /// shed, or a non-default priority class?  Gates the QoS block of
+    /// the fleet report: plain best-effort `Normal` traffic (every
+    /// pre-QoS caller) keeps the old report output, even though its
+    /// sojourns are still collected.
+    pub fn any(&self) -> bool {
+        Priority::ALL.iter().any(|&p| self.deadline_demand(p) > 0)
+            || self.served(Priority::High) > 0
+            || self.served(Priority::Low) > 0
+    }
 }
 
 /// Liveness of one device at report time.  Distinguishes "zeroed stats
@@ -297,6 +395,34 @@ impl FleetStats {
             self.totals.affinity_misses,
             self.totals.retries
         ));
+        let slo = &self.totals.slo;
+        if slo.any() {
+            let mut q = Table::new(
+                "QoS — per priority class (virtual-clock sojourn)",
+                &["class", "served", "p50 ms", "p99 ms", "met", "missed", "shed", "miss %"],
+            );
+            for p in Priority::ALL {
+                let i = p.index();
+                q.row(vec![
+                    p.label().to_string(),
+                    slo.served(p).to_string(),
+                    fmt_f(slo.sojourn[i].percentile(50.0)),
+                    fmt_f(slo.sojourn[i].percentile(99.0)),
+                    slo.met[i].to_string(),
+                    slo.missed[i].to_string(),
+                    slo.shed[i].to_string(),
+                    format!("{:.1}", slo.miss_rate(p) * 100.0),
+                ]);
+            }
+            out.push_str(&q.render());
+            out.push_str(&format!(
+                "deadline miss rate {:.1}% overall ({} missed + {} shed of {} with deadlines)\n",
+                slo.overall_miss_rate() * 100.0,
+                slo.total_missed(),
+                slo.total_shed(),
+                Priority::ALL.iter().map(|&p| slo.deadline_demand(p)).sum::<u64>()
+            ));
+        }
         out
     }
 }
@@ -334,6 +460,7 @@ mod tests {
             affinity_misses: 1,
             rejected: 0,
             total_gop: 2.0,
+            slo: SloStats::default(),
         };
         FleetStats::assemble(&specs, coord, totals)
     }
@@ -412,6 +539,44 @@ mod tests {
         assert_eq!(f.failed_devices(), 0);
         assert!(f.devices.iter().all(|d| d.health == DeviceHealth::Live));
         assert!(!f.render().contains("WARNING"));
+    }
+
+    #[test]
+    fn slo_stats_rates_and_demand() {
+        let mut slo = SloStats::default();
+        slo.record_completion(Priority::High, 1.0, Some(false));
+        slo.record_completion(Priority::High, 3.0, Some(true));
+        slo.record_completion(Priority::Normal, 2.0, None);
+        slo.record_completion(Priority::Low, 9.0, Some(true));
+        slo.record_shed(Priority::Low);
+        assert_eq!(slo.deadline_demand(Priority::High), 2);
+        assert_eq!(slo.violations(Priority::High), 1);
+        assert!((slo.miss_rate(Priority::High) - 0.5).abs() < 1e-12);
+        // Best-effort traffic counts toward served, not deadline demand.
+        assert_eq!(slo.deadline_demand(Priority::Normal), 0);
+        assert_eq!(slo.miss_rate(Priority::Normal), 0.0);
+        assert_eq!(slo.served(Priority::Normal), 1);
+        // Shed counts as demand and as a violation.
+        assert_eq!(slo.deadline_demand(Priority::Low), 2);
+        assert_eq!(slo.violations(Priority::Low), 2);
+        assert_eq!(slo.total_shed(), 1);
+        assert_eq!(slo.total_missed(), 2);
+        // Overall: 3 violations over 4 deadline-bearing requests.
+        assert!((slo.overall_miss_rate() - 0.75).abs() < 1e-12);
+        assert!(slo.any());
+        assert!(!SloStats::default().any());
+    }
+
+    #[test]
+    fn render_includes_qos_block_only_with_traffic() {
+        let mut f = two_device_fleet();
+        assert!(!f.render().contains("QoS"), "no QoS traffic, no QoS block");
+        f.totals.slo.record_completion(Priority::High, 1.5, Some(false));
+        f.totals.slo.record_shed(Priority::Low);
+        let r = f.render();
+        assert!(r.contains("QoS"), "{r}");
+        assert!(r.contains("high"), "{r}");
+        assert!(r.contains("deadline miss rate"), "{r}");
     }
 
     #[test]

@@ -21,9 +21,15 @@
 //!   full.
 //! * [`fleet`] — metrics: per-device `CoordinatorStats` aggregated into
 //!   cluster GOPS (over batch makespans — max-of-batch, DESIGN.md §9),
-//!   occupancy, p50/p99 fabric latency, program-cache hit rates, and
-//!   reconfigurations per request; available mid-run via
-//!   [`router::Cluster::fleet_snapshot`] as well as at shutdown.
+//!   occupancy, p50/p99 fabric latency, program-cache hit rates,
+//!   reconfigurations per request, and per-priority SLO stats
+//!   (sojourn percentiles, deadline-miss rate, shed counts — DESIGN.md
+//!   §11); available mid-run via [`router::Cluster::fleet_snapshot`]
+//!   as well as at shutdown.
+//! * [`loadgen`] — seeded arrival-process load generation (Poisson and
+//!   two-state bursty MMPP) with mixed priority classes and deadline
+//!   budgets, replacing the uniform closed-loop replay in the cluster
+//!   bench and the QoS soak suite.
 //!
 //! Invariants (tested in `rust/tests/cluster.rs`, DESIGN.md §7): every
 //! cluster response is bit-identical to a single-device run of the same
@@ -32,13 +38,17 @@
 //! request than a lone coordinator on the same interleaved stream.
 
 pub mod fleet;
+pub mod loadgen;
 pub mod placement;
 pub mod router;
 pub mod shard;
 
-pub use fleet::{DeviceHealth, DeviceReport, FleetStats};
+pub use fleet::{DeviceHealth, DeviceReport, FleetStats, SloStats};
+pub use loadgen::{Arrival, ArrivalProcess, LoadGen, LoadGenConfig, QosClass};
 pub use placement::{PlacementPlan, PlacementPlanner, TopologyPlacement, WorkloadProfile};
-pub use router::{Cluster, ClusterConfig, ClusterHandle, ClusterResponse};
+pub use router::{
+    Cluster, ClusterConfig, ClusterHandle, ClusterResponse, QosOutcome, QosPolicy, ShedNotice,
+};
 pub use shard::ShardPlan;
 
 use crate::config::Topology;

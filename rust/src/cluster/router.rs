@@ -24,12 +24,28 @@ use super::DeviceSpec;
 use crate::accel::FamousAccelerator;
 use crate::config::Topology;
 use crate::coordinator::{
-    Coordinator, CoordinatorStats, Request, Response, SchedulerConfig, Server, ServerConfig,
-    ServerHandle, SubmitError,
+    BatchPolicy, Coordinator, CoordinatorStats, Priority, Request, Response, SchedulerConfig,
+    Server, ServerConfig, ServerHandle, SubmitError,
 };
 use crate::metrics::OpCount;
 use anyhow::{anyhow, bail, Result};
 use std::sync::{Arc, Mutex};
+
+/// Fleet-level QoS routing policy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QosPolicy {
+    /// PR-1 routing: hot affinity, then placement preference, then
+    /// least-loaded.  Deadlines are accounted but never acted on.
+    #[default]
+    Affinity,
+    /// Slack-aware routing: candidates that can meet the deadline under
+    /// the backlog model come first (hot/planned/earliest-completion
+    /// among them), and a `Low` request no device can serve in time is
+    /// shed with an explicit [`QosOutcome::Shed`] instead of queueing
+    /// to die.  Pair with `BatchPolicy::EdfWithinWindow` per device
+    /// ([`ClusterConfig::qos`]).
+    SlackEdf,
+}
 
 /// Cluster tuning.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +56,8 @@ pub struct ClusterConfig {
     pub server: ServerConfig,
     /// Backpressure bounces before blocking on the best candidate.
     pub max_retries: usize,
+    /// Fleet-level routing policy (DESIGN.md §11).
+    pub qos: QosPolicy,
 }
 
 impl Default for ClusterConfig {
@@ -48,6 +66,22 @@ impl Default for ClusterConfig {
             scheduler: SchedulerConfig::default(),
             server: ServerConfig::default(),
             max_retries: 3,
+            qos: QosPolicy::Affinity,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// QoS serving preset: slack-aware routing at the fleet level plus
+    /// EDF-within-window batching on every device.
+    pub fn qos() -> Self {
+        ClusterConfig {
+            scheduler: SchedulerConfig {
+                policy: BatchPolicy::EdfWithinWindow,
+                ..SchedulerConfig::default()
+            },
+            qos: QosPolicy::SlackEdf,
+            ..ClusterConfig::default()
         }
     }
 }
@@ -71,6 +105,48 @@ pub struct ClusterResponse {
     /// Devices that served it (two when sharded).
     pub devices: Vec<usize>,
     pub sharded: bool,
+    /// QoS class the request carried.
+    pub priority: Priority,
+    /// Absolute deadline on the virtual clock, if any.
+    pub deadline_ms: Option<f64>,
+    /// Modeled completion time on the virtual clock (arrival + queue
+    /// wait under the backlog model + fabric service).
+    pub completed_ms: f64,
+    /// `completed_ms > deadline_ms` (always false for best-effort).
+    pub deadline_missed: bool,
+}
+
+/// Outcome of a QoS-routed request: served, or explicitly shed at
+/// ingress because no device could meet its deadline under the backlog
+/// model (only `Low` priority is ever shed).
+#[derive(Clone, Debug)]
+pub enum QosOutcome {
+    Served(ClusterResponse),
+    Shed(ShedNotice),
+}
+
+impl QosOutcome {
+    pub fn served(self) -> Option<ClusterResponse> {
+        match self {
+            QosOutcome::Served(r) => Some(r),
+            QosOutcome::Shed(_) => None,
+        }
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, QosOutcome::Shed(_))
+    }
+}
+
+/// Why a request was shed (returned to the client, never silent).
+#[derive(Clone, Debug)]
+pub struct ShedNotice {
+    pub id: u64,
+    pub priority: Priority,
+    pub deadline_ms: f64,
+    /// Best completion any admitting device could offer under the
+    /// backlog model — already past the deadline.
+    pub predicted_completion_ms: f64,
 }
 
 struct DeviceEndpoint {
@@ -82,6 +158,12 @@ struct DeviceEndpoint {
 struct RouterState {
     /// Router's view of each device's currently-programmed topology.
     last_topology: Vec<Option<Topology>>,
+    /// Modeled completion horizon per device, in absolute virtual-clock
+    /// ms: the time the device would finish everything the router has
+    /// dispatched to it, under the analytical service model (DESIGN.md
+    /// §11).  Queue delay for a request arriving at `t` is
+    /// `max(backlog, t) − t`.
+    backlog_ms: Vec<f64>,
     totals: RouterTotals,
 }
 
@@ -89,6 +171,7 @@ struct Shared {
     devices: Vec<DeviceEndpoint>,
     plan: PlacementPlan,
     max_retries: usize,
+    qos: QosPolicy,
     state: Mutex<RouterState>,
 }
 
@@ -98,6 +181,9 @@ pub struct Cluster {
     /// `None` once a device has been drained via [`Cluster::stop_device`].
     servers: Vec<Option<Server>>,
     early_stats: Vec<Option<CoordinatorStats>>,
+    /// Devices killed via [`Cluster::fail_device`] (reported `Failed`,
+    /// not `Stopped`).
+    failed: Vec<bool>,
 }
 
 /// Cloneable client handle (safe to share across request threads).
@@ -144,12 +230,14 @@ impl Cluster {
             devices: endpoints,
             plan,
             max_retries: config.max_retries,
+            qos: config.qos,
             state: Mutex::new(RouterState {
                 last_topology: vec![None; n],
+                backlog_ms: vec![0.0; n],
                 totals: RouterTotals::default(),
             }),
         });
-        Ok(Cluster { shared, servers, early_stats: vec![None; n] })
+        Ok(Cluster { shared, servers, early_stats: vec![None; n], failed: vec![false; n] })
     }
 
     pub fn handle(&self) -> ClusterHandle {
@@ -177,6 +265,22 @@ impl Cluster {
         Some(stats)
     }
 
+    /// Simulate a device crash (chaos hook for the soak suite): the
+    /// worker is killed without a drain — queued work is dropped exactly
+    /// as a process death would drop it — and fleet reports flag the
+    /// device `Failed` rather than `Stopped`.  Routing bounces off the
+    /// closed ingress and fails over like it does for a full queue, so
+    /// accepted requests reroute instead of being lost.
+    pub fn fail_device(&mut self, id: usize) -> bool {
+        let Some(server) = self.servers.get_mut(id).and_then(|s| s.take()) else {
+            return false;
+        };
+        server.kill();
+        self.failed[id] = true;
+        self.shared.state.lock().unwrap().last_topology[id] = None;
+        true
+    }
+
     /// Live (pre-shutdown) fleet snapshot: per-device stats fetched from
     /// the running servers (each answers after its current serving
     /// round), merged with the router's current totals.  Lets operators
@@ -195,9 +299,14 @@ impl Cluster {
         let pending: Vec<Option<std::sync::mpsc::Receiver<CoordinatorStats>>> = self
             .servers
             .iter()
-            .map(|server| match server {
+            .enumerate()
+            .map(|(i, server)| match server {
                 None => {
-                    health.push(DeviceHealth::Stopped);
+                    health.push(if self.failed[i] {
+                        DeviceHealth::Failed
+                    } else {
+                        DeviceHealth::Stopped
+                    });
                     None
                 }
                 Some(s) => match s.handle().request_stats() {
@@ -250,7 +359,11 @@ impl Cluster {
                     s.shutdown()
                 }
                 None => {
-                    health.push(DeviceHealth::Stopped);
+                    health.push(if self.failed[i] {
+                        DeviceHealth::Failed
+                    } else {
+                        DeviceHealth::Stopped
+                    });
                     self.early_stats[i].take().unwrap_or_default()
                 }
             };
@@ -283,51 +396,196 @@ pub fn order_candidates(mut views: Vec<CandidateView>) -> Vec<usize> {
     views.into_iter().map(|v| v.id).collect()
 }
 
+/// One candidate's slack-routing signals ([`QosPolicy::SlackEdf`]).
+#[derive(Clone, Debug)]
+pub struct SlackView {
+    pub id: usize,
+    /// Router last routed this topology here (no reprogramming needed).
+    pub hot: bool,
+    /// Position in the placement plan's preference list.
+    pub preference: usize,
+    /// Modeled completion time if dispatched now (virtual-clock ms).
+    pub est_completion_ms: f64,
+    /// `deadline − est_completion` (+∞ when the request has no
+    /// deadline).
+    pub slack_ms: f64,
+}
+
+/// Order slack-aware candidates best-first: devices that meet the
+/// deadline come first (hot, then planned, then earliest completion
+/// among them), then the provably-late ones by least lateness; id
+/// breaks every tie (determinism).  Pure — unit-tested directly.
+pub fn order_candidates_by_slack(mut views: Vec<SlackView>) -> Vec<usize> {
+    use std::cmp::Ordering;
+    views.sort_by(|a, b| {
+        let fa = a.slack_ms >= 0.0;
+        let fb = b.slack_ms >= 0.0;
+        let key = fb.cmp(&fa).then_with(|| {
+            if fa && fb {
+                (!a.hot)
+                    .cmp(&!b.hot)
+                    .then(a.preference.cmp(&b.preference))
+                    .then(
+                        a.est_completion_ms
+                            .partial_cmp(&b.est_completion_ms)
+                            .unwrap_or(Ordering::Equal),
+                    )
+            } else {
+                b.slack_ms.partial_cmp(&a.slack_ms).unwrap_or(Ordering::Equal)
+            }
+        });
+        key.then(a.id.cmp(&b.id))
+    });
+    views.into_iter().map(|v| v.id).collect()
+}
+
+/// QoS metadata peeled off a request before it is moved into dispatch.
+#[derive(Clone, Copy, Debug)]
+struct QosMeta {
+    priority: Priority,
+    arrival_ms: f64,
+    deadline_ms: Option<f64>,
+}
+
+impl QosMeta {
+    fn of(req: &Request) -> Self {
+        QosMeta {
+            priority: req.priority,
+            arrival_ms: req.arrival_ms,
+            deadline_ms: req.deadline_ms,
+        }
+    }
+}
+
 impl ClusterHandle {
     /// Serve one request, blocking until the response: routes to a
     /// single device when possible, transparently head-shards otherwise.
+    /// A shed request (QoS policies only) surfaces as an error here; use
+    /// [`Self::call_qos`] to observe shedding as a typed outcome.
     pub fn call(&self, req: Request) -> Result<ClusterResponse> {
-        let topo = req.topology.clone();
-        if self.shared.devices.iter().any(|d| d.spec.admits(&topo)) {
-            let (resp, dev) = self.call_single(req, None)?;
-            let gops = resp.gops;
-            let mut st = self.shared.state.lock().unwrap();
-            st.totals.completed += 1;
-            drop(st);
-            return Ok(ClusterResponse {
-                id: resp.id,
-                topology: topo,
-                output: resp.output,
-                fabric_ms: resp.fabric_ms,
-                gops,
-                reprogrammed: resp.reprogrammed,
-                devices: vec![dev],
-                sharded: false,
-            });
-        }
-        let shard = self
-            .shared
-            .plan
-            .placement(&topo)
-            .and_then(|p| p.shard.clone())
-            .or_else(|| ShardPlan::plan(&topo));
-        match shard {
-            Some(s) if self.shared.devices.iter().any(|d| d.spec.admits(&s.half)) => {
-                self.call_sharded(req, s)
-            }
-            _ => {
-                self.shared.state.lock().unwrap().totals.rejected += 1;
-                bail!(
-                    "no device admits topology {topo} and no head-shard of it is servable"
-                );
-            }
+        match self.call_qos(req)? {
+            QosOutcome::Served(resp) => Ok(resp),
+            QosOutcome::Shed(s) => bail!(
+                "request {} shed: deadline {:.3} ms unreachable (best completion {:.3} ms)",
+                s.id,
+                s.deadline_ms,
+                s.predicted_completion_ms
+            ),
         }
     }
 
-    /// Rank admitting devices for `topo`, best first.
-    fn rank(&self, topo: &Topology, exclude: Option<usize>) -> Vec<usize> {
+    /// Serve one request with an explicit QoS outcome: `Served` with the
+    /// response, or `Shed` when the request is `Low` priority and no
+    /// admitting device can meet its deadline under the backlog model
+    /// (`QosPolicy::SlackEdf` only — `Affinity` never sheds).
+    pub fn call_qos(&self, req: Request) -> Result<QosOutcome> {
+        let topo = req.topology.clone();
+        let meta = QosMeta::of(&req);
+        let single = self.shared.devices.iter().any(|d| d.spec.admits(&topo));
+        let shard = if single {
+            None
+        } else {
+            self.shared
+                .plan
+                .placement(&topo)
+                .and_then(|p| p.shard.clone())
+                .or_else(|| ShardPlan::plan(&topo))
+                .filter(|s| self.shared.devices.iter().any(|d| d.spec.admits(&s.half)))
+        };
+        if !single && shard.is_none() {
+            self.shared.state.lock().unwrap().totals.rejected += 1;
+            bail!("no device admits topology {topo} and no head-shard of it is servable");
+        }
+        // Shed check: a Low request whose deadline no admitting device
+        // can meet is rejected explicitly instead of queued to die.
+        if self.shared.qos == QosPolicy::SlackEdf && meta.priority == Priority::Low {
+            if let Some(deadline) = meta.deadline_ms {
+                let check = shard.as_ref().map(|s| &s.half).unwrap_or(&topo);
+                if let Some(best) = self.best_completion_ms(check, meta.arrival_ms) {
+                    if best > deadline {
+                        let mut st = self.shared.state.lock().unwrap();
+                        st.totals.slo.record_shed(meta.priority);
+                        drop(st);
+                        return Ok(QosOutcome::Shed(ShedNotice {
+                            id: req.id,
+                            priority: meta.priority,
+                            deadline_ms: deadline,
+                            predicted_completion_ms: best,
+                        }));
+                    }
+                }
+            }
+        }
+        let resp = match shard {
+            None => {
+                let (resp, dev, done) = self.call_single(req, None)?;
+                let gops = resp.gops;
+                let missed = meta.deadline_ms.map(|dl| done > dl);
+                let mut st = self.shared.state.lock().unwrap();
+                st.totals.completed += 1;
+                st.totals.slo.record_completion(meta.priority, done - meta.arrival_ms, missed);
+                drop(st);
+                ClusterResponse {
+                    id: resp.id,
+                    topology: topo,
+                    output: resp.output,
+                    fabric_ms: resp.fabric_ms,
+                    gops,
+                    reprogrammed: resp.reprogrammed,
+                    devices: vec![dev],
+                    sharded: false,
+                    priority: meta.priority,
+                    deadline_ms: meta.deadline_ms,
+                    completed_ms: done,
+                    deadline_missed: missed.unwrap_or(false),
+                }
+            }
+            Some(s) => self.call_sharded(req, s, &meta)?,
+        };
+        Ok(QosOutcome::Served(resp))
+    }
+
+    /// Best modeled completion over admitting devices for `topo` (None
+    /// when nothing admits it): the shed test's "provably late" bound.
+    fn best_completion_ms(&self, topo: &Topology, arrival_ms: f64) -> Option<f64> {
+        let st = self.shared.state.lock().unwrap();
+        self.shared
+            .devices
+            .iter()
+            .filter(|d| d.spec.admits(topo))
+            .map(|d| st.backlog_ms[d.spec.id].max(arrival_ms) + d.spec.predicted_ms(topo))
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// Rank admitting devices for `topo`, best first.  Under
+    /// `SlackEdf` the ordering is slack-aware (deadline-feasible
+    /// devices first, by modeled completion); under `Affinity` it is
+    /// the PR-1 hot/planned/least-loaded order.
+    fn rank(&self, topo: &Topology, exclude: Option<usize>, qos: Option<&QosMeta>) -> Vec<usize> {
         let preferred = preferred_devices(&self.shared.plan, topo);
         let st = self.shared.state.lock().unwrap();
+        let position = |id: usize| preferred.iter().position(|&p| p == id).unwrap_or(usize::MAX);
+        if let (QosPolicy::SlackEdf, Some(meta)) = (self.shared.qos, qos) {
+            let views: Vec<SlackView> = self
+                .shared
+                .devices
+                .iter()
+                .filter(|d| Some(d.spec.id) != exclude && d.spec.admits(topo))
+                .map(|d| {
+                    let est = st.backlog_ms[d.spec.id].max(meta.arrival_ms)
+                        + d.spec.predicted_ms(topo);
+                    SlackView {
+                        id: d.spec.id,
+                        hot: st.last_topology[d.spec.id].as_ref() == Some(topo),
+                        preference: position(d.spec.id),
+                        est_completion_ms: est,
+                        slack_ms: meta.deadline_ms.map_or(f64::INFINITY, |dl| dl - est),
+                    }
+                })
+                .collect();
+            drop(st);
+            return order_candidates_by_slack(views);
+        }
         let views: Vec<CandidateView> = self
             .shared
             .devices
@@ -336,10 +594,7 @@ impl ClusterHandle {
             .map(|d| CandidateView {
                 id: d.spec.id,
                 hot: st.last_topology[d.spec.id].as_ref() == Some(topo),
-                preference: preferred
-                    .iter()
-                    .position(|&p| p == d.spec.id)
-                    .unwrap_or(usize::MAX),
+                preference: position(d.spec.id),
                 pending: d.handle.pending(),
             })
             .collect();
@@ -348,12 +603,15 @@ impl ClusterHandle {
     }
 
     /// Route one single-device request with backpressure failover.
-    fn call_single(&self, req: Request, exclude: Option<usize>) -> Result<(Response, usize)> {
+    /// Returns the response, the serving device, and the modeled
+    /// completion time on the virtual clock.
+    fn call_single(&self, req: Request, exclude: Option<usize>) -> Result<(Response, usize, f64)> {
         let topo = req.topology.clone();
-        let mut candidates = self.rank(&topo, exclude);
+        let meta = QosMeta::of(&req);
+        let mut candidates = self.rank(&topo, exclude, Some(&meta));
         if candidates.is_empty() {
             // Exclusion left nothing; fall back to the full fleet.
-            candidates = self.rank(&topo, None);
+            candidates = self.rank(&topo, None, Some(&meta));
         }
         if candidates.is_empty() {
             self.shared.state.lock().unwrap().totals.rejected += 1;
@@ -379,11 +637,11 @@ impl ClusterHandle {
                     .handle
                     .call_blocking(req)
                     .map_err(|e| anyhow!("device {dev}: {e}"))?;
-                return Ok(self.record(resp, dev, &topo));
+                return Ok(self.record(resp, dev, &topo, &meta));
             }
             let dev = candidates[idx % candidates.len()];
             match self.shared.devices[dev].handle.try_call(req) {
-                Ok(resp) => return Ok(self.record(resp, dev, &topo)),
+                Ok(resp) => return Ok(self.record(resp, dev, &topo, &meta)),
                 Err(SubmitError::Busy(returned)) => {
                     req = returned;
                     bounces += 1;
@@ -399,26 +657,36 @@ impl ClusterHandle {
     }
 
     /// Two half-requests on (preferably) two devices, concat on the host.
-    fn call_sharded(&self, req: Request, shard: ShardPlan) -> Result<ClusterResponse> {
+    fn call_sharded(
+        &self,
+        req: Request,
+        shard: ShardPlan,
+        meta: &QosMeta,
+    ) -> Result<ClusterResponse> {
         let (lo, hi) = shard.split_inputs(&req.inputs)?;
-        let req_lo = Request { id: req.id, topology: shard.half.clone(), inputs: lo };
-        let req_hi = Request { id: req.id, topology: shard.half.clone(), inputs: hi };
+        let req_lo = Request::new(req.id, shard.half.clone(), lo)
+            .with_qos(req.priority, req.arrival_ms, req.deadline_ms);
+        let req_hi = Request::new(req.id, shard.half.clone(), hi)
+            .with_qos(req.priority, req.arrival_ms, req.deadline_ms);
         // Steer the high half away from the low half's likely device so
         // the halves actually run concurrently when the fleet allows.
-        let low_primary = self.rank(&shard.half, None).first().copied();
+        let low_primary = self.rank(&shard.half, None, Some(meta)).first().copied();
         let other = self.clone();
         let hi_worker = std::thread::spawn(move || other.call_single(req_hi, low_primary));
         let lo_result = self.call_single(req_lo, None);
         let hi_result =
             hi_worker.join().map_err(|_| anyhow!("shard worker thread panicked"))?;
-        let (lo_resp, lo_dev) = lo_result?;
-        let (hi_resp, hi_dev) = hi_result?;
+        let (lo_resp, lo_dev, lo_done) = lo_result?;
+        let (hi_resp, hi_dev, hi_done) = hi_result?;
         let output = shard.concat_outputs(&lo_resp.output, &hi_resp.output)?;
         let fabric_ms = lo_resp.fabric_ms.max(hi_resp.fabric_ms);
         let gop = 2.0 * OpCount::paper_convention(&shard.half);
+        let done = lo_done.max(hi_done);
+        let missed = meta.deadline_ms.map(|dl| done > dl);
         let mut st = self.shared.state.lock().unwrap();
         st.totals.completed += 1;
         st.totals.sharded += 1;
+        st.totals.slo.record_completion(meta.priority, done - meta.arrival_ms, missed);
         drop(st);
         Ok(ClusterResponse {
             id: req.id,
@@ -429,11 +697,23 @@ impl ClusterHandle {
             reprogrammed: lo_resp.reprogrammed || hi_resp.reprogrammed,
             devices: vec![lo_dev, hi_dev],
             sharded: true,
+            priority: meta.priority,
+            deadline_ms: meta.deadline_ms,
+            completed_ms: done,
+            deadline_missed: missed.unwrap_or(false),
         })
     }
 
-    /// Book-keeping after a device served a (sub-)request.
-    fn record(&self, resp: Response, dev: usize, topo: &Topology) -> (Response, usize) {
+    /// Book-keeping after a device served a (sub-)request: affinity
+    /// counters, the device's programmed-topology memory, and the
+    /// backlog-model advance that yields the modeled completion time.
+    fn record(
+        &self,
+        resp: Response,
+        dev: usize,
+        topo: &Topology,
+        meta: &QosMeta,
+    ) -> (Response, usize, f64) {
         let preferred = preferred_devices(&self.shared.plan, topo);
         let mut st = self.shared.state.lock().unwrap();
         let hot = st.last_topology[dev].as_ref() == Some(topo);
@@ -445,7 +725,9 @@ impl ClusterHandle {
         }
         st.last_topology[dev] = Some(topo.clone());
         st.totals.total_gop += OpCount::paper_convention(topo);
-        (resp, dev)
+        let done = st.backlog_ms[dev].max(meta.arrival_ms) + resp.fabric_ms;
+        st.backlog_ms[dev] = done;
+        (resp, dev, done)
     }
 }
 
@@ -471,7 +753,7 @@ mod tests {
     use crate::testdata::MhaInputs;
 
     fn req(id: u64, topo: &Topology) -> Request {
-        Request { id, topology: topo.clone(), inputs: MhaInputs::generate(topo) }
+        Request::new(id, topo.clone(), MhaInputs::generate(topo))
     }
 
     fn two_u55c(workload: &[Topology]) -> Cluster {
@@ -554,7 +836,9 @@ mod tests {
         let cluster = two_u55c(std::slice::from_ref(&large));
         let h = cluster.handle();
         let inputs = MhaInputs::generate(&large);
-        let resp = h.call(Request { id: 7, topology: large.clone(), inputs: inputs.clone() }).unwrap();
+        let resp = h
+            .call(Request::new(7, large.clone(), inputs.clone()))
+            .unwrap();
         assert!(resp.sharded);
         assert_eq!(resp.devices.len(), 2);
         assert_ne!(resp.devices[0], resp.devices[1], "halves should use both devices");
@@ -614,6 +898,162 @@ mod tests {
         let fleet = cluster.shutdown();
         assert_eq!(fleet.totals.rejected, 1);
         assert_eq!(fleet.totals.completed, 0);
+    }
+
+    #[test]
+    fn slack_order_prefers_feasible_then_hot_then_earliest() {
+        let v = |id, hot, preference, est, slack| SlackView {
+            id,
+            hot,
+            preference,
+            est_completion_ms: est,
+            slack_ms: slack,
+        };
+        // A feasible cold device beats an infeasible hot one.
+        assert_eq!(
+            order_candidates_by_slack(vec![
+                v(0, true, 0, 9.0, -1.0),
+                v(1, false, usize::MAX, 3.0, 2.0),
+            ]),
+            vec![1, 0]
+        );
+        // Among feasible devices: hot first, then plan, then earliest
+        // modeled completion.
+        assert_eq!(
+            order_candidates_by_slack(vec![
+                v(0, false, 0, 1.0, 5.0),
+                v(1, true, usize::MAX, 4.0, 2.0),
+                v(2, false, 0, 0.5, 5.5),
+            ]),
+            vec![1, 2, 0]
+        );
+        // All infeasible: least-late first.
+        assert_eq!(
+            order_candidates_by_slack(vec![
+                v(0, true, 0, 9.0, -5.0),
+                v(1, false, 1, 7.0, -3.0),
+            ]),
+            vec![1, 0]
+        );
+    }
+
+    fn qos_two_u55c(workload: &[Topology]) -> Cluster {
+        Cluster::start(
+            vec![DeviceSpec::u55c(0), DeviceSpec::u55c(1)],
+            &WorkloadProfile::uniform(workload),
+            ClusterConfig::qos(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn qos_completions_track_backlog_and_deadlines() {
+        let t = Topology::new(64, 768, 8, 64);
+        let cluster = qos_two_u55c(std::slice::from_ref(&t));
+        let h = cluster.handle();
+        let ms = DeviceSpec::u55c(0).predicted_ms(&t);
+        // Two same-arrival requests with a deadline only one device-slot
+        // can meet: slack routing puts them on different devices, so
+        // both meet it (affinity routing would stack them on one).
+        let deadline = Some(1.5 * ms);
+        let r1 = h
+            .call_qos(req(1, &t).with_qos(Priority::High, 0.0, deadline))
+            .unwrap()
+            .served()
+            .unwrap();
+        let r2 = h
+            .call_qos(req(2, &t).with_qos(Priority::High, 0.0, deadline))
+            .unwrap()
+            .served()
+            .unwrap();
+        assert!(!r1.deadline_missed && !r2.deadline_missed, "{r1:?} {r2:?}");
+        assert_ne!(r1.devices, r2.devices, "slack routing must spread infeasible load");
+        assert!((r1.completed_ms - ms).abs() < 1e-9);
+        // A third request at t=0 now finds both devices backlogged: it
+        // completes at 2·ms and misses the same deadline.
+        let r3 = h
+            .call_qos(req(3, &t).with_qos(Priority::High, 0.0, deadline))
+            .unwrap()
+            .served()
+            .unwrap();
+        assert!(r3.deadline_missed, "{r3:?}");
+        assert!((r3.completed_ms - 2.0 * ms).abs() < 1e-9);
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.slo.met[Priority::High.index()], 2);
+        assert_eq!(fleet.totals.slo.missed[Priority::High.index()], 1);
+        assert!(fleet.render().contains("QoS"));
+    }
+
+    #[test]
+    fn provably_late_low_priority_is_shed_not_queued() {
+        let t = Topology::new(64, 768, 8, 64);
+        let one = |topos: &[Topology]| {
+            Cluster::start(
+                vec![DeviceSpec::u55c(0)],
+                &WorkloadProfile::uniform(topos),
+                ClusterConfig::qos(),
+            )
+            .unwrap()
+        };
+        let cluster = one(std::slice::from_ref(&t));
+        let h = cluster.handle();
+        let ms = DeviceSpec::u55c(0).predicted_ms(&t);
+        // Fill the lone device's modeled backlog past the deadline.
+        for i in 0..4u64 {
+            h.call(req(i, &t)).unwrap();
+        }
+        let out = h
+            .call_qos(req(9, &t).with_qos(Priority::Low, 0.0, Some(1.5 * ms)))
+            .unwrap();
+        match out {
+            QosOutcome::Shed(n) => {
+                assert_eq!(n.id, 9);
+                assert_eq!(n.priority, Priority::Low);
+                assert!(n.predicted_completion_ms > n.deadline_ms);
+            }
+            QosOutcome::Served(r) => panic!("expected shed, served: {r:?}"),
+        }
+        // High priority is never shed — it runs late instead.
+        let r = h
+            .call_qos(req(10, &t).with_qos(Priority::High, 0.0, Some(1.5 * ms)))
+            .unwrap()
+            .served()
+            .expect("high priority must be served");
+        assert!(r.deadline_missed);
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.slo.shed[Priority::Low.index()], 1);
+        assert_eq!(fleet.totals.completed, 5, "shed request never dispatched");
+        // call() surfaces a shed as an error mentioning the deadline.
+        let cluster2 = one(std::slice::from_ref(&t));
+        let h2 = cluster2.handle();
+        h2.call(req(0, &t)).unwrap();
+        let err = h2.call(req(9, &t).with_qos(Priority::Low, 0.0, Some(0.1))).unwrap_err();
+        assert!(err.to_string().contains("shed"), "{err}");
+        cluster2.shutdown();
+    }
+
+    #[test]
+    fn failed_device_flagged_and_rerouted() {
+        let t = Topology::new(64, 768, 8, 64);
+        let mut cluster = two_u55c(std::slice::from_ref(&t));
+        let h = cluster.handle();
+        let first = h.call(req(0, &t)).unwrap();
+        let dead = first.devices[0];
+        assert!(cluster.fail_device(dead));
+        assert!(!cluster.fail_device(dead), "double-fail is a no-op");
+        // Requests keep flowing: the router bounces off the dead ingress.
+        for i in 1..4u64 {
+            let resp = h.call(req(i, &t)).unwrap();
+            assert_ne!(resp.devices[0], dead, "routed to the dead device");
+        }
+        let snap = cluster.fleet_snapshot();
+        assert_eq!(snap.devices[dead].health, DeviceHealth::Failed);
+        assert_eq!(snap.failed_devices(), 1);
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.devices[dead].health, DeviceHealth::Failed);
+        assert_eq!(fleet.totals.completed, 4);
+        assert!(fleet.totals.retries >= 1, "failover goes through the bounce path");
+        assert!(fleet.render().contains("FAILED"));
     }
 
     #[test]

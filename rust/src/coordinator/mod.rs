@@ -30,7 +30,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use model_desc::ModelDescriptor;
-pub use scheduler::{BatchPolicy, Request, Scheduler, SchedulerConfig};
+pub use scheduler::{BatchPolicy, Priority, Request, Scheduler, SchedulerConfig};
 pub use server::{Server, ServerConfig, ServerHandle, SubmitError};
 
 use crate::accel::FamousAccelerator;
@@ -43,6 +43,8 @@ use anyhow::Result;
 pub struct Response {
     pub id: u64,
     pub topology: Topology,
+    /// QoS class the request carried (echoed for per-class accounting).
+    pub priority: Priority,
     pub output: Vec<f32>,
     /// Modeled fabric latency of the invocation that served this request.
     pub fabric_ms: f64,
@@ -140,6 +142,7 @@ impl Coordinator {
             responses.push(Response {
                 id: req.id,
                 topology: req.topology,
+                priority: req.priority,
                 output: report.output,
                 fabric_ms: report.latency_ms,
                 gops: report.gops,
@@ -181,7 +184,7 @@ mod tests {
 
     fn req(id: u64, topo: Topology) -> Request {
         let inputs = MhaInputs::generate(&topo);
-        Request { id, topology: topo, inputs }
+        Request::new(id, topo, inputs)
     }
 
     #[test]

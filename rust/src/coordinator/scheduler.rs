@@ -6,10 +6,57 @@
 //! BRAM.  The scheduler therefore groups same-topology requests into
 //! batches, bounded by `max_batch` and by a fairness window so a steady
 //! stream of one topology cannot starve others indefinitely.
+//!
+//! With QoS serving (DESIGN.md §11) requests additionally carry a
+//! [`Priority`] class and an optional deadline on the serving layer's
+//! *virtual clock* (modeled milliseconds, like every latency in this
+//! repository).  [`BatchPolicy::EdfWithinWindow`] anchors each batch on
+//! the most urgent request inside the fairness window — priority class
+//! first, earliest deadline within a class — while keeping both the
+//! topology-grouping and the bounded-reordering guarantees: nothing
+//! beyond the window ever jumps the line, and an aging counter forces
+//! the queue head to anchor a batch after at most `fairness_window`
+//! consecutive pass-overs, so sustained urgent load degrades to FIFO
+//! instead of starving best-effort traffic.
 
 use crate::config::Topology;
 use crate::testdata::MhaInputs;
 use std::collections::VecDeque;
+
+/// Request QoS class.  Declaration order is scheduling order (`High`
+/// ranks before `Normal` before `Low` under the derived `Ord`);
+/// [`Priority::index`] is the per-class slot in the fleet's SLO arrays.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-critical traffic; never shed.
+    High,
+    /// The default class for callers that do not speak QoS.
+    #[default]
+    Normal,
+    /// Background traffic; may be shed when provably late.
+    Low,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    /// Dense index for per-class metric arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -17,6 +64,52 @@ pub struct Request {
     pub id: u64,
     pub topology: Topology,
     pub inputs: MhaInputs,
+    /// QoS class: scheduling weight; `Low` may be shed when provably
+    /// late (cluster router, DESIGN.md §11).
+    pub priority: Priority,
+    /// Arrival time on the serving layer's virtual clock, in modeled
+    /// ms (0 for closed-loop callers that do not track arrivals).
+    pub arrival_ms: f64,
+    /// Absolute deadline on the same clock; `None` = best effort.
+    pub deadline_ms: Option<f64>,
+}
+
+impl Request {
+    /// A best-effort request: `Normal` priority, no deadline, virtual
+    /// arrival at t = 0.
+    pub fn new(id: u64, topology: Topology, inputs: MhaInputs) -> Self {
+        Request {
+            id,
+            topology,
+            inputs,
+            priority: Priority::Normal,
+            arrival_ms: 0.0,
+            deadline_ms: None,
+        }
+    }
+
+    /// Attach QoS metadata (builder style).
+    pub fn with_qos(
+        mut self,
+        priority: Priority,
+        arrival_ms: f64,
+        deadline_ms: Option<f64>,
+    ) -> Self {
+        self.priority = priority;
+        self.arrival_ms = arrival_ms;
+        self.deadline_ms = deadline_ms;
+        self
+    }
+
+    /// Urgency ordering used by [`BatchPolicy::EdfWithinWindow`]:
+    /// priority class first, then earliest deadline within a class (no
+    /// deadline sorts last); queue position breaks remaining ties.
+    pub fn edf_before(&self, other: &Request) -> bool {
+        if self.priority != other.priority {
+            return self.priority < other.priority;
+        }
+        self.deadline_ms.unwrap_or(f64::INFINITY) < other.deadline_ms.unwrap_or(f64::INFINITY)
+    }
 }
 
 /// Batch formation policy.
@@ -27,6 +120,13 @@ pub enum BatchPolicy {
     /// Pull all queued requests matching the head's topology (up to
     /// max_batch), skipping over others — minimizes reconfigurations.
     GroupByTopology,
+    /// Earliest-deadline-first within the fairness window: each batch
+    /// anchors on the most urgent request among the first
+    /// `fairness_window` queue positions (priority class, then
+    /// deadline), then groups same-topology requests exactly like
+    /// `GroupByTopology`.  The queue head is force-anchored after
+    /// `fairness_window` consecutive pass-overs (no starvation).
+    EdfWithinWindow,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -48,6 +148,10 @@ impl Default for SchedulerConfig {
 pub struct Scheduler {
     pub config: SchedulerConfig,
     queue: VecDeque<Request>,
+    /// EDF aging: the head id when the last batch formed, and how many
+    /// consecutive batches it has been passed over as anchor.
+    last_head: Option<u64>,
+    head_skips: usize,
 }
 
 impl Scheduler {
@@ -57,7 +161,7 @@ impl Scheduler {
         // could then return an empty batch and serving would never
         // progress.  Window ≥ 1 guarantees the head is always served.
         assert!(config.fairness_window > 0, "fairness_window must be ≥ 1");
-        Scheduler { config, queue: VecDeque::new() }
+        Scheduler { config, queue: VecDeque::new(), last_head: None, head_skips: 0 }
     }
 
     pub fn push(&mut self, req: Request) {
@@ -72,12 +176,17 @@ impl Scheduler {
         self.queue.is_empty()
     }
 
+    /// The request currently at the queue head (next to age out).
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
     /// Form the next batch (non-empty, all same topology), or None.
     pub fn next_batch(&mut self) -> Option<Vec<Request>> {
         let head = self.queue.front()?.topology.clone();
-        let mut batch = Vec::new();
-        match self.config.policy {
+        let batch = match self.config.policy {
             BatchPolicy::Fifo => {
+                let mut batch = Vec::new();
                 while batch.len() < self.config.max_batch {
                     match self.queue.front() {
                         Some(r) if r.topology == head => {
@@ -86,27 +195,74 @@ impl Scheduler {
                         _ => break,
                     }
                 }
+                batch
             }
-            BatchPolicy::GroupByTopology => {
-                let window = self.config.fairness_window.min(self.queue.len());
-                let mut kept = VecDeque::with_capacity(self.queue.len());
-                let mut scanned = 0;
-                while let Some(r) = self.queue.pop_front() {
-                    if batch.len() < self.config.max_batch
-                        && scanned < window
-                        && r.topology == head
-                    {
-                        batch.push(r);
-                    } else {
-                        kept.push_back(r);
-                    }
-                    scanned += 1;
-                }
-                self.queue = kept;
+            BatchPolicy::GroupByTopology => self.pull_group(&head, None),
+            BatchPolicy::EdfWithinWindow => {
+                let anchor = self.edf_anchor();
+                let topo = self.queue[anchor].topology.clone();
+                self.pull_group(&topo, Some(anchor))
             }
-        }
+        };
         debug_assert!(!batch.is_empty());
         Some(batch)
+    }
+
+    /// Pick the EDF anchor position within the fairness window, with
+    /// aging: once the same head request has been passed over
+    /// `fairness_window` consecutive times it anchors the next batch
+    /// unconditionally, so bounded reordering degrades to FIFO under
+    /// sustained urgent load instead of starving the head.
+    fn edf_anchor(&mut self) -> usize {
+        let head_id = self.queue.front().map(|r| r.id);
+        if self.last_head != head_id {
+            self.last_head = head_id;
+            self.head_skips = 0;
+        }
+        let window = self.config.fairness_window.min(self.queue.len());
+        let mut anchor = 0;
+        if self.head_skips < self.config.fairness_window {
+            for i in 1..window {
+                if self.queue[i].edf_before(&self.queue[anchor]) {
+                    anchor = i;
+                }
+            }
+        }
+        if anchor == 0 {
+            self.head_skips = 0;
+        } else {
+            self.head_skips += 1;
+        }
+        anchor
+    }
+
+    /// Pull up to `max_batch` requests matching `topo` from the first
+    /// `fairness_window` queue positions, preserving queue order.
+    /// `must_take` (a queue index whose topology is `topo`) is always
+    /// included: when the position-ordered matches would fill the batch
+    /// before reaching it, it takes the final slot.
+    fn pull_group(&mut self, topo: &Topology, must_take: Option<usize>) -> Vec<Request> {
+        let window = self.config.fairness_window.min(self.queue.len());
+        let mut take: Vec<usize> = (0..window)
+            .filter(|&i| self.queue[i].topology == *topo)
+            .take(self.config.max_batch)
+            .collect();
+        if let Some(m) = must_take {
+            if !take.contains(&m) {
+                take.pop();
+                take.push(m);
+            }
+        }
+        let mut batch = Vec::with_capacity(take.len());
+        let old = std::mem::take(&mut self.queue);
+        for (i, r) in old.into_iter().enumerate() {
+            if take.contains(&i) {
+                batch.push(r);
+            } else {
+                self.queue.push_back(r);
+            }
+        }
+        batch
     }
 
     /// Number of topology switches an oracle batcher would need for the
@@ -130,10 +286,10 @@ mod tests {
     fn req(id: u64, sl: usize) -> Request {
         let topo = Topology::new(sl, 768, 8, 64);
         // Tiny placeholder operands: scheduler tests don't execute them.
-        Request {
+        Request::new(
             id,
-            topology: topo,
-            inputs: MhaInputs {
+            topo,
+            MhaInputs {
                 x: vec![],
                 wq: vec![],
                 wk: vec![],
@@ -142,7 +298,11 @@ mod tests {
                 bk: vec![],
                 bv: vec![],
             },
-        }
+        )
+    }
+
+    fn qreq(id: u64, sl: usize, priority: Priority, deadline_ms: Option<f64>) -> Request {
+        req(id, sl).with_qos(priority, 0.0, deadline_ms)
     }
 
     #[test]
@@ -204,7 +364,131 @@ mod tests {
         assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
     }
 
+    #[test]
+    fn edf_anchors_most_urgent_within_window() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 8,
+            policy: BatchPolicy::EdfWithinWindow,
+            fairness_window: 8,
+        });
+        // Normal best-effort head, a Low with a deadline, then a High
+        // with a later deadline: priority class dominates, so the High
+        // anchors the first batch despite its looser deadline.
+        s.push(qreq(0, 64, Priority::Normal, None));
+        s.push(qreq(1, 32, Priority::Low, Some(50.0)));
+        s.push(qreq(2, 16, Priority::High, Some(200.0)));
+        let b1 = s.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        // Within a class, the earlier deadline wins.
+        let mut s2 = Scheduler::new(SchedulerConfig {
+            max_batch: 8,
+            policy: BatchPolicy::EdfWithinWindow,
+            fairness_window: 8,
+        });
+        s2.push(qreq(0, 64, Priority::Low, Some(100.0)));
+        s2.push(qreq(1, 32, Priority::Low, Some(10.0)));
+        let b2 = s2.next_batch().unwrap();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn edf_groups_anchor_topology_in_queue_order() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 8,
+            policy: BatchPolicy::EdfWithinWindow,
+            fairness_window: 8,
+        });
+        s.push(qreq(0, 64, Priority::Normal, None));
+        s.push(qreq(1, 32, Priority::Normal, Some(500.0)));
+        s.push(qreq(2, 32, Priority::High, Some(40.0)));
+        s.push(qreq(3, 64, Priority::Normal, None));
+        // Anchor is id 2 (High); the batch is every SL=32 request in the
+        // window, in queue order.
+        let b1 = s.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        let b2 = s.next_batch().unwrap();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
+    }
+
+    #[test]
+    fn edf_urgent_beyond_window_cannot_jump() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 8,
+            policy: BatchPolicy::EdfWithinWindow,
+            fairness_window: 2,
+        });
+        s.push(qreq(0, 64, Priority::Normal, None));
+        s.push(qreq(1, 64, Priority::Normal, None));
+        s.push(qreq(2, 32, Priority::High, Some(1.0))); // outside window
+        let b1 = s.next_batch().unwrap();
+        assert!(b1.iter().all(|r| r.id < 2), "{:?}", b1.iter().map(|r| r.id).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn edf_aging_forces_head_after_window_skips() {
+        let window = 3usize;
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 8,
+            policy: BatchPolicy::EdfWithinWindow,
+            fairness_window: window,
+        });
+        // A Low head under a sustained stream of urgent High requests
+        // (two fresh ones after every batch, keeping the window full of
+        // higher-urgency work): served within fairness_window+1 batches.
+        s.push(qreq(0, 64, Priority::Low, None));
+        let mut next_id = 1u64;
+        for _ in 0..2 {
+            s.push(qreq(next_id, 32, Priority::High, Some(next_id as f64)));
+            next_id += 1;
+        }
+        let mut batches_until_head = 0;
+        loop {
+            let batch = s.next_batch().unwrap();
+            batches_until_head += 1;
+            if batch.iter().any(|r| r.id == 0) {
+                break;
+            }
+            for _ in 0..2 {
+                s.push(qreq(next_id, 32, Priority::High, Some(next_id as f64)));
+                next_id += 1;
+            }
+            assert!(batches_until_head < 20, "head starved");
+        }
+        assert!(
+            batches_until_head <= window + 1,
+            "head served after {batches_until_head} batches (window {window})"
+        );
+    }
+
+    #[test]
+    fn edf_anchor_beyond_max_batch_matches_still_served() {
+        // Four SL=32 requests ahead of the urgent one, max_batch 2: the
+        // urgent anchor must claim the final slot rather than drop out.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 2,
+            policy: BatchPolicy::EdfWithinWindow,
+            fairness_window: 8,
+        });
+        for i in 0..4 {
+            s.push(qreq(i, 32, Priority::Normal, None));
+        }
+        s.push(qreq(4, 32, Priority::High, Some(5.0)));
+        let b1 = s.next_batch().unwrap();
+        assert!(b1.iter().any(|r| r.id == 4), "{:?}", b1.iter().map(|r| r.id).collect::<Vec<_>>());
+        assert_eq!(b1.len(), 2);
+    }
+
     // ---- property tests (proptest_lite) ---------------------------------
+
+    fn any_policy(g: &mut Gen) -> BatchPolicy {
+        *g.pick(&[BatchPolicy::Fifo, BatchPolicy::GroupByTopology, BatchPolicy::EdfWithinWindow])
+    }
+
+    fn any_qos(g: &mut Gen, req: Request) -> Request {
+        let priority = *g.pick(&Priority::ALL);
+        let deadline = if g.bool() { Some(g.f64_in(0.0, 100.0)) } else { None };
+        req.with_qos(priority, 0.0, deadline)
+    }
 
     #[test]
     fn prop_no_request_lost_or_duplicated() {
@@ -212,12 +496,13 @@ mod tests {
             let n = g.usize_in(0, 40);
             let mut s = Scheduler::new(SchedulerConfig {
                 max_batch: g.usize_in(1, 8),
-                policy: if g.bool() { BatchPolicy::Fifo } else { BatchPolicy::GroupByTopology },
+                policy: any_policy(g),
                 fairness_window: g.usize_in(1, 16),
             });
             let sls = [16usize, 32, 64, 128];
             for i in 0..n {
-                s.push(req(i as u64, *g.pick(&sls)));
+                let r = req(i as u64, *g.pick(&sls));
+                s.push(any_qos(g, r));
             }
             let mut seen = Vec::new();
             while let Some(batch) = s.next_batch() {
@@ -228,6 +513,91 @@ mod tests {
             }
             seen.sort();
             assert_eq!(seen, (0..n as u64).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn prop_edf_reorders_only_within_fairness_window() {
+        // Bounded reordering holds for EDF exactly as for grouping: a
+        // batch may only contain ids from the first `window` positions.
+        run("edf bounded reordering", 300, |g: &mut Gen| {
+            let window = g.usize_in(1, 12);
+            let mut s = Scheduler::new(SchedulerConfig {
+                max_batch: g.usize_in(1, 10),
+                policy: BatchPolicy::EdfWithinWindow,
+                fairness_window: window,
+            });
+            let n = g.usize_in(1, 40);
+            let sls = [16usize, 32, 64, 128];
+            for i in 0..n {
+                let r = req(i as u64, *g.pick(&sls));
+                s.push(any_qos(g, r));
+            }
+            let mut front: Vec<u64> = (0..n as u64).collect();
+            while let Some(batch) = s.next_batch() {
+                let eligible = &front[..window.min(front.len())];
+                for r in &batch {
+                    assert!(
+                        eligible.contains(&r.id),
+                        "id {} pulled from beyond window {window}: {eligible:?}",
+                        r.id
+                    );
+                }
+                front.retain(|id| !batch.iter().any(|r| r.id == *id));
+            }
+            assert!(front.is_empty());
+        });
+    }
+
+    #[test]
+    fn prop_edf_head_wait_bounded_under_sustained_urgent_load() {
+        // Starvation-freedom for EDF (DESIGN.md §11): however urgent the
+        // traffic arriving behind it, the queue head is passed over at
+        // most `fairness_window` consecutive batches before the aging
+        // counter forces it to anchor.
+        run("edf head wait bound", 150, |g: &mut Gen| {
+            let window = g.usize_in(1, 8);
+            let mut s = Scheduler::new(SchedulerConfig {
+                max_batch: g.usize_in(1, 6),
+                policy: BatchPolicy::EdfWithinWindow,
+                fairness_window: window,
+            });
+            let sls = [16usize, 32, 64];
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(1, 10) {
+                let r = req(next_id, *g.pick(&sls));
+                s.push(any_qos(g, r));
+                next_id += 1;
+            }
+            let mut head = s.peek().map(|r| r.id);
+            let mut wait = 0usize;
+            let mut rounds = 0;
+            while let Some(batch) = s.next_batch() {
+                if batch.iter().any(|r| Some(r.id) == head) {
+                    wait = 0;
+                } else {
+                    wait += 1;
+                }
+                assert!(wait <= window, "head {head:?} waited {wait} > window {window}");
+                // Sustained load: urgent arrivals keep landing while the
+                // backlog drains (stop feeding after 30 rounds so the
+                // case terminates).
+                rounds += 1;
+                if rounds < 30 {
+                    for _ in 0..g.usize_in(0, 2) {
+                        s.push(
+                            req(next_id, *g.pick(&sls))
+                                .with_qos(Priority::High, 0.0, Some(g.f64_in(0.0, 5.0))),
+                        );
+                        next_id += 1;
+                    }
+                }
+                let new_head = s.peek().map(|r| r.id);
+                if new_head != head {
+                    head = new_head;
+                    wait = 0;
+                }
+            }
         });
     }
 

@@ -34,6 +34,9 @@ enum Msg {
     /// the caller observes every job submitted before it).
     Stats(mpsc::Sender<super::CoordinatorStats>),
     Shutdown,
+    /// Crash simulation ([`Server::kill`]): exit immediately, dropping
+    /// queued work without a reply — as a dying process would.
+    Die,
 }
 
 /// Why a non-blocking submission did not produce a response.
@@ -176,6 +179,12 @@ impl Server {
                     for m in msgs {
                         match m {
                             Msg::Shutdown => shutdown = true,
+                            Msg::Die => {
+                                // Abandon queued work and pending replies:
+                                // clients observe a dropped channel, the
+                                // router a closed ingress (it fails over).
+                                return coordinator.stats.clone();
+                            }
                             Msg::Stats(reply) => stats_waiters.push(reply),
                             Msg::Job(req, reply) => {
                                 let id = req.id;
@@ -234,6 +243,16 @@ impl Server {
         let _ = self.handle.tx.send(Msg::Shutdown);
         self.worker.take().expect("not yet shut down").join().expect("worker panicked")
     }
+
+    /// Kill the worker as a crash would: no drain, no final stats — any
+    /// queued request is dropped without a reply.  Chaos hook for the
+    /// cluster soak suite (`Cluster::fail_device`).
+    pub fn kill(mut self) {
+        let _ = self.handle.tx.send(Msg::Die);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -265,7 +284,7 @@ mod tests {
     fn req(id: u64, sl: usize) -> Request {
         let topo = Topology::new(sl, 768, 8, 64);
         let inputs = MhaInputs::generate(&topo);
-        Request { id, topology: topo, inputs }
+        Request::new(id, topo, inputs)
     }
 
     #[test]
@@ -347,6 +366,20 @@ mod tests {
         assert!(h.is_alive(), "serving does not close the ingress");
         srv.shutdown();
         assert!(!h.is_alive(), "worker exit closes the ingress");
+    }
+
+    #[test]
+    fn kill_closes_ingress_without_stats() {
+        let srv = server();
+        srv.handle().call(req(1, 64)).unwrap();
+        let h = srv.handle();
+        srv.kill();
+        assert!(!h.is_alive(), "killed worker must close the ingress");
+        // Subsequent submissions bounce (the router's failover signal).
+        match h.try_call(req(2, 64)) {
+            Err(SubmitError::Busy(r)) => assert_eq!(r.id, 2),
+            other => panic!("expected Busy bounce off a dead ingress, got {other:?}"),
+        }
     }
 
     #[test]

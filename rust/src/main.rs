@@ -4,7 +4,11 @@
 use famous::accel::FamousAccelerator;
 use famous::analytical::{LatencyModel, TABLE1};
 use famous::cli::Parser;
-use famous::cluster::{parse_fleet, Cluster, ClusterConfig, WorkloadProfile};
+use famous::cluster::loadgen::rate_for_utilization;
+use famous::cluster::{
+    parse_fleet, ArrivalProcess, Cluster, ClusterConfig, DeviceSpec, LoadGen, LoadGenConfig,
+    QosOutcome, QosPolicy, WorkloadProfile,
+};
 use famous::config::Topology;
 use famous::coordinator::{
     BatchPolicy, Coordinator, ModelDescriptor, Request, SchedulerConfig, Server, ServerConfig,
@@ -30,6 +34,10 @@ fn parser() -> Parser {
         .opt_default("requests", "32", "serve/cluster: number of synthetic requests")
         .opt_default("fleet", "u55c:2,u200:2", "cluster: device fleet, e.g. u55c:4")
         .opt_default("model", "", "serve: model descriptor JSON path")
+        .opt_default("arrivals", "bursty", "cluster --qos: arrival process (poisson | bursty)")
+        .opt_default("load", "0.9", "cluster --qos: offered load as a fraction of fleet capacity")
+        .opt_default("seed", "7", "cluster --qos: load generator seed")
+        .flag("qos", "cluster: QoS serving (loadgen arrivals, EDF+slack routing, SLO report)")
         .flag("sim-datapath", "use the rust int8 datapath instead of PJRT")
         .flag("double-buffer", "enable load/compute overlap in the tile loop")
 }
@@ -139,7 +147,7 @@ fn cmd_serve(args: &famous::cli::Args) -> anyhow::Result<()> {
         let topo = topos[i % topos.len()].clone();
         joins.push(std::thread::spawn(move || {
             let inputs = MhaInputs::generate(&topo);
-            h.call_blocking(Request { id: i as u64, topology: topo, inputs })
+            h.call_blocking(Request::new(i as u64, topo, inputs))
         }));
     }
     let mut ok = 0;
@@ -171,6 +179,9 @@ fn cmd_serve(args: &famous::cli::Args) -> anyhow::Result<()> {
 fn cmd_cluster(args: &famous::cli::Args) -> anyhow::Result<()> {
     let devices = parse_fleet(args.get_or("fleet", "u55c:2,u200:2"))?;
     let n: usize = args.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(32);
+    if args.flag("qos") {
+        return cmd_cluster_qos(args, devices, n);
+    }
     // The paper's flexibility mix, fleet-scale: BERT-base shapes at two
     // sequence lengths, a U200-friendly h=6 shape, and BERT-large —
     // whose d_model 1024 no single build admits, so it head-shards.
@@ -193,7 +204,7 @@ fn cmd_cluster(args: &famous::cli::Args) -> anyhow::Result<()> {
         let topo = workload[i % workload.len()].clone();
         joins.push(std::thread::spawn(move || {
             let inputs = MhaInputs::generate(&topo);
-            h.call(Request { id: i as u64, topology: topo, inputs })
+            h.call(Request::new(i as u64, topo, inputs))
         }));
     }
     let mut ok = 0;
@@ -206,6 +217,73 @@ fn cmd_cluster(args: &famous::cli::Args) -> anyhow::Result<()> {
     let fleet = cluster.shutdown();
     print!("{}", fleet.render());
     println!("served {ok}/{n} in {wall:.2}s wall ({:.1} req/s)", ok as f64 / wall);
+    Ok(())
+}
+
+/// `cluster --qos`: open-loop seeded arrivals with priority classes and
+/// deadlines, EDF+slack serving, SLO-annotated fleet report.
+fn cmd_cluster_qos(
+    args: &famous::cli::Args,
+    devices: Vec<DeviceSpec>,
+    n: usize,
+) -> anyhow::Result<()> {
+    let rho = args.get_f64("load").map_err(anyhow::Error::msg)?.unwrap_or(0.9);
+    let seed = args.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(7) as u64;
+    // Single-device-servable shapes only: the QoS backlog model tracks
+    // whole-device completions (sharded halves route per half).
+    let mix: Vec<(Topology, f64)> = vec![
+        (Topology::new(64, 768, 8, 64), 3.0),
+        (Topology::new(32, 768, 8, 64), 2.0),
+        (Topology::new(64, 512, 8, 64), 1.0),
+    ];
+    let rate_hz = rate_for_utilization(&devices, &mix, rho);
+    // The shared bursty preset (MMPP at rho, 4x/8x/12x deadline
+    // budgets); --arrivals poisson swaps in a flat process at the same
+    // offered rate.
+    let mut lg_config = LoadGenConfig::bursty_preset(&devices, mix.clone(), rho, seed);
+    match args.get_or("arrivals", "bursty") {
+        "bursty" => {}
+        "poisson" => lg_config.process = ArrivalProcess::Poisson { rate_hz },
+        other => anyhow::bail!("unknown arrival process '{other}' (poisson | bursty)"),
+    }
+    let arrivals = LoadGen::new(lg_config).generate_n(n);
+    let mut workload = WorkloadProfile::default();
+    for (t, share) in &mix {
+        workload.push(t.clone(), *share);
+    }
+    let cluster = Cluster::start(
+        devices,
+        &workload,
+        ClusterConfig {
+            scheduler: SchedulerConfig {
+                policy: BatchPolicy::EdfWithinWindow,
+                ..SchedulerConfig::default()
+            },
+            qos: QosPolicy::SlackEdf,
+            ..ClusterConfig::default()
+        },
+    )?;
+    println!(
+        "QoS fleet of {} devices; {} {} arrivals at {:.0} req/s (rho {:.2}, seed {seed})",
+        cluster.device_count(),
+        n,
+        args.get_or("arrivals", "bursty"),
+        rate_hz,
+        rho
+    );
+    let h = cluster.handle();
+    let t0 = std::time::Instant::now();
+    let (mut served, mut shed) = (0usize, 0usize);
+    for (i, a) in arrivals.iter().enumerate() {
+        match h.call_qos(a.materialize(i as u64))? {
+            QosOutcome::Served(_) => served += 1,
+            QosOutcome::Shed(_) => shed += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let fleet = cluster.shutdown();
+    print!("{}", fleet.render());
+    println!("served {served}, shed {shed} of {n} in {wall:.2}s wall");
     Ok(())
 }
 

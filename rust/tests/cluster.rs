@@ -33,7 +33,7 @@ fn four_device_cluster_acceptance() {
     let requests: Vec<Request> = (0..n)
         .map(|i| {
             let t = topos[i % topos.len()].clone();
-            Request { id: i as u64, topology: t.clone(), inputs: MhaInputs::generate(&t) }
+            Request::new(i as u64, t.clone(), MhaInputs::generate(&t))
         })
         .collect();
 
@@ -126,7 +126,7 @@ fn cluster_shards_bert_large_on_heterogeneous_fleet() {
 
     let inputs = MhaInputs::generate(&large);
     let resp =
-        h.call(Request { id: 1, topology: large.clone(), inputs: inputs.clone() }).unwrap();
+        h.call(Request::new(1, large.clone(), inputs.clone())).unwrap();
     assert!(resp.sharded);
     assert_eq!(resp.output.len(), 64 * 1024);
     // The halves are h=8 shapes, so only the U55Cs can serve them.
@@ -146,7 +146,7 @@ fn cluster_shards_bert_large_on_heterogeneous_fleet() {
 
     // The h=6 shape is servable fleet-wide, including the U200s.
     let r2 = h
-        .call(Request { id: 2, topology: base.clone(), inputs: MhaInputs::generate(&base) })
+        .call(Request::new(2, base.clone(), MhaInputs::generate(&base)))
         .unwrap();
     assert!(!r2.sharded);
 
@@ -178,7 +178,7 @@ fn cluster_survives_backpressure_saturation() {
         let t = topos[i as usize % topos.len()].clone();
         joins.push(std::thread::spawn(move || {
             let inputs = MhaInputs::generate(&t);
-            h.call(Request { id: i, topology: t, inputs }).unwrap().id
+            h.call(Request::new(i, t, inputs)).unwrap().id
         }));
     }
     let mut ids: Vec<u64> = joins.into_iter().map(|j| j.join().unwrap()).collect();

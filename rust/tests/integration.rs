@@ -147,7 +147,7 @@ fn coordinator_over_pjrt_serves_mixed_topologies() {
     for i in 0..9 {
         let t = topos[i % 3].clone();
         let inputs = MhaInputs::generate(&t);
-        coord.submit(Request { id: i as u64, topology: t, inputs }).unwrap();
+        coord.submit(Request::new(i as u64, t, inputs)).unwrap();
     }
     let responses = coord.serve_all().unwrap();
     assert_eq!(responses.len(), 9);
@@ -172,7 +172,7 @@ fn server_over_pjrt_threads() {
         joins.push(std::thread::spawn(move || {
             let t = Topology::new(if i % 2 == 0 { 64 } else { 32 }, 768, 8, 64);
             let inputs = MhaInputs::generate(&t);
-            h.call_blocking(Request { id: i, topology: t, inputs }).unwrap()
+            h.call_blocking(Request::new(i, t, inputs)).unwrap()
         }));
     }
     for j in joins {
@@ -195,7 +195,7 @@ fn scheduler_distinct_topology_lower_bound_holds_e2e() {
     let t2 = Topology::new(32, 768, 8, 64);
     for i in 0..10 {
         let t = if i % 2 == 0 { t1.clone() } else { t2.clone() };
-        s.push(Request { id: i, topology: t.clone(), inputs: MhaInputs::generate(&t) });
+        s.push(Request::new(i, t.clone(), MhaInputs::generate(&t)));
     }
     assert_eq!(s.distinct_topologies(), 2);
     let mut batches = 0;

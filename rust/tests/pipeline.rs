@@ -23,7 +23,7 @@ fn mixed_weight_requests(topo: &Topology, n: u64) -> Vec<Request> {
             if i == n - 1 {
                 inputs.wk[3] = -inputs.wk[3] + 0.5;
             }
-            Request { id: i, topology: topo.clone(), inputs }
+            Request::new(i, topo.clone(), inputs)
         })
         .collect()
 }

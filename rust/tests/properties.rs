@@ -210,6 +210,52 @@ fn prop_admission_is_exactly_the_box() {
     });
 }
 
+// ------------------------------------------------ scheduling QoS (PR 4)
+
+#[test]
+fn prop_edf_serving_bit_identical_to_fifo() {
+    // The EDF policy reorders *scheduling*, never numerics: serving the
+    // same request set under EdfWithinWindow and under Fifo must yield
+    // bit-identical per-request outputs, whatever the priority/deadline
+    // mix.  Small topologies keep the datapath cheap — the invariant is
+    // about batching, not arithmetic.
+    use famous::accel::FamousAccelerator;
+    use famous::coordinator::{BatchPolicy, Coordinator, Priority, Request, SchedulerConfig};
+    use famous::testdata::MhaInputs;
+    run("edf == fifo outputs", 8, |g: &mut Gen| {
+        let topos = [Topology::new(8, 256, 4, 64), Topology::new(16, 256, 4, 64)];
+        let n = g.usize_in(1, 10);
+        let mut reqs = Vec::new();
+        for i in 0..n {
+            let t = (*g.pick(&topos)).clone();
+            let priority = *g.pick(&Priority::ALL);
+            let deadline = if g.bool() { Some(g.f64_in(0.0, 50.0)) } else { None };
+            reqs.push(
+                Request::new(i as u64, t.clone(), MhaInputs::generate(&t))
+                    .with_qos(priority, 0.0, deadline),
+            );
+        }
+        let serve = |policy: BatchPolicy| {
+            let mut c = Coordinator::new(
+                FamousAccelerator::with_sim_datapath(SimConfig::u55c()),
+                SchedulerConfig { max_batch: 4, policy, fairness_window: 4 },
+            );
+            for r in &reqs {
+                c.submit(r.clone()).unwrap();
+            }
+            let mut out: Vec<(u64, Vec<u32>)> = c
+                .serve_all()
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, bits(&r.output)))
+                .collect();
+            out.sort_by_key(|(id, _)| *id);
+            out
+        };
+        assert_eq!(serve(BatchPolicy::EdfWithinWindow), serve(BatchPolicy::Fifo));
+    });
+}
+
 // ------------------------------------------------ execute path (PR 3)
 
 fn bits(xs: &[f32]) -> Vec<u32> {
