@@ -1,11 +1,17 @@
 //! Execute-path bench: the PR-2 allocating serial path vs the reusable
 //! workspace vs head-parallel execution, over the Test-1 topology family
-//! (d_model = 768, TS = 64; SL ∈ {16, 64, 128}, h ∈ {4, 8}).
+//! (d_model = 768, TS = 64; SL ∈ {16, 64, 128}, h ∈ {4, 8}), plus the
+//! PR-5 long-SL sweep — fused tile-streaming attention vs the
+//! materializing reference path over SL ∈ {128, 256, 512, 1024} with
+//! wall time *and* peak workspace bytes per path.
 //!
-//! Every mode's output is asserted bit-identical to the allocating
-//! serial reference before timing, and on the headline Test-1 shape
-//! (SL=64, h=8) the head-parallel workspace path must beat the PR-2
-//! serial path outright.
+//! Every reference mode's output is asserted bit-identical to the
+//! allocating serial reference before timing; the fused path is
+//! asserted within its documented tolerance (DESIGN.md §12).  Hard
+//! acceptance gates: on the headline Test-1 shape (SL=64, h=8) the
+//! head-parallel workspace path must beat the PR-2 serial path, and the
+//! fused path must beat the reference path outright at SL ≥ 256 while
+//! retaining strictly fewer workspace bytes.
 //!
 //! Results are written machine-readable to `BENCH_exec.json` at the repo
 //! root so the perf trajectory is tracked across PRs (EXPERIMENTS.md
@@ -18,7 +24,7 @@ use famous::config::Topology;
 use famous::exec::ThreadPool;
 use famous::jsonlite::Json;
 use famous::report::Table;
-use famous::sim::{PreparedWeights, SimConfig, Workspace};
+use famous::sim::{fused, ExecPath, PreparedWeights, SimConfig, SoftmaxKind, Workspace};
 use famous::testdata::MhaInputs;
 
 fn assert_bits(want: &[f32], got: &[f32], what: &str) {
@@ -107,12 +113,105 @@ fn main() {
     print!("{}", table.render());
     println!("(outputs bit-identical across all modes; wall times are host-side)");
 
+    // ---- Long-SL sweep: fused tile-streaming vs reference (PR 5) ----
+    // Serial single-lane runs isolate the attention datapath; the
+    // long-sequence build admits up to SL=1024.
+    let mut long_table = Table::new(
+        "Long-SL attention — reference (SL×SL) vs fused tile-streaming (SL×TS)",
+        &["topology", "reference ms", "fused ms", "ref ws bytes", "fused ws bytes", "speedup"],
+    );
+    let mut long_results = Vec::new();
+    for &sl in &[128usize, 256, 512, 1024] {
+        let topo = Topology::new(sl, 768, 8, 64);
+        let inputs = MhaInputs::generate(&topo);
+        let prepared = PreparedWeights::prepare(&SimConfig::u55c_long(), &topo, &inputs);
+        let x = prepared.quantize_input(&inputs.x);
+        let (warmup, iters) = match sl {
+            128 => (2, 10),
+            256 => (2, 10),
+            512 => (1, 5),
+            _ => (1, 3),
+        };
+
+        let mut ref_ws = Workspace::new();
+        prepared.execute_into_path(&x, &mut ref_ws, ExecPath::Reference);
+        let ref_bytes = ref_ws.footprint_bytes();
+        let want = ref_ws.output().to_vec();
+        let ref_t = bench(warmup, iters, || {
+            prepared.execute_into_path(&x, &mut ref_ws, ExecPath::Reference);
+        });
+        assert_bits(&want, ref_ws.output(), "reference (post-bench)");
+
+        let mut fused_ws = Workspace::new();
+        prepared.execute_into_path(&x, &mut fused_ws, ExecPath::FusedTiled);
+        let fused_bytes = fused_ws.footprint_bytes();
+        assert_eq!(
+            fused_ws.reference_score_capacity(),
+            0,
+            "SL={sl}: fused path materialized an SL×SL buffer"
+        );
+        let (diff, tol) = fused::assert_within_tolerance(
+            SoftmaxKind::Exact,
+            sl,
+            &want,
+            fused_ws.output(),
+            &format!("SL={sl}"),
+        );
+        let fused_t = bench(warmup, iters, || {
+            prepared.execute_into_path(&x, &mut fused_ws, ExecPath::FusedTiled);
+        });
+
+        assert!(
+            fused_bytes < ref_bytes,
+            "SL={sl}: fused workspace {fused_bytes} B not below reference {ref_bytes} B"
+        );
+        // Acceptance (ISSUE 5): the fused path must win wall-time from
+        // SL=256 up — the regime the auto policy routes to it.  Gated
+        // on min-of-iters: scheduling noise on shared CI runners only
+        // ever inflates samples, so the minimum is the robust
+        // comparison (the margin at the 256 boundary is ~10%).
+        if sl >= 256 {
+            assert!(
+                fused_t.min_ms < ref_t.min_ms,
+                "SL={sl}: fused (min {:.3} ms) did not beat reference (min {:.3} ms)",
+                fused_t.min_ms,
+                ref_t.min_ms
+            );
+        }
+
+        long_table.row(vec![
+            format!("SL={sl} h=8"),
+            format!("{:.3}", ref_t.mean_ms),
+            format!("{:.3}", fused_t.mean_ms),
+            ref_bytes.to_string(),
+            fused_bytes.to_string(),
+            format!("{:.2}x", ref_t.mean_ms / fused_t.mean_ms),
+        ]);
+        long_results.push(Json::obj([
+            ("seq_len", Json::from(sl as f64)),
+            ("d_model", Json::from(768.0)),
+            ("heads", Json::from(8.0)),
+            ("reference_ms", Json::from(ref_t.mean_ms)),
+            ("fused_ms", Json::from(fused_t.mean_ms)),
+            ("reference_workspace_bytes", Json::from(ref_bytes as f64)),
+            ("fused_workspace_bytes", Json::from(fused_bytes as f64)),
+            ("speedup_fused", Json::from(ref_t.mean_ms / fused_t.mean_ms)),
+            ("max_abs_diff", Json::from(diff as f64)),
+            ("tolerance", Json::from(tol as f64)),
+        ]));
+    }
+    print!("{}", long_table.render());
+    println!(
+        "(fused asserted within documented tolerance; wall-time win asserted at SL>=256)"
+    );
+
     let out = Json::obj([
         ("bench", Json::from("exec")),
         ("unit", Json::from("ms_mean_wall")),
         ("measured", Json::from(true)),
         ("cores", Json::from(cores as f64)),
         ("results", Json::arr(results)),
+        ("long_sl", Json::arr(long_results)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_exec.json");
     std::fs::write(path, out.to_string() + "\n").expect("write BENCH_exec.json");

@@ -27,7 +27,7 @@ use crate::config::Topology;
 use crate::fpga::resources::{ResourceEstimate, ResourceModel, Utilization};
 use crate::jsonlite::Json;
 use crate::metrics::OpCount;
-use crate::runtime::{Backend, SimBackend};
+use crate::runtime::{Backend, PathCounters, SimBackend};
 use crate::sim::{ControlRegs, SimConfig, SimResult, Simulator};
 use crate::testdata::MhaInputs;
 use anyhow::{bail, Result};
@@ -308,6 +308,13 @@ impl FamousAccelerator {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Fused-vs-reference dispatch attribution of the functional engine
+    /// (DESIGN.md §12).  All zeros for engines with a single datapath
+    /// (PJRT).
+    pub fn path_counters(&self) -> PathCounters {
+        self.backend.path_counters()
     }
 }
 

@@ -442,6 +442,7 @@ mod tests {
             timing_sims: reconf,
             program_cache_hits: served.saturating_sub(reconf),
             batch_makespan_ms: lat.iter().sum(),
+            ..CoordinatorStats::default()
         };
         for &v in lat {
             s.fabric_latency.record(v);

@@ -75,6 +75,12 @@ impl DeviceSpec {
         DeviceSpec { id, name: format!("u200-{id}"), sim: SimConfig::u200() }
     }
 
+    /// The long-sequence U55C build (fused streaming attention unit,
+    /// SL up to 1024 — DESIGN.md §12).
+    pub fn u55c_long(id: usize) -> Self {
+        DeviceSpec { id, name: format!("u55c-long-{id}"), sim: SimConfig::u55c_long() }
+    }
+
     /// Can this device serve `topo` without re-synthesis?
     pub fn admits(&self, topo: &Topology) -> bool {
         self.sim.build.admits(topo).is_ok()
@@ -105,7 +111,8 @@ pub fn parse_fleet(spec: &str) -> Result<Vec<DeviceSpec>> {
             match kind {
                 "u55c" => devices.push(DeviceSpec::u55c(id)),
                 "u200" => devices.push(DeviceSpec::u200(id)),
-                other => bail!("unknown device kind '{other}' (u55c | u200)"),
+                "u55c-long" => devices.push(DeviceSpec::u55c_long(id)),
+                other => bail!("unknown device kind '{other}' (u55c | u200 | u55c-long)"),
             }
         }
     }

@@ -164,6 +164,13 @@ struct RouterState {
     /// §11).  Queue delay for a request arriving at `t` is
     /// `max(backlog, t) − t`.
     backlog_ms: Vec<f64>,
+    /// Devices known dead to the router (`Cluster::fail_device` /
+    /// `Cluster::stop_device`).  A dead device's frozen `backlog_ms`
+    /// horizon would otherwise look ever more attractive as the live
+    /// fleet's horizons advance; the backlog model observes health so
+    /// `SlackEdf` ranks a dead horizon as infeasible instead of routing
+    /// to it (ROADMAP PR-4 follow-up).
+    down: Vec<bool>,
     totals: RouterTotals,
 }
 
@@ -234,6 +241,7 @@ impl Cluster {
             state: Mutex::new(RouterState {
                 last_topology: vec![None; n],
                 backlog_ms: vec![0.0; n],
+                down: vec![false; n],
                 totals: RouterTotals::default(),
             }),
         });
@@ -260,24 +268,34 @@ impl Cluster {
         let stats = server.shutdown();
         self.early_stats[id] = Some(stats.clone());
         // Drop the router's affinity memory for the drained device so it
-        // stops ranking as "hot" for the topology it last served.
-        self.shared.state.lock().unwrap().last_topology[id] = None;
+        // stops ranking as "hot" for the topology it last served, and
+        // mark it down so the backlog model stops treating its frozen
+        // horizon as feasible capacity.
+        let mut st = self.shared.state.lock().unwrap();
+        st.last_topology[id] = None;
+        st.down[id] = true;
+        drop(st);
         Some(stats)
     }
 
     /// Simulate a device crash (chaos hook for the soak suite): the
     /// worker is killed without a drain — queued work is dropped exactly
     /// as a process death would drop it — and fleet reports flag the
-    /// device `Failed` rather than `Stopped`.  Routing bounces off the
-    /// closed ingress and fails over like it does for a full queue, so
-    /// accepted requests reroute instead of being lost.
+    /// device `Failed` rather than `Stopped`.  The router is told (both
+    /// ranking arms demote the corpse to last resort, the backlog model
+    /// marks its horizon infeasible), so accepted requests reroute
+    /// without probing the dead ingress; the bounce path remains the
+    /// backstop for deaths the router was never told about.
     pub fn fail_device(&mut self, id: usize) -> bool {
         let Some(server) = self.servers.get_mut(id).and_then(|s| s.take()) else {
             return false;
         };
         server.kill();
         self.failed[id] = true;
-        self.shared.state.lock().unwrap().last_topology[id] = None;
+        let mut st = self.shared.state.lock().unwrap();
+        st.last_topology[id] = None;
+        st.down[id] = true;
+        drop(st);
         true
     }
 
@@ -545,14 +563,15 @@ impl ClusterHandle {
         Ok(QosOutcome::Served(resp))
     }
 
-    /// Best modeled completion over admitting devices for `topo` (None
-    /// when nothing admits it): the shed test's "provably late" bound.
+    /// Best modeled completion over *live* admitting devices for `topo`
+    /// (None when nothing admits it): the shed test's "provably late"
+    /// bound.  A dead device's frozen horizon is not capacity.
     fn best_completion_ms(&self, topo: &Topology, arrival_ms: f64) -> Option<f64> {
         let st = self.shared.state.lock().unwrap();
         self.shared
             .devices
             .iter()
-            .filter(|d| d.spec.admits(topo))
+            .filter(|d| !st.down[d.spec.id] && d.spec.admits(topo))
             .map(|d| st.backlog_ms[d.spec.id].max(arrival_ms) + d.spec.predicted_ms(topo))
             .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
     }
@@ -572,6 +591,20 @@ impl ClusterHandle {
                 .iter()
                 .filter(|d| Some(d.spec.id) != exclude && d.spec.admits(topo))
                 .map(|d| {
+                    // A down device's horizon froze at its death: rank
+                    // it infeasible (−∞ slack sorts after every live
+                    // candidate, feasible or late) so SlackEdf never
+                    // chases a frozen horizon; it stays a candidate of
+                    // last resort only.
+                    if st.down[d.spec.id] {
+                        return SlackView {
+                            id: d.spec.id,
+                            hot: false,
+                            preference: usize::MAX,
+                            est_completion_ms: f64::INFINITY,
+                            slack_ms: f64::NEG_INFINITY,
+                        };
+                    }
                     let est = st.backlog_ms[d.spec.id].max(meta.arrival_ms)
                         + d.spec.predicted_ms(topo);
                     SlackView {
@@ -591,11 +624,24 @@ impl ClusterHandle {
             .devices
             .iter()
             .filter(|d| Some(d.spec.id) != exclude && d.spec.admits(topo))
-            .map(|d| CandidateView {
-                id: d.spec.id,
-                hot: st.last_topology[d.spec.id].as_ref() == Some(topo),
-                preference: position(d.spec.id),
-                pending: d.handle.pending(),
+            .map(|d| {
+                // A known-down device's empty ingress would rank it
+                // least-loaded first forever (one bounce per request);
+                // demote it to a candidate of last resort here too.
+                if st.down[d.spec.id] {
+                    return CandidateView {
+                        id: d.spec.id,
+                        hot: false,
+                        preference: usize::MAX,
+                        pending: usize::MAX,
+                    };
+                }
+                CandidateView {
+                    id: d.spec.id,
+                    hot: st.last_topology[d.spec.id].as_ref() == Some(topo),
+                    preference: position(d.spec.id),
+                    pending: d.handle.pending(),
+                }
             })
             .collect();
         drop(st);
@@ -820,13 +866,14 @@ mod tests {
         // Prime affinity onto the planner's primary.
         let first = h.call(req(0, &t)).unwrap();
         let primary = first.devices[0];
-        // Drain that device: its ingress now bounces everything.
+        // Drain that device: the router is told, so failover is a
+        // ranking decision — the drained ingress is never even probed.
         cluster.stop_device(primary).unwrap();
         let resp = h.call(req(1, &t)).unwrap();
         assert_eq!(resp.devices.len(), 1);
         assert_ne!(resp.devices[0], primary, "must fail over to the live device");
         let fleet = cluster.shutdown();
-        assert!(fleet.totals.retries >= 1, "failover goes through the bounce path");
+        assert_eq!(fleet.totals.retries, 0, "router probed a drained device");
         assert_eq!(fleet.totals.completed, 2);
     }
 
@@ -935,6 +982,77 @@ mod tests {
             ]),
             vec![1, 0]
         );
+        // A down device's view (−∞ slack, +∞ completion) ranks after
+        // every live candidate — even a provably-late one.
+        assert_eq!(
+            order_candidates_by_slack(vec![
+                v(0, false, usize::MAX, f64::INFINITY, f64::NEG_INFINITY),
+                v(1, false, 1, 50.0, -40.0),
+                v(2, false, 0, 3.0, 2.0),
+            ]),
+            vec![2, 1, 0]
+        );
+    }
+
+    #[test]
+    fn slack_routing_never_probes_a_failed_horizon() {
+        // A dead device's backlog horizon freezes and would otherwise
+        // become the "best" completion estimate as the live fleet
+        // backs up; the backlog model must observe health so SlackEdf
+        // routes around the corpse without a single bounce.
+        let t = Topology::new(64, 768, 8, 64);
+        let mut cluster = qos_two_u55c(std::slice::from_ref(&t));
+        let h = cluster.handle();
+        let ms = DeviceSpec::u55c(0).predicted_ms(&t);
+        // Build a backlog on whichever device serves first.
+        let live = h.call(req(0, &t)).unwrap().devices[0];
+        let dead = 1 - live;
+        assert!(cluster.fail_device(dead));
+        // Tight-deadline traffic: the live device is provably late, the
+        // dead one's frozen (empty) horizon would look feasible.  The
+        // router must still pick the live device, with zero retries —
+        // it never even probes the dead ingress.
+        for i in 1..4u64 {
+            let r = h
+                .call_qos(req(i, &t).with_qos(Priority::High, 0.0, Some(1.2 * ms)))
+                .unwrap()
+                .served()
+                .expect("high priority is never shed");
+            assert_eq!(r.devices, vec![live], "routed toward a frozen horizon");
+        }
+        // The shed bound likewise ignores the dead horizon: a Low
+        // request sheds on the live device's real backlog, not the
+        // corpse's optimistic one.
+        let out = h
+            .call_qos(req(9, &t).with_qos(Priority::Low, 0.0, Some(1.2 * ms)))
+            .unwrap();
+        assert!(out.is_shed(), "dead horizon must not count as shed-saving capacity");
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.retries, 0, "router probed a dead device");
+        assert_eq!(fleet.totals.completed, 4);
+        assert_eq!(fleet.devices[dead].health, DeviceHealth::Failed);
+    }
+
+    #[test]
+    fn stopped_device_horizon_also_infeasible() {
+        let t = Topology::new(64, 768, 8, 64);
+        let mut cluster = qos_two_u55c(std::slice::from_ref(&t));
+        let h = cluster.handle();
+        let live = h.call(req(0, &t)).unwrap().devices[0];
+        let drained = 1 - live;
+        cluster.stop_device(drained).unwrap();
+        let ms = DeviceSpec::u55c(0).predicted_ms(&t);
+        for i in 1..3u64 {
+            let r = h
+                .call_qos(req(i, &t).with_qos(Priority::High, 0.0, Some(1.2 * ms)))
+                .unwrap()
+                .served()
+                .unwrap();
+            assert_eq!(r.devices, vec![live]);
+        }
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.retries, 0, "router probed a drained device");
+        assert_eq!(fleet.devices[drained].health, DeviceHealth::Stopped);
     }
 
     fn qos_two_u55c(workload: &[Topology]) -> Cluster {
@@ -1041,7 +1159,8 @@ mod tests {
         let dead = first.devices[0];
         assert!(cluster.fail_device(dead));
         assert!(!cluster.fail_device(dead), "double-fail is a no-op");
-        // Requests keep flowing: the router bounces off the dead ingress.
+        // Requests keep flowing: the router was told about the crash,
+        // so it reroutes by ranking — no probe of the dead ingress.
         for i in 1..4u64 {
             let resp = h.call(req(i, &t)).unwrap();
             assert_ne!(resp.devices[0], dead, "routed to the dead device");
@@ -1052,7 +1171,7 @@ mod tests {
         let fleet = cluster.shutdown();
         assert_eq!(fleet.devices[dead].health, DeviceHealth::Failed);
         assert_eq!(fleet.totals.completed, 4);
-        assert!(fleet.totals.retries >= 1, "failover goes through the bounce path");
+        assert_eq!(fleet.totals.retries, 0, "router probed a failed device");
         assert!(fleet.render().contains("FAILED"));
     }
 

@@ -54,6 +54,18 @@ impl AcceleratorConfig {
         }
     }
 
+    /// A long-sequence U55C variant: the same TS-64 datapath synthesized
+    /// with the fused tile-streaming attention unit (DESIGN.md §12), so
+    /// the per-head score buffer is SL×TS rather than SL² and the SL
+    /// ceiling rises to 1024.  This is a *hypothetical* build beyond the
+    /// paper's Table I (which caps at SL=128); the timing model keeps
+    /// the same loop algebra, just with longer loops.
+    pub fn u55c_ts64_sl1024() -> Self {
+        let mut c = Self::u55c_ts64();
+        c.max_topology = Topology::new(1024, 768, 8, 64);
+        c
+    }
+
     /// U55C rebuilt with a different tile size (tests 9–10).
     pub fn u55c_with_tile_size(ts: usize) -> Self {
         let mut c = Self::u55c_ts64();

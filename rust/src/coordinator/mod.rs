@@ -69,6 +69,12 @@ pub struct CoordinatorStats {
     /// makespan is the max over its requests (a programmed same-topology
     /// batch streams through the fabric as one pipeline), not the sum.
     pub batch_makespan_ms: f64,
+    /// Requests executed on the fused tile-streaming attention path
+    /// (DESIGN.md §12) vs the materializing reference path.  Mirrored
+    /// from the backend's dispatch attribution; zero for single-datapath
+    /// engines (PJRT).
+    pub fused_dispatches: u64,
+    pub reference_dispatches: u64,
 }
 
 impl CoordinatorStats {
@@ -132,6 +138,9 @@ impl Coordinator {
         // coordinator, so absolute copies are exact).
         self.stats.timing_sims = self.accel.timing_sims_run;
         self.stats.program_cache_hits = self.accel.program_cache_hits;
+        let paths = self.accel.path_counters();
+        self.stats.fused_dispatches = paths.fused;
+        self.stats.reference_dispatches = paths.reference;
         let reports = reports?;
         let mut batch_makespan = 0.0f64;
         let mut responses = Vec::with_capacity(batch.len());

@@ -19,12 +19,29 @@ pub use manifest::{ArtifactEntry, Manifest};
 
 use crate::config::Topology;
 use crate::exec::{PoolHandle, ThreadPool};
-use crate::sim::{PreparedWeights, Workspace};
+use crate::sim::{ExecPath, PreparedWeights, Workspace};
 use crate::testdata::MhaInputs;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+/// Dispatch attribution per attention datapath (DESIGN.md §12): how
+/// many requests a backend executed on the fused tile-streaming path vs
+/// the materializing reference path.  Mirrored into the accelerator and
+/// `CoordinatorStats` so fleet observers can see which datapath served
+/// their traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PathCounters {
+    pub fused: u64,
+    pub reference: u64,
+}
+
+impl PathCounters {
+    pub fn total(&self) -> u64 {
+        self.fused + self.reference
+    }
+}
 
 /// A functional MHA engine: topology + operands → (SL × d_model) output.
 pub trait Backend {
@@ -38,6 +55,12 @@ pub trait Backend {
     /// programming cost once per batch.
     fn run_mha_batch(&mut self, topo: &Topology, inputs: &[&MhaInputs]) -> Result<Vec<Vec<f32>>> {
         inputs.iter().map(|&inp| self.run_mha(topo, inp)).collect()
+    }
+
+    /// Fused-vs-reference dispatch attribution.  Engines with a single
+    /// datapath report the default (all zeros).
+    fn path_counters(&self) -> PathCounters {
+        PathCounters::default()
     }
 
     fn name(&self) -> &'static str;
@@ -143,6 +166,23 @@ impl Runtime {
         inputs: &MhaInputs,
         variant: Variant,
     ) -> Result<Vec<f32>> {
+        let mut outs = self.run_many_inner(topo, &[inputs], variant)?;
+        Ok(outs.pop().expect("one request in, one output out"))
+    }
+
+    /// One compiled executable, N executions: the manifest lookup and
+    /// the compile/cache fetch are paid once per batch, then each
+    /// request stages its literals and executes against the shared
+    /// executable — the PJRT mirror of the sim backend's prepare-once
+    /// batch path (ROADMAP PR-2 follow-up).  Outputs are bit-identical
+    /// to serial [`Backend::run_mha`] calls: the same executable runs
+    /// the same per-request literals in request order.
+    fn run_many_inner(
+        &mut self,
+        topo: &Topology,
+        inputs: &[&MhaInputs],
+        variant: Variant,
+    ) -> Result<Vec<Vec<f32>>> {
         let name = topo.name();
         let entry = self
             .manifest
@@ -152,31 +192,35 @@ impl Runtime {
         let arg_order = self.manifest.arg_order.clone();
         let exe = self.executable(&name, variant)?;
 
-        let operands = inputs.in_order();
-        let mut literals = Vec::with_capacity(arg_order.len());
-        for (arg_name, data) in arg_order.iter().zip(operands.iter()) {
-            let dims = entry
-                .args
-                .get(arg_name)
-                .ok_or_else(|| anyhow!("arg '{arg_name}' missing from manifest entry"))?;
-            let want: usize = dims.iter().product();
-            if want != data.len() {
-                bail!("arg '{arg_name}': manifest says {want} elems, got {}", data.len());
+        let mut outputs = Vec::with_capacity(inputs.len());
+        for &inp in inputs {
+            let operands = inp.in_order();
+            let mut literals = Vec::with_capacity(arg_order.len());
+            for (arg_name, data) in arg_order.iter().zip(operands.iter()) {
+                let dims = entry
+                    .args
+                    .get(arg_name)
+                    .ok_or_else(|| anyhow!("arg '{arg_name}' missing from manifest entry"))?;
+                let want: usize = dims.iter().product();
+                if want != data.len() {
+                    bail!("arg '{arg_name}': manifest says {want} elems, got {}", data.len());
+                }
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())
+                    .map_err(|e| anyhow!("reshape {arg_name}: {e:?}"))?;
+                literals.push(lit);
             }
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())
-                .map_err(|e| anyhow!("reshape {arg_name}: {e:?}"))?;
-            literals.push(lit);
-        }
 
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            outputs.push(out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(outputs)
     }
 }
 
@@ -193,6 +237,17 @@ impl Backend for Runtime {
     /// Execute the deployment artifact for `topo` on `inputs`.
     fn run_mha(&mut self, topo: &Topology, inputs: &MhaInputs) -> Result<Vec<f32>> {
         self.run_inner(topo, inputs, Variant::Deploy)
+    }
+
+    /// Batched serving against one compiled executable: no more
+    /// falling back to the default single-shot loop's repeated manifest
+    /// lookups (the executable cache made those warm, but every request
+    /// still re-cloned the manifest entry and arg order).
+    fn run_mha_batch(&mut self, topo: &Topology, inputs: &[&MhaInputs]) -> Result<Vec<Vec<f32>>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.run_many_inner(topo, inputs, Variant::Deploy)
     }
 
     fn name(&self) -> &'static str {
@@ -219,14 +274,63 @@ impl Backend for Runtime {
 /// fabric's `h` concurrent head pipelines.  Outputs are bit-identical to
 /// the sequential path (exact integer GEMM, per-head f32 op order
 /// untouched, disjoint output stripes).
+///
+/// The attention stage dispatches per [`ExecPolicy`] (DESIGN.md §12):
+/// short sequences run the reference SL×SL path (the bit-identity
+/// oracle), long sequences (SL ≥ [`FUSED_SL_THRESHOLD`], or worst-case
+/// score scratch past [`SCORE_BYTES_BUDGET`]) run the fused
+/// tile-streaming path, whose O(SL×TS) score footprint is what makes
+/// them servable.  The path is a pure function of (policy, topology),
+/// so batched and sequential serving of the same request always pick
+/// the same datapath and stay bit-identical to each other on any host.
 pub struct SimBackend {
     pub config: crate::sim::SimConfig,
+    /// Attention datapath selection (DESIGN.md §12): `Auto` picks the
+    /// fused tile-streaming path for long sequences / score-memory
+    /// pressure, `Force` pins one path (tests, oracles).
+    pub exec_policy: ExecPolicy,
     /// Shared workers for batch fan-out and head lanes; created on first
     /// use, re-created larger when a batch wants more concurrency.
     pool: Option<ThreadPool>,
+    /// Consecutive pool sizings wanting at most half the current
+    /// workers; drives the pool's high-water-mark decay (the pool
+    /// analogue of `sim::Workspace`'s shrink policy).
+    pool_lean_streak: u32,
     /// Resident scratch for the single-request path.
     workspace: Workspace,
+    /// Fused/reference dispatch attribution.
+    counters: PathCounters,
 }
+
+/// How `SimBackend` picks the attention datapath per request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecPolicy {
+    /// `FusedTiled` when `seq_len ≥` [`FUSED_SL_THRESHOLD`] or when the
+    /// reference path's worst-case score scratch (`heads × SL² × 4`
+    /// bytes — one SL×SL buffer per head lane) would exceed
+    /// [`SCORE_BYTES_BUDGET`]; `Reference` otherwise.  The decision is
+    /// a pure function of the topology, never of host parallelism.
+    #[default]
+    Auto,
+    Force(ExecPath),
+}
+
+/// Sequence length at which `ExecPolicy::Auto` switches to the fused
+/// tile-streaming path: by SL=256 the SL×SL score walk is both the
+/// memory and the wall-time loser (benches/exec.rs asserts the fused
+/// win from here up).
+pub const FUSED_SL_THRESHOLD: usize = 256;
+
+/// Reference-path score-scratch budget for `ExecPolicy::Auto`'s
+/// memory-pressure arm: wide-head topologies near the SL threshold
+/// (e.g. 8 heads at SL ≥ 182 on the long build — the full-width shapes
+/// the sharded cluster path would otherwise split) tip to the fused
+/// path before the SL threshold alone would.
+pub const SCORE_BYTES_BUDGET: usize = 1 << 20;
+
+/// Pool sizings below half capacity before the worker pool shrinks to
+/// the demanded size.
+pub const POOL_SHRINK_WINDOW: u32 = 32;
 
 thread_local! {
     /// Per-pool-worker scratch, resident across requests and batches —
@@ -237,7 +341,14 @@ thread_local! {
 
 impl SimBackend {
     pub fn new(config: crate::sim::SimConfig) -> Self {
-        SimBackend { config, pool: None, workspace: Workspace::new() }
+        SimBackend {
+            config,
+            exec_policy: ExecPolicy::Auto,
+            pool: None,
+            pool_lean_streak: 0,
+            workspace: Workspace::new(),
+            counters: PathCounters::default(),
+        }
     }
 
     fn admit(&self, topo: &Topology) -> Result<()> {
@@ -248,16 +359,60 @@ impl SimBackend {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     }
 
+    /// The attention datapath for one request under the configured
+    /// policy.  A pure function of (policy, topology) — deliberately
+    /// independent of lane/core counts, so batched and single-shot
+    /// serving of the same request always pick the same path on any
+    /// host.
+    pub fn choose_path(&self, topo: &Topology) -> ExecPath {
+        match self.exec_policy {
+            ExecPolicy::Force(path) => path,
+            ExecPolicy::Auto => {
+                // Worst-case reference score scratch for this request:
+                // head lanes never exceed `heads`, and each holds SL²
+                // floats on the reference path.
+                let score_bytes = topo.heads * topo.seq_len * topo.seq_len * 4;
+                if topo.seq_len >= FUSED_SL_THRESHOLD || score_bytes > SCORE_BYTES_BUDGET {
+                    ExecPath::FusedTiled
+                } else {
+                    ExecPath::Reference
+                }
+            }
+        }
+    }
+
+    fn count(&mut self, path: ExecPath, requests: u64) {
+        match path {
+            ExecPath::FusedTiled => self.counters.fused += requests,
+            ExecPath::Reference => self.counters.reference += requests,
+        }
+    }
+
     /// The shared pool, grown to at least `want` workers (capped at the
     /// machine) — closes the ROADMAP "size the pool to the batch" item.
+    /// Sizing decays like the workspaces do: [`POOL_SHRINK_WINDOW`]
+    /// consecutive sizings wanting at most half the workers rebuild the
+    /// pool at the demanded size, so a burst of wide batches does not
+    /// pin idle threads forever.
     fn pool_for(&mut self, want: usize) -> &ThreadPool {
         let want = want.clamp(1, Self::cores());
-        let rebuild = match &self.pool {
-            Some(p) => p.threads() < want,
-            None => true,
-        };
-        if rebuild {
-            self.pool = Some(ThreadPool::new(want));
+        match self.pool.as_ref().map(ThreadPool::threads) {
+            None => {
+                self.pool = Some(ThreadPool::new(want));
+                self.pool_lean_streak = 0;
+            }
+            Some(threads) if threads < want => {
+                self.pool = Some(ThreadPool::new(want));
+                self.pool_lean_streak = 0;
+            }
+            Some(threads) if want * 2 <= threads => {
+                self.pool_lean_streak += 1;
+                if self.pool_lean_streak >= POOL_SHRINK_WINDOW {
+                    self.pool = Some(ThreadPool::new(want));
+                    self.pool_lean_streak = 0;
+                }
+            }
+            Some(_) => self.pool_lean_streak = 0,
         }
         self.pool.as_ref().expect("pool just ensured")
     }
@@ -274,20 +429,21 @@ fn execute_on_worker(
     x: &[f32],
     pool: &PoolHandle,
     lanes: usize,
+    path: ExecPath,
 ) -> Vec<f32> {
     let xq = prepared.quantize_input(x);
     WORKER_WS.with(|cell| match cell.try_borrow_mut() {
         Ok(mut ws) => {
             if lanes > 1 {
-                prepared.execute_parallel(&xq, &mut ws, pool, lanes);
+                prepared.execute_parallel_path(&xq, &mut ws, pool, lanes, path);
             } else {
-                prepared.execute_into(&xq, &mut ws);
+                prepared.execute_into_path(&xq, &mut ws, path);
             }
             ws.output().to_vec()
         }
         Err(_) => {
             let mut ws = Workspace::new();
-            prepared.execute_into(&xq, &mut ws);
+            prepared.execute_into_path(&xq, &mut ws, path);
             ws.take_output()
         }
     })
@@ -299,11 +455,13 @@ impl Backend for SimBackend {
         let prepared = PreparedWeights::prepare(&self.config, topo, inputs);
         let x = prepared.quantize_input(&inputs.x);
         let lanes = topo.heads.min(Self::cores());
+        let path = self.choose_path(topo);
+        self.count(path, 1);
         if lanes > 1 {
             let handle = self.pool_for(lanes).handle();
-            prepared.execute_parallel(&x, &mut self.workspace, &handle, lanes);
+            prepared.execute_parallel_path(&x, &mut self.workspace, &handle, lanes, path);
         } else {
-            prepared.execute_into(&x, &mut self.workspace);
+            prepared.execute_into_path(&x, &mut self.workspace, path);
         }
         Ok(self.workspace.output().to_vec())
     }
@@ -311,7 +469,9 @@ impl Backend for SimBackend {
     /// One weight preparation, N executions under the two-level split.
     /// Requests whose weight operands differ from the batch head's fall
     /// back to their own preparation (still inside the parallel map),
-    /// preserving bit-identity with the sequential path unconditionally.
+    /// preserving bit-identity with the sequential path unconditionally
+    /// (the path is chosen once per batch from the topology alone, so
+    /// batched and sequential serving run the same datapath).
     fn run_mha_batch(&mut self, topo: &Topology, inputs: &[&MhaInputs]) -> Result<Vec<Vec<f32>>> {
         let Some(first) = inputs.first().copied() else { return Ok(Vec::new()) };
         if inputs.len() == 1 {
@@ -336,15 +496,22 @@ impl Backend for SimBackend {
         // each request (the caller's helping share counts as one worker).
         let lanes = (pool.threads() / batch).clamp(1, topo.heads.max(1));
         let handle = pool.handle();
+        let path = self.choose_path(topo);
+        self.count(path, batch as u64);
+        let pool = self.pool.as_ref().expect("pool just ensured");
         let topo = topo.clone();
         let outputs = pool.parallel_map(items, move |item| match item {
-            BatchItem::Shared { x } => execute_on_worker(&shared, &x, &handle, lanes),
+            BatchItem::Shared { x } => execute_on_worker(&shared, &x, &handle, lanes, path),
             BatchItem::Own { inputs } => {
                 let own = PreparedWeights::prepare(&config, &topo, &inputs);
-                execute_on_worker(&own, &inputs.x, &handle, lanes)
+                execute_on_worker(&own, &inputs.x, &handle, lanes, path)
             }
         });
         Ok(outputs)
+    }
+
+    fn path_counters(&self) -> PathCounters {
+        self.counters
     }
 
     fn name(&self) -> &'static str {
@@ -448,6 +615,87 @@ mod tests {
         let bad = Topology::new(64, 1024, 8, 64);
         let inp = MhaInputs::generate(&bad);
         assert!(b.run_mha_batch(&bad, &[&inp]).is_err());
+    }
+
+    #[test]
+    fn auto_policy_picks_fused_above_threshold_and_counts() {
+        let mut b = SimBackend::new(SimConfig::u55c_long());
+        let short = Topology::new(64, 256, 4, 64);
+        let long = Topology::new(256, 128, 2, 64);
+        assert_eq!(b.choose_path(&short), ExecPath::Reference);
+        assert_eq!(b.choose_path(&long), ExecPath::FusedTiled);
+        // Memory pressure below the SL threshold: a wide-head shape
+        // whose per-request score scratch (heads × SL² × 4 B) exceeds
+        // the budget flips to fused; the same SL with few heads stays
+        // on the reference path.
+        assert_eq!(b.choose_path(&Topology::new(192, 768, 8, 64)), ExecPath::FusedTiled);
+        assert_eq!(b.choose_path(&Topology::new(192, 768, 2, 64)), ExecPath::Reference);
+        // Dispatch attribution.
+        b.run_mha(&short, &MhaInputs::generate(&short)).unwrap();
+        assert_eq!(b.path_counters(), PathCounters { fused: 0, reference: 1 });
+        b.run_mha(&long, &MhaInputs::generate(&long)).unwrap();
+        assert_eq!(b.path_counters(), PathCounters { fused: 1, reference: 1 });
+        let inp = MhaInputs::generate(&long);
+        let refs: Vec<&MhaInputs> = vec![&inp; 3];
+        b.run_mha_batch(&long, &refs).unwrap();
+        assert_eq!(b.path_counters().fused, 4);
+        assert_eq!(b.path_counters().total(), 5);
+    }
+
+    #[test]
+    fn fused_requests_serve_and_match_reference_within_tolerance() {
+        // A long-SL request through the auto policy must agree with the
+        // forced reference path within the documented bound, and batch
+        // serving must be bit-identical to single-shot fused serving.
+        use crate::sim::fused::assert_within_tolerance;
+        let topo = Topology::new(256, 128, 2, 64);
+        let inputs = MhaInputs::generate(&topo);
+        let mut auto = SimBackend::new(SimConfig::u55c_long());
+        let fused_out = auto.run_mha(&topo, &inputs).unwrap();
+        assert_eq!(auto.path_counters().fused, 1);
+        let mut oracle = SimBackend::new(SimConfig::u55c_long());
+        oracle.exec_policy = ExecPolicy::Force(ExecPath::Reference);
+        let ref_out = oracle.run_mha(&topo, &inputs).unwrap();
+        assert_eq!(oracle.path_counters().reference, 1);
+        assert_within_tolerance(
+            crate::sim::SoftmaxKind::Exact,
+            topo.seq_len,
+            &ref_out,
+            &fused_out,
+            "auto-policy fused serving",
+        );
+        let refs: Vec<&MhaInputs> = vec![&inputs; 2];
+        let batched = auto.run_mha_batch(&topo, &refs).unwrap();
+        for out in &batched {
+            let ob: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+            let fb: Vec<u32> = fused_out.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ob, fb, "batched fused serving diverged from single-shot");
+        }
+    }
+
+    #[test]
+    fn pool_decays_after_sustained_low_demand() {
+        let mut b = SimBackend::new(SimConfig::u55c());
+        if SimBackend::cores() < 2 {
+            return; // nothing to shrink on a single-core host
+        }
+        b.pool_for(SimBackend::cores());
+        let peak = b.pool.as_ref().unwrap().threads();
+        assert!(peak >= 2);
+        // A blip of low demand keeps the pool (warm contract)...
+        b.pool_for(1);
+        assert_eq!(b.pool.as_ref().unwrap().threads(), peak);
+        // ...a demand spike resets the streak...
+        b.pool_for(peak);
+        assert_eq!(b.pool_lean_streak, 0);
+        // ...and a sustained window shrinks to the demanded size.
+        for _ in 0..POOL_SHRINK_WINDOW {
+            b.pool_for(1);
+        }
+        assert_eq!(b.pool.as_ref().unwrap().threads(), 1, "pool must decay to demand");
+        // Growth after decay still works.
+        b.pool_for(peak);
+        assert_eq!(b.pool.as_ref().unwrap().threads(), peak);
     }
 
     #[test]

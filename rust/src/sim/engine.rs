@@ -9,6 +9,7 @@ use crate::testdata::MhaInputs;
 
 use super::axi::AxiMaster;
 use super::controller::{Controller, CtrlError};
+use super::fused::{ExecPath, FusedAttnPm};
 use super::modules::{QkPm, QkvPm, SvPm};
 use super::softmax_unit::SoftmaxUnit;
 use super::workspace::{HeadScratch, Workspace};
@@ -55,6 +56,13 @@ impl SimConfig {
 
     pub fn u200() -> Self {
         SimConfig { build: AcceleratorConfig::u200_ts64(), ..SimConfig::u55c() }
+    }
+
+    /// The long-sequence U55C build (`AcceleratorConfig::u55c_ts64_sl1024`):
+    /// admits SL up to 1024, the regime the fused tile-streaming
+    /// execute path (DESIGN.md §12) makes first-class.
+    pub fn u55c_long() -> Self {
+        SimConfig { build: AcceleratorConfig::u55c_ts64_sl1024(), ..SimConfig::u55c() }
     }
 }
 
@@ -345,6 +353,14 @@ pub struct PreparedHead {
 /// same f32 dequant/softmax/SV op order), and each head writes a disjoint
 /// `d_k`-wide output stripe, so outputs are byte-for-byte identical
 /// however heads or requests are grouped or scheduled (DESIGN.md §10).
+///
+/// The contract is per [`ExecPath`] (DESIGN.md §12): `Reference` (the
+/// default for every flavor above) is the bit-identity oracle;
+/// `FusedTiled` — selected via the `*_path` variants — streams
+/// attention over SL×TS column tiles with an online softmax and is
+/// *tolerance-equivalent* to `Reference`
+/// ([`super::fused::tolerance`]), itself bit-deterministic across
+/// flavors, lanes and repeats for a fixed path.
 #[derive(Clone, Debug)]
 pub struct PreparedWeights {
     pub topology: Topology,
@@ -356,6 +372,9 @@ pub struct PreparedWeights {
     /// would otherwise re-allocate its table per request.
     qk: QkPm,
     sv: SvPm,
+    /// Fused tile-streaming attention (same scale/softmax/masking, the
+    /// build's TS as tile width), also fixed at prepare time.
+    fused: FusedAttnPm,
 }
 
 impl PreparedWeights {
@@ -394,16 +413,25 @@ impl PreparedWeights {
             None => SoftmaxUnit::exact(),
         };
         let qk = if config.causal {
-            QkPm::causal(topo.seq_len, dkn, score_scale, softmax)
+            QkPm::causal(topo.seq_len, dkn, score_scale, softmax.clone())
         } else {
-            QkPm::new(topo.seq_len, dkn, score_scale, softmax)
+            QkPm::new(topo.seq_len, dkn, score_scale, softmax.clone())
         };
+        let fused = FusedAttnPm::new(
+            topo.seq_len,
+            dkn,
+            topo.tile_size,
+            score_scale,
+            softmax,
+            config.causal,
+        );
         PreparedWeights {
             topology: topo.clone(),
             heads,
             scale2: quant.scale * quant.scale,
             qk,
             sv: SvPm::new(topo.seq_len, dkn),
+            fused,
         }
     }
 
@@ -428,8 +456,13 @@ impl PreparedWeights {
     /// the prepared weights.  Allocating wrapper over
     /// [`Self::execute_into`]; serving paths hold a [`Workspace`] instead.
     pub fn execute(&self, x: &FxMatrix) -> Vec<f32> {
+        self.execute_path(x, ExecPath::Reference)
+    }
+
+    /// [`Self::execute`] on an explicit attention datapath.
+    pub fn execute_path(&self, x: &FxMatrix, path: ExecPath) -> Vec<f32> {
         let mut ws = Workspace::new();
-        self.execute_into(x, &mut ws);
+        self.execute_into_path(x, &mut ws, path);
         ws.take_output()
     }
 
@@ -437,17 +470,25 @@ impl PreparedWeights {
     /// another through lane 0.  A warm call (workspace already sized for
     /// this or a larger topology) performs zero heap allocations.
     pub fn execute_into(&self, x: &FxMatrix, ws: &mut Workspace) {
+        self.execute_into_path(x, ws, ExecPath::Reference)
+    }
+
+    /// [`Self::execute_into`] on an explicit attention datapath
+    /// (DESIGN.md §12): `Reference` materializes SL×SL scores and is the
+    /// bit-identity oracle; `FusedTiled` streams SL×TS column tiles with
+    /// an online softmax and never sizes an SL×SL buffer in `ws`.
+    pub fn execute_into_path(&self, x: &FxMatrix, ws: &mut Workspace, path: ExecPath) {
         let topo = &self.topology;
         let (sln, dmn, dkn) = (topo.seq_len, topo.d_model, topo.d_k());
         assert_eq!(x.rows, sln, "input rows != SL");
         assert_eq!(x.cols, dmn, "input cols != d_model");
-        ws.ensure(topo, 1);
+        ws.ensure(topo, 1, path);
         widen_i16_into(&x.data, &mut ws.x16);
-        let Workspace { x16, lanes, out } = ws;
+        let Workspace { x16, lanes, out, .. } = ws;
         let x16: &[i16] = x16.as_slice();
         let lane = &mut lanes[0];
         for head in 0..self.heads.len() {
-            self.run_head(head, x16, lane);
+            self.run_head(head, x16, lane, path);
             // Concatenate along features: out[:, head*dk..(head+1)*dk].
             for i in 0..sln {
                 out[i * dmn + head * dkn..i * dmn + (head + 1) * dkn]
@@ -469,22 +510,37 @@ impl PreparedWeights {
         pool: &PoolHandle,
         lanes: usize,
     ) {
+        self.execute_parallel_path(x, ws, pool, lanes, ExecPath::Reference)
+    }
+
+    /// [`Self::execute_parallel`] on an explicit attention datapath.
+    /// Head parallelism composes with the fused path unchanged: each
+    /// lane streams its heads' tiles independently, so for a fixed path
+    /// the output is bit-identical to the serial flavor of that path.
+    pub fn execute_parallel_path(
+        &self,
+        x: &FxMatrix,
+        ws: &mut Workspace,
+        pool: &PoolHandle,
+        lanes: usize,
+        path: ExecPath,
+    ) {
         let topo = &self.topology;
         let (sln, dmn, dkn, h) = (topo.seq_len, topo.d_model, topo.d_k(), topo.heads);
         let lanes = lanes.clamp(1, h);
         if lanes <= 1 {
-            return self.execute_into(x, ws);
+            return self.execute_into_path(x, ws, path);
         }
         assert_eq!(x.rows, sln, "input rows != SL");
         assert_eq!(x.cols, dmn, "input cols != d_model");
-        ws.ensure(topo, lanes);
+        ws.ensure(topo, lanes, path);
         widen_i16_into(&x.data, &mut ws.x16);
-        let Workspace { x16, lanes: scratch, out } = ws;
+        let Workspace { x16, lanes: scratch, out, .. } = ws;
         let x16: &[i16] = x16.as_slice();
         let out_ptr = StripePtr(out.as_mut_ptr());
         let f = |lane_idx: usize, lane: &mut HeadScratch| {
             for head in (lane_idx..h).step_by(lanes) {
-                self.run_head(head, x16, lane);
+                self.run_head(head, x16, lane, path);
                 // SAFETY: each head owns the disjoint column stripe
                 // [head·d_k, (head+1)·d_k) of every output row, and each
                 // head is processed by exactly one lane (head ≡ lane_idx
@@ -507,8 +563,10 @@ impl PreparedWeights {
 
     /// One head through QKV → scores → SV, entirely inside `lane`.  The
     /// single source of per-head arithmetic — every execute flavor calls
-    /// this, which is what makes them bit-identical.
-    fn run_head(&self, head: usize, x16: &[i16], lane: &mut HeadScratch) {
+    /// this, which is what makes them bit-identical for a fixed `path`.
+    /// The projections are shared; only the attention stage dispatches on
+    /// the path (reference modules vs the fused tile stream).
+    fn run_head(&self, head: usize, x16: &[i16], lane: &mut HeadScratch, path: ExecPath) {
         let topo = &self.topology;
         let (sln, dmn, dkn) = (topo.seq_len, topo.d_model, topo.d_k());
         let hp = &self.heads[head];
@@ -518,8 +576,22 @@ impl PreparedWeights {
         dequant_into(&lane.acc, &hp.bk, self.scale2, dkn, &mut lane.k);
         matmul_i32_widened_into(x16, &hp.wv16, sln, dmn, dkn, &mut lane.acc);
         dequant_into(&lane.acc, &hp.bv, self.scale2, dkn, &mut lane.v);
-        self.qk.run_into(&lane.q, &lane.k, &mut lane.s);
-        self.sv.run_into(&lane.s, &lane.v, &mut lane.o);
+        match path {
+            ExecPath::Reference => {
+                self.qk.run_into(&lane.q, &lane.k, &mut lane.s);
+                self.sv.run_into(&lane.s, &lane.v, &mut lane.o);
+            }
+            ExecPath::FusedTiled => {
+                self.fused.run_into(
+                    &lane.q,
+                    &lane.k,
+                    &lane.v,
+                    &mut lane.stripe,
+                    &mut lane.rows,
+                    &mut lane.o,
+                );
+            }
+        }
     }
 }
 
@@ -736,6 +808,120 @@ mod tests {
         prepared.execute_into(&x1, &mut ws);
         assert_eq!(ws.footprint(), fp);
         assert_eq!(ws.output(), prepared.execute(&x1));
+    }
+
+    #[test]
+    fn fused_path_matches_reference_within_tolerance() {
+        // The tentpole numerics policy (DESIGN.md §12): fused is
+        // tolerance-equivalent to the reference oracle for both softmax
+        // realizations, masked and dense, across head counts.
+        use super::super::fused::assert_within_tolerance;
+        let topo = Topology::new(12, 64, 4, 16);
+        let inputs = MhaInputs::generate(&topo);
+        for (causal, lut) in [(false, None), (true, None), (false, Some(8)), (true, Some(8))] {
+            let mut cfg = Simulator::toy_config();
+            cfg.causal = causal;
+            cfg.softmax_lut_bits = lut;
+            let prepared = PreparedWeights::prepare(&cfg, &topo, &inputs);
+            let x = prepared.quantize_input(&inputs.x);
+            let want = prepared.execute(&x);
+            let got = prepared.execute_path(&x, ExecPath::FusedTiled);
+            let kind = prepared.fused.softmax.kind;
+            assert_within_tolerance(
+                kind,
+                topo.seq_len,
+                &want,
+                &got,
+                &format!("causal={causal} lut={lut:?}"),
+            );
+        }
+    }
+
+    #[test]
+    fn fused_flavors_bit_identical_to_each_other() {
+        // For a fixed path the flavor contract is unchanged: serial
+        // workspace, head-parallel (any lanes/threads) and repeat runs
+        // of the fused path are byte-for-byte identical.
+        use crate::exec::ThreadPool;
+        let topo = Topology::new(10, 64, 4, 16);
+        let inputs = MhaInputs::generate(&topo);
+        let prepared = PreparedWeights::prepare(&Simulator::toy_config(), &topo, &inputs);
+        let x = prepared.quantize_input(&inputs.x);
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let want = prepared.execute_path(&x, ExecPath::FusedTiled);
+        assert_eq!(
+            bits(&prepared.execute_path(&x, ExecPath::FusedTiled)),
+            bits(&want),
+            "fused repeat run diverged"
+        );
+        let mut ws = Workspace::new();
+        prepared.execute_into_path(&x, &mut ws, ExecPath::FusedTiled);
+        assert_eq!(bits(ws.output()), bits(&want), "fused serial workspace diverged");
+        for threads in [1, 3] {
+            let pool = ThreadPool::new(threads);
+            for lanes in [2, 4, 9] {
+                let mut wsp = Workspace::new();
+                prepared.execute_parallel_path(
+                    &x,
+                    &mut wsp,
+                    &pool.handle(),
+                    lanes,
+                    ExecPath::FusedTiled,
+                );
+                assert_eq!(
+                    bits(wsp.output()),
+                    bits(&want),
+                    "fused head-parallel diverged (threads={threads}, lanes={lanes})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_workspace_is_sl_times_ts_not_sl_squared() {
+        // The acceptance contract: a fused-only workspace never sizes an
+        // SL×SL buffer, its footprint is O(SL×TS), and warm fused
+        // requests allocate nothing.
+        let topo = Topology::new(128, 768, 8, 64);
+        let inputs = MhaInputs::generate(&topo);
+        let prepared = PreparedWeights::prepare(&SimConfig::u55c(), &topo, &inputs);
+        let x = prepared.quantize_input(&inputs.x);
+        let mut fused_ws = Workspace::new();
+        prepared.execute_into_path(&x, &mut fused_ws, ExecPath::FusedTiled);
+        assert_eq!(fused_ws.reference_score_capacity(), 0, "fused allocated SL×SL");
+        let fp = fused_ws.footprint();
+        let fused_bytes = fused_ws.footprint_bytes();
+        prepared.execute_into_path(&x, &mut fused_ws, ExecPath::FusedTiled);
+        assert_eq!(fused_ws.footprint(), fp, "warm fused request reallocated");
+        let mut ref_ws = Workspace::new();
+        prepared.execute_into(&x, &mut ref_ws);
+        let ref_bytes = ref_ws.footprint_bytes();
+        assert!(
+            fused_bytes < ref_bytes,
+            "fused footprint {fused_bytes} not below reference {ref_bytes}"
+        );
+        // The gap is the score scratch itself — SL×SL vs SL×TS floats
+        // (+ SL online rows).  Allow slack for allocator capacity
+        // rounding, but the bulk of the SL² buffer must be gone.
+        let (sl, ts) = (topo.seq_len, topo.tile_size);
+        let saved = ref_bytes - fused_bytes;
+        let score_gap = 4 * (sl * sl) - (4 * sl * ts + 8 * sl);
+        assert!(
+            saved * 10 >= score_gap * 8,
+            "footprint delta {saved} B is not the score scratch (expected ~{score_gap} B)"
+        );
+    }
+
+    #[test]
+    fn long_build_admits_long_sequences() {
+        let cfg = SimConfig::u55c_long();
+        assert!(cfg.build.admits(&Topology::new(1024, 768, 8, 64)).is_ok());
+        assert!(cfg.build.admits(&Topology::new(512, 256, 4, 64)).is_ok());
+        assert!(cfg.build.admits(&Topology::new(2048, 768, 8, 64)).is_err());
+        // Timing still schedules (same loop algebra, longer loops).
+        let mut sim = Simulator::new(cfg);
+        let r = sim.run_timing(&Topology::new(512, 768, 8, 64)).unwrap();
+        assert!(r.cycles > 0);
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Fused tile-streaming attention: QKᵀ → online softmax → S·V in one
+//! pass over key/value column tiles, never materializing the SL×SL
+//! score matrix.
+//!
+//! FAMOUS's core idea is tiling large operands down to what fits
+//! on-chip; the reference execute path nevertheless stages the full
+//! `SL×SL` score matrix per head and walks it three times
+//! (`QkPm::run_into` → `SoftmaxUnit::rows` → `SvPm::run_into`), so the
+//! per-head score footprint and memory traffic grow quadratically with
+//! sequence length.  [`FusedAttnPm`] instead streams the paper's tile
+//! size `TS` worth of key/value columns at a time:
+//!
+//! ```text
+//! for each column tile T of width ≤ TS:          (score stripe: SL×TS)
+//!     S_T   = scale · Q · K_Tᵀ                   (same blocked dot as QkPm)
+//!     per row i:  α = online-softmax absorb of S_T[i]   (running m, l)
+//!                 O[i] = α·O[i] + Σ_j w_j · V[row j]    (rescaled axpy)
+//! finally:       O[i] /= l[i]                    (streamed denominator)
+//! ```
+//!
+//! The standard online-softmax rescale (Milakov & Gimelshein; the flash
+//! attention recurrence): absorbing a tile raises the row maximum from
+//! `m_old` to `m_new`, so the partial output accumulated under `m_old`
+//! is multiplied by `α = exp(m_old − m_new)` before the tile's
+//! contribution is added.  The score footprint drops from `O(SL²)` to
+//! `O(SL×TS)` per head — the lever that makes SL ∈ {256, 512, 1024}
+//! serving first-class (cf. the length-adaptive co-design of Peng et
+//! al. and FTRANS's on-chip working sets, PAPERS.md).
+//!
+//! **Numerics policy (DESIGN.md §12).**  The fused path is
+//! *tolerance-equivalent* to the reference path, not bit-identical: the
+//! pre-softmax scores are bit-identical (same blocked dot kernel, same
+//! per-dot reduction order), but the softmax normalization and the SV
+//! accumulation are reassociated (running rescales; divide once by the
+//! streamed denominator instead of normalizing every probability).  The
+//! reference path remains the bit-identity oracle for every existing
+//! test; [`tolerance`] gives the documented bound the property tests
+//! and benches assert.
+
+use super::modules::blocked_score_row;
+use super::softmax_unit::{OnlineRow, SoftmaxKind, SoftmaxUnit};
+
+/// Which functional attention datapath an execute call runs.
+///
+/// `Reference` is the bit-identity oracle (`QkPm` → `SoftmaxUnit::rows`
+/// → `SvPm`, materializing SL×SL scores); `FusedTiled` is the
+/// tolerance-equivalent streaming path above.  Selected per request by
+/// `runtime::SimBackend`'s policy (SL threshold / score-memory
+/// pressure) or forced by callers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecPath {
+    #[default]
+    Reference,
+    FusedTiled,
+}
+
+/// Fused streaming attention module for one head: the functional
+/// counterpart of running QK_PM, the softmax unit and SV_PM as one
+/// pipelined dataflow over column tiles.
+#[derive(Clone, Debug)]
+pub struct FusedAttnPm {
+    pub seq_len: usize,
+    pub d_k: usize,
+    /// Key/value column tile width (the paper's synthesized TS).
+    pub tile: usize,
+    /// Score scaling multiplier (same convention as `QkPm::scale`).
+    pub scale: f32,
+    /// Decoder masking: row i attends only to columns ≤ i (masked
+    /// scores take the reference path's −1e9 sentinel, so the LUT and
+    /// Exact realizations treat them exactly as `SoftmaxUnit::rows`
+    /// does).
+    pub causal: bool,
+    pub softmax: SoftmaxUnit,
+}
+
+impl FusedAttnPm {
+    pub fn new(
+        seq_len: usize,
+        d_k: usize,
+        tile: usize,
+        scale: f32,
+        softmax: SoftmaxUnit,
+        causal: bool,
+    ) -> Self {
+        assert!(tile > 0, "fused attention needs a positive tile width");
+        FusedAttnPm { seq_len, d_k, tile, scale, causal, softmax }
+    }
+
+    /// Elements of the SL×TS score stripe a workspace lane must hold.
+    pub fn stripe_elems(&self) -> usize {
+        self.seq_len * self.tile
+    }
+
+    /// O = softmax(scale·Q·Kᵀ)·V streamed over column tiles.
+    ///
+    /// `q`, `k`, `v` are (SL × d_k) row-major; `stripe` is the SL×TS
+    /// score tile lane; `rows` the SL per-row online states; `out` the
+    /// (SL × d_k) head output.  Allocation-free: everything lives in
+    /// caller-owned buffers (the workspace's fused tile lanes).
+    pub fn run_into(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        stripe: &mut [f32],
+        rows: &mut [OnlineRow],
+        out: &mut [f32],
+    ) {
+        let (sl, dk, ts) = (self.seq_len, self.d_k, self.tile);
+        assert_eq!(q.len(), sl * dk);
+        assert_eq!(k.len(), sl * dk);
+        assert_eq!(v.len(), sl * dk);
+        assert!(stripe.len() >= sl * ts, "score stripe lane under-sized");
+        assert_eq!(rows.len(), sl);
+        assert_eq!(out.len(), sl * dk);
+        rows.fill(OnlineRow::new());
+        out.fill(0.0);
+
+        let mut j0 = 0;
+        while j0 < sl {
+            let tw = ts.min(sl - j0);
+            // Phase 1 — the tile's score stripe S[:, j0..j0+tw], packed
+            // tw-wide, through the same `blocked_score_row` kernel as
+            // `QkPm::run_into` (one caveat of fusion — that pre-softmax
+            // scores stay bit-identical to the reference path's — holds
+            // by construction, not by parallel maintenance).
+            for i in 0..sl {
+                let qrow = &q[i * dk..(i + 1) * dk];
+                let srow = &mut stripe[i * tw..(i + 1) * tw];
+                blocked_score_row(qrow, k, dk, j0, srow, |j, acc| self.score(i, j, acc));
+            }
+            // Phase 2 — per row: online-softmax absorb (scores become
+            // un-normalized weights in place), rescale the partial
+            // output, accumulate the tile's weighted V rows.  The axpy
+            // is the same branch-free streaming form as
+            // `SvPm::run_into`.
+            for i in 0..sl {
+                let srow = &mut stripe[i * tw..(i + 1) * tw];
+                let alpha = self.softmax.absorb_tile(&mut rows[i], srow);
+                let orow = &mut out[i * dk..(i + 1) * dk];
+                if alpha != 1.0 {
+                    // Common case after the row max stabilizes is α = 1
+                    // exactly (`exp(0.0)`): skipping the multiply is a
+                    // bitwise no-op on the accumulator.
+                    for o in orow.iter_mut() {
+                        *o *= alpha;
+                    }
+                }
+                for (jj, &w) in srow.iter().enumerate() {
+                    let vrow = &v[(j0 + jj) * dk..(j0 + jj + 1) * dk];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+            j0 += tw;
+        }
+
+        // Finalize: one division per output element by the streamed
+        // denominator (vs the reference path's SL² probability
+        // normalizations).  `l ≥ exp_unit(0) = 1` always — the row
+        // maximum itself contributes weight 1 under either realization —
+        // so this never divides by zero.
+        for i in 0..sl {
+            let inv = 1.0 / rows[i].l;
+            for o in out[i * dk..(i + 1) * dk].iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+
+    #[inline]
+    fn score(&self, i: usize, j: usize, acc: f32) -> f32 {
+        if self.causal && j > i {
+            -1e9 // decoder mask, same sentinel as QkPm
+        } else {
+            acc * self.scale
+        }
+    }
+
+    /// Useful MACs per full run — identical to QK_PM + SV_PM (fusion
+    /// changes the schedule and the score residency, not the arithmetic
+    /// count).
+    pub fn macs(&self) -> u64 {
+        2 * (self.seq_len * self.seq_len * self.d_k) as u64
+    }
+}
+
+/// Documented max-abs-diff bound of the fused path against the
+/// reference path (DESIGN.md §12), for outputs whose magnitude is
+/// bounded by `mag` (attention outputs are convex combinations of V
+/// rows, so `max|O_reference|` is a valid magnitude proxy):
+///
+/// * **Exact** — pure f32 reassociation error of the online rescale and
+///   the deferred normalization, linear in the number of accumulated
+///   terms: `8·SL·ε·max(mag, 1)`.
+/// * **LUT(bits)** — two terms.  (a) Step quantization: each streamed
+///   weight is `exp_lut` at the then-current max times an exact
+///   telescoped rescale, i.e. within one LUT step of the batch weight;
+///   with step `s = 8/(2^bits − 1)` the per-weight relative error is
+///   ≤ `e^s − 1`, contributing `4·(e^s − 1)·mag` after normalization
+///   (numerator + denominator each ≤ 2× the per-weight bound).
+///   (b) Clamp floor: the batch pass clamps `score − m_final` to the
+///   LUT domain `[x_min, 0]`, flooring far-below-max weights at
+///   `exp(x_min)`, while the streaming pass absorbs a score against the
+///   *then-current* max and rescales exactly — giving it its true
+///   (smaller) weight when the max later rises past the clamp range.
+///   The per-element discrepancy is absolute, ≤ `exp(x_min)`, and up to
+///   SL elements can sit below the floor: `SL·exp(−8)·mag`.
+pub fn tolerance(kind: SoftmaxKind, seq_len: usize, mag: f32) -> f32 {
+    let mag = mag.abs().max(1.0);
+    match kind {
+        SoftmaxKind::Exact => 8.0 * seq_len as f32 * f32::EPSILON * mag,
+        SoftmaxKind::Lut { bits } => {
+            let step = 8.0 / ((1u64 << bits) as f32 - 1.0);
+            // x_min = −8.0 in both SoftmaxUnit constructors.
+            let clamp_floor = seq_len as f32 * (-8.0f32).exp();
+            (4.0 * (step.exp() - 1.0) + clamp_floor) * mag
+        }
+    }
+}
+
+/// Assert `got` is within the documented [`tolerance`] of the
+/// reference-path `want` (magnitude proxy: `max(1, max|want|)`);
+/// returns the observed `(max_abs_diff, tolerance)` for reporting.
+/// The single enforcement point shared by the property tests, the
+/// engine/runtime tests, the long-SL soak and the exec bench — a bound
+/// change propagates everywhere from here.
+pub fn assert_within_tolerance(
+    kind: SoftmaxKind,
+    seq_len: usize,
+    want: &[f32],
+    got: &[f32],
+    what: &str,
+) -> (f32, f32) {
+    assert_eq!(want.len(), got.len(), "{what}: output length diverged");
+    let mag = want.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let tol = tolerance(kind, seq_len, mag);
+    let diff = want.iter().zip(got).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    assert!(diff <= tol, "{what}: fused-vs-reference diff {diff} > tolerance {tol}");
+    (diff, tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::modules::{QkPm, SvPm};
+    use super::*;
+
+    fn gen(seed: u64, n: usize) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s % 2048) as f32 - 1024.0) / 1024.0
+            })
+            .collect()
+    }
+
+    fn reference(qk: &QkPm, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let s = qk.run(q, k);
+        SvPm::new(qk.seq_len, qk.d_k).run(&s, v)
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+    }
+
+    fn run_fused(pm: &FusedAttnPm, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let mut stripe = vec![0f32; pm.stripe_elems()];
+        let mut rows = vec![OnlineRow::new(); pm.seq_len];
+        let mut out = vec![0f32; pm.seq_len * pm.d_k];
+        pm.run_into(q, k, v, &mut stripe, &mut rows, &mut out);
+        out
+    }
+
+    #[test]
+    fn fused_matches_reference_within_tolerance() {
+        // Every (tile residue × softmax kind × masking) combination on
+        // small shapes, against the materializing reference pipeline.
+        for sl in [3usize, 4, 7, 8, 12, 16] {
+            let dk = 5;
+            let q = gen(1, sl * dk);
+            let k = gen(2, sl * dk);
+            let v = gen(3, sl * dk);
+            for tile in [1usize, 3, 4, 8, 64] {
+                for causal in [false, true] {
+                    for unit in [SoftmaxUnit::exact(), SoftmaxUnit::lut(8)] {
+                        let qk = if causal {
+                            QkPm::causal(sl, dk, 0.37, unit.clone())
+                        } else {
+                            QkPm::new(sl, dk, 0.37, unit.clone())
+                        };
+                        let want = reference(&qk, &q, &k, &v);
+                        let pm = FusedAttnPm::new(sl, dk, tile, 0.37, unit.clone(), causal);
+                        let got = run_fused(&pm, &q, &k, &v);
+                        assert_within_tolerance(
+                            unit.kind,
+                            sl,
+                            &want,
+                            &got,
+                            &format!("sl={sl} tile={tile} causal={causal} {:?}", unit.kind),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_single_tile_is_deterministic_and_tile_invariant() {
+        // Different tile widths must agree with each other within the
+        // exact-kind tolerance (the result is mathematically
+        // tile-independent), and each width is bit-deterministic.
+        let (sl, dk) = (11usize, 4usize);
+        let q = gen(7, sl * dk);
+        let k = gen(8, sl * dk);
+        let v = gen(9, sl * dk);
+        let base = run_fused(
+            &FusedAttnPm::new(sl, dk, 64, 1.0, SoftmaxUnit::exact(), false),
+            &q,
+            &k,
+            &v,
+        );
+        for tile in [1usize, 2, 3, 5, 11] {
+            let pm = FusedAttnPm::new(sl, dk, tile, 1.0, SoftmaxUnit::exact(), false);
+            let a = run_fused(&pm, &q, &k, &v);
+            let b = run_fused(&pm, &q, &k, &v);
+            assert_eq!(a, b, "tile={tile} not deterministic");
+            let mag = base.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            assert!(
+                max_abs_diff(&a, &base) <= tolerance(SoftmaxKind::Exact, sl, mag),
+                "tile={tile} diverged across tile widths"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_rows_are_convex_combinations() {
+        // Output rows must stay inside the V value range (softmax rows
+        // are stochastic), streamed or not.
+        let (sl, dk) = (9usize, 3usize);
+        let q = gen(11, sl * dk);
+        let k = gen(12, sl * dk);
+        let v = gen(13, sl * dk);
+        let pm = FusedAttnPm::new(sl, dk, 4, 0.7, SoftmaxUnit::exact(), false);
+        let out = run_fused(&pm, &q, &k, &v);
+        let vmax = v.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let vmin = v.iter().fold(f32::INFINITY, |m, &x| m.min(x));
+        for &o in &out {
+            assert!(o <= vmax + 1e-5 && o >= vmin - 1e-5, "{o} outside [{vmin}, {vmax}]");
+        }
+    }
+
+    #[test]
+    fn fused_causal_first_row_is_v_row0() {
+        let (sl, dk) = (6usize, 4usize);
+        let q = gen(21, sl * dk);
+        let k = gen(22, sl * dk);
+        let v = gen(23, sl * dk);
+        let pm = FusedAttnPm::new(sl, dk, 4, 0.5, SoftmaxUnit::exact(), true);
+        let out = run_fused(&pm, &q, &k, &v);
+        for j in 0..dk {
+            assert!((out[j] - v[j]).abs() < 1e-6, "row 0 must attend only to position 0");
+        }
+    }
+
+    #[test]
+    fn tolerance_is_monotone_and_positive() {
+        assert!(tolerance(SoftmaxKind::Exact, 64, 1.0) > 0.0);
+        assert!(
+            tolerance(SoftmaxKind::Exact, 1024, 1.0) > tolerance(SoftmaxKind::Exact, 64, 1.0)
+        );
+        assert!(
+            tolerance(SoftmaxKind::Lut { bits: 8 }, 64, 1.0)
+                > tolerance(SoftmaxKind::Lut { bits: 10 }, 64, 1.0)
+        );
+        assert!(
+            tolerance(SoftmaxKind::Exact, 64, 10.0) > tolerance(SoftmaxKind::Exact, 64, 1.0)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "positive tile width")]
+    fn zero_tile_rejected() {
+        FusedAttnPm::new(4, 4, 0, 1.0, SoftmaxUnit::exact(), false);
+    }
+}

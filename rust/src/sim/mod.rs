@@ -23,6 +23,7 @@
 pub mod axi;
 pub mod controller;
 pub mod engine;
+pub mod fused;
 pub mod modules;
 pub mod softmax_unit;
 pub mod workspace;
@@ -31,5 +32,6 @@ pub use controller::{ControlRegs, Controller, CtrlError};
 pub use engine::{
     CycleTrace, PhaseEvent, PreparedHead, PreparedWeights, SimConfig, SimResult, Simulator,
 };
-pub use softmax_unit::SoftmaxUnit;
-pub use workspace::{HeadScratch, Workspace};
+pub use fused::{ExecPath, FusedAttnPm};
+pub use softmax_unit::{OnlineRow, SoftmaxKind, SoftmaxUnit};
+pub use workspace::{HeadScratch, Workspace, SHRINK_WINDOW};

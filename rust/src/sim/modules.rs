@@ -143,12 +143,9 @@ impl QkPm {
     }
 
     /// [`Self::run`] into a caller-owned score buffer (SL × SL) — the
-    /// allocation-free workspace path.  Score columns are blocked four
-    /// wide: one pass over a Q row feeds four independent accumulator
-    /// chains (ILP — strict FP semantics forbid vectorizing a single f32
-    /// reduction, but not running four side by side).  The per-(i, j)
-    /// reduction order over d_k is unchanged, so results are bit-identical
-    /// to the scalar form.
+    /// allocation-free workspace path, built on [`blocked_score_row`]
+    /// (4-wide column chains, per-(i, j) reduction order unchanged, so
+    /// results are bit-identical to the scalar form).
     pub fn run_into(&self, q: &[f32], k: &[f32], s: &mut [f32]) {
         let (sl, dk) = (self.seq_len, self.d_k);
         assert_eq!(q.len(), sl * dk);
@@ -157,32 +154,7 @@ impl QkPm {
         for i in 0..sl {
             let qrow = &q[i * dk..(i + 1) * dk];
             let srow = &mut s[i * sl..(i + 1) * sl];
-            let mut j = 0;
-            while j + 4 <= sl {
-                let k0 = &k[j * dk..(j + 1) * dk];
-                let k1 = &k[(j + 1) * dk..(j + 2) * dk];
-                let k2 = &k[(j + 2) * dk..(j + 3) * dk];
-                let k3 = &k[(j + 3) * dk..(j + 4) * dk];
-                let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
-                for ((((&qv, &b0), &b1), &b2), &b3) in
-                    qrow.iter().zip(k0).zip(k1).zip(k2).zip(k3)
-                {
-                    a0 += qv * b0;
-                    a1 += qv * b1;
-                    a2 += qv * b2;
-                    a3 += qv * b3;
-                }
-                for (jj, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
-                    srow[j + jj] = self.score(i, j + jj, acc);
-                }
-                j += 4;
-            }
-            while j < sl {
-                let krow = &k[j * dk..(j + 1) * dk];
-                let acc: f32 = qrow.iter().zip(krow).map(|(&a, &b)| a * b).sum();
-                srow[j] = self.score(i, j, acc);
-                j += 1;
-            }
+            blocked_score_row(qrow, k, dk, 0, srow, |j, acc| self.score(i, j, acc));
         }
         self.softmax.rows(s, sl, sl);
     }
@@ -198,6 +170,56 @@ impl QkPm {
 
     pub fn macs(&self) -> u64 {
         (self.seq_len * self.seq_len * self.d_k) as u64
+    }
+}
+
+/// One query row's raw scores against the key rows `[j0, j0 + srow.len())`,
+/// written into `srow`: four independent accumulator chains per pass
+/// over the Q row (ILP — strict FP semantics forbid vectorizing a
+/// single f32 reduction, but not running four side by side), scalar
+/// tail for the residue.  `score(j, acc)` finalizes each dot (scaling,
+/// masking).  The per-(i, j) reduction order over `d_k` is the plain
+/// sequential dot.
+///
+/// The single source of score arithmetic: [`QkPm::run_into`] calls it
+/// over full rows and the fused tile stream
+/// ([`super::fused::FusedAttnPm`]) over column tiles, which is what
+/// keeps their pre-softmax scores bit-identical *by construction*
+/// (DESIGN.md §12).
+pub(crate) fn blocked_score_row<F: Fn(usize, f32) -> f32>(
+    qrow: &[f32],
+    k: &[f32],
+    dk: usize,
+    j0: usize,
+    srow: &mut [f32],
+    score: F,
+) {
+    let tw = srow.len();
+    let mut jj = 0;
+    while jj + 4 <= tw {
+        let j = j0 + jj;
+        let k0 = &k[j * dk..(j + 1) * dk];
+        let k1 = &k[(j + 1) * dk..(j + 2) * dk];
+        let k2 = &k[(j + 2) * dk..(j + 3) * dk];
+        let k3 = &k[(j + 3) * dk..(j + 4) * dk];
+        let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+        for ((((&qv, &b0), &b1), &b2), &b3) in qrow.iter().zip(k0).zip(k1).zip(k2).zip(k3) {
+            a0 += qv * b0;
+            a1 += qv * b1;
+            a2 += qv * b2;
+            a3 += qv * b3;
+        }
+        for (off, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+            srow[jj + off] = score(j + off, acc);
+        }
+        jj += 4;
+    }
+    while jj < tw {
+        let j = j0 + jj;
+        let krow = &k[j * dk..(j + 1) * dk];
+        let acc: f32 = qrow.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+        srow[jj] = score(j, acc);
+        jj += 1;
     }
 }
 

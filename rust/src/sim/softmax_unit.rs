@@ -15,6 +15,31 @@ pub enum SoftmaxKind {
     Lut { bits: u32 },
 }
 
+/// One row's running online-softmax state for the streaming (fused)
+/// attention path: the invariant after absorbing any prefix of a row's
+/// scores is `m = max(prefix)` and `l = Σ exp_unit(score − m)` over the
+/// prefix, up to the rescale arithmetic documented on
+/// [`SoftmaxUnit::absorb_tile`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OnlineRow {
+    /// Running maximum of all scores absorbed so far.
+    pub m: f32,
+    /// Running denominator: Σ un-normalized weights under `m`.
+    pub l: f32,
+}
+
+impl OnlineRow {
+    pub fn new() -> Self {
+        OnlineRow { m: f32::NEG_INFINITY, l: 0.0 }
+    }
+}
+
+impl Default for OnlineRow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// The QK_PM softmax unit.
 #[derive(Clone, Debug)]
 pub struct SoftmaxUnit {
@@ -48,6 +73,42 @@ impl SoftmaxUnit {
                 self.table[idx.min(n - 1)]
             }
         }
+    }
+
+    /// Streaming (online-softmax) absorb of one score tile into `row`:
+    /// updates the running max/denominator and replaces `scores` in
+    /// place with the tile's un-normalized weights
+    /// `exp_unit(score − m_new)` under this unit's exp realization.
+    ///
+    /// Returns the rescale factor `α = exp(m_old − m_new)` the caller
+    /// must apply to any partial accumulator (output stripe) built under
+    /// the old maximum.  `α` uses the *exact* exponential regardless of
+    /// the LUT realization: the α chain telescopes, so the effective
+    /// final weight of any score is its unit-exp at the then-current max
+    /// times an exact `exp(m_then − m_final)` — within one LUT
+    /// quantization step of the batch pass's `exp_unit(score − m_final)`
+    /// (the tolerance bound in `sim::fused::tolerance`, DESIGN.md §12).
+    ///
+    /// Before anything is absorbed `row.m` is `−∞`, so the first tile's
+    /// α is `exp(−∞) = 0.0` — it rescales an all-zero accumulator, which
+    /// is exact.  An empty tile returns `α = 1` and changes nothing.
+    pub fn absorb_tile(&self, row: &mut OnlineRow, scores: &mut [f32]) -> f32 {
+        let tile_max = scores.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let m_new = row.m.max(tile_max);
+        if m_new == f32::NEG_INFINITY {
+            // Nothing absorbed yet and an empty tile: avoid the −∞ − −∞
+            // NaN; there is nothing to rescale.
+            return 1.0;
+        }
+        let alpha = (row.m - m_new).exp();
+        let mut sum = 0.0f32;
+        for v in scores.iter_mut() {
+            *v = self.exp(*v - m_new);
+            sum += *v;
+        }
+        row.l = row.l * alpha + sum;
+        row.m = m_new;
+        alpha
     }
 
     /// In-place row softmax over a row-major `rows × cols` matrix.
@@ -157,5 +218,86 @@ mod tests {
     fn lut_cost_scales() {
         assert_eq!(SoftmaxUnit::exact().lut_cost(), 0);
         assert!(SoftmaxUnit::lut(10).lut_cost() > SoftmaxUnit::lut(8).lut_cost());
+    }
+
+    /// Normalized probabilities out of the streaming absorb: weights are
+    /// un-normalized at absorb time; dividing by the final `l` and the
+    /// telescoped α chain recovers the row softmax.
+    fn online_probs(unit: &SoftmaxUnit, row: &[f32], tile: usize) -> Vec<f32> {
+        let mut state = OnlineRow::new();
+        let mut weights = vec![0f32; row.len()];
+        let mut alphas: Vec<(usize, f32)> = Vec::new(); // (tile start, α)
+        let mut j0 = 0;
+        while j0 < row.len() {
+            let tw = tile.min(row.len() - j0);
+            weights[j0..j0 + tw].copy_from_slice(&row[j0..j0 + tw]);
+            let alpha = unit.absorb_tile(&mut state, &mut weights[j0..j0 + tw]);
+            alphas.push((j0, alpha));
+            j0 += tw;
+        }
+        // Apply each later tile's α to every earlier weight (what the
+        // fused SV accumulator does incrementally), then normalize.
+        for &(start, alpha) in &alphas {
+            for w in &mut weights[..start] {
+                *w *= alpha;
+            }
+        }
+        weights.iter().map(|&w| w / state.l).collect()
+    }
+
+    #[test]
+    fn online_absorb_matches_batch_rows_exact() {
+        let unit = SoftmaxUnit::exact();
+        let row: Vec<f32> = (0..13).map(|i| ((i * 29) % 17) as f32 / 3.0 - 2.5).collect();
+        let mut want = row.clone();
+        unit.rows(&mut want, 1, 13);
+        for tile in [1usize, 3, 4, 13, 64] {
+            let got = online_probs(&unit, &row, tile);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-6, "tile={tile}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn online_absorb_matches_batch_rows_lut_within_step() {
+        // The LUT realization: streaming weights are exp_lut at the
+        // then-current max, rescaled exactly — within one LUT step of
+        // the batch pass per element (relative e^step − 1).
+        let unit = SoftmaxUnit::lut(8);
+        let step = 8.0f32 / 255.0;
+        let rel = step.exp() - 1.0;
+        let row: Vec<f32> = (0..16).map(|i| ((i * 23) % 19) as f32 / 4.0 - 2.0).collect();
+        let mut want = row.clone();
+        unit.rows(&mut want, 1, 16);
+        for tile in [2usize, 5, 16] {
+            let got = online_probs(&unit, &row, tile);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= 2.0 * rel * w.max(1e-3) + 1e-6, "tile={tile}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_tile_edge_cases() {
+        let unit = SoftmaxUnit::exact();
+        let mut row = OnlineRow::new();
+        // Empty tile on a fresh row: no-op, α = 1.
+        assert_eq!(unit.absorb_tile(&mut row, &mut []), 1.0);
+        assert_eq!(row, OnlineRow::new());
+        // First real tile: α = exp(−∞) = 0 (rescales the zero
+        // accumulator), state becomes (max, Σ exp(v − max)).
+        let mut t = [0.5f32, -0.5];
+        assert_eq!(unit.absorb_tile(&mut row, &mut t), 0.0);
+        assert_eq!(row.m, 0.5);
+        assert!((row.l - (1.0 + (-1.0f32).exp())).abs() < 1e-6);
+        // A tile that does not raise the max: α = 1 exactly.
+        let mut t2 = [-1.0f32];
+        assert_eq!(unit.absorb_tile(&mut row, &mut t2), 1.0);
+        // A masked-only tile (−1e9 scores, the causal convention): the
+        // max is unchanged and exact weights vanish.
+        let mut t3 = [-1e9f32, -1e9];
+        assert_eq!(unit.absorb_tile(&mut row, &mut t3), 1.0);
+        assert_eq!(t3, [0.0, 0.0]);
     }
 }

@@ -14,8 +14,30 @@
 //! [`HeadScratch`], so lanes never share mutable state; the output is a
 //! single buffer written in disjoint per-head column stripes (DESIGN.md
 //! §10).
+//!
+//! Each lane carries scratch for both attention datapaths
+//! (DESIGN.md §12): the reference path's `SL×SL` score matrix `s`, and
+//! the fused tile-streaming path's `SL×TS` score stripe + per-row
+//! online-softmax states.  Only the buffers of the path actually
+//! executed are sized, so a workspace that has served only fused
+//! requests never allocates an `SL×SL` buffer — the O(SL×TS) footprint
+//! the long-sequence path exists for.
+//!
+//! Sizing is grow-only per request with a **high-water-mark decay**:
+//! after [`SHRINK_WINDOW`] consecutive requests demanding less than
+//! half the arena's retained bytes, buffers are released down to the
+//! current demand (a fleet that served one burst of large topologies
+//! does not pin their arenas forever).  Warm steady-state traffic keeps
+//! demand at capacity, so the zero-allocation contract is untouched.
 
+use super::fused::ExecPath;
+use super::softmax_unit::OnlineRow;
 use crate::config::Topology;
+
+/// Consecutive under-half-demand requests before a workspace releases
+/// its surplus capacity (the pool-side analogue lives in
+/// `runtime::SimBackend`).
+pub const SHRINK_WINDOW: u32 = 64;
 
 /// One head lane's scratch: everything a single head's pipeline touches.
 #[derive(Clone, Debug, Default)]
@@ -26,21 +48,71 @@ pub struct HeadScratch {
     pub(crate) q: Vec<f32>,
     pub(crate) k: Vec<f32>,
     pub(crate) v: Vec<f32>,
-    /// Score matrix (SL × SL).
+    /// Score matrix (SL × SL) — reference path only.
     pub(crate) s: Vec<f32>,
+    /// Score tile stripe (SL × TS) — fused streaming path only.
+    pub(crate) stripe: Vec<f32>,
+    /// Per-row online-softmax running (max, denominator) — fused only.
+    pub(crate) rows: Vec<OnlineRow>,
     /// Head output (SL × d_k) before the stripe copy into the request
     /// output.
     pub(crate) o: Vec<f32>,
 }
 
 impl HeadScratch {
-    fn ensure(&mut self, sl: usize, dk: usize) {
+    fn ensure(&mut self, sl: usize, dk: usize, ts: usize, path: ExecPath) {
         self.acc.resize(sl * dk, 0);
         self.q.resize(sl * dk, 0.0);
         self.k.resize(sl * dk, 0.0);
         self.v.resize(sl * dk, 0.0);
-        self.s.resize(sl * sl, 0.0);
         self.o.resize(sl * dk, 0.0);
+        // Only the executed path's score scratch is sized; the other
+        // path's length drops to zero (its *capacity* — and therefore
+        // the warm footprint — is untouched, but it counts as surplus
+        // for the decay policy and is freed if a shrink fires).
+        match path {
+            ExecPath::Reference => {
+                self.s.resize(sl * sl, 0.0);
+                self.stripe.truncate(0);
+                self.rows.truncate(0);
+            }
+            ExecPath::FusedTiled => {
+                self.s.truncate(0);
+                self.stripe.resize(sl * ts, 0.0);
+                self.rows.resize(sl, OnlineRow::new());
+            }
+        }
+    }
+
+    /// Bytes this lane's current request actually uses (lengths).
+    fn demand_bytes(&self) -> usize {
+        self.acc.len() * 4
+            + (self.q.len() + self.k.len() + self.v.len()) * 4
+            + self.s.len() * 4
+            + self.stripe.len() * 4
+            + self.rows.len() * std::mem::size_of::<OnlineRow>()
+            + self.o.len() * 4
+    }
+
+    /// Bytes this lane retains (capacities).
+    fn capacity_bytes(&self) -> usize {
+        self.acc.capacity() * 4
+            + (self.q.capacity() + self.k.capacity() + self.v.capacity()) * 4
+            + self.s.capacity() * 4
+            + self.stripe.capacity() * 4
+            + self.rows.capacity() * std::mem::size_of::<OnlineRow>()
+            + self.o.capacity() * 4
+    }
+
+    fn release_surplus(&mut self) {
+        self.acc.shrink_to_fit();
+        self.q.shrink_to_fit();
+        self.k.shrink_to_fit();
+        self.v.shrink_to_fit();
+        self.s.shrink_to_fit();
+        self.stripe.shrink_to_fit();
+        self.rows.shrink_to_fit();
+        self.o.shrink_to_fit();
     }
 }
 
@@ -55,6 +127,9 @@ pub struct Workspace {
     pub(crate) lanes: Vec<HeadScratch>,
     /// Request output (SL × d_model, heads concatenated).
     pub(crate) out: Vec<f32>,
+    /// Consecutive ensures whose demand was under half the retained
+    /// bytes (drives the high-water-mark decay).
+    lean_streak: u32,
 }
 
 impl Workspace {
@@ -62,18 +137,40 @@ impl Workspace {
         Self::default()
     }
 
-    /// Size every buffer for `topo` with `lanes` head lanes.  `Vec::resize`
-    /// never shrinks capacity, so buffers only grow: a warm call with a
-    /// previously-seen (or smaller) topology allocates nothing.
-    pub(crate) fn ensure(&mut self, topo: &Topology, lanes: usize) {
-        let (sl, dm, dk) = (topo.seq_len, topo.d_model, topo.d_k());
+    /// Size every buffer for `topo` with `lanes` head lanes on `path`.
+    /// `Vec::resize` never shrinks capacity, so a warm call with a
+    /// previously-seen (or smaller) topology allocates nothing; sustained
+    /// under-half demand eventually releases the surplus (see the module
+    /// docs).
+    pub(crate) fn ensure(&mut self, topo: &Topology, lanes: usize, path: ExecPath) {
+        let (sl, dm, dk, ts) = (topo.seq_len, topo.d_model, topo.d_k(), topo.tile_size);
         self.x16.resize(sl * dm, 0);
         self.out.resize(sl * dm, 0.0);
         if self.lanes.len() < lanes {
             self.lanes.resize_with(lanes, HeadScratch::default);
         }
         for lane in &mut self.lanes[..lanes] {
-            lane.ensure(sl, dk);
+            lane.ensure(sl, dk, ts, path);
+        }
+        // High-water-mark decay: idle lanes and the unused path's score
+        // scratch count as surplus; demand is what this request sized.
+        let demand = self.x16.len() * 2
+            + self.out.len() * 4
+            + self.lanes[..lanes].iter().map(HeadScratch::demand_bytes).sum::<usize>();
+        if demand * 2 < self.footprint_bytes() {
+            self.lean_streak += 1;
+            if self.lean_streak >= SHRINK_WINDOW {
+                self.lanes.truncate(lanes);
+                self.lanes.shrink_to_fit();
+                for lane in &mut self.lanes {
+                    lane.release_surplus();
+                }
+                self.x16.shrink_to_fit();
+                self.out.shrink_to_fit();
+                self.lean_streak = 0;
+            }
+        } else {
+            self.lean_streak = 0;
         }
     }
 
@@ -103,9 +200,27 @@ impl Workspace {
             fp.push((l.k.as_ptr() as usize, l.k.capacity()));
             fp.push((l.v.as_ptr() as usize, l.v.capacity()));
             fp.push((l.s.as_ptr() as usize, l.s.capacity()));
+            fp.push((l.stripe.as_ptr() as usize, l.stripe.capacity()));
+            fp.push((l.rows.as_ptr() as usize, l.rows.capacity()));
             fp.push((l.o.as_ptr() as usize, l.o.capacity()));
         }
         fp
+    }
+
+    /// Total bytes the arena retains (all buffer capacities) — the
+    /// quantity the exec bench reports as peak workspace bytes and the
+    /// O(SL×TS)-vs-O(SL²) scaling tests compare.
+    pub fn footprint_bytes(&self) -> usize {
+        self.x16.capacity() * 2
+            + self.out.capacity() * 4
+            + self.lanes.iter().map(HeadScratch::capacity_bytes).sum::<usize>()
+    }
+
+    /// Capacity of lane 0's reference-path SL×SL score buffer (0 when
+    /// the workspace has only ever run the fused path) — test hook for
+    /// the "fused never materializes SL×SL" contract.
+    pub fn reference_score_capacity(&self) -> usize {
+        self.lanes.first().map_or(0, |l| l.s.capacity())
     }
 }
 
@@ -118,29 +233,93 @@ mod tests {
         let mut ws = Workspace::new();
         let small = Topology::new(8, 64, 2, 16);
         let large = Topology::new(16, 64, 2, 16);
-        ws.ensure(&large, 2);
+        ws.ensure(&large, 2, ExecPath::Reference);
         let fp = ws.footprint();
         assert_eq!(ws.lanes.len(), 2);
         assert_eq!(ws.x16.len(), 16 * 64);
         // Warm re-ensure (same + smaller topology): nothing moves.
-        ws.ensure(&large, 2);
+        ws.ensure(&large, 2, ExecPath::Reference);
         assert_eq!(ws.footprint(), fp);
-        ws.ensure(&small, 1);
-        ws.ensure(&large, 2);
+        ws.ensure(&small, 1, ExecPath::Reference);
+        ws.ensure(&large, 2, ExecPath::Reference);
         assert_eq!(ws.footprint(), fp, "shrink + regrow must stay in capacity");
+    }
+
+    #[test]
+    fn fused_path_sizes_stripe_not_score_matrix() {
+        let mut ws = Workspace::new();
+        let topo = Topology::new(32, 64, 2, 16);
+        ws.ensure(&topo, 1, ExecPath::FusedTiled);
+        assert_eq!(ws.lanes[0].stripe.len(), 32 * 16);
+        assert_eq!(ws.lanes[0].rows.len(), 32);
+        assert_eq!(ws.reference_score_capacity(), 0, "fused must not allocate SL×SL");
+        let fused_bytes = ws.footprint_bytes();
+        // The reference path at the same topology retains strictly more.
+        let mut ws_ref = Workspace::new();
+        ws_ref.ensure(&topo, 1, ExecPath::Reference);
+        assert_eq!(ws_ref.lanes[0].s.len(), 32 * 32);
+        assert!(ws_ref.footprint_bytes() > fused_bytes);
+        // Switching a fused workspace to reference sizes s lazily.
+        ws.ensure(&topo, 1, ExecPath::Reference);
+        assert_eq!(ws.lanes[0].s.len(), 32 * 32);
+        assert_eq!(ws.lanes[0].stripe.len(), 0);
+        assert!(ws.lanes[0].stripe.capacity() >= 32 * 16, "capacity is retained");
     }
 
     #[test]
     fn take_output_then_warm_up_again() {
         let mut ws = Workspace::new();
         let topo = Topology::new(4, 32, 2, 16);
-        ws.ensure(&topo, 1);
+        ws.ensure(&topo, 1, ExecPath::Reference);
         ws.out[0] = 7.0;
         let out = ws.take_output();
         assert_eq!(out.len(), 4 * 32);
         assert_eq!(out[0], 7.0);
         assert!(ws.output().is_empty());
-        ws.ensure(&topo, 1);
+        ws.ensure(&topo, 1, ExecPath::Reference);
         assert_eq!(ws.output().len(), 4 * 32);
+    }
+
+    #[test]
+    fn high_water_mark_decays_after_sustained_small_demand() {
+        let mut ws = Workspace::new();
+        let big = Topology::new(64, 64, 2, 16);
+        let small = Topology::new(4, 32, 2, 16);
+        ws.ensure(&big, 4, ExecPath::Reference);
+        let peak = ws.footprint_bytes();
+        // One small request is not enough: capacity must survive a blip
+        // (the next big request would otherwise reallocate everything).
+        ws.ensure(&small, 1, ExecPath::Reference);
+        assert_eq!(ws.footprint_bytes(), peak);
+        ws.ensure(&big, 4, ExecPath::Reference);
+        assert_eq!(ws.footprint_bytes(), peak, "big demand resets the streak");
+        // A sustained window of small demand releases the surplus.
+        for _ in 0..SHRINK_WINDOW {
+            ws.ensure(&small, 1, ExecPath::Reference);
+        }
+        let shrunk = ws.footprint_bytes();
+        assert!(shrunk < peak, "decay must release the high-water surplus");
+        assert_eq!(ws.lanes.len(), 1, "idle lanes released");
+        // Post-shrink steady state is warm again: zero allocations.
+        let fp = ws.footprint();
+        for _ in 0..4 {
+            ws.ensure(&small, 1, ExecPath::Reference);
+        }
+        assert_eq!(ws.footprint(), fp, "post-shrink warm request reallocated");
+    }
+
+    #[test]
+    fn steady_state_demand_never_shrinks() {
+        // Same-topology traffic keeps demand at capacity: no decay, and
+        // every footprint snapshot is identical — the zero-allocation
+        // warm contract is unaffected by the policy.
+        let mut ws = Workspace::new();
+        let topo = Topology::new(16, 64, 2, 16);
+        ws.ensure(&topo, 2, ExecPath::Reference);
+        let fp = ws.footprint();
+        for _ in 0..(2 * SHRINK_WINDOW) {
+            ws.ensure(&topo, 2, ExecPath::Reference);
+            assert_eq!(ws.footprint(), fp);
+        }
     }
 }

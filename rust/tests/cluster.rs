@@ -169,6 +169,7 @@ fn cluster_survives_backpressure_saturation() {
             scheduler: serving_sched(),
             server: famous::coordinator::ServerConfig { queue_capacity: 1, ingest_burst: 1 },
             max_retries: 2,
+            ..ClusterConfig::default()
         },
     )
     .unwrap();

@@ -313,6 +313,110 @@ fn prop_head_parallel_workspace_bit_identical_to_serial() {
     });
 }
 
+// ------------------------------------------ fused streaming path (PR 5)
+
+#[test]
+fn prop_fused_tiled_within_tolerance_of_reference() {
+    // The PR-5 numerics policy (DESIGN.md §12): the fused tile-streaming
+    // path is tolerance-equivalent to the reference oracle across random
+    // topologies (tile residues included), both softmax realizations,
+    // causal and dense — and bit-deterministic per path across flavors.
+    use famous::exec::ThreadPool;
+    use famous::sim::{fused, ExecPath, PreparedWeights, Workspace};
+    use famous::testdata::MhaInputs;
+    run("fused ~= reference", 30, |g: &mut Gen| {
+        let heads = *g.pick(&[1usize, 2, 3, 4]);
+        let dk = *g.pick(&[4usize, 8, 16]);
+        let dm = heads * dk;
+        let sl = g.usize_in(2, 24);
+        // Any tile width dividing d_model is a valid build TS; small
+        // ones force multi-tile streaming with tail tiles.
+        let ts_candidates: Vec<usize> =
+            [2usize, 4, 8, 16, dm].iter().copied().filter(|t| dm % t == 0).collect();
+        let ts = *g.pick(&ts_candidates);
+        let topo = Topology::new(sl, dm, heads, ts);
+        let mut inputs = MhaInputs::generate(&topo);
+        for _ in 0..4 {
+            let i = g.usize_in(0, inputs.x.len() - 1);
+            inputs.x[i] = g.f64_in(-1.0, 1.0) as f32;
+            let j = g.usize_in(0, inputs.wv.len() - 1);
+            inputs.wv[j] = g.f64_in(-1.0, 1.0) as f32;
+        }
+        let mut cfg = SimConfig::u55c();
+        cfg.causal = g.bool();
+        let kind = if g.bool() {
+            cfg.softmax_lut_bits = Some(8);
+            famous::sim::SoftmaxKind::Lut { bits: 8 }
+        } else {
+            famous::sim::SoftmaxKind::Exact
+        };
+        let prepared = PreparedWeights::prepare(&cfg, &topo, &inputs);
+        let x = prepared.quantize_input(&inputs.x);
+        let want = prepared.execute(&x); // reference oracle
+        let got = prepared.execute_path(&x, ExecPath::FusedTiled);
+        fused::assert_within_tolerance(kind, sl, &want, &got, &format!("{topo} ts={ts}"));
+
+        // Per-path bit-determinism: serial workspace and head-parallel
+        // fused runs reproduce the allocating fused run exactly.
+        let mut ws = Workspace::new();
+        prepared.execute_into_path(&x, &mut ws, ExecPath::FusedTiled);
+        assert_eq!(bits(ws.output()), bits(&got), "fused workspace diverged ({topo})");
+        assert_eq!(
+            ws.reference_score_capacity(),
+            0,
+            "fused workspace materialized an SL×SL buffer ({topo})"
+        );
+        let threads = g.usize_in(1, 3);
+        let lanes = g.usize_in(1, heads + 1);
+        let pool = ThreadPool::new(threads);
+        let mut wsp = Workspace::new();
+        prepared.execute_parallel_path(&x, &mut wsp, &pool.handle(), lanes, {
+            ExecPath::FusedTiled
+        });
+        assert_eq!(
+            bits(wsp.output()),
+            bits(&got),
+            "fused head-parallel diverged ({topo}, threads={threads}, lanes={lanes})"
+        );
+    });
+}
+
+#[test]
+fn fused_workspace_footprint_is_sl_times_ts() {
+    // The acceptance contract: fused workspaces carry SL×TS score
+    // stripes, never SL×SL — footprint scales linearly in SL at fixed
+    // TS, and warm fused requests allocate nothing.
+    use famous::sim::{ExecPath, PreparedWeights, Workspace};
+    use famous::testdata::MhaInputs;
+    let bytes_at = |sl: usize| -> (usize, usize) {
+        let topo = Topology::new(sl, 128, 2, 64);
+        let inputs = MhaInputs::generate(&topo);
+        let prepared = PreparedWeights::prepare(&SimConfig::u55c_long(), &topo, &inputs);
+        let x = prepared.quantize_input(&inputs.x);
+        let mut fused_ws = Workspace::new();
+        prepared.execute_into_path(&x, &mut fused_ws, ExecPath::FusedTiled);
+        assert_eq!(fused_ws.reference_score_capacity(), 0);
+        let fp = fused_ws.footprint();
+        prepared.execute_into_path(&x, &mut fused_ws, ExecPath::FusedTiled);
+        assert_eq!(fused_ws.footprint(), fp, "warm fused request reallocated (SL={sl})");
+        let mut ref_ws = Workspace::new();
+        prepared.execute_into_path(&x, &mut ref_ws, ExecPath::Reference);
+        (fused_ws.footprint_bytes(), ref_ws.footprint_bytes())
+    };
+    let (f128, r128) = bytes_at(128);
+    let (f256, r256) = bytes_at(256);
+    assert!(f128 < r128 && f256 < r256, "fused must retain less than reference");
+    // The reference−fused gap is exactly the score scratch: SL²·4 vs
+    // SL·TS·4 + SL·8.  Doubling SL quadruples the former and doubles
+    // the latter, so the gap must more than triple — the O(SL²) vs
+    // O(SL×TS) scaling the fused path exists for.
+    let (gap128, gap256) = (r128 - f128, r256 - f256);
+    assert!(
+        gap256 > 3 * gap128,
+        "score-scratch gap {gap128} → {gap256} is not scaling quadratically"
+    );
+}
+
 #[test]
 fn warm_workspace_requests_allocate_nothing() {
     // A second same-topology request must leave every buffer pointer and

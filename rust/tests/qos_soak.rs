@@ -66,7 +66,18 @@ fn run_soak(
     fail_at: Option<usize>,
 ) -> SoakRun {
     let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
-    let mix = soak_mix();
+    run_soak_with(devices, soak_mix(), seed, policy, n, rho, fail_at)
+}
+
+fn run_soak_with(
+    devices: Vec<DeviceSpec>,
+    mix: Vec<(Topology, f64)>,
+    seed: u64,
+    policy: QosPolicy,
+    n: usize,
+    rho: f64,
+    fail_at: Option<usize>,
+) -> SoakRun {
     // The shared bursty preset: MMPP averaging `rho` of fleet capacity,
     // High/Normal/Low on 4x/8x/12x mean-service deadline budgets.
     let arrivals =
@@ -198,6 +209,64 @@ fn edf_slack_strictly_beats_fifo_affinity_at_equal_load() {
     // Acceptance: accepted outputs remain bit-identical to serial
     // execution under the QoS policy.
     assert_outputs_bit_identical(&edf.outputs);
+}
+
+/// Long-sequence mix served by the fused-streaming build (ISSUE 5):
+/// every shape is at or past `FUSED_SL_THRESHOLD`, so the whole soak
+/// runs on the fused tile-streaming path.  Small d_model keeps the
+/// int8 projections cheap in debug CI runs.
+fn long_mix() -> Vec<(Topology, f64)> {
+    vec![
+        (Topology::new(512, 128, 2, 64), 3.0),
+        (Topology::new(256, 128, 2, 64), 1.0),
+    ]
+}
+
+/// Every served long-SL output must sit within the documented
+/// fused-vs-reference tolerance (DESIGN.md §12) of a serial
+/// reference-path run of the same request.
+fn assert_outputs_within_fused_tolerance(outputs: &[(Topology, Vec<f32>)]) {
+    use famous::sim::{fused, PreparedWeights, SoftmaxKind};
+    let cfg = SimConfig::u55c_long();
+    let mut references: Vec<(Topology, Vec<f32>)> = Vec::new();
+    for (topo, out) in outputs {
+        if !references.iter().any(|(t, _)| t == topo) {
+            let inputs = famous::testdata::MhaInputs::generate(topo);
+            let prepared = PreparedWeights::prepare(&cfg, topo, &inputs);
+            let x = prepared.quantize_input(&inputs.x);
+            references.push((topo.clone(), prepared.execute(&x))); // reference oracle
+        }
+        let (_, want) = references.iter().find(|(t, _)| t == topo).unwrap();
+        fused::assert_within_tolerance(
+            SoftmaxKind::Exact,
+            topo.seq_len,
+            want,
+            out,
+            &format!("cluster fused output for {topo}"),
+        );
+    }
+}
+
+#[test]
+fn long_sl_soak_runs_fused_path_reproducibly_within_tolerance() {
+    // SL=512-class serving end to end through the cluster: the auto
+    // policy must dispatch every request on the fused path, miss/shed
+    // counts and output hashes must be bit-reproducible run-to-run, and
+    // served outputs must match the reference path within the
+    // documented tolerance.
+    let n = if cfg!(debug_assertions) { 8 } else { 32 };
+    let devices = || (0..4).map(DeviceSpec::u55c_long).collect::<Vec<_>>();
+    let a = run_soak_with(devices(), long_mix(), SOAK_SEED, QosPolicy::SlackEdf, n, 0.8, None);
+    let b = run_soak_with(devices(), long_mix(), SOAK_SEED, QosPolicy::SlackEdf, n, 0.8, None);
+    assert_eq!(a.summary, b.summary, "long-SL soak must be bit-reproducible");
+    let shed: u64 = a.summary.shed.iter().sum();
+    assert_eq!(a.summary.served + shed, n as u64);
+    // Dispatch attribution: everything ran fused, nothing fell back.
+    let fused: u64 = a.fleet.devices.iter().map(|d| d.stats.fused_dispatches).sum();
+    let reference: u64 = a.fleet.devices.iter().map(|d| d.stats.reference_dispatches).sum();
+    assert_eq!(fused, a.summary.served, "every long-SL request must run the fused path");
+    assert_eq!(reference, 0, "no long-SL request may fall back to the SL×SL path");
+    assert_outputs_within_fused_tolerance(&a.outputs);
 }
 
 #[test]
