@@ -22,9 +22,10 @@
 
 use famous::accel::FamousAccelerator;
 use famous::cluster::loadgen::{mean_service_ms, rate_for_utilization};
+use famous::cluster::telemetry::render_top;
 use famous::cluster::{
     Arrival, Cluster, ClusterConfig, DeviceSpec, FleetStats, LoadGen, LoadGenConfig, QosOutcome,
-    QosPolicy, WorkloadProfile,
+    QosPolicy, TelemetryConfig, WorkloadProfile,
 };
 use famous::config::Topology;
 use famous::coordinator::{BatchPolicy, Priority, SchedulerConfig};
@@ -45,8 +46,11 @@ fn mix() -> Vec<(Topology, f64)> {
 fn replay(
     arrivals: &[Arrival],
     policy: QosPolicy,
+    operator_report: bool,
 ) -> anyhow::Result<(FleetStats, Vec<(Topology, Vec<f32>)>)> {
     let m = mix();
+    let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+    let base_ms = mean_service_ms(&devices, &m);
     let scheduler = SchedulerConfig {
         max_batch: 8,
         policy: match policy {
@@ -60,15 +64,44 @@ fn replay(
         workload.push(t.clone(), *share);
     }
     let cluster = Cluster::start(
-        (0..4).map(DeviceSpec::u55c).collect(),
+        devices,
         &workload,
-        ClusterConfig { scheduler, qos: policy, ..ClusterConfig::default() },
+        ClusterConfig {
+            scheduler,
+            qos: policy,
+            // Windows scaled to the mean service time so this short
+            // trace seals a ring worth looking at.
+            telemetry: TelemetryConfig {
+                window_ms: 12.0 * base_ms,
+                ..TelemetryConfig::default()
+            },
+            ..ClusterConfig::default()
+        },
     )?;
+    let names = cluster.device_names();
     let h = cluster.handle();
     let mut served = Vec::new();
     for (i, a) in arrivals.iter().enumerate() {
         if let QosOutcome::Served(resp) = h.call_qos(a.materialize(i as u64))? {
             served.push((resp.topology.clone(), resp.output));
+        }
+        // The periodic operator report: the dashboard a `famous top`
+        // operator would watch, rendered from whatever the watermark
+        // has sealed so far (no forced flush — late windows stay open).
+        if operator_report && (i + 1) % 40 == 0 {
+            let snap = cluster.telemetry();
+            println!("-- operator report after {} arrivals --", i + 1);
+            print!("{}", render_top(&snap.frames, &names, cluster.control_log()));
+        }
+    }
+    if operator_report {
+        cluster.seal_telemetry();
+        let snap = cluster.telemetry();
+        println!("-- final telemetry ({} sealed frames) --", snap.frames.len());
+        print!("{}", render_top(&snap.frames, &names, cluster.control_log()));
+        println!("frame export sample (JSONL):");
+        for line in snap.to_jsonl().lines().take(2) {
+            println!("  {line}");
         }
     }
     Ok((cluster.shutdown(), served))
@@ -97,11 +130,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("\n-- FIFO/affinity (PR-1 policy) --");
-    let (fifo, _) = replay(&arrivals, QosPolicy::Affinity)?;
+    let (fifo, _) = replay(&arrivals, QosPolicy::Affinity, false)?;
     print!("{}", fifo.render());
 
     println!("-- EDF + slack (ClusterConfig::qos) --");
-    let (edf, served) = replay(&arrivals, QosPolicy::SlackEdf)?;
+    let (edf, served) = replay(&arrivals, QosPolicy::SlackEdf, true)?;
     print!("{}", edf.render());
 
     // Verify a served sample bit-identical to a serial run (operands

@@ -35,6 +35,11 @@ pub struct RouterTotals {
     /// Requests landing on their programmed/pinned device.
     pub affinity_hits: u64,
     pub affinity_misses: u64,
+    /// Requests landing on a device that was *warm* for the topology
+    /// (present in its ProgramCache) without being *hot* (currently
+    /// programmed) — the routing delta contributed by the warm-set
+    /// signal beyond plain hot affinity.
+    pub warm_hits: u64,
     /// Requests no device (even sharded) could admit.
     pub rejected: u64,
     /// Modeled GOP dispatched (paper op-counting convention, per
@@ -339,7 +344,7 @@ impl FleetStats {
             "Fleet report — per device",
             &[
                 "device", "part", "health", "served", "batches", "reconf", "sims", "cache %",
-                "busy ms", "occ %", "LUT %", "BRAM %",
+                "progs", "busy ms", "occ %", "LUT %", "BRAM %",
             ],
         );
         for d in &self.devices {
@@ -352,6 +357,7 @@ impl FleetStats {
                 d.stats.reconfigurations.to_string(),
                 d.stats.timing_sims.to_string(),
                 format!("{:.0}", d.program_cache_hit_rate() * 100.0),
+                d.stats.cached_topologies.len().to_string(),
                 fmt_f(d.busy_ms()),
                 format!("{:.0}", self.occupancy(d.id) * 100.0),
                 format!("{:.0}", d.utilization.lut_pct),
@@ -387,12 +393,14 @@ impl FleetStats {
             ));
         }
         out.push_str(&format!(
-            "reconfigurations: {} total, {:.2} per request; affinity {:.0}% ({} hits / {} misses); {} retries\n",
+            "reconfigurations: {} total, {:.2} per request; affinity {:.0}% ({} hits / {} misses, \
+             {} warm); {} retries\n",
             self.reconfigurations(),
             self.reconfigs_per_request(),
             self.affinity_hit_rate() * 100.0,
             self.totals.affinity_hits,
             self.totals.affinity_misses,
+            self.totals.warm_hits,
             self.totals.retries
         ));
         let slo = &self.totals.slo;
@@ -459,6 +467,7 @@ mod tests {
             retries: 1,
             affinity_hits: 4,
             affinity_misses: 1,
+            warm_hits: 1,
             rejected: 0,
             total_gop: 2.0,
             slo: SloStats::default(),

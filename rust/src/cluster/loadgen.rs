@@ -15,6 +15,7 @@
 //! self-tests check the Poisson process actually delivers its
 //! configured rate (so bench numbers are trustworthy).
 
+use super::telemetry::TelemetryFrame;
 use super::DeviceSpec;
 use crate::config::Topology;
 use crate::coordinator::{Priority, Request};
@@ -315,6 +316,123 @@ pub fn rate_for_utilization(devices: &[DeviceSpec], mix: &[(Topology, f64)], rho
     rho * 1000.0 * devices.len() as f64 / mean_service_ms(devices, mix)
 }
 
+/// A two-state MMPP fitted from windowed arrival counts (the inverse of
+/// [`ArrivalProcess::Bursty`], recovered from a telemetry frame trace).
+#[derive(Clone, Copy, Debug)]
+pub struct MmppFit {
+    pub calm_rate_hz: f64,
+    pub burst_rate_hz: f64,
+    pub mean_calm_ms: f64,
+    pub mean_burst_ms: f64,
+    /// Arrivals-per-window count separating the two states (windows
+    /// above it were labeled burst).
+    pub threshold: f64,
+}
+
+impl MmppFit {
+    /// The fitted parameters as a generator process, closing the
+    /// generate → record → fit → regenerate loop.
+    pub fn process(&self) -> ArrivalProcess {
+        ArrivalProcess::Bursty {
+            calm_rate_hz: self.calm_rate_hz,
+            burst_rate_hz: self.burst_rate_hz,
+            mean_calm_ms: self.mean_calm_ms,
+            mean_burst_ms: self.mean_burst_ms,
+        }
+    }
+
+    /// Dwell-weighted average arrival rate of the fitted process.
+    pub fn average_rate_hz(&self) -> f64 {
+        (self.calm_rate_hz * self.mean_calm_ms + self.burst_rate_hz * self.mean_burst_ms)
+            / (self.mean_calm_ms + self.mean_burst_ms)
+    }
+}
+
+/// Fit MMPP burst/calm parameters from a recorded telemetry frame trace
+/// (closes the stale QoS follow-up).  Frames must be contiguous
+/// same-width windows — exactly what the telemetry
+/// [`FrameAggregator`](super::telemetry::FrameAggregator) seals.
+/// Returns `None` when the trace shows no modulation (all windows
+/// alike) or is too short to label states.
+pub fn fit_mmpp(frames: &[TelemetryFrame]) -> Option<MmppFit> {
+    let first = frames.first()?;
+    let window_ms = first.end_ms - first.start_ms;
+    let counts: Vec<u64> = frames.iter().map(TelemetryFrame::arrivals_total).collect();
+    fit_mmpp_counts(window_ms, &counts)
+}
+
+/// The count-series core of [`fit_mmpp`]: 2-means (Lloyd) clustering of
+/// per-window arrival counts into a calm and a burst state, then
+/// state-rate and mean-dwell estimates from the labeled windows.
+///
+/// * Rates: cluster centroid counts over the window length.
+/// * Dwells: mean run length of consecutive same-state windows times the
+///   window length — an upper-biased but seed-stable estimator (dwell
+///   fragments shorter than a window are invisible at this resolution).
+pub fn fit_mmpp_counts(window_ms: f64, counts: &[u64]) -> Option<MmppFit> {
+    assert!(window_ms > 0.0, "window must be positive");
+    if counts.len() < 2 {
+        return None;
+    }
+    let xs: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+    let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if hi <= lo {
+        return None; // constant series: no modulation to fit
+    }
+    // Lloyd's algorithm, k = 2, centroids seeded at the extremes (both
+    // clusters start non-empty).  Deterministic: no random restarts.
+    let (mut c0, mut c1) = (lo, hi);
+    for _ in 0..64 {
+        let (mut sum0, mut n0, mut sum1, mut n1) = (0.0, 0u64, 0.0, 0u64);
+        let mid = 0.5 * (c0 + c1);
+        for &x in &xs {
+            if x <= mid {
+                sum0 += x;
+                n0 += 1;
+            } else {
+                sum1 += x;
+                n1 += 1;
+            }
+        }
+        if n0 == 0 || n1 == 0 {
+            return None;
+        }
+        let (new0, new1) = (sum0 / n0 as f64, sum1 / n1 as f64);
+        let moved = (new0 - c0).abs() + (new1 - c1).abs();
+        c0 = new0;
+        c1 = new1;
+        if moved < 1e-12 {
+            break;
+        }
+    }
+    let threshold = 0.5 * (c0 + c1);
+    // Label windows and measure mean run lengths per state.
+    let labels: Vec<bool> = xs.iter().map(|&x| x > threshold).collect();
+    let (mut runs, mut windows) = ([0u64; 2], [0u64; 2]);
+    let mut i = 0;
+    while i < labels.len() {
+        let state = labels[i] as usize;
+        let mut len = 1;
+        while i + len < labels.len() && labels[i + len] == labels[i] {
+            len += 1;
+        }
+        runs[state] += 1;
+        windows[state] += len as u64;
+        i += len;
+    }
+    if runs[0] == 0 || runs[1] == 0 {
+        return None;
+    }
+    Some(MmppFit {
+        calm_rate_hz: c0 / window_ms * 1000.0,
+        burst_rate_hz: c1 / window_ms * 1000.0,
+        mean_calm_ms: windows[0] as f64 / runs[0] as f64 * window_ms,
+        mean_burst_ms: windows[1] as f64 / runs[1] as f64 * window_ms,
+        threshold,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -551,6 +669,94 @@ mod tests {
             assert_eq!(r.deadline_ms, a.deadline_ms);
             assert_eq!(r.inputs.x.len(), a.topology.seq_len * a.topology.d_model);
         }
+    }
+
+    #[test]
+    fn fit_mmpp_round_trips_the_bursty_generator() {
+        use super::super::telemetry::{FrameAggregator, TelemetryConfig, TelemetryEvent};
+        // Ground truth: strongly modulated MMPP (25× rate ratio).
+        let truth = ArrivalProcess::Bursty {
+            calm_rate_hz: 200.0,
+            burst_rate_hz: 5000.0,
+            mean_calm_ms: 40.0,
+            mean_burst_ms: 20.0,
+        };
+        let mut g = LoadGen::new(LoadGenConfig {
+            process: truth,
+            mix: mix(),
+            classes: classes(),
+            seed: 11,
+        });
+        // Record the trace through the real telemetry pipeline: ingress
+        // events into 5 ms windows (fleet counters only, no devices).
+        let mut agg = FrameAggregator::new(
+            TelemetryConfig { window_ms: 5.0, grace_windows: 0, ring_capacity: 1024 },
+            0,
+        );
+        for a in g.generate(4000.0) {
+            agg.advance(a.arrival_ms);
+            agg.record(TelemetryEvent::Ingress { t_ms: a.arrival_ms, priority: a.priority });
+        }
+        agg.seal_all();
+        let frames: Vec<_> = agg.frames().cloned().collect();
+        assert!(frames.len() >= 700, "{} frames", frames.len());
+        let fit = fit_mmpp(&frames).expect("modulated trace must fit");
+        // Generous bands: windowing quantizes dwells and mixes states
+        // within a window, but the two rates must separate cleanly and
+        // the dwell structure must be the right shape.
+        assert!(
+            fit.calm_rate_hz > 100.0 && fit.calm_rate_hz < 450.0,
+            "calm {} Hz",
+            fit.calm_rate_hz
+        );
+        assert!(
+            fit.burst_rate_hz > 3000.0 && fit.burst_rate_hz < 6800.0,
+            "burst {} Hz",
+            fit.burst_rate_hz
+        );
+        assert!(fit.burst_rate_hz > 5.0 * fit.calm_rate_hz, "states must separate");
+        assert!(
+            fit.mean_calm_ms > 15.0 && fit.mean_calm_ms < 100.0,
+            "calm dwell {} ms",
+            fit.mean_calm_ms
+        );
+        assert!(
+            fit.mean_burst_ms > 8.0 && fit.mean_burst_ms < 50.0,
+            "burst dwell {} ms",
+            fit.mean_burst_ms
+        );
+        // The fitted process offers roughly the same average load.
+        let truth_avg = (200.0 * 40.0 + 5000.0 * 20.0) / 60.0;
+        let rel = (fit.average_rate_hz() - truth_avg).abs() / truth_avg;
+        assert!(rel < 0.4, "average rate off by {:.0}%", rel * 100.0);
+        // And it regenerates: a LoadGen accepts the fitted process.
+        let n = LoadGen::new(LoadGenConfig {
+            process: fit.process(),
+            mix: mix(),
+            classes: classes(),
+            seed: 12,
+        })
+        .generate(1000.0)
+        .len();
+        assert!(n > 200, "refitted generator produced {n} arrivals");
+    }
+
+    #[test]
+    fn fit_mmpp_rejects_unmodulated_traces() {
+        assert!(fit_mmpp_counts(5.0, &[3, 3, 3, 3]).is_none(), "constant series");
+        assert!(fit_mmpp_counts(5.0, &[7]).is_none(), "too short");
+        assert!(fit_mmpp_counts(5.0, &[]).is_none(), "empty");
+        assert!(fit_mmpp(&[]).is_none());
+        // A cleanly bimodal series fits exactly.
+        let counts = [1u64, 1, 1, 25, 25, 1, 1, 25, 25, 25, 1];
+        let fit = fit_mmpp_counts(10.0, &counts).unwrap();
+        assert!((fit.calm_rate_hz - 100.0).abs() < 1e-9, "{}", fit.calm_rate_hz);
+        assert!((fit.burst_rate_hz - 2500.0).abs() < 1e-9, "{}", fit.burst_rate_hz);
+        // Calm runs: 3, 2, 1 windows → mean 2 windows = 20 ms.
+        assert!((fit.mean_calm_ms - 20.0).abs() < 1e-9, "{}", fit.mean_calm_ms);
+        // Burst runs: 2, 3 windows → mean 2.5 windows = 25 ms.
+        assert!((fit.mean_burst_ms - 25.0).abs() < 1e-9, "{}", fit.mean_burst_ms);
+        assert!(fit.threshold > 1.0 && fit.threshold < 25.0);
     }
 
     #[test]

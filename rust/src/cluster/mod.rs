@@ -29,7 +29,14 @@
 //! * [`loadgen`] — seeded arrival-process load generation (Poisson and
 //!   two-state bursty MMPP) with mixed priority classes and deadline
 //!   budgets, replacing the uniform closed-loop replay in the cluster
-//!   bench and the QoS soak suite.
+//!   bench and the QoS soak suite; [`loadgen::fit_mmpp`] closes the
+//!   loop by recovering MMPP parameters from a recorded frame trace.
+//! * [`telemetry`] — streaming observability: router events aggregated
+//!   into per-window sealed [`telemetry::TelemetryFrame`]s (bounded
+//!   ring, late stragglers counted, deterministic under the virtual
+//!   clock) plus the threshold-rule [`telemetry::ControlPlane`] that
+//!   drains drifting devices and tightens admission through `Cluster`
+//!   hooks — DESIGN.md §13.
 //!
 //! Invariants (tested in `rust/tests/cluster.rs`, DESIGN.md §7): every
 //! cluster response is bit-identical to a single-device run of the same
@@ -42,14 +49,19 @@ pub mod loadgen;
 pub mod placement;
 pub mod router;
 pub mod shard;
+pub mod telemetry;
 
 pub use fleet::{DeviceHealth, DeviceReport, FleetStats, SloStats};
-pub use loadgen::{Arrival, ArrivalProcess, LoadGen, LoadGenConfig, QosClass};
+pub use loadgen::{Arrival, ArrivalProcess, LoadGen, LoadGenConfig, MmppFit, QosClass};
 pub use placement::{PlacementPlan, PlacementPlanner, TopologyPlacement, WorkloadProfile};
 pub use router::{
     Cluster, ClusterConfig, ClusterHandle, ClusterResponse, QosOutcome, QosPolicy, ShedNotice,
 };
 pub use shard::ShardPlan;
+pub use telemetry::{
+    ActionRecord, ControlAction, ControlPlane, ControlRule, FrameAggregator, FrameTotals, Heat,
+    RuleScope, RuleSignal, TelemetryConfig, TelemetryEvent, TelemetryFrame, TelemetrySnapshot,
+};
 
 use crate::config::Topology;
 use crate::sim::SimConfig;
@@ -64,21 +76,41 @@ pub struct DeviceSpec {
     pub name: String,
     /// The device's synthesized build + simulator configuration.
     pub sim: SimConfig,
+    /// Silent fabric-clock derate applied to the *actual* device the
+    /// cluster boots but not to the advertised model the router plans
+    /// with ([`DeviceSpec::predicted_ms`]) — thermal throttling the
+    /// scheduler has not been told about.  The telemetry control
+    /// plane's job is to notice the drift and drain the device
+    /// (DESIGN.md §13).  `1.0` = healthy.
+    pub silent_derate: f64,
 }
 
 impl DeviceSpec {
     pub fn u55c(id: usize) -> Self {
-        DeviceSpec { id, name: format!("u55c-{id}"), sim: SimConfig::u55c() }
+        DeviceSpec { id, name: format!("u55c-{id}"), sim: SimConfig::u55c(), silent_derate: 1.0 }
     }
 
     pub fn u200(id: usize) -> Self {
-        DeviceSpec { id, name: format!("u200-{id}"), sim: SimConfig::u200() }
+        DeviceSpec { id, name: format!("u200-{id}"), sim: SimConfig::u200(), silent_derate: 1.0 }
     }
 
     /// The long-sequence U55C build (fused streaming attention unit,
     /// SL up to 1024 — DESIGN.md §12).
     pub fn u55c_long(id: usize) -> Self {
-        DeviceSpec { id, name: format!("u55c-long-{id}"), sim: SimConfig::u55c_long() }
+        DeviceSpec {
+            id,
+            name: format!("u55c-long-{id}"),
+            sim: SimConfig::u55c_long(),
+            silent_derate: 1.0,
+        }
+    }
+
+    /// Degrade the device's real fabric clock to `factor` of nominal
+    /// without updating the advertised model (`0 < factor <= 1`).
+    pub fn with_silent_derate(mut self, factor: f64) -> Self {
+        assert!(factor > 0.0 && factor <= 1.0, "derate factor must be in (0, 1]");
+        self.silent_derate = factor;
+        self
     }
 
     /// Can this device serve `topo` without re-synthesis?
@@ -160,5 +192,16 @@ mod tests {
         let d = DeviceSpec::u55c(0);
         let ms = d.predicted_ms(&Topology::new(64, 768, 8, 64));
         assert!((ms - 0.94).abs() < 0.005, "{ms}");
+    }
+
+    #[test]
+    fn silent_derate_leaves_advertised_model_alone() {
+        let t = Topology::new(64, 768, 8, 64);
+        let healthy = DeviceSpec::u55c(0);
+        let throttled = DeviceSpec::u55c(0).with_silent_derate(0.25);
+        // The router's planning model must not see the derate — that is
+        // what makes the degradation "silent".
+        assert_eq!(healthy.predicted_ms(&t), throttled.predicted_ms(&t));
+        assert_eq!(throttled.silent_derate, 0.25);
     }
 }

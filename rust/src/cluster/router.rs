@@ -5,10 +5,19 @@
 //! 1. **Hot affinity** — the device the router last sent this topology
 //!    to needs no reprogramming; keeping a topology on its device is
 //!    `BatchPolicy::GroupByTopology` lifted to the fleet.
-//! 2. **Placement affinity** — the planner's preferred device order
+//! 2. **Warm affinity** — a device holding the topology in its program
+//!    cache replays cached registers instead of re-deriving the
+//!    program; the router tracks each device's warm set with a
+//!    [`WarmSet`] mirror of `ProgramCache` (DESIGN.md §13).
+//! 3. **Placement affinity** — the planner's preferred device order
 //!    (weight tiles pinned in BRAM).
-//! 3. **Least-loaded** — fewest requests waiting in the device's
+//! 4. **Least-loaded** — fewest requests waiting in the device's
 //!    ingress queue.
+//!
+//! Every request also streams telemetry events (ingress, completion,
+//! shed, reject) into the windowed [`FrameAggregator`]; the
+//! [`ControlPlane`] owned by [`Cluster`] evaluates threshold rules over
+//! the sealed frames ([`Cluster::pump_control`]).
 //!
 //! Backpressure is failover, not failure: a full device queue bounces
 //! the request (operands returned, not cloned) to the next candidate,
@@ -20,8 +29,12 @@
 use super::fleet::{DeviceHealth, FleetStats, RouterTotals};
 use super::placement::{PlacementPlan, PlacementPlanner, WorkloadProfile};
 use super::shard::ShardPlan;
+use super::telemetry::{
+    self, ActionRecord, ControlAction, ControlPlane, ControlRule, DeviceTouch, Firing,
+    FrameAggregator, Heat, TelemetryConfig, TelemetryEvent, TelemetrySnapshot,
+};
 use super::DeviceSpec;
-use crate::accel::FamousAccelerator;
+use crate::accel::{FamousAccelerator, DEFAULT_PROGRAM_CACHE};
 use crate::config::Topology;
 use crate::coordinator::{
     BatchPolicy, Coordinator, CoordinatorStats, Priority, Request, Response, SchedulerConfig,
@@ -58,6 +71,8 @@ pub struct ClusterConfig {
     pub max_retries: usize,
     /// Fleet-level routing policy (DESIGN.md §11).
     pub qos: QosPolicy,
+    /// Telemetry windowing/ring tuning (DESIGN.md §13).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for ClusterConfig {
@@ -67,6 +82,7 @@ impl Default for ClusterConfig {
             server: ServerConfig::default(),
             max_retries: 3,
             qos: QosPolicy::Affinity,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -118,7 +134,9 @@ pub struct ClusterResponse {
 
 /// Outcome of a QoS-routed request: served, or explicitly shed at
 /// ingress because no device could meet its deadline under the backlog
-/// model (only `Low` priority is ever shed).
+/// model.  With default admission margins only `Low` is ever shed; the
+/// telemetry control plane can install margins for other classes
+/// ([`ClusterHandle::set_admission_margin`], DESIGN.md §13).
 #[derive(Clone, Debug)]
 pub enum QosOutcome {
     Served(ClusterResponse),
@@ -154,6 +172,44 @@ struct DeviceEndpoint {
     handle: ServerHandle,
 }
 
+/// Router-side mirror of one device's topology-keyed `ProgramCache`
+/// (same LRU policy, same default capacity).  A device programs exactly
+/// the topologies the router dispatches to it, so under the router's
+/// one-at-a-time bookkeeping the mirror tracks the device's
+/// `ProgramCache::topologies` without a worker round trip — giving
+/// ranking a warm-set signal per dispatch.  `CoordinatorStats::
+/// cached_topologies` lets tests cross-check mirror against device.
+#[derive(Clone, Debug, Default)]
+pub struct WarmSet {
+    /// Least-recently-used first, like `ProgramCache::topologies`.
+    lru: std::collections::VecDeque<Topology>,
+}
+
+impl WarmSet {
+    fn contains(&self, topo: &Topology) -> bool {
+        self.lru.contains(topo)
+    }
+
+    fn touch(&mut self, topo: &Topology) {
+        if let Some(pos) = self.lru.iter().position(|t| t == topo) {
+            self.lru.remove(pos);
+        }
+        self.lru.push_back(topo.clone());
+        while self.lru.len() > DEFAULT_PROGRAM_CACHE {
+            self.lru.pop_front();
+        }
+    }
+
+    fn clear(&mut self) {
+        self.lru.clear();
+    }
+
+    /// Cached topologies, LRU first (mirrors `ProgramCache::topologies`).
+    pub fn topologies(&self) -> Vec<Topology> {
+        self.lru.iter().cloned().collect()
+    }
+}
+
 #[derive(Default)]
 struct RouterState {
     /// Router's view of each device's currently-programmed topology.
@@ -171,8 +227,20 @@ struct RouterState {
     /// `SlackEdf` ranks a dead horizon as infeasible instead of routing
     /// to it (ROADMAP PR-4 follow-up).
     down: Vec<bool>,
+    /// Per-device program-cache mirror (warm-affinity routing signal).
+    warm: Vec<WarmSet>,
+    /// Admission margin per priority class (indexed by
+    /// `Priority::index()`): `Some(m)` sheds a deadline request unless
+    /// some device can finish `m` ms before the deadline; `None`
+    /// disables shedding for the class.  Default: only `Low` sheds,
+    /// with zero margin.  The control plane tightens these.
+    admission_margin_ms: [Option<f64>; 3],
     totals: RouterTotals,
 }
+
+/// Default admission margins: `Low` sheds at zero margin, `High` and
+/// `Normal` are never shed (they run late instead).
+const DEFAULT_ADMISSION_MARGIN_MS: [Option<f64>; 3] = [None, None, Some(0.0)];
 
 struct Shared {
     devices: Vec<DeviceEndpoint>,
@@ -180,6 +248,7 @@ struct Shared {
     max_retries: usize,
     qos: QosPolicy,
     state: Mutex<RouterState>,
+    telemetry: Mutex<FrameAggregator>,
 }
 
 /// A running fleet: per-device servers plus the routing front-end.
@@ -191,6 +260,9 @@ pub struct Cluster {
     /// Devices killed via [`Cluster::fail_device`] (reported `Failed`,
     /// not `Stopped`).
     failed: Vec<bool>,
+    /// Threshold rules + audit log, evaluated over sealed frames by
+    /// [`Cluster::pump_control`].
+    control: ControlPlane,
 }
 
 /// Cloneable client handle (safe to share across request threads).
@@ -220,7 +292,11 @@ impl Cluster {
         let mut endpoints = Vec::with_capacity(devices.len());
         let mut servers = Vec::with_capacity(devices.len());
         for spec in devices {
-            let sim = spec.sim.clone();
+            // The booted device runs at its *real* (possibly silently
+            // derated) clock; the router keeps planning with the
+            // advertised `spec.sim` model (see `DeviceSpec::silent_derate`).
+            let mut sim = spec.sim.clone();
+            sim.build.clock_hz *= spec.silent_derate;
             let sched = config.scheduler;
             let server = Server::start(
                 move || {
@@ -242,10 +318,19 @@ impl Cluster {
                 last_topology: vec![None; n],
                 backlog_ms: vec![0.0; n],
                 down: vec![false; n],
+                warm: vec![WarmSet::default(); n],
+                admission_margin_ms: DEFAULT_ADMISSION_MARGIN_MS,
                 totals: RouterTotals::default(),
             }),
+            telemetry: Mutex::new(FrameAggregator::new(config.telemetry, n)),
         });
-        Ok(Cluster { shared, servers, early_stats: vec![None; n], failed: vec![false; n] })
+        Ok(Cluster {
+            shared,
+            servers,
+            early_stats: vec![None; n],
+            failed: vec![false; n],
+            control: ControlPlane::default(),
+        })
     }
 
     pub fn handle(&self) -> ClusterHandle {
@@ -274,6 +359,7 @@ impl Cluster {
         let mut st = self.shared.state.lock().unwrap();
         st.last_topology[id] = None;
         st.down[id] = true;
+        st.warm[id].clear();
         drop(st);
         Some(stats)
     }
@@ -295,8 +381,81 @@ impl Cluster {
         let mut st = self.shared.state.lock().unwrap();
         st.last_topology[id] = None;
         st.down[id] = true;
+        st.warm[id].clear();
         drop(st);
         true
+    }
+
+    /// Device names in routing-id order (dashboard labels).
+    pub fn device_names(&self) -> Vec<String> {
+        self.shared.devices.iter().map(|d| d.spec.name.clone()).collect()
+    }
+
+    /// Install a control rule, evaluated per sealed telemetry frame by
+    /// [`Cluster::pump_control`].
+    pub fn add_control_rule(&mut self, rule: ControlRule) {
+        self.control.add_rule(rule);
+    }
+
+    /// The control plane's audit log (every executed action).
+    pub fn control_log(&self) -> &[ActionRecord] {
+        self.control.log()
+    }
+
+    /// The audit log as JSONL (reproducibility artifact).
+    pub fn control_log_jsonl(&self) -> String {
+        self.control.log_jsonl()
+    }
+
+    /// Snapshot the telemetry ring + running totals.
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        self.shared.telemetry.lock().unwrap().snapshot()
+    }
+
+    /// Seal every outstanding partial frame (end of run / final report).
+    pub fn seal_telemetry(&self) {
+        self.shared.telemetry.lock().unwrap().seal_all();
+    }
+
+    /// Evaluate control rules over every frame sealed since the last
+    /// pump, execute the firings through cluster hooks (drain device,
+    /// set admission margin), and return the audit records appended.
+    /// Deterministic: frames are a pure function of the seeded virtual
+    /// clock, and rule evaluation is a pure state machine over them.
+    pub fn pump_control(&mut self) -> Vec<ActionRecord> {
+        let frames = {
+            let agg = self.shared.telemetry.lock().unwrap();
+            agg.frames_since(self.control.cursor())
+        };
+        let mut out = Vec::new();
+        for frame in &frames {
+            let firings = self.control.evaluate(frame);
+            for firing in firings {
+                let outcome = self.execute_control(&firing);
+                out.push(self.control.record(&firing, outcome));
+            }
+        }
+        out
+    }
+
+    fn execute_control(&mut self, firing: &Firing) -> String {
+        match firing.action {
+            ControlAction::DrainDevice => {
+                let id = firing.device.expect("DrainDevice rules are per-device scoped");
+                if self.stop_device(id).is_some() {
+                    format!("drained device {id}")
+                } else {
+                    format!("device {id} already stopped")
+                }
+            }
+            ControlAction::SetAdmissionMargin { priority, margin_ms } => {
+                let mut st = self.shared.state.lock().unwrap();
+                st.admission_margin_ms[priority.index()] = Some(margin_ms);
+                drop(st);
+                format!("admission margin for {} set to {margin_ms} ms", priority.label())
+            }
+            ControlAction::Alert => "alert".to_string(),
+        }
     }
 
     /// Live (pre-shutdown) fleet snapshot: per-device stats fetched from
@@ -400,6 +559,10 @@ pub struct CandidateView {
     pub id: usize,
     /// Router last routed this topology here (no reprogramming needed).
     pub hot: bool,
+    /// Topology resident in the device's program cache (register replay
+    /// instead of full program derivation) per the router's [`WarmSet`]
+    /// mirror.
+    pub warm: bool,
     /// Position in the placement plan's preference list (usize::MAX if
     /// the plan does not mention this device for the topology).
     pub preference: usize,
@@ -407,10 +570,11 @@ pub struct CandidateView {
     pub pending: usize,
 }
 
-/// Order candidates best-first: hot, then planner preference, then
-/// least-loaded, then id (determinism).  Pure — unit-tested directly.
+/// Order candidates best-first: hot, then warm, then planner
+/// preference, then least-loaded, then id (determinism).  Pure —
+/// unit-tested directly.
 pub fn order_candidates(mut views: Vec<CandidateView>) -> Vec<usize> {
-    views.sort_by_key(|v| (!v.hot as u8, v.preference, v.pending, v.id));
+    views.sort_by_key(|v| (!v.hot as u8, !v.warm as u8, v.preference, v.pending, v.id));
     views.into_iter().map(|v| v.id).collect()
 }
 
@@ -420,6 +584,8 @@ pub struct SlackView {
     pub id: usize,
     /// Router last routed this topology here (no reprogramming needed).
     pub hot: bool,
+    /// Topology in the device's program cache ([`WarmSet`] mirror).
+    pub warm: bool,
     /// Position in the placement plan's preference list.
     pub preference: usize,
     /// Modeled completion time if dispatched now (virtual-clock ms).
@@ -430,9 +596,10 @@ pub struct SlackView {
 }
 
 /// Order slack-aware candidates best-first: devices that meet the
-/// deadline come first (hot, then planned, then earliest completion
-/// among them), then the provably-late ones by least lateness; id
-/// breaks every tie (determinism).  Pure — unit-tested directly.
+/// deadline come first (hot, then warm, then planned, then earliest
+/// completion among them — "prefer warm when slack permits"), then the
+/// provably-late ones by least lateness; id breaks every tie
+/// (determinism).  Pure — unit-tested directly.
 pub fn order_candidates_by_slack(mut views: Vec<SlackView>) -> Vec<usize> {
     use std::cmp::Ordering;
     views.sort_by(|a, b| {
@@ -442,6 +609,7 @@ pub fn order_candidates_by_slack(mut views: Vec<SlackView>) -> Vec<usize> {
             if fa && fb {
                 (!a.hot)
                     .cmp(&!b.hot)
+                    .then((!a.warm).cmp(&!b.warm))
                     .then(a.preference.cmp(&b.preference))
                     .then(
                         a.est_completion_ms
@@ -492,13 +660,15 @@ impl ClusterHandle {
         }
     }
 
-    /// Serve one request with an explicit QoS outcome: `Served` with the
-    /// response, or `Shed` when the request is `Low` priority and no
-    /// admitting device can meet its deadline under the backlog model
-    /// (`QosPolicy::SlackEdf` only — `Affinity` never sheds).
+    /// Serve one request with an explicit QoS outcome: `Served` with
+    /// the response, or `Shed` when the class's admission margin is set
+    /// and no admitting device can meet the deadline that much early
+    /// under the backlog model (`QosPolicy::SlackEdf` only — `Affinity`
+    /// never sheds; default margins shed only `Low`).
     pub fn call_qos(&self, req: Request) -> Result<QosOutcome> {
         let topo = req.topology.clone();
         let meta = QosMeta::of(&req);
+        self.telemetry_ingress(&meta);
         let single = self.shared.devices.iter().any(|d| d.spec.admits(&topo));
         let shard = if single {
             None
@@ -512,18 +682,28 @@ impl ClusterHandle {
         };
         if !single && shard.is_none() {
             self.shared.state.lock().unwrap().totals.rejected += 1;
+            self.telemetry_event(TelemetryEvent::Reject { t_ms: meta.arrival_ms });
             bail!("no device admits topology {topo} and no head-shard of it is servable");
         }
-        // Shed check: a Low request whose deadline no admitting device
-        // can meet is rejected explicitly instead of queued to die.
-        if self.shared.qos == QosPolicy::SlackEdf && meta.priority == Priority::Low {
-            if let Some(deadline) = meta.deadline_ms {
+        // Admission control: a request whose deadline no admitting
+        // device can meet `margin` early is shed explicitly instead of
+        // queued to die.  Default margins shed only `Low` (at zero
+        // margin); the control plane can install margins for the other
+        // classes (DESIGN.md §13).
+        if self.shared.qos == QosPolicy::SlackEdf {
+            let margin =
+                self.shared.state.lock().unwrap().admission_margin_ms[meta.priority.index()];
+            if let (Some(margin), Some(deadline)) = (margin, meta.deadline_ms) {
                 let check = shard.as_ref().map(|s| &s.half).unwrap_or(&topo);
                 if let Some(best) = self.best_completion_ms(check, meta.arrival_ms) {
-                    if best > deadline {
+                    if best > deadline - margin {
                         let mut st = self.shared.state.lock().unwrap();
                         st.totals.slo.record_shed(meta.priority);
                         drop(st);
+                        self.telemetry_event(TelemetryEvent::Shed {
+                            t_ms: meta.arrival_ms,
+                            priority: meta.priority,
+                        });
                         return Ok(QosOutcome::Shed(ShedNotice {
                             id: req.id,
                             priority: meta.priority,
@@ -536,31 +716,91 @@ impl ClusterHandle {
         }
         let resp = match shard {
             None => {
-                let (resp, dev, done) = self.call_single(req, None)?;
-                let gops = resp.gops;
-                let missed = meta.deadline_ms.map(|dl| done > dl);
+                let d = self.call_single(req, None)?;
+                let missed = meta.deadline_ms.map(|dl| d.done_ms > dl);
                 let mut st = self.shared.state.lock().unwrap();
                 st.totals.completed += 1;
-                st.totals.slo.record_completion(meta.priority, done - meta.arrival_ms, missed);
+                st.totals.slo.record_completion(
+                    meta.priority,
+                    d.done_ms - meta.arrival_ms,
+                    missed,
+                );
                 drop(st);
+                self.telemetry_event(TelemetryEvent::Completion {
+                    t_ms: d.done_ms,
+                    priority: meta.priority,
+                    sojourn_ms: d.done_ms - meta.arrival_ms,
+                    missed,
+                    sharded: false,
+                    bounces: d.bounces,
+                    touches: vec![DeviceTouch {
+                        device: d.device,
+                        heat: d.heat,
+                        fused: telemetry::auto_fused_path(&topo),
+                    }],
+                });
                 ClusterResponse {
-                    id: resp.id,
+                    id: d.resp.id,
                     topology: topo,
-                    output: resp.output,
-                    fabric_ms: resp.fabric_ms,
-                    gops,
-                    reprogrammed: resp.reprogrammed,
-                    devices: vec![dev],
+                    output: d.resp.output,
+                    fabric_ms: d.resp.fabric_ms,
+                    gops: d.resp.gops,
+                    reprogrammed: d.resp.reprogrammed,
+                    devices: vec![d.device],
                     sharded: false,
                     priority: meta.priority,
                     deadline_ms: meta.deadline_ms,
-                    completed_ms: done,
+                    completed_ms: d.done_ms,
                     deadline_missed: missed.unwrap_or(false),
                 }
             }
             Some(s) => self.call_sharded(req, s, &meta)?,
         };
         Ok(QosOutcome::Served(resp))
+    }
+
+    /// The router's warm-set mirror for one device: cached topologies,
+    /// LRU first (matches `ProgramCache::topologies` on the device).
+    pub fn warm_topologies(&self, device: usize) -> Vec<Topology> {
+        let st = self.shared.state.lock().unwrap();
+        st.warm.get(device).map(WarmSet::topologies).unwrap_or_default()
+    }
+
+    /// Set (or clear, with `None`) the admission margin for a priority
+    /// class — the control-plane hook behind
+    /// [`ControlAction::SetAdmissionMargin`].
+    pub fn set_admission_margin(&self, priority: Priority, margin_ms: Option<f64>) {
+        self.shared.state.lock().unwrap().admission_margin_ms[priority.index()] = margin_ms;
+    }
+
+    pub fn admission_margin(&self, priority: Priority) -> Option<f64> {
+        self.shared.state.lock().unwrap().admission_margin_ms[priority.index()]
+    }
+
+    /// Snapshot the telemetry ring + running totals.
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        self.shared.telemetry.lock().unwrap().snapshot()
+    }
+
+    /// Ingress-side telemetry: refresh the gauges, advance the seal
+    /// watermark to this arrival, and record the ingress event.  The
+    /// watermark only ever moves on ingress, so completions (recorded
+    /// at dispatch bookkeeping time, at or after their request's
+    /// arrival) land in open windows — the grace period absorbs
+    /// concurrent stragglers.
+    fn telemetry_ingress(&self, meta: &QosMeta) {
+        let (backlog, down) = {
+            let st = self.shared.state.lock().unwrap();
+            (st.backlog_ms.clone(), st.down.clone())
+        };
+        let mut agg = self.shared.telemetry.lock().unwrap();
+        agg.observe_gauges(&backlog, &down);
+        agg.advance(meta.arrival_ms);
+        agg.record(TelemetryEvent::Ingress { t_ms: meta.arrival_ms, priority: meta.priority });
+    }
+
+    fn telemetry_event(&self, ev: TelemetryEvent) {
+        self.shared.telemetry.lock().unwrap().record(ev);
     }
 
     /// Best modeled completion over *live* admitting devices for `topo`
@@ -600,6 +840,7 @@ impl ClusterHandle {
                         return SlackView {
                             id: d.spec.id,
                             hot: false,
+                            warm: false,
                             preference: usize::MAX,
                             est_completion_ms: f64::INFINITY,
                             slack_ms: f64::NEG_INFINITY,
@@ -607,9 +848,11 @@ impl ClusterHandle {
                     }
                     let est = st.backlog_ms[d.spec.id].max(meta.arrival_ms)
                         + d.spec.predicted_ms(topo);
+                    let hot = st.last_topology[d.spec.id].as_ref() == Some(topo);
                     SlackView {
                         id: d.spec.id,
-                        hot: st.last_topology[d.spec.id].as_ref() == Some(topo),
+                        hot,
+                        warm: !hot && st.warm[d.spec.id].contains(topo),
                         preference: position(d.spec.id),
                         est_completion_ms: est,
                         slack_ms: meta.deadline_ms.map_or(f64::INFINITY, |dl| dl - est),
@@ -632,13 +875,16 @@ impl ClusterHandle {
                     return CandidateView {
                         id: d.spec.id,
                         hot: false,
+                        warm: false,
                         preference: usize::MAX,
                         pending: usize::MAX,
                     };
                 }
+                let hot = st.last_topology[d.spec.id].as_ref() == Some(topo);
                 CandidateView {
                     id: d.spec.id,
-                    hot: st.last_topology[d.spec.id].as_ref() == Some(topo),
+                    hot,
+                    warm: !hot && st.warm[d.spec.id].contains(topo),
                     preference: position(d.spec.id),
                     pending: d.handle.pending(),
                 }
@@ -649,9 +895,7 @@ impl ClusterHandle {
     }
 
     /// Route one single-device request with backpressure failover.
-    /// Returns the response, the serving device, and the modeled
-    /// completion time on the virtual clock.
-    fn call_single(&self, req: Request, exclude: Option<usize>) -> Result<(Response, usize, f64)> {
+    fn call_single(&self, req: Request, exclude: Option<usize>) -> Result<Dispatched> {
         let topo = req.topology.clone();
         let meta = QosMeta::of(&req);
         let mut candidates = self.rank(&topo, exclude, Some(&meta));
@@ -661,14 +905,15 @@ impl ClusterHandle {
         }
         if candidates.is_empty() {
             self.shared.state.lock().unwrap().totals.rejected += 1;
+            self.telemetry_event(TelemetryEvent::Reject { t_ms: meta.arrival_ms });
             bail!("no device in the fleet admits topology {topo}");
         }
         let mut req = req;
-        let mut bounces = 0usize;
+        let mut bounces = 0u64;
         let mut idx = 0usize;
         let mut bounced: Vec<usize> = Vec::new();
         loop {
-            if bounces >= self.shared.max_retries {
+            if bounces >= self.shared.max_retries as u64 {
                 // Enough spinning: block for queue space on the best
                 // candidate (backpressure propagates to the client).
                 // Prefer one that did not just bounce us — a bounce can
@@ -683,11 +928,11 @@ impl ClusterHandle {
                     .handle
                     .call_blocking(req)
                     .map_err(|e| anyhow!("device {dev}: {e}"))?;
-                return Ok(self.record(resp, dev, &topo, &meta));
+                return Ok(self.record(resp, dev, &topo, &meta, bounces));
             }
             let dev = candidates[idx % candidates.len()];
             match self.shared.devices[dev].handle.try_call(req) {
-                Ok(resp) => return Ok(self.record(resp, dev, &topo, &meta)),
+                Ok(resp) => return Ok(self.record(resp, dev, &topo, &meta, bounces)),
                 Err(SubmitError::Busy(returned)) => {
                     req = returned;
                     bounces += 1;
@@ -722,26 +967,38 @@ impl ClusterHandle {
         let lo_result = self.call_single(req_lo, None);
         let hi_result =
             hi_worker.join().map_err(|_| anyhow!("shard worker thread panicked"))?;
-        let (lo_resp, lo_dev, lo_done) = lo_result?;
-        let (hi_resp, hi_dev, hi_done) = hi_result?;
-        let output = shard.concat_outputs(&lo_resp.output, &hi_resp.output)?;
-        let fabric_ms = lo_resp.fabric_ms.max(hi_resp.fabric_ms);
+        let (lo, hi) = (lo_result?, hi_result?);
+        let output = shard.concat_outputs(&lo.resp.output, &hi.resp.output)?;
+        let fabric_ms = lo.resp.fabric_ms.max(hi.resp.fabric_ms);
         let gop = 2.0 * OpCount::paper_convention(&shard.half);
-        let done = lo_done.max(hi_done);
+        let done = lo.done_ms.max(hi.done_ms);
         let missed = meta.deadline_ms.map(|dl| done > dl);
         let mut st = self.shared.state.lock().unwrap();
         st.totals.completed += 1;
         st.totals.sharded += 1;
         st.totals.slo.record_completion(meta.priority, done - meta.arrival_ms, missed);
         drop(st);
+        let fused = telemetry::auto_fused_path(&shard.half);
+        self.telemetry_event(TelemetryEvent::Completion {
+            t_ms: done,
+            priority: meta.priority,
+            sojourn_ms: done - meta.arrival_ms,
+            missed,
+            sharded: true,
+            bounces: lo.bounces + hi.bounces,
+            touches: vec![
+                DeviceTouch { device: lo.device, heat: lo.heat, fused },
+                DeviceTouch { device: hi.device, heat: hi.heat, fused },
+            ],
+        });
         Ok(ClusterResponse {
             id: req.id,
             topology: shard.full.clone(),
             output,
             fabric_ms,
             gops: gop / (fabric_ms * 1e-3),
-            reprogrammed: lo_resp.reprogrammed || hi_resp.reprogrammed,
-            devices: vec![lo_dev, hi_dev],
+            reprogrammed: lo.resp.reprogrammed || hi.resp.reprogrammed,
+            devices: vec![lo.device, hi.device],
             sharded: true,
             priority: meta.priority,
             deadline_ms: meta.deadline_ms,
@@ -751,18 +1008,29 @@ impl ClusterHandle {
     }
 
     /// Book-keeping after a device served a (sub-)request: affinity
-    /// counters, the device's programmed-topology memory, and the
-    /// backlog-model advance that yields the modeled completion time.
+    /// counters, the device's programmed-topology memory, the warm-set
+    /// mirror, and the backlog-model advance that yields the modeled
+    /// completion time.
     fn record(
         &self,
         resp: Response,
         dev: usize,
         topo: &Topology,
         meta: &QosMeta,
-    ) -> (Response, usize, f64) {
+        bounces: u64,
+    ) -> Dispatched {
         let preferred = preferred_devices(&self.shared.plan, topo);
         let mut st = self.shared.state.lock().unwrap();
         let hot = st.last_topology[dev].as_ref() == Some(topo);
+        let warm = !hot && st.warm[dev].contains(topo);
+        let heat = match (hot, warm) {
+            (true, _) => Heat::Hot,
+            (false, true) => Heat::Warm,
+            (false, false) => Heat::Cold,
+        };
+        if warm {
+            st.totals.warm_hits += 1;
+        }
         let planned = preferred.first() == Some(&dev) || self.shared.plan.is_pinned(dev, topo);
         if hot || planned {
             st.totals.affinity_hits += 1;
@@ -770,11 +1038,23 @@ impl ClusterHandle {
             st.totals.affinity_misses += 1;
         }
         st.last_topology[dev] = Some(topo.clone());
+        st.warm[dev].touch(topo);
         st.totals.total_gop += OpCount::paper_convention(topo);
         let done = st.backlog_ms[dev].max(meta.arrival_ms) + resp.fabric_ms;
         st.backlog_ms[dev] = done;
-        (resp, dev, done)
+        Dispatched { resp, device: dev, done_ms: done, heat, bounces }
     }
+}
+
+/// Outcome of one routed device invocation; the telemetry attribution
+/// (heat, bounce count) rides along with the response.
+struct Dispatched {
+    resp: Response,
+    device: usize,
+    /// Modeled completion time on the virtual clock.
+    done_ms: f64,
+    heat: Heat,
+    bounces: u64,
 }
 
 /// The plan's device preference list for `topo` — including when `topo`
@@ -812,21 +1092,42 @@ mod tests {
     }
 
     #[test]
-    fn order_prefers_hot_then_plan_then_load() {
-        let v = |id, hot, preference, pending| CandidateView { id, hot, preference, pending };
+    fn order_prefers_hot_then_warm_then_plan_then_load() {
+        let v = |id, hot, warm, preference, pending| CandidateView {
+            id,
+            hot,
+            warm,
+            preference,
+            pending,
+        };
         // Hot beats everything, even a deep queue.
         assert_eq!(
-            order_candidates(vec![v(0, false, 0, 0), v(1, true, usize::MAX, 9)]),
+            order_candidates(vec![v(0, false, false, 0, 0), v(1, true, false, usize::MAX, 9)]),
+            vec![1, 0]
+        );
+        // Warm beats plan preference and load (register replay is
+        // cheaper than a full program derivation)...
+        assert_eq!(
+            order_candidates(vec![v(0, false, false, 0, 0), v(1, false, true, usize::MAX, 5)]),
+            vec![1, 0]
+        );
+        // ...but never beats hot.
+        assert_eq!(
+            order_candidates(vec![v(0, false, true, 0, 0), v(1, true, false, usize::MAX, 9)]),
             vec![1, 0]
         );
         // Plan preference beats load...
         assert_eq!(
-            order_candidates(vec![v(0, false, usize::MAX, 0), v(1, false, 0, 5)]),
+            order_candidates(vec![v(0, false, false, usize::MAX, 0), v(1, false, false, 0, 5)]),
             vec![1, 0]
         );
         // ...and load breaks preference ties, id breaks full ties.
         assert_eq!(
-            order_candidates(vec![v(0, false, 1, 7), v(1, false, 1, 2), v(2, false, 1, 7)]),
+            order_candidates(vec![
+                v(0, false, false, 1, 7),
+                v(1, false, false, 1, 2),
+                v(2, false, false, 1, 7),
+            ]),
             vec![1, 0, 2]
         );
     }
@@ -948,10 +1249,11 @@ mod tests {
     }
 
     #[test]
-    fn slack_order_prefers_feasible_then_hot_then_earliest() {
-        let v = |id, hot, preference, est, slack| SlackView {
+    fn slack_order_prefers_feasible_then_hot_then_warm_then_earliest() {
+        let v = |id, hot, warm, preference, est, slack| SlackView {
             id,
             hot,
+            warm,
             preference,
             est_completion_ms: est,
             slack_ms: slack,
@@ -959,26 +1261,44 @@ mod tests {
         // A feasible cold device beats an infeasible hot one.
         assert_eq!(
             order_candidates_by_slack(vec![
-                v(0, true, 0, 9.0, -1.0),
-                v(1, false, usize::MAX, 3.0, 2.0),
+                v(0, true, false, 0, 9.0, -1.0),
+                v(1, false, false, usize::MAX, 3.0, 2.0),
             ]),
             vec![1, 0]
         );
-        // Among feasible devices: hot first, then plan, then earliest
-        // modeled completion.
+        // Among feasible devices: hot first, then warm, then plan, then
+        // earliest modeled completion.
         assert_eq!(
             order_candidates_by_slack(vec![
-                v(0, false, 0, 1.0, 5.0),
-                v(1, true, usize::MAX, 4.0, 2.0),
-                v(2, false, 0, 0.5, 5.5),
+                v(0, false, false, 0, 1.0, 5.0),
+                v(1, true, false, usize::MAX, 4.0, 2.0),
+                v(2, false, false, 0, 0.5, 5.5),
             ]),
             vec![1, 2, 0]
+        );
+        // Warm beats a colder device with plan preference and an
+        // earlier estimate — as long as both are feasible ("prefer warm
+        // when slack permits").
+        assert_eq!(
+            order_candidates_by_slack(vec![
+                v(0, false, false, 0, 1.0, 5.0),
+                v(1, false, true, usize::MAX, 4.0, 2.0),
+            ]),
+            vec![1, 0]
+        );
+        // ...but feasibility still dominates warmth.
+        assert_eq!(
+            order_candidates_by_slack(vec![
+                v(0, false, false, 0, 1.0, 5.0),
+                v(1, false, true, usize::MAX, 9.0, -1.0),
+            ]),
+            vec![0, 1]
         );
         // All infeasible: least-late first.
         assert_eq!(
             order_candidates_by_slack(vec![
-                v(0, true, 0, 9.0, -5.0),
-                v(1, false, 1, 7.0, -3.0),
+                v(0, true, false, 0, 9.0, -5.0),
+                v(1, false, false, 1, 7.0, -3.0),
             ]),
             vec![1, 0]
         );
@@ -986,9 +1306,9 @@ mod tests {
         // every live candidate — even a provably-late one.
         assert_eq!(
             order_candidates_by_slack(vec![
-                v(0, false, usize::MAX, f64::INFINITY, f64::NEG_INFINITY),
-                v(1, false, 1, 50.0, -40.0),
-                v(2, false, 0, 3.0, 2.0),
+                v(0, false, false, usize::MAX, f64::INFINITY, f64::NEG_INFINITY),
+                v(1, false, false, 1, 50.0, -40.0),
+                v(2, false, false, 0, 3.0, 2.0),
             ]),
             vec![2, 1, 0]
         );
@@ -1173,6 +1493,157 @@ mod tests {
         assert_eq!(fleet.totals.completed, 4);
         assert_eq!(fleet.totals.retries, 0, "router probed a failed device");
         assert!(fleet.render().contains("FAILED"));
+    }
+
+    #[test]
+    fn warm_routing_prefers_cached_device_when_slack_permits() {
+        // None of these topologies appear in the workload profile, so
+        // plan preference is MAX everywhere and ranking is decided by
+        // hot/warm/est alone.
+        let t1 = Topology::new(64, 768, 8, 64);
+        let t2 = Topology::new(32, 768, 8, 64);
+        let t3 = Topology::new(64, 512, 8, 64);
+        let other = Topology::new(128, 768, 8, 64);
+        let cluster = qos_two_u55c(std::slice::from_ref(&other));
+        let h = cluster.handle();
+        let pred2 = DeviceSpec::u55c(0).predicted_ms(&t2);
+        // Build state: d0 serves t1; d1 serves t2, then t3 twice (t3 is
+        // hot on d1, t2 only *warm* — in the cache, not programmed).
+        let r0 = h.call(req(0, &t1)).unwrap();
+        assert_eq!(r0.devices, vec![0], "empty fleet ties break by id");
+        for (i, t) in [(1u64, &t2), (2, &t3), (3, &t3)] {
+            let r = h.call(req(i, t)).unwrap();
+            assert_eq!(r.devices, vec![1], "{t:?} must land on the lighter device");
+        }
+        assert_eq!(h.warm_topologies(1), vec![t2.clone(), t3.clone()], "LRU mirror");
+        // Best-effort t2: d0 is *colder and earlier* (backlog m1 vs
+        // m2+2·m3), d1 is warm.  Warmth must win while slack permits
+        // (no deadline = infinite slack).
+        let r4 = h.call(req(4, &t2)).unwrap();
+        assert_eq!(r4.devices, vec![1], "warm device must win over an earlier cold one");
+        // Tight-deadline t2: feasible on d0 only — feasibility beats
+        // warmth, so the router abandons the warm device.
+        let d0_est = r0.completed_ms + pred2;
+        let d1_est = r4.completed_ms + pred2;
+        assert!(d1_est > d0_est);
+        let deadline = 0.5 * (d0_est + d1_est);
+        let r5 = h
+            .call_qos(req(5, &t2).with_qos(Priority::High, 0.0, Some(deadline)))
+            .unwrap()
+            .served()
+            .unwrap();
+        assert_eq!(r5.devices, vec![0], "slack must override warm affinity");
+        assert!(!r5.deadline_missed);
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.warm_hits, 1, "exactly r4 was a warm dispatch");
+    }
+
+    #[test]
+    fn warm_mirror_matches_device_program_cache() {
+        let t1 = Topology::new(64, 768, 8, 64);
+        let t2 = Topology::new(32, 768, 8, 64);
+        let t3 = Topology::new(64, 512, 8, 64);
+        let cluster = two_u55c(&[t1.clone(), t2.clone(), t3.clone()]);
+        let h = cluster.handle();
+        // Sequential stream (single-request batches): the device's
+        // ProgramCache sees exactly the dispatch order the mirror sees.
+        for (i, t) in [&t1, &t2, &t3, &t1, &t2, &t3, &t1].into_iter().enumerate() {
+            h.call(req(i as u64, t)).unwrap();
+        }
+        let mirrors: Vec<Vec<Topology>> = (0..2).map(|d| h.warm_topologies(d)).collect();
+        let fleet = cluster.shutdown();
+        for (d, mirror) in mirrors.iter().enumerate() {
+            assert_eq!(
+                &fleet.devices[d].stats.cached_topologies, mirror,
+                "device {d}: warm-set mirror diverged from the real ProgramCache"
+            );
+            assert!(!mirror.is_empty(), "device {d} never served");
+        }
+    }
+
+    #[test]
+    fn admission_margins_extend_shedding_beyond_low() {
+        let t = Topology::new(64, 768, 8, 64);
+        let cluster = Cluster::start(
+            vec![DeviceSpec::u55c(0)],
+            &WorkloadProfile::uniform(std::slice::from_ref(&t)),
+            ClusterConfig::qos(),
+        )
+        .unwrap();
+        let h = cluster.handle();
+        let ms = DeviceSpec::u55c(0).predicted_ms(&t);
+        for i in 0..3u64 {
+            h.call(req(i, &t)).unwrap();
+        }
+        // Default margins: Normal is never shed — it runs late.
+        let r = h
+            .call_qos(req(10, &t).with_qos(Priority::Normal, 0.0, Some(1.5 * ms)))
+            .unwrap()
+            .served()
+            .expect("Normal not shed by default");
+        assert!(r.deadline_missed);
+        // The control-plane hook tightens Normal to a zero margin: the
+        // same hopeless request is now shed at ingress.
+        h.set_admission_margin(Priority::Normal, Some(0.0));
+        assert_eq!(h.admission_margin(Priority::Normal), Some(0.0));
+        let out = h
+            .call_qos(req(11, &t).with_qos(Priority::Normal, 0.0, Some(1.5 * ms)))
+            .unwrap();
+        assert!(out.is_shed(), "tightened Normal must shed");
+        // High still has no margin — served late, never shed.
+        let r_high = h
+            .call_qos(req(12, &t).with_qos(Priority::High, 0.0, Some(1.5 * ms)))
+            .unwrap()
+            .served()
+            .expect("High is never shed");
+        // A widened Low margin sheds even a request whose deadline is
+        // comfortably feasible at zero margin.
+        h.set_admission_margin(Priority::Low, Some(10.0 * ms));
+        let generous = r_high.completed_ms + 2.0 * ms;
+        let out = h
+            .call_qos(req(13, &t).with_qos(Priority::Low, 0.0, Some(generous)))
+            .unwrap();
+        assert!(out.is_shed(), "widened Low margin must shed feasible-at-zero requests");
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.completed, 5);
+        assert_eq!(fleet.totals.slo.shed[Priority::Normal.index()], 1);
+        assert_eq!(fleet.totals.slo.shed[Priority::Low.index()], 1);
+    }
+
+    #[test]
+    fn telemetry_frames_capture_the_request_stream() {
+        let t = Topology::new(64, 768, 8, 64);
+        let cluster = Cluster::start(
+            vec![DeviceSpec::u55c(0), DeviceSpec::u55c(1)],
+            &WorkloadProfile::uniform(std::slice::from_ref(&t)),
+            ClusterConfig {
+                telemetry: TelemetryConfig { window_ms: 1.0, ..TelemetryConfig::default() },
+                ..ClusterConfig::qos()
+            },
+        )
+        .unwrap();
+        let h = cluster.handle();
+        for i in 0..6u64 {
+            let arrival = i as f64 * 0.75;
+            h.call_qos(req(i, &t).with_qos(Priority::Normal, arrival, None)).unwrap();
+        }
+        cluster.seal_telemetry();
+        let snap = cluster.telemetry();
+        assert_eq!(snap.sealed.arrivals_total(), 6);
+        assert_eq!(snap.sealed.completed, 6);
+        assert_eq!(snap.sealed.best_effort[Priority::Normal.index()], 6);
+        assert_eq!(snap.sealed.dispatches(), 6);
+        assert_eq!(snap.late_events, 0);
+        assert!(snap.sealed.frames >= 4, "0.75 ms spacing over 1 ms windows");
+        let jsonl = snap.to_jsonl();
+        assert_eq!(jsonl.lines().count(), snap.frames.len());
+        assert!(jsonl.contains("\"arrivals\""), "{jsonl}");
+        // Conservation: ring + evicted == sealed (nothing evicted here).
+        let mut refold = snap.evicted.clone();
+        for f in &snap.frames {
+            refold.fold(f);
+        }
+        assert_eq!(refold, snap.sealed);
     }
 
     #[test]

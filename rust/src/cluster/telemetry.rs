@@ -1,0 +1,1336 @@
+//! Streaming fleet telemetry: windowed partial-frame aggregation plus a
+//! threshold-driven control plane (DESIGN.md §13).
+//!
+//! The one-shot snapshot strings of `fleet.rs` answer "what happened
+//! over the whole run"; serving needs "what happened in the *last
+//! window*, and is a device drifting".  This module provides that layer
+//! in the style of a DAQ event aggregator:
+//!
+//! * The router emits [`TelemetryEvent`]s (ingress, completion, shed,
+//!   reject) stamped with the **virtual** `arrival_ms` clock.  Events
+//!   land in per-window *partial frames* keyed by
+//!   `floor(t_ms / window_ms)`.
+//! * A watermark (the latest ingress time seen) drives sealing: window
+//!   `k` seals once the watermark passes the end of window
+//!   `k + grace_windows`, at which point the partial becomes an
+//!   immutable [`TelemetryFrame`] in a bounded ring.  Frames are
+//!   **contiguous** — empty windows seal as zero frames — so frame
+//!   index `k` always covers `[k·w, (k+1)·w)`.
+//! * Events older than the seal watermark (late stragglers) are never
+//!   silently dropped: they are counted and reported on the next sealed
+//!   frame's `late_events`.
+//! * Ring eviction folds the evicted frame into a running
+//!   [`FrameTotals`], so `sealed == Σ ring + evicted` holds forever
+//!   (conservation; asserted by `tests/telemetry_soak.rs`).
+//!
+//! Everything is a pure function of the seeded virtual clock — two runs
+//! of the same soak produce byte-identical JSONL frame exports.
+//!
+//! The [`ControlPlane`] closes the loop: declarative [`ControlRule`]s
+//! (signal, threshold, K consecutive windows, action) are evaluated per
+//! sealed frame; firings execute through `Cluster` hooks (drain device,
+//! tighten admission margins) and every action is recorded as an
+//! auditable [`ActionRecord`].
+
+use crate::config::Topology;
+use crate::coordinator::Priority;
+use crate::jsonlite::Json;
+use crate::metrics::LatencyStats;
+use crate::runtime::{FUSED_SL_THRESHOLD, SCORE_BYTES_BUDGET};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Aggregation tuning (part of `ClusterConfig`; `Copy` so the cluster
+/// config stays `Copy`).
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetryConfig {
+    /// Window length in virtual milliseconds.  The default is one
+    /// second of virtual `arrival_ms` clock; soaks use much smaller
+    /// windows scaled to the mean service time.
+    pub window_ms: f64,
+    /// How many windows past `k` the watermark must reach before `k`
+    /// seals.  Grace absorbs completions recorded shortly after the
+    /// ingress that advanced the watermark.
+    pub grace_windows: u32,
+    /// Bounded ring capacity; evicted frames fold into running totals.
+    pub ring_capacity: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { window_ms: 1000.0, grace_windows: 1, ring_capacity: 120 }
+    }
+}
+
+/// Program-cache heat of one dispatch, as classified by the router's
+/// warm-set mirror at dispatch time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Heat {
+    /// Device was last programmed with exactly this topology.
+    Hot,
+    /// Topology resident in the device's program cache but not current:
+    /// reprogramming replays cached registers instead of re-deriving.
+    Warm,
+    /// Full program derivation (or first contact).
+    Cold,
+}
+
+/// One device invocation attributed to a completion (two for a sharded
+/// request).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceTouch {
+    pub device: usize,
+    pub heat: Heat,
+    /// Whether the auto exec policy picks the fused tile-streaming path
+    /// for this shape (mirror of `SimBackend::choose_path`).
+    pub fused: bool,
+}
+
+/// Mirror of the runtime's `ExecPolicy::Auto` path choice, usable
+/// router-side without a backend round trip: fused tile-streaming when
+/// the sequence is long or the score matrix would blow the budget.
+pub fn auto_fused_path(topo: &Topology) -> bool {
+    let score_bytes = topo.heads * topo.seq_len * topo.seq_len * 4;
+    topo.seq_len >= FUSED_SL_THRESHOLD || score_bytes > SCORE_BYTES_BUDGET
+}
+
+/// A raw telemetry event, stamped with the virtual clock.
+#[derive(Clone, Debug)]
+pub enum TelemetryEvent {
+    /// A request entered the router (watermark driver).
+    Ingress { t_ms: f64, priority: Priority },
+    /// A request finished; `missed` is `None` for best-effort requests.
+    Completion {
+        t_ms: f64,
+        priority: Priority,
+        sojourn_ms: f64,
+        missed: Option<bool>,
+        sharded: bool,
+        bounces: u64,
+        touches: Vec<DeviceTouch>,
+    },
+    /// Admission control shed the request at ingress.
+    Shed { t_ms: f64, priority: Priority },
+    /// No placement admits the topology (and sharding cannot split it).
+    Reject { t_ms: f64 },
+}
+
+impl TelemetryEvent {
+    fn t_ms(&self) -> f64 {
+        match self {
+            TelemetryEvent::Ingress { t_ms, .. }
+            | TelemetryEvent::Completion { t_ms, .. }
+            | TelemetryEvent::Shed { t_ms, .. }
+            | TelemetryEvent::Reject { t_ms } => *t_ms,
+        }
+    }
+}
+
+/// Sealed sojourn statistics for one window (nearest-rank percentiles
+/// over the window's completions).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowStat {
+    pub count: u64,
+    pub sum_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl WindowStat {
+    fn seal(s: &LatencyStats) -> WindowStat {
+        WindowStat {
+            count: s.count() as u64,
+            sum_ms: s.sum(),
+            p50_ms: s.percentile(50.0),
+            p99_ms: s.percentile(99.0),
+            max_ms: s.max(),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj([
+            ("count", Json::Num(self.count as f64)),
+            ("sum_ms", Json::Num(self.sum_ms)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+        ])
+    }
+}
+
+/// Per-device slice of a sealed frame.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeviceWindow {
+    /// Invocations completed on this device in the window (a sharded
+    /// request counts once per touched device).
+    pub served: u64,
+    pub met: u64,
+    pub missed: u64,
+    pub sojourn: WindowStat,
+    pub hot: u64,
+    pub warm: u64,
+    pub cold: u64,
+    pub fused: u64,
+    pub reference: u64,
+    /// Router backlog-model lead over the window end at seal time:
+    /// `max(0, backlog_ms − window_end)` — how far ahead of real time
+    /// the device's queue horizon sits.
+    pub backlog_lead_ms: f64,
+    /// Device was stopped/failed at seal time.
+    pub down: bool,
+}
+
+impl DeviceWindow {
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("served", Json::Num(self.served as f64)),
+            ("met", Json::Num(self.met as f64)),
+            ("missed", Json::Num(self.missed as f64)),
+            ("sojourn", self.sojourn.to_json()),
+            ("hot", Json::Num(self.hot as f64)),
+            ("warm", Json::Num(self.warm as f64)),
+            ("cold", Json::Num(self.cold as f64)),
+            ("fused", Json::Num(self.fused as f64)),
+            ("reference", Json::Num(self.reference as f64)),
+            ("backlog_lead_ms", Json::Num(self.backlog_lead_ms)),
+            ("down", Json::Bool(self.down)),
+        ])
+    }
+}
+
+/// One sealed, immutable telemetry window.  Per-priority arrays are
+/// indexed by `Priority::index()` (High, Normal, Low).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryFrame {
+    pub index: u64,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub arrivals: [u64; 3],
+    pub completed: u64,
+    pub met: [u64; 3],
+    pub missed: [u64; 3],
+    pub best_effort: [u64; 3],
+    pub shed: [u64; 3],
+    pub rejected: u64,
+    /// Backpressure bounces attributed to this window's completions.
+    pub retries: u64,
+    pub sharded: u64,
+    pub sojourn: WindowStat,
+    pub hot: u64,
+    pub warm: u64,
+    pub cold: u64,
+    pub fused: u64,
+    pub reference: u64,
+    /// Straggler events that arrived after their window sealed; counted
+    /// here (the first frame sealed after the straggler), never silent.
+    pub late_events: u64,
+    pub devices: Vec<DeviceWindow>,
+}
+
+impl TelemetryFrame {
+    pub fn arrivals_total(&self) -> u64 {
+        self.arrivals.iter().sum()
+    }
+
+    pub fn met_total(&self) -> u64 {
+        self.met.iter().sum()
+    }
+
+    pub fn missed_total(&self) -> u64 {
+        self.missed.iter().sum()
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    /// Device invocations in the window (hot + warm + cold).
+    pub fn dispatches(&self) -> u64 {
+        self.hot + self.warm + self.cold
+    }
+
+    /// Program-cache hit rate of the window's dispatches (hot or warm).
+    pub fn warmth_rate(&self) -> f64 {
+        let d = self.dispatches();
+        if d == 0 {
+            0.0
+        } else {
+            (self.hot + self.warm) as f64 / d as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let per_prio = |v: &[u64; 3]| Json::Arr(v.iter().map(|&c| Json::Num(c as f64)).collect());
+        Json::obj([
+            ("index", Json::Num(self.index as f64)),
+            ("start_ms", Json::Num(self.start_ms)),
+            ("end_ms", Json::Num(self.end_ms)),
+            ("arrivals", per_prio(&self.arrivals)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("met", per_prio(&self.met)),
+            ("missed", per_prio(&self.missed)),
+            ("best_effort", per_prio(&self.best_effort)),
+            ("shed", per_prio(&self.shed)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("sharded", Json::Num(self.sharded as f64)),
+            ("sojourn", self.sojourn.to_json()),
+            ("hot", Json::Num(self.hot as f64)),
+            ("warm", Json::Num(self.warm as f64)),
+            ("cold", Json::Num(self.cold as f64)),
+            ("fused", Json::Num(self.fused as f64)),
+            ("reference", Json::Num(self.reference as f64)),
+            ("late_events", Json::Num(self.late_events as f64)),
+            ("devices", Json::Arr(self.devices.iter().map(|d| d.to_json()).collect())),
+        ])
+    }
+}
+
+/// Running fold of sealed frames (conservation ledger).  Maintained
+/// twice by the aggregator — once over everything sealed, once over
+/// evictions — so `sealed == Σ ring + evicted` is checkable.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FrameTotals {
+    pub frames: u64,
+    pub arrivals: [u64; 3],
+    pub completed: u64,
+    pub met: [u64; 3],
+    pub missed: [u64; 3],
+    pub best_effort: [u64; 3],
+    pub shed: [u64; 3],
+    pub rejected: u64,
+    pub retries: u64,
+    pub sharded: u64,
+    pub hot: u64,
+    pub warm: u64,
+    pub cold: u64,
+    pub fused: u64,
+    pub reference: u64,
+    pub late_events: u64,
+    pub sojourn_count: u64,
+    pub sojourn_sum_ms: f64,
+    /// Per-device completed invocation counts.
+    pub device_served: Vec<u64>,
+}
+
+impl FrameTotals {
+    pub fn fold(&mut self, f: &TelemetryFrame) {
+        self.frames += 1;
+        for i in 0..3 {
+            self.arrivals[i] += f.arrivals[i];
+            self.met[i] += f.met[i];
+            self.missed[i] += f.missed[i];
+            self.best_effort[i] += f.best_effort[i];
+            self.shed[i] += f.shed[i];
+        }
+        self.completed += f.completed;
+        self.rejected += f.rejected;
+        self.retries += f.retries;
+        self.sharded += f.sharded;
+        self.hot += f.hot;
+        self.warm += f.warm;
+        self.cold += f.cold;
+        self.fused += f.fused;
+        self.reference += f.reference;
+        self.late_events += f.late_events;
+        self.sojourn_count += f.sojourn.count;
+        self.sojourn_sum_ms += f.sojourn.sum_ms;
+        if self.device_served.len() < f.devices.len() {
+            self.device_served.resize(f.devices.len(), 0);
+        }
+        for (i, d) in f.devices.iter().enumerate() {
+            self.device_served[i] += d.served;
+        }
+    }
+
+    pub fn arrivals_total(&self) -> u64 {
+        self.arrivals.iter().sum()
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    pub fn missed_total(&self) -> u64 {
+        self.missed.iter().sum()
+    }
+
+    pub fn met_total(&self) -> u64 {
+        self.met.iter().sum()
+    }
+
+    /// Device invocations (hot + warm + cold == Σ device_served).
+    pub fn dispatches(&self) -> u64 {
+        self.hot + self.warm + self.cold
+    }
+}
+
+/// Mutable accumulator for one not-yet-sealed window.
+#[derive(Clone, Debug)]
+struct Partial {
+    arrivals: [u64; 3],
+    completed: u64,
+    met: [u64; 3],
+    missed: [u64; 3],
+    best_effort: [u64; 3],
+    shed: [u64; 3],
+    rejected: u64,
+    retries: u64,
+    sharded: u64,
+    sojourn: LatencyStats,
+    hot: u64,
+    warm: u64,
+    cold: u64,
+    fused: u64,
+    reference: u64,
+    devices: Vec<DevPartial>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct DevPartial {
+    served: u64,
+    met: u64,
+    missed: u64,
+    sojourn: LatencyStats,
+    hot: u64,
+    warm: u64,
+    cold: u64,
+    fused: u64,
+    reference: u64,
+}
+
+impl Partial {
+    fn new(n_devices: usize) -> Partial {
+        Partial {
+            arrivals: [0; 3],
+            completed: 0,
+            met: [0; 3],
+            missed: [0; 3],
+            best_effort: [0; 3],
+            shed: [0; 3],
+            rejected: 0,
+            retries: 0,
+            sharded: 0,
+            sojourn: LatencyStats::default(),
+            hot: 0,
+            warm: 0,
+            cold: 0,
+            fused: 0,
+            reference: 0,
+            devices: vec![DevPartial::default(); n_devices],
+        }
+    }
+
+    fn absorb(&mut self, ev: &TelemetryEvent) {
+        match ev {
+            TelemetryEvent::Ingress { priority, .. } => {
+                self.arrivals[priority.index()] += 1;
+            }
+            TelemetryEvent::Completion {
+                priority, sojourn_ms, missed, sharded, bounces, touches, ..
+            } => {
+                self.completed += 1;
+                self.retries += *bounces;
+                if *sharded {
+                    self.sharded += 1;
+                }
+                let p = priority.index();
+                match missed {
+                    Some(false) => self.met[p] += 1,
+                    Some(true) => self.missed[p] += 1,
+                    None => self.best_effort[p] += 1,
+                }
+                self.sojourn.record(*sojourn_ms);
+                for t in touches {
+                    match t.heat {
+                        Heat::Hot => self.hot += 1,
+                        Heat::Warm => self.warm += 1,
+                        Heat::Cold => self.cold += 1,
+                    }
+                    if t.fused {
+                        self.fused += 1;
+                    } else {
+                        self.reference += 1;
+                    }
+                    if let Some(d) = self.devices.get_mut(t.device) {
+                        d.served += 1;
+                        match missed {
+                            Some(false) => d.met += 1,
+                            Some(true) => d.missed += 1,
+                            None => {}
+                        }
+                        d.sojourn.record(*sojourn_ms);
+                        match t.heat {
+                            Heat::Hot => d.hot += 1,
+                            Heat::Warm => d.warm += 1,
+                            Heat::Cold => d.cold += 1,
+                        }
+                        if t.fused {
+                            d.fused += 1;
+                        } else {
+                            d.reference += 1;
+                        }
+                    }
+                }
+            }
+            TelemetryEvent::Shed { priority, .. } => {
+                self.shed[priority.index()] += 1;
+            }
+            TelemetryEvent::Reject { .. } => {
+                self.rejected += 1;
+            }
+        }
+    }
+
+    fn seal(
+        self,
+        index: u64,
+        window_ms: f64,
+        backlog_ms: &[f64],
+        down: &[bool],
+        late_events: u64,
+    ) -> TelemetryFrame {
+        let end_ms = (index + 1) as f64 * window_ms;
+        let devices = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| DeviceWindow {
+                served: d.served,
+                met: d.met,
+                missed: d.missed,
+                sojourn: WindowStat::seal(&d.sojourn),
+                hot: d.hot,
+                warm: d.warm,
+                cold: d.cold,
+                fused: d.fused,
+                reference: d.reference,
+                backlog_lead_ms: (backlog_ms.get(i).copied().unwrap_or(0.0) - end_ms).max(0.0),
+                down: down.get(i).copied().unwrap_or(false),
+            })
+            .collect();
+        TelemetryFrame {
+            index,
+            start_ms: index as f64 * window_ms,
+            end_ms,
+            arrivals: self.arrivals,
+            completed: self.completed,
+            met: self.met,
+            missed: self.missed,
+            best_effort: self.best_effort,
+            shed: self.shed,
+            rejected: self.rejected,
+            retries: self.retries,
+            sharded: self.sharded,
+            sojourn: WindowStat::seal(&self.sojourn),
+            hot: self.hot,
+            warm: self.warm,
+            cold: self.cold,
+            fused: self.fused,
+            reference: self.reference,
+            late_events,
+            devices,
+        }
+    }
+}
+
+/// Cloneable snapshot of the aggregator's state (ring + totals), the
+/// unit of JSONL export and cross-run reproducibility checks.
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    pub frames: Vec<TelemetryFrame>,
+    pub sealed: FrameTotals,
+    pub evicted: FrameTotals,
+    pub late_events: u64,
+    pub window_ms: f64,
+}
+
+impl TelemetrySnapshot {
+    /// One JSON object per sealed frame, newline-terminated.  Byte
+    /// equality of two exports is the reproducibility criterion.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for f in &self.frames {
+            out.push_str(&f.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// DAQ-style windowed aggregator: events → partial frames → sealed ring.
+#[derive(Debug)]
+pub struct FrameAggregator {
+    cfg: TelemetryConfig,
+    n_devices: usize,
+    /// Next window index to seal; windows `< next_seal` are immutable.
+    next_seal: u64,
+    partials: BTreeMap<u64, Partial>,
+    ring: VecDeque<TelemetryFrame>,
+    sealed: FrameTotals,
+    evicted: FrameTotals,
+    /// Late stragglers not yet attributed to a sealed frame.
+    late_pending: u64,
+    late_total: u64,
+    backlog_gauge: Vec<f64>,
+    down_gauge: Vec<bool>,
+}
+
+impl FrameAggregator {
+    pub fn new(cfg: TelemetryConfig, n_devices: usize) -> FrameAggregator {
+        assert!(cfg.window_ms > 0.0, "telemetry window must be positive");
+        assert!(cfg.ring_capacity > 0, "telemetry ring must hold at least one frame");
+        FrameAggregator {
+            cfg,
+            n_devices,
+            next_seal: 0,
+            partials: BTreeMap::new(),
+            ring: VecDeque::new(),
+            sealed: FrameTotals::default(),
+            evicted: FrameTotals::default(),
+            late_pending: 0,
+            late_total: 0,
+            backlog_gauge: vec![0.0; n_devices],
+            down_gauge: vec![false; n_devices],
+        }
+    }
+
+    fn window_of(&self, t_ms: f64) -> u64 {
+        if t_ms <= 0.0 {
+            0
+        } else {
+            (t_ms / self.cfg.window_ms) as u64
+        }
+    }
+
+    /// Record one event into its window's partial.  Events for already
+    /// sealed windows are counted as late stragglers and surface on the
+    /// next sealed frame — never silently dropped.
+    pub fn record(&mut self, ev: TelemetryEvent) {
+        let k = self.window_of(ev.t_ms());
+        if k < self.next_seal {
+            self.late_pending += 1;
+            self.late_total += 1;
+            return;
+        }
+        let n = self.n_devices;
+        self.partials.entry(k).or_insert_with(|| Partial::new(n)).absorb(&ev);
+    }
+
+    /// Refresh the gauge values (router backlog model, device health)
+    /// sampled into frames at seal time.
+    pub fn observe_gauges(&mut self, backlog_ms: &[f64], down: &[bool]) {
+        self.backlog_gauge.clear();
+        self.backlog_gauge.extend_from_slice(backlog_ms);
+        self.down_gauge.clear();
+        self.down_gauge.extend_from_slice(down);
+    }
+
+    /// Advance the watermark to virtual time `t_ms`, sealing every
+    /// window whose grace period it has passed (including empty ones —
+    /// frames stay contiguous).
+    pub fn advance(&mut self, t_ms: f64) {
+        let grace = self.cfg.grace_windows as u64;
+        while (self.next_seal + 1 + grace) as f64 * self.cfg.window_ms <= t_ms {
+            self.seal_next();
+        }
+    }
+
+    /// Flush: seal everything outstanding (end of run).
+    pub fn seal_all(&mut self) {
+        while !self.partials.is_empty() {
+            self.seal_next();
+        }
+    }
+
+    fn seal_next(&mut self) {
+        let k = self.next_seal;
+        self.next_seal += 1;
+        let partial = self.partials.remove(&k).unwrap_or_else(|| Partial::new(self.n_devices));
+        let late = std::mem::take(&mut self.late_pending);
+        let frame =
+            partial.seal(k, self.cfg.window_ms, &self.backlog_gauge, &self.down_gauge, late);
+        self.sealed.fold(&frame);
+        self.ring.push_back(frame);
+        while self.ring.len() > self.cfg.ring_capacity {
+            let old = self.ring.pop_front().expect("ring non-empty");
+            self.evicted.fold(&old);
+        }
+    }
+
+    pub fn frames(&self) -> impl Iterator<Item = &TelemetryFrame> {
+        self.ring.iter()
+    }
+
+    /// Clone the frames with `index >= since` still in the ring (the
+    /// control plane's incremental read).
+    pub fn frames_since(&self, since: u64) -> Vec<TelemetryFrame> {
+        self.ring.iter().filter(|f| f.index >= since).cloned().collect()
+    }
+
+    pub fn sealed_totals(&self) -> &FrameTotals {
+        &self.sealed
+    }
+
+    pub fn evicted_totals(&self) -> &FrameTotals {
+        &self.evicted
+    }
+
+    /// Total late stragglers observed (attributed or still pending).
+    pub fn late_events_total(&self) -> u64 {
+        self.late_total
+    }
+
+    pub fn window_ms(&self) -> f64 {
+        self.cfg.window_ms
+    }
+
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            frames: self.ring.iter().cloned().collect(),
+            sealed: self.sealed.clone(),
+            evicted: self.evicted.clone(),
+            late_events: self.late_total,
+            window_ms: self.cfg.window_ms,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control plane
+// ---------------------------------------------------------------------------
+
+/// What a rule applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleScope {
+    /// Evaluate fleet-wide frame counters.
+    Fleet,
+    /// Evaluate each device's window slice independently (down devices
+    /// are skipped).
+    PerDevice,
+}
+
+/// The frame quantity a rule thresholds on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleSignal {
+    /// p99 sojourn of the window's completions, ms.  Windows with no
+    /// completions carry no evidence and reset the breach streak.
+    SojournP99Ms,
+    /// Deadline misses in the window (count).
+    MissCount,
+    /// Sheds in the window (count; fleet scope only — sheds are not
+    /// attributed to a device).
+    ShedCount,
+    /// Router backlog-model lead over the window end, ms.
+    BacklogLeadMs,
+}
+
+/// What to do when a rule fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ControlAction {
+    /// Stop dispatching to the breaching device and drain its queue
+    /// (`Cluster::stop_device`).  Requires `RuleScope::PerDevice`.
+    DrainDevice,
+    /// Tighten (or install) the admission margin for a priority class:
+    /// a request is shed unless some device can finish `margin_ms`
+    /// before its deadline.
+    SetAdmissionMargin { priority: Priority, margin_ms: f64 },
+    /// Record only — an auditable note in the action log.
+    Alert,
+}
+
+impl ControlAction {
+    fn label(&self) -> String {
+        match self {
+            ControlAction::DrainDevice => "drain_device".to_string(),
+            ControlAction::SetAdmissionMargin { priority, margin_ms } => {
+                format!("set_admission_margin[{}]={margin_ms}ms", priority.label())
+            }
+            ControlAction::Alert => "alert".to_string(),
+        }
+    }
+}
+
+/// A declarative threshold rule: fire `action` after `for_windows`
+/// *consecutive* frames where `signal > threshold`.  One-shot per
+/// target: once fired for a device (or the fleet), it stays fired.
+#[derive(Clone, Debug)]
+pub struct ControlRule {
+    pub name: String,
+    pub scope: RuleScope,
+    pub signal: RuleSignal,
+    pub threshold: f64,
+    pub for_windows: u32,
+    pub action: ControlAction,
+}
+
+/// A rule crossing its streak threshold on one sealed frame; the
+/// cluster executes it and records the outcome as an [`ActionRecord`].
+#[derive(Clone, Debug)]
+pub struct Firing {
+    pub rule: String,
+    pub frame: u64,
+    pub at_ms: f64,
+    pub device: Option<usize>,
+    pub observed: f64,
+    pub action: ControlAction,
+}
+
+/// Audit-log entry: what fired, on what evidence, and what the
+/// execution hook reported back.
+#[derive(Clone, Debug)]
+pub struct ActionRecord {
+    pub frame: u64,
+    pub at_ms: f64,
+    pub rule: String,
+    pub device: Option<usize>,
+    pub observed: f64,
+    pub action: ControlAction,
+    pub outcome: String,
+}
+
+impl ActionRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("frame", Json::Num(self.frame as f64)),
+            ("at_ms", Json::Num(self.at_ms)),
+            ("rule", Json::Str(self.rule.clone())),
+            (
+                "device",
+                match self.device {
+                    Some(d) => Json::Num(d as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("observed", Json::Num(self.observed)),
+            ("action", Json::Str(self.action.label())),
+            ("outcome", Json::Str(self.outcome.clone())),
+        ])
+    }
+}
+
+/// Evaluates [`ControlRule`]s over sealed frames and keeps the audit
+/// log.  Pure state machine: given the same frame sequence it produces
+/// the same firings, so control actions inherit the soak's determinism.
+#[derive(Debug, Default)]
+pub struct ControlPlane {
+    rules: Vec<ControlRule>,
+    /// Per rule, per target (one slot for Fleet scope) breach streaks.
+    streaks: Vec<Vec<u32>>,
+    fired: Vec<Vec<bool>>,
+    log: Vec<ActionRecord>,
+    /// Next frame index to evaluate (frames below this are done).
+    cursor: u64,
+}
+
+impl ControlPlane {
+    pub fn new(rules: Vec<ControlRule>) -> ControlPlane {
+        let mut cp = ControlPlane::default();
+        for r in rules {
+            cp.add_rule(r);
+        }
+        cp
+    }
+
+    pub fn add_rule(&mut self, rule: ControlRule) {
+        self.rules.push(rule);
+        self.streaks.push(Vec::new());
+        self.fired.push(Vec::new());
+    }
+
+    pub fn rules(&self) -> &[ControlRule] {
+        &self.rules
+    }
+
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    pub fn log(&self) -> &[ActionRecord] {
+        &self.log
+    }
+
+    /// One JSON object per action record, newline-terminated.
+    pub fn log_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.log {
+            out.push_str(&r.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Append an executed firing (with its outcome) to the audit log.
+    pub fn record(&mut self, firing: &Firing, outcome: String) -> ActionRecord {
+        let rec = ActionRecord {
+            frame: firing.frame,
+            at_ms: firing.at_ms,
+            rule: firing.rule.clone(),
+            device: firing.device,
+            observed: firing.observed,
+            action: firing.action,
+            outcome,
+        };
+        self.log.push(rec.clone());
+        rec
+    }
+
+    /// Evaluate every rule against one sealed frame, updating streaks;
+    /// returns the firings that crossed their `for_windows` threshold.
+    pub fn evaluate(&mut self, frame: &TelemetryFrame) -> Vec<Firing> {
+        let mut firings = Vec::new();
+        for (ri, rule) in self.rules.iter().enumerate() {
+            let n_targets = match rule.scope {
+                RuleScope::Fleet => 1,
+                RuleScope::PerDevice => frame.devices.len(),
+            };
+            if self.streaks[ri].len() < n_targets {
+                self.streaks[ri].resize(n_targets, 0);
+                self.fired[ri].resize(n_targets, false);
+            }
+            for target in 0..n_targets {
+                let device = match rule.scope {
+                    RuleScope::Fleet => None,
+                    RuleScope::PerDevice => Some(target),
+                };
+                let value = signal_value(rule, frame, device);
+                match value {
+                    Some(v) if v > rule.threshold => self.streaks[ri][target] += 1,
+                    _ => self.streaks[ri][target] = 0,
+                }
+                if self.streaks[ri][target] >= rule.for_windows && !self.fired[ri][target] {
+                    self.fired[ri][target] = true;
+                    firings.push(Firing {
+                        rule: rule.name.clone(),
+                        frame: frame.index,
+                        at_ms: frame.end_ms,
+                        device,
+                        observed: value.unwrap_or(0.0),
+                        action: rule.action,
+                    });
+                }
+            }
+        }
+        self.cursor = self.cursor.max(frame.index + 1);
+        firings
+    }
+}
+
+/// The signal value for one rule target, or `None` when the frame
+/// carries no evidence (no completions for sojourn signals, device
+/// down, or a per-device scope on a fleet-only signal).  `None` resets
+/// the streak.
+fn signal_value(rule: &ControlRule, frame: &TelemetryFrame, device: Option<usize>) -> Option<f64> {
+    match device {
+        None => match rule.signal {
+            RuleSignal::SojournP99Ms => {
+                (frame.sojourn.count > 0).then_some(frame.sojourn.p99_ms)
+            }
+            RuleSignal::MissCount => Some(frame.missed_total() as f64),
+            RuleSignal::ShedCount => Some(frame.shed_total() as f64),
+            RuleSignal::BacklogLeadMs => frame
+                .devices
+                .iter()
+                .filter(|d| !d.down)
+                .map(|d| d.backlog_lead_ms)
+                .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v)))),
+        },
+        Some(i) => {
+            let d = frame.devices.get(i)?;
+            if d.down {
+                return None;
+            }
+            match rule.signal {
+                RuleSignal::SojournP99Ms => (d.sojourn.count > 0).then_some(d.sojourn.p99_ms),
+                RuleSignal::MissCount => Some(d.missed as f64),
+                RuleSignal::ShedCount => None,
+                RuleSignal::BacklogLeadMs => Some(d.backlog_lead_ms),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operator view
+// ---------------------------------------------------------------------------
+
+/// Unicode sparkline of a series, scaled to its own max.
+pub fn sparkline(values: &[f64]) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = values.iter().copied().fold(0.0_f64, f64::max);
+    values
+        .iter()
+        .map(|&v| {
+            if max <= 0.0 || v <= 0.0 {
+                ' '
+            } else {
+                let idx = (v / max * 8.0).ceil() as usize;
+                GLYPHS[idx.clamp(1, 8) - 1]
+            }
+        })
+        .collect()
+}
+
+/// Render the `famous top` operator dashboard from the frame ring: a
+/// fleet summary over the visible span, a per-device table for the last
+/// frame, a completions-per-window sparkline, and the tail of the
+/// control-plane action log.  Pure string in, string out (unit-tested;
+/// the CLI adds the ANSI clear).
+pub fn render_top(frames: &[TelemetryFrame], names: &[String], log: &[ActionRecord]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let Some(last) = frames.last() else {
+        return "telemetry: no sealed frames yet\n".to_string();
+    };
+    let mut span = FrameTotals::default();
+    for f in frames {
+        span.fold(f);
+    }
+    let _ = writeln!(
+        out,
+        "frames {}..{}  window {:.3} ms  span {:.1} ms",
+        frames[0].index,
+        last.index,
+        last.end_ms - last.start_ms,
+        last.end_ms - frames[0].start_ms,
+    );
+    let _ = writeln!(
+        out,
+        "fleet: {} arrivals  {} done  {} met  {} missed  {} shed  {} rejected  \
+         warmth {:.0}%  late {}",
+        span.arrivals_total(),
+        span.completed,
+        span.met_total(),
+        span.missed_total(),
+        span.shed_total(),
+        span.rejected,
+        if span.dispatches() == 0 {
+            0.0
+        } else {
+            (span.hot + span.warm) as f64 / span.dispatches() as f64 * 100.0
+        },
+        span.late_events,
+    );
+    let served: Vec<f64> = frames.iter().map(|f| f.completed as f64).collect();
+    let tail = served.len().saturating_sub(60);
+    let _ = writeln!(out, "done/window |{}|", sparkline(&served[tail..]));
+    let _ = writeln!(
+        out,
+        "{:<14} {:>6} {:>5} {:>5} {:>9} {:>11} {:>6} {:>9} {:>6}",
+        "device (last)", "served", "met", "miss", "p99 ms", "hot/warm/cold", "fused%", "lead ms",
+        "health",
+    );
+    for (i, d) in last.devices.iter().enumerate() {
+        let name = names.get(i).map(String::as_str).unwrap_or("?");
+        let fused_pct = if d.served == 0 {
+            0.0
+        } else {
+            d.fused as f64 / (d.fused + d.reference) as f64 * 100.0
+        };
+        let _ = writeln!(
+            out,
+            "{:<14} {:>6} {:>5} {:>5} {:>9.3} {:>11} {:>6.0} {:>9.2} {:>6}",
+            format!("{i}:{name}"),
+            d.served,
+            d.met,
+            d.missed,
+            d.sojourn.p99_ms,
+            format!("{}/{}/{}", d.hot, d.warm, d.cold),
+            fused_pct,
+            d.backlog_lead_ms,
+            if d.down { "down" } else { "live" },
+        );
+    }
+    if !log.is_empty() {
+        let _ = writeln!(out, "control actions (last {}):", log.len().min(5));
+        for r in log.iter().rev().take(5).rev() {
+            let dev = r.device.map(|d| format!(" device {d}")).unwrap_or_default();
+            let _ = writeln!(
+                out,
+                "  frame {} @ {:.1} ms  rule '{}'{}  observed {:.3}  -> {}",
+                r.frame, r.at_ms, r.rule, dev, r.observed, r.outcome,
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ExecPath, SimBackend};
+
+    fn cfg(window_ms: f64, grace: u32, ring: usize) -> TelemetryConfig {
+        TelemetryConfig { window_ms, grace_windows: grace, ring_capacity: ring }
+    }
+
+    fn touch(device: usize, heat: Heat) -> DeviceTouch {
+        DeviceTouch { device, heat, fused: false }
+    }
+
+    fn completion(t_ms: f64, sojourn_ms: f64, device: usize, heat: Heat) -> TelemetryEvent {
+        TelemetryEvent::Completion {
+            t_ms,
+            priority: Priority::Normal,
+            sojourn_ms,
+            missed: Some(false),
+            sharded: false,
+            bounces: 0,
+            touches: vec![touch(device, heat)],
+        }
+    }
+
+    fn ingress(t_ms: f64) -> TelemetryEvent {
+        TelemetryEvent::Ingress { t_ms, priority: Priority::Normal }
+    }
+
+    #[test]
+    fn windows_seal_contiguously_with_grace() {
+        let mut agg = FrameAggregator::new(cfg(10.0, 1, 16), 2);
+        agg.record(ingress(1.0));
+        agg.record(completion(2.0, 1.5, 0, Heat::Cold));
+        agg.record(ingress(12.0));
+        // Window 3 is populated; window 2 stays empty.
+        agg.record(ingress(35.0));
+        agg.advance(35.0);
+        // Watermark 35: window 0 sealed (needs t >= 20), window 1 (t >= 30)
+        // sealed, window 2 (t >= 40) not yet.
+        let frames: Vec<_> = agg.frames().cloned().collect();
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].index, 0);
+        assert_eq!(frames[0].arrivals_total(), 1);
+        assert_eq!(frames[0].completed, 1);
+        assert_eq!(frames[0].devices[0].served, 1);
+        assert_eq!(frames[1].index, 1);
+        assert_eq!(frames[1].arrivals_total(), 1);
+        agg.seal_all();
+        let frames: Vec<_> = agg.frames().cloned().collect();
+        // Contiguous through window 3: the empty window 2 sealed too.
+        assert_eq!(frames.len(), 4);
+        assert_eq!(frames[2].arrivals_total(), 0);
+        assert_eq!(frames[3].arrivals_total(), 1);
+    }
+
+    #[test]
+    fn late_stragglers_are_counted_never_silent() {
+        let mut agg = FrameAggregator::new(cfg(10.0, 0, 16), 1);
+        agg.record(ingress(5.0));
+        agg.advance(25.0); // seals windows 0 and 1
+        assert_eq!(agg.frames().count(), 2);
+        // A completion stamped inside the already sealed window 0.
+        agg.record(completion(8.0, 3.0, 0, Heat::Cold));
+        assert_eq!(agg.late_events_total(), 1);
+        agg.record(ingress(31.0));
+        agg.advance(31.0); // hmm: grace 0 seals window 2 at t >= 30
+        let frames: Vec<_> = agg.frames().cloned().collect();
+        assert_eq!(frames.len(), 3);
+        // The straggler is attributed to the next sealed frame's
+        // late_events and nowhere else.
+        assert_eq!(frames[2].late_events, 1);
+        assert_eq!(frames[2].completed, 0);
+        let total: u64 = frames.iter().map(|f| f.late_events).sum();
+        assert_eq!(total, agg.late_events_total());
+    }
+
+    #[test]
+    fn ring_eviction_preserves_conservation() {
+        let mut agg = FrameAggregator::new(cfg(10.0, 0, 2), 1);
+        for k in 0..5u64 {
+            let t = k as f64 * 10.0 + 1.0;
+            agg.record(ingress(t));
+            agg.record(completion(t + 1.0, 0.5 + k as f64, 0, Heat::Hot));
+        }
+        agg.seal_all();
+        assert_eq!(agg.frames().count(), 2); // ring capacity
+        assert_eq!(agg.sealed_totals().frames, 5);
+        assert_eq!(agg.evicted_totals().frames, 3);
+        let mut refold = agg.evicted_totals().clone();
+        for f in agg.frames() {
+            refold.fold(f);
+        }
+        assert_eq!(&refold, agg.sealed_totals());
+        assert_eq!(refold.completed, 5);
+        assert_eq!(refold.arrivals_total(), 5);
+        assert_eq!(refold.device_served, vec![5]);
+    }
+
+    #[test]
+    fn snapshot_jsonl_is_deterministic() {
+        let build = |soj: f64| {
+            let mut agg = FrameAggregator::new(cfg(5.0, 1, 8), 2);
+            agg.record(ingress(0.5));
+            agg.record(completion(1.0, soj, 1, Heat::Warm));
+            agg.observe_gauges(&[0.0, 7.5], &[false, false]);
+            agg.seal_all();
+            agg.snapshot().to_jsonl()
+        };
+        let a = build(1.25);
+        assert_eq!(a, build(1.25));
+        assert_ne!(a, build(1.5));
+        assert!(a.contains("\"warm\":1"), "{a}");
+        assert!(a.contains("backlog_lead_ms"), "{a}");
+        assert_eq!(a.lines().count(), 1);
+    }
+
+    #[test]
+    fn auto_fused_matches_backend_policy() {
+        let backend = SimBackend::new(crate::sim::SimConfig::u55c());
+        for topo in [
+            Topology::new(16, 256, 4, 64),
+            Topology::new(64, 768, 8, 64),
+            Topology::new(256, 512, 8, 64),
+            Topology::new(1024, 768, 8, 64),
+            // 16·128²·4 bytes == the budget exactly: stays on reference.
+            Topology::new(128, 1024, 16, 64),
+        ] {
+            let fused = backend.choose_path(&topo) == ExecPath::FusedTiled;
+            assert_eq!(auto_fused_path(&topo), fused, "{topo:?}");
+        }
+    }
+
+    fn frame_with_p99(index: u64, dev_p99: &[f64]) -> TelemetryFrame {
+        let mut agg = FrameAggregator::new(cfg(10.0, 0, 64), dev_p99.len());
+        for (i, &p) in dev_p99.iter().enumerate() {
+            if p > 0.0 {
+                agg.record(completion(index as f64 * 10.0 + 1.0, p, i, Heat::Cold));
+            }
+        }
+        agg.record(ingress(index as f64 * 10.0 + 1.0));
+        agg.seal_all();
+        let mut f = agg.frames().last().unwrap().clone();
+        f.index = index;
+        f
+    }
+
+    #[test]
+    fn control_rule_fires_after_k_consecutive_breaches_once() {
+        let mut cp = ControlPlane::new(vec![ControlRule {
+            name: "p99-drain".to_string(),
+            scope: RuleScope::PerDevice,
+            signal: RuleSignal::SojournP99Ms,
+            threshold: 5.0,
+            for_windows: 3,
+            action: ControlAction::DrainDevice,
+        }]);
+        // Device 1 breaches; device 0 stays healthy.  A no-evidence
+        // window (no completions) resets the streak.
+        assert!(cp.evaluate(&frame_with_p99(0, &[1.0, 9.0])).is_empty());
+        assert!(cp.evaluate(&frame_with_p99(1, &[1.0, 9.0])).is_empty());
+        assert!(cp.evaluate(&frame_with_p99(2, &[1.0, 0.0])).is_empty()); // reset
+        assert!(cp.evaluate(&frame_with_p99(3, &[1.0, 9.0])).is_empty());
+        assert!(cp.evaluate(&frame_with_p99(4, &[1.0, 9.0])).is_empty());
+        let firings = cp.evaluate(&frame_with_p99(5, &[1.0, 9.0]));
+        assert_eq!(firings.len(), 1);
+        assert_eq!(firings[0].device, Some(1));
+        assert_eq!(firings[0].action, ControlAction::DrainDevice);
+        assert!((firings[0].observed - 9.0).abs() < 1e-12);
+        // One-shot: further breaches do not re-fire.
+        assert!(cp.evaluate(&frame_with_p99(6, &[1.0, 9.0])).is_empty());
+        assert_eq!(cp.cursor(), 7);
+        let rec = cp.record(&firings[0], "drained device 1".to_string());
+        assert_eq!(rec.frame, 5);
+        let jsonl = cp.log_jsonl();
+        assert!(jsonl.contains("p99-drain"), "{jsonl}");
+        assert!(jsonl.contains("drain_device"), "{jsonl}");
+        assert_eq!(jsonl, cp.log_jsonl());
+    }
+
+    #[test]
+    fn fleet_scope_rules_and_down_devices() {
+        let mut cp = ControlPlane::new(vec![ControlRule {
+            name: "miss-alert".to_string(),
+            scope: RuleScope::Fleet,
+            signal: RuleSignal::MissCount,
+            threshold: 0.0,
+            for_windows: 1,
+            action: ControlAction::Alert,
+        }]);
+        let mut f = frame_with_p99(0, &[1.0]);
+        assert!(cp.evaluate(&f).is_empty()); // met, not missed
+        f.index = 1;
+        f.missed[Priority::Normal.index()] = 2;
+        let firings = cp.evaluate(&f);
+        assert_eq!(firings.len(), 1);
+        assert_eq!(firings[0].device, None);
+        assert!((firings[0].observed - 2.0).abs() < 1e-12);
+
+        // A down device yields no evidence for per-device signals.
+        let rule = ControlRule {
+            name: "x".to_string(),
+            scope: RuleScope::PerDevice,
+            signal: RuleSignal::BacklogLeadMs,
+            threshold: 0.0,
+            for_windows: 1,
+            action: ControlAction::Alert,
+        };
+        let mut g = frame_with_p99(0, &[1.0]);
+        g.devices[0].backlog_lead_ms = 42.0;
+        g.devices[0].down = true;
+        assert_eq!(signal_value(&rule, &g, Some(0)), None);
+        g.devices[0].down = false;
+        assert_eq!(signal_value(&rule, &g, Some(0)), Some(42.0));
+    }
+
+    #[test]
+    fn sparkline_and_render_top() {
+        assert_eq!(sparkline(&[]), "");
+        assert_eq!(sparkline(&[0.0, 0.0]), "  ");
+        let s = sparkline(&[1.0, 4.0, 8.0]);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.ends_with('█'), "{s}");
+
+        let frames = vec![frame_with_p99(0, &[1.0, 2.0])];
+        let names = vec!["u55c".to_string(), "u200".to_string()];
+        let log = vec![ActionRecord {
+            frame: 0,
+            at_ms: 10.0,
+            rule: "p99-drain".to_string(),
+            device: Some(1),
+            observed: 9.0,
+            action: ControlAction::DrainDevice,
+            outcome: "drained device 1".to_string(),
+        }];
+        let view = render_top(&frames, &names, &log);
+        assert!(view.contains("0:u55c"), "{view}");
+        assert!(view.contains("1:u200"), "{view}");
+        assert!(view.contains("p99-drain"), "{view}");
+        assert!(view.contains("drained device 1"), "{view}");
+        assert!(render_top(&[], &names, &log).contains("no sealed frames"));
+    }
+
+    #[test]
+    fn frame_totals_fold_tracks_priorities() {
+        let mut agg = FrameAggregator::new(cfg(10.0, 0, 8), 1);
+        agg.record(TelemetryEvent::Ingress { t_ms: 1.0, priority: Priority::High });
+        agg.record(TelemetryEvent::Shed { t_ms: 1.5, priority: Priority::Low });
+        agg.record(TelemetryEvent::Reject { t_ms: 2.0 });
+        agg.record(TelemetryEvent::Completion {
+            t_ms: 3.0,
+            priority: Priority::High,
+            sojourn_ms: 2.0,
+            missed: Some(true),
+            sharded: true,
+            bounces: 2,
+            touches: vec![touch(0, Heat::Hot), touch(0, Heat::Cold)],
+        });
+        agg.seal_all();
+        let t = agg.sealed_totals();
+        assert_eq!(t.arrivals[Priority::High.index()], 1);
+        assert_eq!(t.shed[Priority::Low.index()], 1);
+        assert_eq!(t.rejected, 1);
+        assert_eq!(t.missed[Priority::High.index()], 1);
+        assert_eq!(t.sharded, 1);
+        assert_eq!(t.retries, 2);
+        assert_eq!(t.dispatches(), 2);
+        assert_eq!(t.device_served, vec![2]);
+        assert_eq!(t.sojourn_count, 1);
+    }
+}

@@ -75,6 +75,12 @@ pub struct CoordinatorStats {
     /// engines (PJRT).
     pub fused_dispatches: u64,
     pub reference_dispatches: u64,
+    /// The accelerator's ProgramCache contents at the last stats mirror,
+    /// LRU-first (see [`crate::accel::ProgramCache::topologies`]).  Lets
+    /// fleet observers — and the router's warm-set mirror tests — see
+    /// exactly which topologies a device could replay without a timing
+    /// sim.
+    pub cached_topologies: Vec<Topology>,
 }
 
 impl CoordinatorStats {
@@ -141,6 +147,7 @@ impl Coordinator {
         let paths = self.accel.path_counters();
         self.stats.fused_dispatches = paths.fused;
         self.stats.reference_dispatches = paths.reference;
+        self.stats.cached_topologies = self.accel.programs.topologies();
         let reports = reports?;
         let mut batch_makespan = 0.0f64;
         let mut responses = Vec::with_capacity(batch.len());

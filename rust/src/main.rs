@@ -4,10 +4,12 @@
 use famous::accel::FamousAccelerator;
 use famous::analytical::{LatencyModel, TABLE1};
 use famous::cli::Parser;
-use famous::cluster::loadgen::rate_for_utilization;
+use famous::cluster::loadgen::{mean_service_ms, rate_for_utilization};
+use famous::cluster::telemetry::render_top;
 use famous::cluster::{
-    parse_fleet, ArrivalProcess, Cluster, ClusterConfig, DeviceSpec, LoadGen, LoadGenConfig,
-    QosOutcome, QosPolicy, WorkloadProfile,
+    parse_fleet, ArrivalProcess, Cluster, ClusterConfig, ControlAction, ControlRule, DeviceSpec,
+    LoadGen, LoadGenConfig, QosOutcome, QosPolicy, RuleScope, RuleSignal, TelemetryConfig,
+    WorkloadProfile,
 };
 use famous::config::Topology;
 use famous::coordinator::{
@@ -23,6 +25,7 @@ fn parser() -> Parser {
         .subcommand("run", "run one MHA invocation and print the report")
         .subcommand("serve", "serve a synthetic request stream through the coordinator")
         .subcommand("cluster", "serve a mixed workload across a simulated FPGA fleet")
+        .subcommand("top", "live fleet telemetry dashboard under a seeded QoS load")
         .subcommand("table1", "reproduce Table I (all 12 tests)")
         .subcommand("resources", "print resource estimates / max-heads per device")
         .subcommand("trace", "dump the per-phase cycle trace as JSON")
@@ -37,6 +40,10 @@ fn parser() -> Parser {
         .opt_default("arrivals", "bursty", "cluster --qos: arrival process (poisson | bursty)")
         .opt_default("load", "0.9", "cluster --qos: offered load as a fraction of fleet capacity")
         .opt_default("seed", "7", "cluster --qos: load generator seed")
+        .opt_default("window-ms", "0", "top: telemetry window (0 = 12x mean service time)")
+        .opt_default("derate", "1.0", "top: silent clock derate on the last device (1.0 = healthy)")
+        .opt_default("export", "", "top: write the sealed frame ring as JSONL to this path")
+        .flag("plain", "top: append dashboard repaints instead of clearing the screen")
         .flag("qos", "cluster: QoS serving (loadgen arrivals, EDF+slack routing, SLO report)")
         .flag("sim-datapath", "use the rust int8 datapath instead of PJRT")
         .flag("double-buffer", "enable load/compute overlap in the tile loop")
@@ -287,6 +294,122 @@ fn cmd_cluster_qos(
     Ok(())
 }
 
+/// `famous top`: drive a seeded QoS load through the fleet and render
+/// the telemetry ring as a refreshing operator dashboard (DESIGN.md
+/// §13).  `--derate` silently throttles the last device's fabric clock
+/// so the default drain rule has something to catch; `--export` dumps
+/// the sealed frame ring as JSONL for offline analysis.
+fn cmd_top(args: &famous::cli::Args) -> anyhow::Result<()> {
+    let mut devices = parse_fleet(args.get_or("fleet", "u55c:2,u200:2"))?;
+    let n: usize = args.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(400);
+    let rho = args.get_f64("load").map_err(anyhow::Error::msg)?.unwrap_or(0.9);
+    let seed = args.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(7) as u64;
+    let derate = args.get_f64("derate").map_err(anyhow::Error::msg)?.unwrap_or(1.0);
+    if derate < 1.0 {
+        let last = devices.len() - 1;
+        devices[last] = devices[last].clone().with_silent_derate(derate);
+    }
+    let mix: Vec<(Topology, f64)> = vec![
+        (Topology::new(64, 768, 8, 64), 3.0),
+        (Topology::new(32, 768, 8, 64), 2.0),
+        (Topology::new(64, 512, 8, 64), 1.0),
+    ];
+    let base = mean_service_ms(&devices, &mix);
+    let mut window_ms = args.get_f64("window-ms").map_err(anyhow::Error::msg)?.unwrap_or(0.0);
+    if window_ms <= 0.0 {
+        window_ms = 12.0 * base;
+    }
+    let arrivals = LoadGen::new(LoadGenConfig::bursty_preset(&devices, mix.clone(), rho, seed))
+        .generate_n(n);
+    let mut workload = WorkloadProfile::default();
+    for (t, share) in &mix {
+        workload.push(t.clone(), *share);
+    }
+    let mut cluster = Cluster::start(
+        devices,
+        &workload,
+        ClusterConfig {
+            scheduler: SchedulerConfig {
+                policy: BatchPolicy::EdfWithinWindow,
+                ..SchedulerConfig::default()
+            },
+            qos: QosPolicy::SlackEdf,
+            telemetry: TelemetryConfig {
+                window_ms,
+                grace_windows: 1,
+                ring_capacity: 240,
+            },
+            ..ClusterConfig::default()
+        },
+    )?;
+    // Default operator policy: drain a device whose windowed p99 sojourn
+    // stays pathological, and tighten Normal admission once the fleet
+    // starts shedding (sheds mean Low is already drowning).
+    cluster.add_control_rule(ControlRule {
+        name: "p99-sojourn-drain".to_string(),
+        scope: RuleScope::PerDevice,
+        signal: RuleSignal::SojournP99Ms,
+        threshold: 6.0 * base,
+        for_windows: 3,
+        action: ControlAction::DrainDevice,
+    });
+    cluster.add_control_rule(ControlRule {
+        name: "shed-tightens-normal".to_string(),
+        scope: RuleScope::Fleet,
+        signal: RuleSignal::ShedCount,
+        threshold: 0.0,
+        for_windows: 2,
+        action: ControlAction::SetAdmissionMargin {
+            priority: famous::coordinator::Priority::Normal,
+            margin_ms: 0.0,
+        },
+    });
+    let names = cluster.device_names();
+    let plain = args.flag("plain");
+    println!(
+        "famous top — {} devices, {} arrivals (rho {rho:.2}, seed {seed}), window {:.2} ms{}",
+        names.len(),
+        n,
+        window_ms,
+        if derate < 1.0 { format!(", last device derated to {derate:.2}x") } else { String::new() }
+    );
+    let h = cluster.handle();
+    let (mut served, mut shed) = (0usize, 0usize);
+    let mut painted = 0u64;
+    for (i, a) in arrivals.iter().enumerate() {
+        match h.call_qos(a.materialize(i as u64))? {
+            QosOutcome::Served(_) => served += 1,
+            QosOutcome::Shed(_) => shed += 1,
+        }
+        cluster.pump_control();
+        let snap = cluster.telemetry();
+        if snap.sealed.frames > painted {
+            painted = snap.sealed.frames;
+            if !plain {
+                print!("\x1b[2J\x1b[H");
+            }
+            print!("{}", render_top(&snap.frames, &names, cluster.control_log()));
+        }
+    }
+    cluster.seal_telemetry();
+    cluster.pump_control();
+    let snap = cluster.telemetry();
+    if !plain {
+        print!("\x1b[2J\x1b[H");
+    }
+    print!("{}", render_top(&snap.frames, &names, cluster.control_log()));
+    let export = args.get_or("export", "");
+    if !export.is_empty() {
+        std::fs::write(export, snap.to_jsonl())?;
+        println!("exported {} sealed frames to {export}", snap.frames.len());
+    }
+    let actions = cluster.control_log().len();
+    let fleet = cluster.shutdown();
+    print!("{}", fleet.render());
+    println!("served {served}, shed {shed} of {n}; {actions} control action(s)");
+    Ok(())
+}
+
 fn cmd_table1(args: &famous::cli::Args) -> anyhow::Result<()> {
     let model = LatencyModel::default();
     let rm = ResourceModel::default();
@@ -429,6 +552,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("top") => cmd_top(&args),
         Some("table1") => cmd_table1(&args),
         Some("resources") => cmd_resources(&args),
         Some("info") => cmd_info(&args),

@@ -1,0 +1,247 @@
+//! Tier-2 soak: the streaming telemetry pipeline and the threshold
+//! control plane, end to end (DESIGN.md §13).
+//!
+//! Two scenarios, both on the seeded virtual clock and therefore exactly
+//! reproducible:
+//!
+//! * **Conservation + reproducibility** — a healthy fleet under the
+//!   shared bursty preset, with a telemetry ring small enough to force
+//!   eviction.  Eviction must not lose counts (`sealed == Σ ring +
+//!   evicted`), the sealed totals must agree with the independently
+//!   maintained `FleetStats` roll-up, and the JSONL frame export must be
+//!   byte-identical across two runs of the same seed.
+//!
+//! * **Silent-degradation drain** — one device's fabric clock is derated
+//!   8× *without* touching its advertised latency model, so the router
+//!   keeps believing it and its completions run hot.  A per-device
+//!   p99-sojourn rule must notice the breach within a few windows, fire
+//!   exactly once, drain exactly that device, and lose zero accepted
+//!   requests — with the frame ring and the action log bit-reproducible
+//!   across runs.
+
+use famous::cluster::loadgen::mean_service_ms;
+use famous::cluster::{
+    ActionRecord, Cluster, ClusterConfig, ControlAction, ControlRule, DeviceHealth, DeviceSpec,
+    FleetStats, LoadGen, LoadGenConfig, QosOutcome, RuleScope, RuleSignal, TelemetryConfig,
+    TelemetrySnapshot, WorkloadProfile,
+};
+use famous::config::Topology;
+use famous::coordinator::{BatchPolicy, Priority, SchedulerConfig};
+
+const SOAK_SEED: u64 = 0x7e1e_5c09;
+
+/// Small shapes so hundreds of requests stay fast in debug builds
+/// (same mix as the QoS soak suite).
+fn soak_mix() -> Vec<(Topology, f64)> {
+    vec![
+        (Topology::new(16, 256, 4, 64), 4.0),
+        (Topology::new(32, 256, 4, 64), 2.0),
+        (Topology::new(16, 512, 8, 64), 1.0),
+    ]
+}
+
+struct SoakRun {
+    fleet: FleetStats,
+    snap: TelemetrySnapshot,
+    frames_jsonl: String,
+    actions_jsonl: String,
+    actions: Vec<ActionRecord>,
+    served: u64,
+    shed: u64,
+}
+
+/// Replay `n` bursty arrivals through a fleet with telemetry + rules
+/// installed, pumping the control plane after every call (the cadence an
+/// operator loop would run at).  Returns everything the assertions need.
+fn run_soak(
+    devices: Vec<DeviceSpec>,
+    mix: Vec<(Topology, f64)>,
+    rho: f64,
+    n: usize,
+    telemetry: TelemetryConfig,
+    rules: Vec<ControlRule>,
+) -> SoakRun {
+    let arrivals =
+        LoadGen::new(LoadGenConfig::bursty_preset(&devices, mix.clone(), rho, SOAK_SEED))
+            .generate_n(n);
+    let mut workload = WorkloadProfile::default();
+    for (t, share) in &mix {
+        workload.push(t.clone(), *share);
+    }
+    let scheduler = SchedulerConfig {
+        max_batch: 8,
+        policy: BatchPolicy::EdfWithinWindow,
+        fairness_window: 16,
+    };
+    let mut cluster = Cluster::start(
+        devices,
+        &workload,
+        ClusterConfig { scheduler, telemetry, ..ClusterConfig::qos() },
+    )
+    .expect("cluster boot");
+    for rule in rules {
+        cluster.add_control_rule(rule);
+    }
+    let h = cluster.handle();
+    let (mut served, mut shed) = (0u64, 0u64);
+    let mut actions = Vec::new();
+    for (i, a) in arrivals.iter().enumerate() {
+        match h.call_qos(a.materialize(i as u64)).expect("call_qos") {
+            QosOutcome::Served(_) => served += 1,
+            QosOutcome::Shed(notice) => {
+                assert_eq!(notice.priority, Priority::Low, "router may shed only Low");
+                shed += 1;
+            }
+        }
+        actions.extend(cluster.pump_control());
+    }
+    // End of trace: flush the open partials and evaluate the last frames.
+    cluster.seal_telemetry();
+    actions.extend(cluster.pump_control());
+    let snap = cluster.telemetry();
+    let frames_jsonl = snap.to_jsonl();
+    let actions_jsonl = cluster.control_log_jsonl();
+    SoakRun {
+        fleet: cluster.shutdown(),
+        snap,
+        frames_jsonl,
+        actions_jsonl,
+        actions,
+        served,
+        shed,
+    }
+}
+
+#[test]
+fn sealed_frames_conserve_and_reproduce() {
+    let mk = || {
+        let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+        let base = mean_service_ms(&devices, &soak_mix());
+        run_soak(
+            devices,
+            soak_mix(),
+            0.7,
+            300,
+            // Ring far smaller than the frame count: eviction must fold,
+            // never drop.
+            TelemetryConfig { window_ms: 6.0 * base, grace_windows: 1, ring_capacity: 8 },
+            Vec::new(),
+        )
+    };
+    let run = mk();
+
+    // The ring is bounded and eviction actually happened.
+    assert_eq!(run.snap.frames.len(), 8, "ring holds exactly its capacity");
+    assert!(
+        run.snap.sealed.frames > 8,
+        "trace too short to exercise eviction: {} frames sealed",
+        run.snap.sealed.frames
+    );
+    assert!(run.snap.evicted.frames > 0);
+
+    // Conservation: everything sealed is still accounted for, either in
+    // the ring or in the eviction fold.
+    let mut refold = run.snap.evicted.clone();
+    for f in &run.snap.frames {
+        refold.fold(f);
+    }
+    assert_eq!(refold, run.snap.sealed, "sealed != Σ ring + evicted");
+
+    // The frame ledger agrees with the router/fleet roll-up that was
+    // maintained independently of the telemetry path.
+    let sealed = &run.snap.sealed;
+    let totals = &run.fleet.totals;
+    assert_eq!(sealed.arrivals_total(), 300, "every arrival has an ingress event");
+    assert_eq!(run.served + run.shed, 300, "no request silently dropped");
+    assert_eq!(sealed.completed, run.served);
+    assert_eq!(sealed.completed, totals.completed);
+    assert_eq!(sealed.met, totals.slo.met);
+    assert_eq!(sealed.missed, totals.slo.missed);
+    assert_eq!(sealed.shed, totals.slo.shed);
+    assert_eq!(sealed.shed_total(), run.shed);
+    assert_eq!(sealed.retries, totals.retries);
+    assert_eq!(sealed.sharded, totals.sharded);
+    assert_eq!(sealed.warm, totals.warm_hits);
+    assert_eq!(sealed.dispatches(), run.fleet.served(), "hot+warm+cold == device invocations");
+    assert_eq!(sealed.device_served.iter().sum::<u64>(), run.fleet.served());
+    assert_eq!(run.snap.late_events, 0, "sequential dispatch never produces stragglers");
+
+    // Byte-for-byte reproducibility of the export (the criterion the
+    // JSONL artifact is defined by).
+    let again = mk();
+    assert_eq!(run.frames_jsonl, again.frames_jsonl, "frame export not reproducible");
+    assert!(run.actions_jsonl.is_empty(), "no rules installed, no actions");
+    assert!(again.actions_jsonl.is_empty());
+}
+
+#[test]
+fn control_plane_drains_silently_degraded_device() {
+    let mix = vec![(Topology::new(16, 256, 4, 64), 1.0)];
+    let mk = || {
+        // Device 0 runs at 1/8 of its advertised clock — the advertised
+        // model (and hence routing estimates and admission) is untouched,
+        // so only completion telemetry can reveal the problem.  Device 0
+        // is also the placement primary for the single topology, which
+        // keeps believed-feasible traffic flowing to it: every serve
+        // completes at >= 8x the modeled service time, a sustained
+        // per-window p99 breach.
+        let mut devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+        devices[0] = DeviceSpec::u55c(0).with_silent_derate(0.125);
+        let base = mean_service_ms(&devices, &mix);
+        let rule = ControlRule {
+            name: "p99-sojourn-drain".to_string(),
+            scope: RuleScope::PerDevice,
+            signal: RuleSignal::SojournP99Ms,
+            // Between the healthy fleet's worst bursty sojourns and the
+            // degraded device's 8x-service floor.
+            threshold: 7.0 * base,
+            for_windows: 3,
+            action: ControlAction::DrainDevice,
+        };
+        run_soak(
+            devices,
+            mix.clone(),
+            0.45,
+            400,
+            TelemetryConfig { window_ms: 12.0 * base, grace_windows: 1, ring_capacity: 256 },
+            vec![rule],
+        )
+    };
+    let run = mk();
+
+    // Exactly one action: the degraded device drained, nobody else.
+    assert_eq!(run.actions.len(), 1, "expected one drain, got {:?}", run.actions);
+    let act = &run.actions[0];
+    assert_eq!(act.rule, "p99-sojourn-drain");
+    assert_eq!(act.device, Some(0), "rule must target the degraded device");
+    assert!(matches!(act.action, ControlAction::DrainDevice));
+    assert_eq!(act.outcome, "drained device 0");
+    // Fires within a handful of windows of the breach onset, not at the
+    // end of the trace.
+    assert!(act.frame <= 10, "drain fired late, at frame {}", act.frame);
+
+    // The drain went through the cluster hook: device 0 reports Stopped
+    // with its pre-drain stats; the rest of the fleet served on.
+    assert_eq!(run.fleet.devices[0].health, DeviceHealth::Stopped);
+    assert!(run.fleet.devices[0].stats.served > 0, "device 0 served before the drain");
+    for d in &run.fleet.devices[1..] {
+        assert_eq!(d.health, DeviceHealth::Live);
+        assert!(d.stats.served > 0);
+    }
+
+    // Zero accepted requests dropped across the drain: every arrival is
+    // either served or explicitly shed.
+    assert_eq!(run.served + run.shed, 400);
+    assert_eq!(run.snap.sealed.arrivals_total(), 400);
+    assert_eq!(run.snap.sealed.completed, run.served);
+    // The degradation was visible as deadline misses before the drain.
+    assert!(run.snap.sealed.missed_total() > 0, "derated completions must miss deadlines");
+    assert_eq!(run.snap.late_events, 0);
+
+    // Frame ring and action log are bit-reproducible across runs.
+    let again = mk();
+    assert_eq!(run.frames_jsonl, again.frames_jsonl, "frame export not reproducible");
+    assert_eq!(run.actions_jsonl, again.actions_jsonl, "action log not reproducible");
+    assert!(!run.actions_jsonl.is_empty());
+    assert_eq!(run.actions_jsonl.lines().count(), 1);
+}

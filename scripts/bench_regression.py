@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the execute-path bench (CI).
+
+Compares the BENCH_exec.json just produced by `cargo bench --bench exec`
+against the artifact uploaded by the previous successful CI run, and
+fails when any wall-time series regressed by more than --max-regress
+(default 20%).  Series are matched by their shape key (seq_len, d_model,
+heads, lanes); series present on only one side are reported and skipped,
+so adding or removing a sweep point never breaks the gate.
+
+The previous artifact is optional by design: on the first run after the
+gate lands (or when artifact retention expired) there is nothing to
+compare against, and the gate passes with a notice instead of failing —
+a missing baseline is not a regression.
+
+Usage: bench_regression.py PREVIOUS CURRENT [--max-regress 0.20]
+"""
+
+import argparse
+import json
+import sys
+
+# section -> wall-time fields gated within it.  Non-time fields
+# (speedups, workspace bytes, bit_identical) are asserted by the bench
+# itself; this gate only watches absolute wall time drift.
+WALL_FIELDS = {
+    "results": ("serial_alloc_ms", "serial_warm_ms", "head_parallel_ms"),
+    "long_sl": ("reference_ms", "fused_ms"),
+}
+KEY_FIELDS = ("seq_len", "d_model", "heads", "lanes")
+
+
+def series_key(entry):
+    return tuple(entry.get(k) for k in KEY_FIELDS)
+
+
+def key_label(key):
+    return "/".join(f"{name}={v}" for name, v in zip(KEY_FIELDS, key) if v is not None)
+
+
+def load(path, required):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        if required:
+            print(f"error: {path} not found", file=sys.stderr)
+            sys.exit(2)
+        return None
+    except json.JSONDecodeError as e:
+        if required:
+            print(f"error: {path} is not valid JSON: {e}", file=sys.stderr)
+            sys.exit(2)
+        print(f"notice: previous baseline {path} unreadable ({e}); skipping gate")
+        return None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("previous", help="baseline BENCH_exec.json (prior CI artifact)")
+    ap.add_argument("current", help="freshly measured BENCH_exec.json")
+    ap.add_argument(
+        "--max-regress",
+        type=float,
+        default=0.20,
+        help="fail when new/old - 1 exceeds this on any series (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    prev = load(args.previous, required=False)
+    if prev is None:
+        print(f"notice: no previous baseline at {args.previous}; gate passes vacuously")
+        return 0
+    cur = load(args.current, required=True)
+
+    failures = []
+    compared = 0
+    for section, fields in WALL_FIELDS.items():
+        prev_by_key = {series_key(e): e for e in prev.get(section, [])}
+        for entry in cur.get(section, []):
+            key = series_key(entry)
+            base = prev_by_key.pop(key, None)
+            if base is None:
+                print(f"notice: {section} [{key_label(key)}] is new; no baseline")
+                continue
+            for field in fields:
+                if field not in entry or field not in base:
+                    continue
+                old, new = float(base[field]), float(entry[field])
+                if old <= 0.0:
+                    continue
+                compared += 1
+                delta = new / old - 1.0
+                line = (
+                    f"{section} [{key_label(key)}] {field}: "
+                    f"{old:.3f} -> {new:.3f} ms ({delta:+.1%})"
+                )
+                if delta > args.max_regress:
+                    failures.append(line)
+                    print(f"REGRESSION {line}")
+                else:
+                    print(f"ok         {line}")
+        for key in prev_by_key:
+            print(f"notice: {section} [{key_label(key)}] dropped from the sweep")
+
+    if not compared:
+        print("notice: no overlapping series between baseline and current; gate passes")
+        return 0
+    if failures:
+        print(
+            f"\n{len(failures)} series regressed beyond "
+            f"{args.max_regress:.0%} wall time:",
+            file=sys.stderr,
+        )
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"\nall {compared} wall-time series within {args.max_regress:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
