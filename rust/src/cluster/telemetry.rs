@@ -229,6 +229,12 @@ pub struct TelemetryFrame {
     pub cold: u64,
     pub fused: u64,
     pub reference: u64,
+    /// Kernel tier the process served this window with (DESIGN.md §14).
+    /// The tier is resolved once per process
+    /// ([`crate::sim::KernelTier::effective`] — env override, else host
+    /// detection) and every backend runs it, so one label per frame is
+    /// exact attribution, not a sample.
+    pub kernel_tier: &'static str,
     /// Straggler events that arrived after their window sealed; counted
     /// here (the first frame sealed after the straggler), never silent.
     pub late_events: u64,
@@ -288,6 +294,7 @@ impl TelemetryFrame {
             ("cold", Json::Num(self.cold as f64)),
             ("fused", Json::Num(self.fused as f64)),
             ("reference", Json::Num(self.reference as f64)),
+            ("kernel_tier", Json::Str(self.kernel_tier.to_string())),
             ("late_events", Json::Num(self.late_events as f64)),
             ("devices", Json::Arr(self.devices.iter().map(|d| d.to_json()).collect())),
         ])
@@ -536,6 +543,7 @@ impl Partial {
             cold: self.cold,
             fused: self.fused,
             reference: self.reference,
+            kernel_tier: crate::sim::KernelTier::effective().name(),
             late_events,
             devices,
         }
@@ -1177,6 +1185,8 @@ mod tests {
         assert_ne!(a, build(1.5));
         assert!(a.contains("\"warm\":1"), "{a}");
         assert!(a.contains("backlog_lead_ms"), "{a}");
+        let tier = format!("\"kernel_tier\":\"{}\"", crate::sim::KernelTier::effective().name());
+        assert!(a.contains(&tier), "{a}");
         assert_eq!(a.lines().count(), 1);
     }
 

@@ -13,14 +13,23 @@
 //!   overflow detection.
 //! * [`matmul_i32`] / [`FxMatrix`] — the functional GEMM used by the
 //!   simulator's datapath mode.
+//! * [`simd`] / [`KernelTier`] — explicit-SIMD implementations of the hot
+//!   kernels behind runtime AVX2 detection, including the true
+//!   int8×int8→i32 GEMM (no i16 widening pass); the scalar kernels above
+//!   stay the bit-identity oracle (DESIGN.md §14).
 
 mod mac;
 mod matrix;
+pub mod simd;
 
 pub use mac::Dsp48Mac;
 pub use matrix::{
     matmul_i32, matmul_i32_fast, matmul_i32_tiled, matmul_i32_widened, matmul_i32_widened_into,
     widen_i16, widen_i16_into, FxMatrix,
+};
+pub use simd::{
+    matmul_i32_i8_into, matmul_i32_i8_scalar_into, matmul_i32_widened_simd_into, KernelTier,
+    TIER_ENV,
 };
 
 /// A fixed-point value: `value = mantissa * 2^-frac_bits`.

@@ -1,0 +1,645 @@
+//! Explicit-SIMD kernel tier for the hot inner kernels (DESIGN.md §14).
+//!
+//! The scalar kernels in [`super::matrix`] and `sim::modules` stay
+//! verbatim as the bit-identity oracle; this module adds `core::arch`
+//! x86_64 implementations behind runtime feature detection
+//! (`is_x86_feature_detected!("avx2")`) plus a true int8×int8→i32 GEMM
+//! that skips the i16 widening pass entirely — the software datapath
+//! finally matching the paper's 8-bit fixed-point story instead of
+//! widening every operand first.
+//!
+//! The numerics contract, pinned by tests and DESIGN.md §14:
+//!
+//! * **Integer kernels are bit-identical across every tier.**  Integer
+//!   addition is associative and commutative, `_mm256_madd_epi16` forms
+//!   its products at 32 bits (i16×i16 cannot overflow an i32 pair-sum),
+//!   and the i8 operands sign-extend exactly — so any lane order gives
+//!   the same sums.  Property-tested over random shapes, tail sizes and
+//!   pointer alignments in `tests/properties.rs`.
+//! * **The f32 axpy/scale kernels are bit-identical too**: they
+//!   vectorize across *independent* output accumulators with exactly
+//!   one multiply and one add (never FMA) per element — the same
+//!   rounding sequence as the scalar loop, in lanes.
+//! * **The f32 dot kernel is NOT bit-identical** — 8-lane partial sums
+//!   reassociate the reduction — but its order is pinned: lane-strided
+//!   partials reduced by the fixed tree in [`hsum`], then the ordered
+//!   scalar tail.  Deterministic for a given length, like the scalar
+//!   4-wide chains it replaces.
+//!
+//! Tier selection ([`KernelTier`]) is resolved once per process
+//! ([`KernelTier::effective`]) so batched and sequential serving run the
+//! same kernels; `FAMOUS_KERNEL_TIER` forces a tier (clamped to what the
+//! host supports — the scalar fallback keeps non-AVX2 hosts green).
+
+use std::sync::OnceLock;
+
+use super::matrix::matmul_i32_widened_into;
+
+/// Environment variable forcing the effective tier (`scalar`, `simd`,
+/// `simd-int8`).  Read once; unknown values fall back to detection.
+pub const TIER_ENV: &str = "FAMOUS_KERNEL_TIER";
+
+/// Which implementation of the hot inner kernels a prepared model runs.
+///
+/// Ordered by ambition: `Scalar` is the verbatim oracle, `Simd` swaps in
+/// the AVX2 kernels over the existing widened-i16 operands, `SimdInt8`
+/// additionally feeds the projections straight from int8 (no widening
+/// pass).  SIMD tiers silently clamp to `Scalar` on hosts without AVX2.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelTier {
+    /// The scalar reference kernels — always available, bit-identity
+    /// oracle for the integer tiers.
+    #[default]
+    Scalar,
+    /// AVX2 kernels over the same widened-i16 operands.
+    Simd,
+    /// AVX2 kernels plus the int8×int8→i32 projection GEMM (widening-
+    /// multiply pairs; the i16 copy of `x` and the weights is skipped).
+    SimdInt8,
+}
+
+impl KernelTier {
+    pub const ALL: [KernelTier; 3] = [KernelTier::Scalar, KernelTier::Simd, KernelTier::SimdInt8];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Simd => "simd",
+            KernelTier::SimdInt8 => "simd-int8",
+        }
+    }
+
+    /// Parse a tier name (the `FAMOUS_KERNEL_TIER` syntax).
+    pub fn parse(s: &str) -> Option<KernelTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelTier::Scalar),
+            "simd" | "avx2" => Some(KernelTier::Simd),
+            "simd-int8" | "simd_int8" | "int8" => Some(KernelTier::SimdInt8),
+            _ => None,
+        }
+    }
+
+    /// Whether this tier's kernels can run on the current host.
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelTier::Scalar => true,
+            KernelTier::Simd | KernelTier::SimdInt8 => avx2_available(),
+        }
+    }
+
+    /// Clamp to an available tier: unavailable SIMD tiers fall back to
+    /// `Scalar` (the automatic non-AVX2 fallback — attribution stays
+    /// honest because callers store the clamped tier).
+    pub fn clamp_available(self) -> KernelTier {
+        if self.is_available() {
+            self
+        } else {
+            KernelTier::Scalar
+        }
+    }
+
+    /// Best tier the host supports.
+    pub fn detect() -> KernelTier {
+        if avx2_available() {
+            KernelTier::SimdInt8
+        } else {
+            KernelTier::Scalar
+        }
+    }
+
+    /// Process-wide effective tier for `TierPolicy::Auto`: the
+    /// [`TIER_ENV`] override when set (clamped to availability), else
+    /// [`KernelTier::detect`].  Cached on first use so every request in
+    /// a process — batched, head-parallel or sequential — runs the same
+    /// kernels and serving stays deterministic.
+    pub fn effective() -> KernelTier {
+        static EFFECTIVE: OnceLock<KernelTier> = OnceLock::new();
+        *EFFECTIVE.get_or_init(|| match std::env::var(TIER_ENV) {
+            Ok(v) => KernelTier::parse(&v).unwrap_or_else(KernelTier::detect).clamp_available(),
+            Err(_) => KernelTier::detect(),
+        })
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Runtime AVX2 check (false on non-x86_64 targets — the scalar tier is
+/// the only one there).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+// ---------------------------------------------------------------- int8 GEMM
+
+/// Scalar int8×int8→i32 GEMM — the bit-identity oracle for the int8
+/// datapath: `a8` (m×k) row-major against `b8` (n×k) row-major,
+/// computing `a @ b.T` exactly like [`super::matmul_i32`], with no i16
+/// widening pass and no intermediate rounding.
+pub fn matmul_i32_i8_scalar_into(
+    a8: &[i8],
+    b8: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(a8.len(), m * k, "a8 shape mismatch");
+    assert_eq!(b8.len(), n * k, "b8 shape mismatch");
+    assert_eq!(out.len(), m * n, "out shape mismatch");
+    for i in 0..m {
+        let arow = &a8[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b8[j * k..(j + 1) * k];
+            *o = arow.iter().zip(brow).map(|(&x, &y)| x as i32 * y as i32).sum();
+        }
+    }
+}
+
+/// True int8×int8→i32 GEMM (the `SimdInt8` projection kernel): AVX2
+/// widening-multiply pairs when the host has them, the scalar oracle
+/// otherwise — bit-identical either way (integer addition is order-
+/// free).  Widening pairs (`_mm256_cvtepi8_epi16` + `_mm256_madd_epi16`)
+/// are used instead of a `maddubs` signed/unsigned split: `maddubs`
+/// saturates its i16 pair-sums, which would break exactness for signed
+/// operands, while the pairwise madd forms 32-bit products and cannot
+/// overflow.
+pub fn matmul_i32_i8_into(a8: &[i8], b8: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime just above; all
+        // memory access inside is bounds-guarded slice access.
+        unsafe { matmul_i32_i8_avx2(a8, b8, m, k, n, out) };
+        return;
+    }
+    matmul_i32_i8_scalar_into(a8, b8, m, k, n, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_i32_i8_avx2(a8: &[i8], b8: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    use std::arch::x86_64::*;
+    assert_eq!(a8.len(), m * k, "a8 shape mismatch");
+    assert_eq!(b8.len(), n * k, "b8 shape mismatch");
+    assert_eq!(out.len(), m * n, "out shape mismatch");
+    for i in 0..m {
+        let arow = &a8[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        // Columns blocked four wide like the scalar oracle: one widening
+        // load of the `a` vector feeds four independent madd chains.
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b8[j * k..(j + 1) * k];
+            let b1 = &b8[(j + 1) * k..(j + 2) * k];
+            let b2 = &b8[(j + 2) * k..(j + 3) * k];
+            let b3 = &b8[(j + 3) * k..(j + 4) * k];
+            let mut s0 = _mm256_setzero_si256();
+            let mut s1 = _mm256_setzero_si256();
+            let mut s2 = _mm256_setzero_si256();
+            let mut s3 = _mm256_setzero_si256();
+            let mut l = 0;
+            while l + 16 <= k {
+                // Sign-extending 16×i8 → 16×i16 loads, then the pairwise
+                // i16×i16→i32 madd: products form at 32 bits, so no
+                // intermediate can overflow and lane order is free.
+                let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(arow.as_ptr().add(l).cast()));
+                let v0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b0.as_ptr().add(l).cast()));
+                let v1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b1.as_ptr().add(l).cast()));
+                let v2 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b2.as_ptr().add(l).cast()));
+                let v3 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b3.as_ptr().add(l).cast()));
+                s0 = _mm256_add_epi32(s0, _mm256_madd_epi16(av, v0));
+                s1 = _mm256_add_epi32(s1, _mm256_madd_epi16(av, v1));
+                s2 = _mm256_add_epi32(s2, _mm256_madd_epi16(av, v2));
+                s3 = _mm256_add_epi32(s3, _mm256_madd_epi16(av, v3));
+                l += 16;
+            }
+            let mut r0 = hsum_epi32(s0);
+            let mut r1 = hsum_epi32(s1);
+            let mut r2 = hsum_epi32(s2);
+            let mut r3 = hsum_epi32(s3);
+            while l < k {
+                let x = arow[l] as i32;
+                r0 += x * b0[l] as i32;
+                r1 += x * b1[l] as i32;
+                r2 += x * b2[l] as i32;
+                r3 += x * b3[l] as i32;
+                l += 1;
+            }
+            orow[j] = r0;
+            orow[j + 1] = r1;
+            orow[j + 2] = r2;
+            orow[j + 3] = r3;
+            j += 4;
+        }
+        while j < n {
+            let brow = &b8[j * k..(j + 1) * k];
+            let mut acc = _mm256_setzero_si256();
+            let mut l = 0;
+            while l + 16 <= k {
+                let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(arow.as_ptr().add(l).cast()));
+                let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(brow.as_ptr().add(l).cast()));
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+                l += 16;
+            }
+            let mut sum = hsum_epi32(acc);
+            while l < k {
+                sum += arow[l] as i32 * brow[l] as i32;
+                l += 1;
+            }
+            orow[j] = sum;
+            j += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------- widened GEMM
+
+/// AVX2 tier of [`matmul_i32_widened_into`] — bit-identical to the
+/// scalar 4-wide blocked kernel (integer sums), falling back to it on
+/// hosts without AVX2.
+pub fn matmul_i32_widened_simd_into(
+    a16: &[i16],
+    b16: &[i16],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        unsafe { matmul_i32_widened_avx2(a16, b16, m, k, n, out) };
+        return;
+    }
+    matmul_i32_widened_into(a16, b16, m, k, n, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_i32_widened_avx2(
+    a16: &[i16],
+    b16: &[i16],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    assert_eq!(a16.len(), m * k, "a16 shape mismatch");
+    assert_eq!(b16.len(), n * k, "b16 shape mismatch");
+    assert_eq!(out.len(), m * n, "out shape mismatch");
+    for i in 0..m {
+        let arow = &a16[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        // Columns blocked four wide like the scalar oracle: one load of
+        // the `a` vector feeds four independent madd chains.
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b16[j * k..(j + 1) * k];
+            let b1 = &b16[(j + 1) * k..(j + 2) * k];
+            let b2 = &b16[(j + 2) * k..(j + 3) * k];
+            let b3 = &b16[(j + 3) * k..(j + 4) * k];
+            let mut s0 = _mm256_setzero_si256();
+            let mut s1 = _mm256_setzero_si256();
+            let mut s2 = _mm256_setzero_si256();
+            let mut s3 = _mm256_setzero_si256();
+            let mut l = 0;
+            while l + 16 <= k {
+                let av = _mm256_loadu_si256(arow.as_ptr().add(l).cast());
+                let v0 = _mm256_loadu_si256(b0.as_ptr().add(l).cast());
+                let v1 = _mm256_loadu_si256(b1.as_ptr().add(l).cast());
+                let v2 = _mm256_loadu_si256(b2.as_ptr().add(l).cast());
+                let v3 = _mm256_loadu_si256(b3.as_ptr().add(l).cast());
+                s0 = _mm256_add_epi32(s0, _mm256_madd_epi16(av, v0));
+                s1 = _mm256_add_epi32(s1, _mm256_madd_epi16(av, v1));
+                s2 = _mm256_add_epi32(s2, _mm256_madd_epi16(av, v2));
+                s3 = _mm256_add_epi32(s3, _mm256_madd_epi16(av, v3));
+                l += 16;
+            }
+            let mut r0 = hsum_epi32(s0);
+            let mut r1 = hsum_epi32(s1);
+            let mut r2 = hsum_epi32(s2);
+            let mut r3 = hsum_epi32(s3);
+            while l < k {
+                let x = arow[l] as i32;
+                r0 += x * b0[l] as i32;
+                r1 += x * b1[l] as i32;
+                r2 += x * b2[l] as i32;
+                r3 += x * b3[l] as i32;
+                l += 1;
+            }
+            orow[j] = r0;
+            orow[j + 1] = r1;
+            orow[j + 2] = r2;
+            orow[j + 3] = r3;
+            j += 4;
+        }
+        while j < n {
+            let brow = &b16[j * k..(j + 1) * k];
+            let mut acc = _mm256_setzero_si256();
+            let mut l = 0;
+            while l + 16 <= k {
+                let av = _mm256_loadu_si256(arow.as_ptr().add(l).cast());
+                let bv = _mm256_loadu_si256(brow.as_ptr().add(l).cast());
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+                l += 16;
+            }
+            let mut sum = hsum_epi32(acc);
+            while l < k {
+                sum += arow[l] as i32 * brow[l] as i32;
+                l += 1;
+            }
+            orow[j] = sum;
+            j += 1;
+        }
+    }
+}
+
+// ------------------------------------------------------------- f32 kernels
+
+/// Dot product with the tier's pinned order.  `Scalar` delegates to the
+/// caller's own loop (callers keep their scalar code verbatim and only
+/// route here for SIMD tiers); the AVX2 tier reduces 8 lane-strided
+/// partial sums with the fixed `hsum_ps` tree, then the ordered scalar
+/// tail — deterministic, documented in DESIGN.md §14, but not bit-equal
+/// to a sequential scalar sum.
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        return unsafe { dot_f32_avx2(a, b) };
+    }
+    dot_f32_scalar(a, b)
+}
+
+/// Sequential-order scalar dot (the non-AVX2 fallback for [`dot_f32`]).
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let len = a.len().min(b.len());
+    let mut acc = _mm256_setzero_ps();
+    let mut l = 0;
+    while l + 8 <= len {
+        let av = _mm256_loadu_ps(a.as_ptr().add(l));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(l));
+        // mul then add, never FMA: one rounding per op, the pinned order.
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+        l += 8;
+    }
+    let mut sum = hsum_ps(acc);
+    while l < len {
+        sum += a[l] * b[l];
+        l += 1;
+    }
+    sum
+}
+
+/// `o[j] += w * v[j]` over independent output accumulators.  Exactly one
+/// multiply and one add per element in every tier (no FMA, no
+/// reordering across `j`), so the AVX2 tier is bit-identical to the
+/// scalar loop — the rescaled-axpy contract `sim::fused` relies on.
+pub fn axpy_f32(tier: KernelTier, w: f32, v: &[f32], o: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if tier != KernelTier::Scalar && avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        unsafe { axpy_f32_avx2(w, v, o) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = tier;
+    for (oo, &vv) in o.iter_mut().zip(v) {
+        *oo += w * vv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f32_avx2(w: f32, v: &[f32], o: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let len = o.len().min(v.len());
+    let wv = _mm256_set1_ps(w);
+    let mut l = 0;
+    while l + 8 <= len {
+        let vv = _mm256_loadu_ps(v.as_ptr().add(l));
+        let ov = _mm256_loadu_ps(o.as_ptr().add(l));
+        _mm256_storeu_ps(o.as_mut_ptr().add(l), _mm256_add_ps(ov, _mm256_mul_ps(wv, vv)));
+        l += 8;
+    }
+    while l < len {
+        o[l] += w * v[l];
+        l += 1;
+    }
+}
+
+/// `o[j] *= alpha` element-wise — one multiply per element in every
+/// tier, bit-identical across tiers (the online-softmax rescale and the
+/// final 1/l normalization in `sim::fused`).
+pub fn scale_f32(tier: KernelTier, alpha: f32, o: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if tier != KernelTier::Scalar && avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        unsafe { scale_f32_avx2(alpha, o) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = tier;
+    for oo in o.iter_mut() {
+        *oo *= alpha;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_f32_avx2(alpha: f32, o: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let av = _mm256_set1_ps(alpha);
+    let mut l = 0;
+    while l + 8 <= o.len() {
+        let ov = _mm256_loadu_ps(o.as_ptr().add(l));
+        _mm256_storeu_ps(o.as_mut_ptr().add(l), _mm256_mul_ps(ov, av));
+        l += 8;
+    }
+    while l < o.len() {
+        o[l] *= alpha;
+        l += 1;
+    }
+}
+
+// --------------------------------------------------------- fixed-tree sums
+
+/// Fixed-tree horizontal sum of 8 i32 lanes: (low ½ + high ½), then
+/// (pairs), then (adjacent) — the integer tree order is irrelevant to
+/// the result (exact arithmetic) but kept explicit for symmetry with
+/// [`hsum_ps`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: std::arch::x86_64::__m256i) -> i32 {
+    use std::arch::x86_64::*;
+    let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01_00_11_10>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+    _mm_cvtsi128_si32(s)
+}
+
+/// Fixed-tree horizontal sum of 8 f32 lanes — THE pinned reduction order
+/// of the SIMD dot tier (DESIGN.md §14): lanes (i, i+4) first, then
+/// (i, i+2), then (0, 1).  Any change here changes f32 results and must
+/// be treated as a numerics change, not a refactor.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_ps(v: std::arch::x86_64::__m256) -> f32 {
+    use std::arch::x86_64::*;
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<0b00_00_00_01>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{matmul_i32, widen_i16, FxMatrix};
+    use crate::rng::XorShift64;
+
+    fn rand_mat(seed: u64, rows: usize, cols: usize) -> FxMatrix {
+        let mut rng = XorShift64::new(seed);
+        let data = (0..rows * cols).map(|_| rng.range_i64(-128, 127) as i8).collect();
+        FxMatrix { rows, cols, data }
+    }
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for tier in KernelTier::ALL {
+            assert_eq!(KernelTier::parse(tier.name()), Some(tier));
+            assert_eq!(format!("{tier}"), tier.name());
+        }
+        assert_eq!(KernelTier::parse("AVX2"), Some(KernelTier::Simd));
+        assert_eq!(KernelTier::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn detection_is_consistent() {
+        // detect() must itself be available, effective() must be an
+        // available tier, and scalar is always available.
+        assert!(KernelTier::detect().is_available());
+        assert!(KernelTier::effective().is_available());
+        assert!(KernelTier::Scalar.is_available());
+        assert_eq!(KernelTier::Scalar.clamp_available(), KernelTier::Scalar);
+        if !avx2_available() {
+            assert_eq!(KernelTier::SimdInt8.clamp_available(), KernelTier::Scalar);
+        }
+        // The env override, when present and parseable, wins (the CI
+        // kernel-tier matrix relies on this).
+        if let Ok(v) = std::env::var(TIER_ENV) {
+            if let Some(want) = KernelTier::parse(&v) {
+                assert_eq!(KernelTier::effective(), want.clamp_available());
+            }
+        }
+    }
+
+    #[test]
+    fn int8_gemm_matches_reference_including_tails() {
+        // k = 37 exercises two full 16-lane blocks + a 5-wide tail;
+        // k = 16 exactly one block; k = 7 tail-only.
+        for (m, k, n) in [(5, 37, 6), (3, 16, 4), (2, 7, 9), (1, 1, 1)] {
+            let a = rand_mat(100 + k as u64, m, k);
+            let b = rand_mat(200 + k as u64, n, k);
+            let want = matmul_i32(&a, &b);
+            let mut got = vec![0i32; m * n];
+            matmul_i32_i8_scalar_into(&a.data, &b.data, m, k, n, &mut got);
+            assert_eq!(got, want, "scalar i8 oracle m={m} k={k} n={n}");
+            got.fill(0);
+            matmul_i32_i8_into(&a.data, &b.data, m, k, n, &mut got);
+            assert_eq!(got, want, "dispatched i8 gemm m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn int8_gemm_saturation_extremes() {
+        // All-rails operands: the largest-magnitude products the int8
+        // datapath can form ((-128)² = 16384), long reduction — checks
+        // accumulator headroom, not just random values.
+        let k = 768;
+        let a = FxMatrix { rows: 1, cols: k, data: vec![-128; k] };
+        let b = FxMatrix { rows: 1, cols: k, data: vec![-128; k] };
+        let mut got = vec![0i32; 1];
+        matmul_i32_i8_into(&a.data, &b.data, 1, k, 1, &mut got);
+        assert_eq!(got[0], 16384 * k as i32);
+        assert_eq!(got, matmul_i32(&a, &b));
+    }
+
+    #[test]
+    fn widened_simd_gemm_matches_scalar_blocked() {
+        for (m, k, n) in [(4, 33, 7), (6, 64, 12), (1, 15, 3)] {
+            let a = rand_mat(300 + k as u64, m, k);
+            let b = rand_mat(400 + k as u64, n, k);
+            let (a16, b16) = (widen_i16(&a.data), widen_i16(&b.data));
+            let mut want = vec![0i32; m * n];
+            matmul_i32_widened_into(&a16, &b16, m, k, n, &mut want);
+            let mut got = vec![0i32; m * n];
+            matmul_i32_widened_simd_into(&a16, &b16, m, k, n, &mut got);
+            assert_eq!(got, want, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_and_scale_bit_identical_across_tiers() {
+        let mut rng = XorShift64::new(9);
+        for len in [1usize, 7, 8, 9, 16, 31, 64] {
+            let v: Vec<f32> =
+                (0..len).map(|_| rng.range_i64(-1000, 1000) as f32 / 321.0).collect();
+            let base: Vec<f32> =
+                (0..len).map(|_| rng.range_i64(-1000, 1000) as f32 / 123.0).collect();
+            let w = 0.737f32;
+            for tier in [KernelTier::Simd, KernelTier::SimdInt8] {
+                let mut scalar = base.clone();
+                axpy_f32(KernelTier::Scalar, w, &v, &mut scalar);
+                let mut simd = base.clone();
+                axpy_f32(tier, w, &v, &mut simd);
+                assert_eq!(
+                    scalar.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    simd.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "axpy len={len} tier={tier}"
+                );
+                scale_f32(KernelTier::Scalar, 0.423, &mut scalar);
+                scale_f32(tier, 0.423, &mut simd);
+                assert_eq!(
+                    scalar.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    simd.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "scale len={len} tier={tier}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dot_close_to_scalar_and_deterministic() {
+        let mut rng = XorShift64::new(17);
+        for len in [1usize, 5, 8, 13, 64, 96, 100] {
+            let a: Vec<f32> = (0..len).map(|_| rng.range_i64(-64, 64) as f32 / 64.0).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.range_i64(-64, 64) as f32 / 64.0).collect();
+            let scalar = dot_f32_scalar(&a, &b);
+            let simd = dot_f32(&a, &b);
+            let tol = 8.0 * len as f32 * f32::EPSILON * scalar.abs().max(1.0);
+            assert!((scalar - simd).abs() <= tol, "len={len}: {scalar} vs {simd}");
+            // Pinned order: repeated evaluation is bit-stable.
+            assert_eq!(simd.to_bits(), dot_f32(&a, &b).to_bits(), "len={len}");
+        }
+    }
+}

@@ -19,27 +19,38 @@ pub use manifest::{ArtifactEntry, Manifest};
 
 use crate::config::Topology;
 use crate::exec::{PoolHandle, ThreadPool};
-use crate::sim::{ExecPath, PreparedWeights, Workspace};
+use crate::sim::{ExecPath, KernelTier, PreparedWeights, Workspace};
 use crate::testdata::MhaInputs;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-/// Dispatch attribution per attention datapath (DESIGN.md §12): how
-/// many requests a backend executed on the fused tile-streaming path vs
-/// the materializing reference path.  Mirrored into the accelerator and
-/// `CoordinatorStats` so fleet observers can see which datapath served
-/// their traffic.
+/// Dispatch attribution per attention datapath (DESIGN.md §12) and per
+/// kernel tier (DESIGN.md §14): how many requests a backend executed on
+/// the fused tile-streaming path vs the materializing reference path,
+/// and which kernel tier (scalar oracle, AVX2, AVX2+int8) ran them.
+/// Mirrored into the accelerator and `CoordinatorStats` so fleet
+/// observers can see which datapath and kernels served their traffic.
+/// Every request increments exactly one path counter and exactly one
+/// tier counter, so `total() == tier_total()` always.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PathCounters {
     pub fused: u64,
     pub reference: u64,
+    pub scalar: u64,
+    pub simd: u64,
+    pub simd_int8: u64,
 }
 
 impl PathCounters {
     pub fn total(&self) -> u64 {
         self.fused + self.reference
+    }
+
+    /// Requests attributed across kernel tiers (equals [`Self::total`]).
+    pub fn tier_total(&self) -> u64 {
+        self.scalar + self.simd + self.simd_int8
     }
 }
 
@@ -289,6 +300,11 @@ pub struct SimBackend {
     /// fused tile-streaming path for long sequences / score-memory
     /// pressure, `Force` pins one path (tests, oracles).
     pub exec_policy: ExecPolicy,
+    /// Kernel-tier selection (DESIGN.md §14): `Auto` runs the
+    /// process-wide effective tier (env override, else best the host
+    /// supports), `Force` pins one (clamped to host support at prepare
+    /// time — `path_counters` reports what actually ran).
+    pub tier_policy: TierPolicy,
     /// Shared workers for batch fan-out and head lanes; created on first
     /// use, re-created larger when a batch wants more concurrency.
     pool: Option<ThreadPool>,
@@ -300,6 +316,22 @@ pub struct SimBackend {
     workspace: Workspace,
     /// Fused/reference dispatch attribution.
     counters: PathCounters,
+}
+
+/// How `SimBackend` picks the kernel tier for weight preparation
+/// (DESIGN.md §14).  Like [`ExecPolicy`], the decision is a pure
+/// function of the policy (plus one-time host detection) — never of the
+/// request — so batched and sequential serving always run the same
+/// kernels and stay bit-identical to each other.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TierPolicy {
+    /// [`KernelTier::effective`]: the `FAMOUS_KERNEL_TIER` override when
+    /// set, else the best tier the host supports.
+    #[default]
+    Auto,
+    /// Pin a tier (tests, oracles, A/B benches).  Clamped to host
+    /// support at prepare time, like every tier request.
+    Force(KernelTier),
 }
 
 /// How `SimBackend` picks the attention datapath per request.
@@ -344,6 +376,7 @@ impl SimBackend {
         SimBackend {
             config,
             exec_policy: ExecPolicy::Auto,
+            tier_policy: TierPolicy::default(),
             pool: None,
             pool_lean_streak: 0,
             workspace: Workspace::new(),
@@ -381,10 +414,25 @@ impl SimBackend {
         }
     }
 
-    fn count(&mut self, path: ExecPath, requests: u64) {
+    /// The kernel tier requests prepare with under the configured
+    /// policy (before the availability clamp — counting uses the
+    /// clamped tier the prepared weights report).
+    pub fn choose_tier(&self) -> KernelTier {
+        match self.tier_policy {
+            TierPolicy::Force(tier) => tier.clamp_available(),
+            TierPolicy::Auto => KernelTier::effective(),
+        }
+    }
+
+    fn count(&mut self, path: ExecPath, tier: KernelTier, requests: u64) {
         match path {
             ExecPath::FusedTiled => self.counters.fused += requests,
             ExecPath::Reference => self.counters.reference += requests,
+        }
+        match tier {
+            KernelTier::Scalar => self.counters.scalar += requests,
+            KernelTier::Simd => self.counters.simd += requests,
+            KernelTier::SimdInt8 => self.counters.simd_int8 += requests,
         }
     }
 
@@ -452,11 +500,12 @@ fn execute_on_worker(
 impl Backend for SimBackend {
     fn run_mha(&mut self, topo: &Topology, inputs: &MhaInputs) -> Result<Vec<f32>> {
         self.admit(topo)?;
-        let prepared = PreparedWeights::prepare(&self.config, topo, inputs);
+        let prepared =
+            PreparedWeights::prepare_with_tier(&self.config, topo, inputs, self.choose_tier());
         let x = prepared.quantize_input(&inputs.x);
         let lanes = topo.heads.min(Self::cores());
         let path = self.choose_path(topo);
-        self.count(path, 1);
+        self.count(path, prepared.tier(), 1);
         if lanes > 1 {
             let handle = self.pool_for(lanes).handle();
             prepared.execute_parallel_path(&x, &mut self.workspace, &handle, lanes, path);
@@ -479,7 +528,9 @@ impl Backend for SimBackend {
         }
         self.admit(topo)?;
         let batch = inputs.len();
-        let shared = Arc::new(PreparedWeights::prepare(&self.config, topo, first));
+        let tier = self.choose_tier();
+        let shared = Arc::new(PreparedWeights::prepare_with_tier(&self.config, topo, first, tier));
+        let tier = shared.tier();
         let config = self.config.clone();
         let items: Vec<BatchItem> = inputs
             .iter()
@@ -497,13 +548,15 @@ impl Backend for SimBackend {
         let lanes = (pool.threads() / batch).clamp(1, topo.heads.max(1));
         let handle = pool.handle();
         let path = self.choose_path(topo);
-        self.count(path, batch as u64);
+        self.count(path, tier, batch as u64);
         let pool = self.pool.as_ref().expect("pool just ensured");
         let topo = topo.clone();
         let outputs = pool.parallel_map(items, move |item| match item {
             BatchItem::Shared { x } => execute_on_worker(&shared, &x, &handle, lanes, path),
             BatchItem::Own { inputs } => {
-                let own = PreparedWeights::prepare(&config, &topo, &inputs);
+                // The batch's clamped tier, so weight-divergent requests
+                // run the same kernels as their batchmates.
+                let own = PreparedWeights::prepare_with_tier(&config, &topo, &inputs, tier);
                 execute_on_worker(&own, &inputs.x, &handle, lanes, path)
             }
         });
@@ -632,14 +685,87 @@ mod tests {
         assert_eq!(b.choose_path(&Topology::new(192, 768, 2, 64)), ExecPath::Reference);
         // Dispatch attribution.
         b.run_mha(&short, &MhaInputs::generate(&short)).unwrap();
-        assert_eq!(b.path_counters(), PathCounters { fused: 0, reference: 1 });
+        assert_eq!((b.path_counters().fused, b.path_counters().reference), (0, 1));
         b.run_mha(&long, &MhaInputs::generate(&long)).unwrap();
-        assert_eq!(b.path_counters(), PathCounters { fused: 1, reference: 1 });
+        assert_eq!((b.path_counters().fused, b.path_counters().reference), (1, 1));
         let inp = MhaInputs::generate(&long);
         let refs: Vec<&MhaInputs> = vec![&inp; 3];
         b.run_mha_batch(&long, &refs).unwrap();
         assert_eq!(b.path_counters().fused, 4);
         assert_eq!(b.path_counters().total(), 5);
+        // Every request is attributed to exactly one tier too.
+        assert_eq!(b.path_counters().tier_total(), 5);
+    }
+
+    #[test]
+    fn tier_policy_attributes_and_forced_scalar_matches_oracle() {
+        // Forcing the scalar tier pins the oracle kernels; the counters
+        // attribute every request to the tier that actually ran, and
+        // tier attribution is conserved against path attribution.
+        let topo = Topology::new(16, 768, 8, 64);
+        let inputs = MhaInputs::generate(&topo);
+        let mut forced = SimBackend::new(SimConfig::u55c());
+        forced.tier_policy = TierPolicy::Force(KernelTier::Scalar);
+        assert_eq!(forced.choose_tier(), KernelTier::Scalar);
+        let out = forced.run_mha(&topo, &inputs).unwrap();
+        assert_eq!(forced.path_counters().scalar, 1);
+        assert_eq!(forced.path_counters().tier_total(), forced.path_counters().total());
+        // The scalar-forced backend reproduces the prepare-level oracle
+        // bit-for-bit (head-parallel execution does not reorder: the
+        // flavor contract).
+        let oracle = PreparedWeights::prepare(&forced.config, &topo, &inputs);
+        let want = oracle.execute(&oracle.quantize_input(&inputs.x));
+        assert_eq!(
+            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+        // Auto runs the process-wide effective tier and attributes it.
+        let mut auto = SimBackend::new(SimConfig::u55c());
+        assert_eq!(auto.choose_tier(), KernelTier::effective());
+        auto.run_mha(&topo, &inputs).unwrap();
+        let c = auto.path_counters();
+        let effective_count = match KernelTier::effective() {
+            KernelTier::Scalar => c.scalar,
+            KernelTier::Simd => c.simd,
+            KernelTier::SimdInt8 => c.simd_int8,
+        };
+        assert_eq!(effective_count, 1);
+        // An unavailable forced tier clamps (and counts) honestly.
+        let mut clamped = SimBackend::new(SimConfig::u55c());
+        clamped.tier_policy = TierPolicy::Force(KernelTier::SimdInt8);
+        clamped.run_mha(&topo, &inputs).unwrap();
+        let c = clamped.path_counters();
+        if KernelTier::SimdInt8.is_available() {
+            assert_eq!((c.simd_int8, c.scalar), (1, 0));
+        } else {
+            assert_eq!((c.simd_int8, c.scalar), (0, 1));
+        }
+    }
+
+    #[test]
+    fn tier_batch_bit_identical_to_sequential() {
+        // The batch path runs the same tier as sequential serving (the
+        // tier is chosen once per batch from the policy alone), so the
+        // existing bit-identity contract holds on every tier.
+        let topo = Topology::new(8, 256, 4, 64);
+        let inputs = MhaInputs::generate(&topo);
+        for tier in KernelTier::ALL {
+            let mut seq = SimBackend::new(SimConfig::u55c());
+            seq.tier_policy = TierPolicy::Force(tier);
+            let want = seq.run_mha(&topo, &inputs).unwrap();
+            let mut batched = SimBackend::new(SimConfig::u55c());
+            batched.tier_policy = TierPolicy::Force(tier);
+            let refs: Vec<&MhaInputs> = vec![&inputs; 3];
+            let got = batched.run_mha_batch(&topo, &refs).unwrap();
+            for out in &got {
+                assert_eq!(
+                    out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "tier {tier}: batch diverged from sequential"
+                );
+            }
+            assert_eq!(batched.path_counters().tier_total(), 3);
+        }
     }
 
     #[test]

@@ -3,7 +3,10 @@
 
 use crate::config::{AcceleratorConfig, Topology};
 use crate::exec::PoolHandle;
-use crate::fixed::{matmul_i32_widened_into, widen_i16, widen_i16_into, FxMatrix, Quantizer};
+use crate::fixed::{
+    matmul_i32_i8_into, matmul_i32_widened_into, matmul_i32_widened_simd_into, widen_i16,
+    widen_i16_into, FxMatrix, KernelTier, Quantizer,
+};
 use crate::jsonlite::Json;
 use crate::testdata::MhaInputs;
 
@@ -164,6 +167,16 @@ impl Simulator {
     /// in separate BRAMs").  Used by the feasibility check below and by
     /// the resource ablations.
     pub fn head_bram_pool(topo: &Topology) -> crate::fpga::BramPool {
+        Self::head_bram_pool_path(topo, ExecPath::Reference)
+    }
+
+    /// [`Self::head_bram_pool`] for an explicit attention datapath.  The
+    /// fused tile stream never materializes the SL×SL score matrix — only
+    /// an SL×TS stripe plus the per-row online-softmax state — so its `s`
+    /// bank (and the V read pattern, TS-wide instead of SL-wide) is
+    /// accounted at the stripe size.  Accounting SL×SL for `FusedTiled`
+    /// would charge BRAM the path never instantiates.
+    pub fn head_bram_pool_path(topo: &Topology, path: ExecPath) -> crate::fpga::BramPool {
         use crate::fpga::BramBank;
         let (sl, dk, ts) = (topo.seq_len as u64, topo.d_k() as u64, topo.tile_size as u64);
         let mut pool = crate::fpga::BramPool::default();
@@ -177,9 +190,21 @@ impl Simulator {
         // Q/K buffers: QK_PM's unrolled dot product reads d_k in parallel.
         pool.add(BramBank::new("q", sl * dk, 8, (dk as u32 / 2).max(1)));
         pool.add(BramBank::new("k", sl * dk, 8, (dk as u32 / 2).max(1)));
-        // V + score: SV_PM reads SL values of V and S per cycle.
-        pool.add(BramBank::new("v", sl * dk, 8, (sl as u32 / 2).max(1)));
-        pool.add(BramBank::new("s", sl * sl, 8, (sl as u32 / 2).max(1)));
+        match path {
+            ExecPath::Reference => {
+                // V + score: SV_PM reads SL values of V and S per cycle.
+                pool.add(BramBank::new("v", sl * dk, 8, (sl as u32 / 2).max(1)));
+                pool.add(BramBank::new("s", sl * sl, 8, (sl as u32 / 2).max(1)));
+            }
+            ExecPath::FusedTiled => {
+                // The fused SV stage consumes one TS-wide column tile per
+                // cycle, so V and the SL×TS score stripe partition by TS.
+                pool.add(BramBank::new("v", sl * dk, 8, (ts as u32 / 2).max(1)));
+                pool.add(BramBank::new("s", sl * ts, 8, (ts as u32 / 2).max(1)));
+                // Online-softmax running state: (max, sum) per row, f32.
+                pool.add(BramBank::new("mrow", sl * 2, 32, 1));
+            }
+        }
         pool
     }
 
@@ -187,11 +212,22 @@ impl Simulator {
     /// on the two-port banks (an II=1 schedule is otherwise impossible —
     /// the precondition of every latency formula here).
     pub fn check_bram_ports(topo: &Topology) -> Result<(), String> {
-        let pool = Self::head_bram_pool(topo);
+        Self::check_bram_ports_path(topo, ExecPath::Reference)
+    }
+
+    /// [`Self::check_bram_ports`] for an explicit attention datapath: the
+    /// fused SV stage reads TS (not SL) operands per cycle, matched
+    /// against the stripe-sized banks above.
+    pub fn check_bram_ports_path(topo: &Topology, path: ExecPath) -> Result<(), String> {
+        let pool = Self::head_bram_pool_path(topo, path);
+        let sv_reads = match path {
+            ExecPath::Reference => topo.seq_len as u32,
+            ExecPath::FusedTiled => topo.tile_size as u32,
+        };
         let worst = [
             ("QKV_PM tile reads", topo.tile_size as u32),
             ("QK_PM dot reads", topo.d_k() as u32),
-            ("SV_PM dot reads", topo.seq_len as u32),
+            ("SV_PM dot reads", sv_reads),
         ];
         for (what, reads) in worst {
             for bank in &pool.banks {
@@ -329,13 +365,19 @@ impl Simulator {
     }
 }
 
-/// One head's weights and biases, quantized and pre-widened once — the
-/// host-side analogue of weight tiles staged in BRAM.
+/// One head's weights and biases, quantized once — the host-side
+/// analogue of weight tiles staged in BRAM.  Scalar/Simd tiers stage the
+/// pre-widened i16 copies (the i8 vectors stay empty); the SimdInt8 tier
+/// stages raw i8 weights only (half the bytes, no widening pass) and
+/// leaves the i16 copies empty.
 #[derive(Clone, Debug)]
 pub struct PreparedHead {
     pub wq16: Vec<i16>,
     pub wk16: Vec<i16>,
     pub wv16: Vec<i16>,
+    pub wq8: Vec<i8>,
+    pub wk8: Vec<i8>,
+    pub wv8: Vec<i8>,
     pub bq: Vec<f32>,
     pub bk: Vec<f32>,
     pub bv: Vec<f32>,
@@ -361,10 +403,22 @@ pub struct PreparedHead {
 /// *tolerance-equivalent* to `Reference`
 /// ([`super::fused::tolerance`]), itself bit-deterministic across
 /// flavors, lanes and repeats for a fixed path.
+///
+/// Orthogonally, the contract is per [`KernelTier`] (DESIGN.md §14),
+/// fixed at prepare time: `Scalar` is the oracle; `Simd` and `SimdInt8`
+/// swap in the AVX2 kernels and are *tier-tolerance-equivalent* to it
+/// ([`super::fused::tier_tolerance`]) — their integer projections stay
+/// bit-identical to scalar, only the order-pinned f32 score dot
+/// reassociates.  `Simd` and `SimdInt8` outputs are bit-identical to
+/// *each other* (exact integer GEMMs feeding the same f32 code).  The
+/// flavor bit-identity above holds within every (path, tier) pair.
 #[derive(Clone, Debug)]
 pub struct PreparedWeights {
     pub topology: Topology,
     heads: Vec<PreparedHead>,
+    /// Kernel tier every execute flavor runs (clamped to host support at
+    /// prepare time, so attribution is honest on non-AVX2 hosts).
+    tier: KernelTier,
     /// Product of the x and w quantization grid steps.
     scale2: f32,
     /// Score module (scale + softmax realization + masking), fixed at
@@ -379,18 +433,42 @@ pub struct PreparedWeights {
 
 impl PreparedWeights {
     /// Quantize + widen every head's weights for `topo` under `config`'s
-    /// numerics (scale mode, softmax realization, masking).
+    /// numerics (scale mode, softmax realization, masking), on the
+    /// `Scalar` oracle tier.
     pub fn prepare(config: &SimConfig, topo: &Topology, inp: &MhaInputs) -> Self {
+        Self::prepare_with_tier(config, topo, inp, KernelTier::Scalar)
+    }
+
+    /// [`Self::prepare`] on an explicit [`KernelTier`] (DESIGN.md §14).
+    /// The tier is clamped to host support here — a `Simd`/`SimdInt8`
+    /// request on a non-AVX2 host prepares (and reports) `Scalar` — and
+    /// fixed for the lifetime of the prepared weights, so every request
+    /// against them runs the same kernels.  `SimdInt8` stages raw i8
+    /// weights and skips the i16 widening copies entirely.
+    pub fn prepare_with_tier(
+        config: &SimConfig,
+        topo: &Topology,
+        inp: &MhaInputs,
+        tier: KernelTier,
+    ) -> Self {
+        let tier = tier.clamp_available();
         let (dmn, h, dkn) = (topo.d_model, topo.heads, topo.d_k());
         let quant = Quantizer::grid64();
         let score_scale = match config.scale_mode {
             ScaleMode::SqrtDk => 1.0 / (dkn as f32).sqrt(),
             ScaleMode::DModel => 1.0 / dmn as f32,
         };
+        let int8 = tier == KernelTier::SimdInt8;
         let heads = (0..h)
             .map(|head| {
                 let wslice = |w: &[f32]| {
-                    widen_i16(&quant.quantize_vec(&w[head * dkn * dmn..(head + 1) * dkn * dmn]))
+                    let w8 = quant.quantize_vec(&w[head * dkn * dmn..(head + 1) * dkn * dmn]);
+                    if int8 {
+                        (w8, Vec::new())
+                    } else {
+                        let w16 = widen_i16(&w8);
+                        (Vec::new(), w16)
+                    }
                 };
                 let bslice = |b: &[f32]| {
                     b[head * dkn..(head + 1) * dkn]
@@ -398,10 +476,16 @@ impl PreparedWeights {
                         .map(|&v| quant.fake_quant(v))
                         .collect::<Vec<f32>>()
                 };
+                let (wq8, wq16) = wslice(&inp.wq);
+                let (wk8, wk16) = wslice(&inp.wk);
+                let (wv8, wv16) = wslice(&inp.wv);
                 PreparedHead {
-                    wq16: wslice(&inp.wq),
-                    wk16: wslice(&inp.wk),
-                    wv16: wslice(&inp.wv),
+                    wq16,
+                    wk16,
+                    wv16,
+                    wq8,
+                    wk8,
+                    wv8,
                     bq: bslice(&inp.bq),
                     bk: bslice(&inp.bk),
                     bv: bslice(&inp.bv),
@@ -428,11 +512,18 @@ impl PreparedWeights {
         PreparedWeights {
             topology: topo.clone(),
             heads,
+            tier,
             scale2: quant.scale * quant.scale,
-            qk,
-            sv: SvPm::new(topo.seq_len, dkn),
-            fused,
+            qk: qk.with_tier(tier),
+            sv: SvPm::new(topo.seq_len, dkn).with_tier(tier),
+            fused: fused.with_tier(tier),
         }
+    }
+
+    /// The kernel tier every execute flavor runs (already clamped to
+    /// host support at prepare time).
+    pub fn tier(&self) -> KernelTier {
+        self.tier
     }
 
     /// Do two requests carry identical weight operands?  (A batch path
@@ -482,13 +573,16 @@ impl PreparedWeights {
         let (sln, dmn, dkn) = (topo.seq_len, topo.d_model, topo.d_k());
         assert_eq!(x.rows, sln, "input rows != SL");
         assert_eq!(x.cols, dmn, "input cols != d_model");
-        ws.ensure(topo, 1, path);
-        widen_i16_into(&x.data, &mut ws.x16);
+        ws.ensure(topo, 1, path, self.tier);
+        if self.tier != KernelTier::SimdInt8 {
+            widen_i16_into(&x.data, &mut ws.x16);
+        }
         let Workspace { x16, lanes, out, .. } = ws;
         let x16: &[i16] = x16.as_slice();
+        let x8: &[i8] = &x.data;
         let lane = &mut lanes[0];
         for head in 0..self.heads.len() {
-            self.run_head(head, x16, lane, path);
+            self.run_head(head, x8, x16, lane, path);
             // Concatenate along features: out[:, head*dk..(head+1)*dk].
             for i in 0..sln {
                 out[i * dmn + head * dkn..i * dmn + (head + 1) * dkn]
@@ -533,14 +627,17 @@ impl PreparedWeights {
         }
         assert_eq!(x.rows, sln, "input rows != SL");
         assert_eq!(x.cols, dmn, "input cols != d_model");
-        ws.ensure(topo, lanes, path);
-        widen_i16_into(&x.data, &mut ws.x16);
+        ws.ensure(topo, lanes, path, self.tier);
+        if self.tier != KernelTier::SimdInt8 {
+            widen_i16_into(&x.data, &mut ws.x16);
+        }
         let Workspace { x16, lanes: scratch, out, .. } = ws;
         let x16: &[i16] = x16.as_slice();
+        let x8: &[i8] = &x.data;
         let out_ptr = StripePtr(out.as_mut_ptr());
         let f = |lane_idx: usize, lane: &mut HeadScratch| {
             for head in (lane_idx..h).step_by(lanes) {
-                self.run_head(head, x16, lane, path);
+                self.run_head(head, x8, x16, lane, path);
                 // SAFETY: each head owns the disjoint column stripe
                 // [head·d_k, (head+1)·d_k) of every output row, and each
                 // head is processed by exactly one lane (head ≡ lane_idx
@@ -563,18 +660,33 @@ impl PreparedWeights {
 
     /// One head through QKV → scores → SV, entirely inside `lane`.  The
     /// single source of per-head arithmetic — every execute flavor calls
-    /// this, which is what makes them bit-identical for a fixed `path`.
-    /// The projections are shared; only the attention stage dispatches on
-    /// the path (reference modules vs the fused tile stream).
-    fn run_head(&self, head: usize, x16: &[i16], lane: &mut HeadScratch, path: ExecPath) {
+    /// this, which is what makes them bit-identical for a fixed `path`
+    /// and tier.  The projections dispatch on the tier (all three GEMMs
+    /// produce identical i32 accumulators — exact integer arithmetic);
+    /// the attention stage dispatches on the path (reference modules vs
+    /// the fused tile stream), with the tier threaded into each module's
+    /// f32 kernels at prepare time.
+    fn run_head(
+        &self,
+        head: usize,
+        x8: &[i8],
+        x16: &[i16],
+        lane: &mut HeadScratch,
+        path: ExecPath,
+    ) {
         let topo = &self.topology;
         let (sln, dmn, dkn) = (topo.seq_len, topo.d_model, topo.d_k());
         let hp = &self.heads[head];
-        matmul_i32_widened_into(x16, &hp.wq16, sln, dmn, dkn, &mut lane.acc);
+        let gemm = |w8: &[i8], w16: &[i16], acc: &mut [i32]| match self.tier {
+            KernelTier::Scalar => matmul_i32_widened_into(x16, w16, sln, dmn, dkn, acc),
+            KernelTier::Simd => matmul_i32_widened_simd_into(x16, w16, sln, dmn, dkn, acc),
+            KernelTier::SimdInt8 => matmul_i32_i8_into(x8, w8, sln, dmn, dkn, acc),
+        };
+        gemm(&hp.wq8, &hp.wq16, &mut lane.acc);
         dequant_into(&lane.acc, &hp.bq, self.scale2, dkn, &mut lane.q);
-        matmul_i32_widened_into(x16, &hp.wk16, sln, dmn, dkn, &mut lane.acc);
+        gemm(&hp.wk8, &hp.wk16, &mut lane.acc);
         dequant_into(&lane.acc, &hp.bk, self.scale2, dkn, &mut lane.k);
-        matmul_i32_widened_into(x16, &hp.wv16, sln, dmn, dkn, &mut lane.acc);
+        gemm(&hp.wv8, &hp.wv16, &mut lane.acc);
         dequant_into(&lane.acc, &hp.bv, self.scale2, dkn, &mut lane.v);
         match path {
             ExecPath::Reference => {
@@ -956,6 +1068,133 @@ mod tests {
         // checking the pool's generic port math instead.
         let pool = Simulator::head_bram_pool(&t1());
         assert!(pool.worst_access_cycles(10_000) > 1);
+    }
+
+    #[test]
+    fn fused_bram_pool_banks_the_stripe_not_sl_squared() {
+        // Satellite of DESIGN.md §14: the fused path only ever holds an
+        // SL×TS score stripe (+ per-row online state), so its BRAM
+        // accounting must not charge the SL×SL array the reference path
+        // instantiates.  At SL=1024 that is the difference between an
+        // infeasible 1 MiB bank and a 64 KiB stripe.
+        let topo = Topology::new(1024, 768, 8, 64);
+        let reference = Simulator::head_bram_pool_path(&topo, ExecPath::Reference);
+        let fused = Simulator::head_bram_pool_path(&topo, ExecPath::FusedTiled);
+        let elems = |pool: &crate::fpga::BramPool, name: &str| {
+            pool.banks.iter().find(|b| b.name == name).unwrap().elems
+        };
+        assert_eq!(elems(&reference, "s"), 1024 * 1024);
+        assert_eq!(elems(&fused, "s"), 1024 * 64);
+        assert_eq!(elems(&fused, "mrow"), 1024 * 2);
+        assert!(fused.total_banks18k() < reference.total_banks18k());
+        // The default accounting stays the reference path.
+        assert_eq!(Simulator::head_bram_pool(&topo).total_banks18k(), reference.total_banks18k());
+        // Both paths schedule conflict-free, including the long build.
+        for topo in [t1(), Topology::new(128, 768, 8, 64), topo] {
+            Simulator::check_bram_ports_path(&topo, ExecPath::Reference).unwrap();
+            Simulator::check_bram_ports_path(&topo, ExecPath::FusedTiled).unwrap();
+        }
+    }
+
+    #[test]
+    fn kernel_tiers_agree_within_tier_tolerance() {
+        // DESIGN.md §14 acceptance: SIMD tiers are tier-tolerance-
+        // equivalent to the scalar oracle on the full MHA (both exec
+        // paths), bit-stable across repeats, and Simd ≡ SimdInt8 exactly
+        // (exact integer GEMMs feeding the same f32 code).  On non-AVX2
+        // hosts the clamp must reproduce the oracle bit-for-bit.
+        use super::super::fused::tier_tolerance;
+        let topo = Topology::new(12, 64, 4, 16);
+        let inputs = MhaInputs::generate(&topo);
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for path in [ExecPath::Reference, ExecPath::FusedTiled] {
+            let cfg = Simulator::toy_config();
+            let scalar =
+                PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::Scalar);
+            assert_eq!(scalar.tier(), KernelTier::Scalar);
+            let x = scalar.quantize_input(&inputs.x);
+            let want = scalar.execute_path(&x, path);
+            let kind = scalar.fused.softmax.kind;
+            let mag = want.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let tol = tier_tolerance(kind, topo.seq_len, topo.d_k(), mag);
+            let mut outs = Vec::new();
+            for tier in [KernelTier::Simd, KernelTier::SimdInt8] {
+                let p = PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, tier);
+                assert_eq!(p.tier(), tier.clamp_available());
+                let got = p.execute_path(&x, path);
+                if p.tier() == KernelTier::Scalar {
+                    assert_eq!(bits(&got), bits(&want), "clamped tier diverged ({path:?})");
+                } else {
+                    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                        assert!(
+                            (w - g).abs() <= tol,
+                            "{path:?} {tier} [{i}]: {w} vs {g} (tol {tol})"
+                        );
+                    }
+                    assert_eq!(bits(&p.execute_path(&x, path)), bits(&got), "{path:?} {tier}");
+                }
+                outs.push(got);
+            }
+            assert_eq!(bits(&outs[0]), bits(&outs[1]), "Simd vs SimdInt8 diverged ({path:?})");
+        }
+    }
+
+    #[test]
+    fn tier_flavors_bit_identical() {
+        // The flavor contract holds within every (path, tier) pair:
+        // serial workspace and head-parallel execution reproduce the
+        // allocating flavor byte-for-byte.
+        use crate::exec::ThreadPool;
+        let topo = Topology::new(10, 64, 4, 16);
+        let inputs = MhaInputs::generate(&topo);
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for tier in KernelTier::ALL {
+            let p =
+                PreparedWeights::prepare_with_tier(&Simulator::toy_config(), &topo, &inputs, tier);
+            let x = p.quantize_input(&inputs.x);
+            for path in [ExecPath::Reference, ExecPath::FusedTiled] {
+                let want = p.execute_path(&x, path);
+                let mut ws = Workspace::new();
+                p.execute_into_path(&x, &mut ws, path);
+                assert_eq!(bits(ws.output()), bits(&want), "serial tier={tier} path={path:?}");
+                let pool = ThreadPool::new(3);
+                for lanes in [2, 4] {
+                    let mut wsp = Workspace::new();
+                    p.execute_parallel_path(&x, &mut wsp, &pool.handle(), lanes, path);
+                    assert_eq!(
+                        bits(wsp.output()),
+                        bits(&want),
+                        "tier={tier} path={path:?} lanes={lanes}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_tier_stages_i8_weights_and_skips_widening() {
+        let topo = Topology::new(8, 64, 2, 16);
+        let inputs = MhaInputs::generate(&topo);
+        let cfg = SimConfig::u55c();
+        let p = PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::SimdInt8);
+        if p.tier() != KernelTier::SimdInt8 {
+            return; // non-AVX2 host: the clamp path is covered above
+        }
+        for hp in &p.heads {
+            assert_eq!(hp.wq16.len(), 0, "int8 tier staged a widened copy");
+            assert_eq!(hp.wq8.len(), topo.d_k() * topo.d_model);
+            assert_eq!(hp.wk8.len(), topo.d_k() * topo.d_model);
+            assert_eq!(hp.wv8.len(), topo.d_k() * topo.d_model);
+        }
+        // ... and never sizes the widened input in the workspace.
+        let x = p.quantize_input(&inputs.x);
+        let mut ws = Workspace::new();
+        p.execute_into(&x, &mut ws);
+        assert_eq!(ws.x16.len(), 0, "int8 tier widened the input");
+        // The scalar staging is the converse.
+        let s = PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::Scalar);
+        assert_eq!(s.heads[0].wq8.len(), 0);
+        assert_eq!(s.heads[0].wq16.len(), topo.d_k() * topo.d_model);
     }
 
     #[test]

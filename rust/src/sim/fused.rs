@@ -39,6 +39,8 @@
 
 use super::modules::blocked_score_row;
 use super::softmax_unit::{OnlineRow, SoftmaxKind, SoftmaxUnit};
+use crate::fixed::simd;
+use crate::fixed::KernelTier;
 
 /// Which functional attention datapath an execute call runs.
 ///
@@ -71,6 +73,11 @@ pub struct FusedAttnPm {
     /// does).
     pub causal: bool,
     pub softmax: SoftmaxUnit,
+    /// Kernel tier for the score dots and the rescaled axpy
+    /// (DESIGN.md §14).  Scalar by default; the same tier as the
+    /// reference path's `QkPm`, so fused-vs-reference pre-softmax
+    /// bit-identity holds per tier.
+    pub tier: KernelTier,
 }
 
 impl FusedAttnPm {
@@ -83,7 +90,13 @@ impl FusedAttnPm {
         causal: bool,
     ) -> Self {
         assert!(tile > 0, "fused attention needs a positive tile width");
-        FusedAttnPm { seq_len, d_k, tile, scale, causal, softmax }
+        FusedAttnPm { seq_len, d_k, tile, scale, causal, softmax, tier: KernelTier::Scalar }
+    }
+
+    /// Select the kernel tier (builder style; prepare-time plumbing).
+    pub fn with_tier(mut self, tier: KernelTier) -> Self {
+        self.tier = tier;
+        self
     }
 
     /// Elements of the SL×TS score stripe a workspace lane must hold.
@@ -127,7 +140,7 @@ impl FusedAttnPm {
             for i in 0..sl {
                 let qrow = &q[i * dk..(i + 1) * dk];
                 let srow = &mut stripe[i * tw..(i + 1) * tw];
-                blocked_score_row(qrow, k, dk, j0, srow, |j, acc| self.score(i, j, acc));
+                blocked_score_row(qrow, k, dk, j0, srow, |j, acc| self.score(i, j, acc), self.tier);
             }
             // Phase 2 — per row: online-softmax absorb (scores become
             // un-normalized weights in place), rescale the partial
@@ -141,16 +154,14 @@ impl FusedAttnPm {
                 if alpha != 1.0 {
                     // Common case after the row max stabilizes is α = 1
                     // exactly (`exp(0.0)`): skipping the multiply is a
-                    // bitwise no-op on the accumulator.
-                    for o in orow.iter_mut() {
-                        *o *= alpha;
-                    }
+                    // bitwise no-op on the accumulator.  `scale_f32` is
+                    // one multiply per element in every tier —
+                    // bit-identical across tiers (DESIGN.md §14).
+                    simd::scale_f32(self.tier, alpha, orow);
                 }
                 for (jj, &w) in srow.iter().enumerate() {
                     let vrow = &v[(j0 + jj) * dk..(j0 + jj + 1) * dk];
-                    for (o, &vv) in orow.iter_mut().zip(vrow) {
-                        *o += w * vv;
-                    }
+                    simd::axpy_f32(self.tier, w, vrow, orow);
                 }
             }
             j0 += tw;
@@ -163,9 +174,7 @@ impl FusedAttnPm {
         // so this never divides by zero.
         for i in 0..sl {
             let inv = 1.0 / rows[i].l;
-            for o in out[i * dk..(i + 1) * dk].iter_mut() {
-                *o *= inv;
-            }
+            simd::scale_f32(self.tier, inv, &mut out[i * dk..(i + 1) * dk]);
         }
     }
 
@@ -218,6 +227,36 @@ pub fn tolerance(kind: SoftmaxKind, seq_len: usize, mag: f32) -> f32 {
             (4.0 * (step.exp() - 1.0) + clamp_floor) * mag
         }
     }
+}
+
+/// Documented max-abs-diff bound between kernel *tiers* of the same
+/// exec path (DESIGN.md §14).  The only tier-variant kernel is the f32
+/// score dot (8-lane pinned-tree reduction vs the scalar chains): a
+/// per-score perturbation linear in `d_k`, passed once through softmax
+/// normalization and an SL-term weighted sum — first-order linear in
+/// `seq_len + d_k` with a generous safety factor, stacked on top of
+/// [`tolerance`] (which already carries the LUT step/clamp machinery a
+/// perturbed score can trip).
+pub fn tier_tolerance(kind: SoftmaxKind, seq_len: usize, d_k: usize, mag: f32) -> f32 {
+    let mag = mag.abs().max(1.0);
+    tolerance(kind, seq_len, mag) + 64.0 * (seq_len + d_k) as f32 * f32::EPSILON * mag
+}
+
+/// Documented max-abs-diff bound of the int8 datapath against the f32
+/// reference evaluated on the *same fake-quantized operands*
+/// (DESIGN.md §14, mirroring [`tolerance`]'s role for fusion).  On the
+/// shared operands the integer GEMM is *exact* — i8 levels times the
+/// power-of-two grid step are exact in f32, and the i32 accumulator
+/// never rounds — so the datapath-vs-f32 difference is pure f32
+/// summation-order error: `d_model`-long projection sums and `SL`-long
+/// attention sums, passed once through softmax normalization.  Linear
+/// with a generous safety factor (the raw-f32-weights comparison is a
+/// different question: that error is dominated by the half-step operand
+/// snap itself and is asserted separately via the convex-combination
+/// bound — see `tests/properties.rs`).
+pub fn quant_tolerance(kind: SoftmaxKind, seq_len: usize, d_model: usize, mag: f32) -> f32 {
+    let mag = mag.abs().max(1.0);
+    tolerance(kind, seq_len, mag) + 256.0 * (d_model + seq_len) as f32 * f32::EPSILON * mag
 }
 
 /// Assert `got` is within the documented [`tolerance`] of the
@@ -385,5 +424,40 @@ mod tests {
     #[should_panic(expected = "positive tile width")]
     fn zero_tile_rejected() {
         FusedAttnPm::new(4, 4, 0, 1.0, SoftmaxUnit::exact(), false);
+    }
+
+    #[test]
+    fn simd_tier_within_tier_tolerance_and_deterministic() {
+        // The SIMD tier reassociates the score dots (pinned tree), so it
+        // is tolerance-equivalent to the scalar oracle — and must be
+        // bit-deterministic run to run.  On non-AVX2 hosts the tier
+        // clamps to scalar inside the kernels and the diff is zero,
+        // which the bound also covers.
+        for sl in [5usize, 8, 13] {
+            let dk = 9; // 8-lane body + 1-wide ordered tail
+            let q = gen(31, sl * dk);
+            let k = gen(32, sl * dk);
+            let v = gen(33, sl * dk);
+            for causal in [false, true] {
+                let scalar = FusedAttnPm::new(sl, dk, 4, 0.37, SoftmaxUnit::exact(), causal);
+                let simd = scalar.clone().with_tier(KernelTier::Simd);
+                let want = run_fused(&scalar, &q, &k, &v);
+                let got = run_fused(&simd, &q, &k, &v);
+                let mag = want.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                let tol = tier_tolerance(SoftmaxKind::Exact, sl, dk, mag);
+                let diff = max_abs_diff(&want, &got);
+                assert!(diff <= tol, "sl={sl} causal={causal}: {diff} > {tol}");
+                let again = run_fused(&simd, &q, &k, &v);
+                assert_eq!(got, again, "sl={sl} causal={causal}: SIMD tier not deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn tier_and_quant_tolerances_dominate_base() {
+        for kind in [SoftmaxKind::Exact, SoftmaxKind::Lut { bits: 8 }] {
+            assert!(tier_tolerance(kind, 64, 96, 2.0) > tolerance(kind, 64, 2.0));
+            assert!(quant_tolerance(kind, 64, 768, 2.0) > tolerance(kind, 64, 2.0));
+        }
     }
 }

@@ -28,10 +28,11 @@ pub mod modules;
 pub mod softmax_unit;
 pub mod workspace;
 
+pub use crate::fixed::KernelTier;
 pub use controller::{ControlRegs, Controller, CtrlError};
 pub use engine::{
     CycleTrace, PhaseEvent, PreparedHead, PreparedWeights, SimConfig, SimResult, Simulator,
 };
-pub use fused::{ExecPath, FusedAttnPm};
+pub use fused::{tier_tolerance, ExecPath, FusedAttnPm};
 pub use softmax_unit::{OnlineRow, SoftmaxKind, SoftmaxUnit};
 pub use workspace::{HeadScratch, Workspace, SHRINK_WINDOW};

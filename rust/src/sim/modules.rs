@@ -14,7 +14,8 @@
 //! formulas are the same `LoopNest` instances the analytical model uses,
 //! so the two stay consistent by construction.
 
-use crate::fixed::{matmul_i32_fast, FxMatrix};
+use crate::fixed::simd;
+use crate::fixed::{matmul_i32_fast, FxMatrix, KernelTier};
 use crate::fpga::hls::{LoopNest, PipelinedLoop};
 
 use super::softmax_unit::SoftmaxUnit;
@@ -110,15 +111,24 @@ pub struct QkPm {
     /// Decoder masking (Section II's Masked Attention): row i attends
     /// only to columns <= i.
     pub causal: bool,
+    /// Which score-kernel implementation runs (DESIGN.md §14).  Scalar
+    /// by default, so every pre-existing call site stays the oracle.
+    pub tier: KernelTier,
 }
 
 impl QkPm {
     pub fn new(seq_len: usize, d_k: usize, scale: f32, softmax: SoftmaxUnit) -> Self {
-        QkPm { seq_len, d_k, softmax, scale, causal: false }
+        QkPm { seq_len, d_k, softmax, scale, causal: false, tier: KernelTier::Scalar }
     }
 
     pub fn causal(seq_len: usize, d_k: usize, scale: f32, softmax: SoftmaxUnit) -> Self {
         QkPm { causal: true, ..Self::new(seq_len, d_k, scale, softmax) }
+    }
+
+    /// Select the kernel tier (builder style; prepare-time plumbing).
+    pub fn with_tier(mut self, tier: KernelTier) -> Self {
+        self.tier = tier;
+        self
     }
 
     /// PE count: the unrolled dot product over d_k.
@@ -154,7 +164,7 @@ impl QkPm {
         for i in 0..sl {
             let qrow = &q[i * dk..(i + 1) * dk];
             let srow = &mut s[i * sl..(i + 1) * sl];
-            blocked_score_row(qrow, k, dk, 0, srow, |j, acc| self.score(i, j, acc));
+            blocked_score_row(qrow, k, dk, 0, srow, |j, acc| self.score(i, j, acc), self.tier);
         }
         self.softmax.rows(s, sl, sl);
     }
@@ -185,7 +195,16 @@ impl QkPm {
 /// over full rows and the fused tile stream
 /// ([`super::fused::FusedAttnPm`]) over column tiles, which is what
 /// keeps their pre-softmax scores bit-identical *by construction*
-/// (DESIGN.md §12).
+/// (DESIGN.md §12) — per tier: both paths route through this one
+/// dispatch point with the same `tier`, so the fused/reference
+/// invariant survives every tier.
+///
+/// For SIMD tiers the dot runs on [`simd::dot_f32`] — 8-lane partials
+/// in a pinned fixed tree plus the ordered scalar tail.  That order is
+/// deterministic but different from the scalar chains below, so tiers
+/// are tolerance-equivalent, not bit-equal, on this one kernel
+/// (DESIGN.md §14).  The scalar body is untouched: the bit-identity
+/// oracle and the non-AVX2 fallback.
 pub(crate) fn blocked_score_row<F: Fn(usize, f32) -> f32>(
     qrow: &[f32],
     k: &[f32],
@@ -193,7 +212,16 @@ pub(crate) fn blocked_score_row<F: Fn(usize, f32) -> f32>(
     j0: usize,
     srow: &mut [f32],
     score: F,
+    tier: KernelTier,
 ) {
+    if tier != KernelTier::Scalar && KernelTier::Simd.is_available() {
+        for (jj, s) in srow.iter_mut().enumerate() {
+            let j = j0 + jj;
+            let krow = &k[j * dk..(j + 1) * dk];
+            *s = score(j, simd::dot_f32(qrow, krow));
+        }
+        return;
+    }
     let tw = srow.len();
     let mut jj = 0;
     while jj + 4 <= tw {
@@ -230,11 +258,21 @@ pub(crate) fn blocked_score_row<F: Fn(usize, f32) -> f32>(
 pub struct SvPm {
     pub seq_len: usize,
     pub d_k: usize,
+    /// Axpy kernel tier.  All tiers are bit-identical here — the axpy
+    /// vectorizes across independent output accumulators with one mul +
+    /// one add per element (DESIGN.md §14).
+    pub tier: KernelTier,
 }
 
 impl SvPm {
     pub fn new(seq_len: usize, d_k: usize) -> Self {
-        SvPm { seq_len, d_k }
+        SvPm { seq_len, d_k, tier: KernelTier::Scalar }
+    }
+
+    /// Select the kernel tier (builder style; prepare-time plumbing).
+    pub fn with_tier(mut self, tier: KernelTier) -> Self {
+        self.tier = tier;
+        self
     }
 
     /// PE count: the unrolled dot product over SL.
@@ -276,9 +314,7 @@ impl SvPm {
             orow.fill(0.0);
             for (l, &w) in s[i * sl..(i + 1) * sl].iter().enumerate() {
                 let vrow = &v[l * dk..(l + 1) * dk];
-                for (o, &vv) in orow.iter_mut().zip(vrow) {
-                    *o += w * vv;
-                }
+                simd::axpy_f32(self.tier, w, vrow, orow);
             }
         }
     }

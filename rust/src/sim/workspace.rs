@@ -33,6 +33,7 @@
 use super::fused::ExecPath;
 use super::softmax_unit::OnlineRow;
 use crate::config::Topology;
+use crate::fixed::KernelTier;
 
 /// Consecutive under-half-demand requests before a workspace releases
 /// its surplus capacity (the pool-side analogue lives in
@@ -137,14 +138,29 @@ impl Workspace {
         Self::default()
     }
 
-    /// Size every buffer for `topo` with `lanes` head lanes on `path`.
-    /// `Vec::resize` never shrinks capacity, so a warm call with a
-    /// previously-seen (or smaller) topology allocates nothing; sustained
-    /// under-half demand eventually releases the surplus (see the module
-    /// docs).
-    pub(crate) fn ensure(&mut self, topo: &Topology, lanes: usize, path: ExecPath) {
+    /// Size every buffer for `topo` with `lanes` head lanes on `path`
+    /// under kernel `tier`.  `Vec::resize` never shrinks capacity, so a
+    /// warm call with a previously-seen (or smaller) topology allocates
+    /// nothing; sustained under-half demand eventually releases the
+    /// surplus (see the module docs).
+    ///
+    /// The `SimdInt8` tier feeds the projections straight from the
+    /// request's int8 operand — no i16 widening pass — so `x16` drops to
+    /// zero length the same way the unused path's score scratch does: a
+    /// workspace that has only ever served the int8 datapath never
+    /// allocates the widened copy at all (DESIGN.md §14).
+    pub(crate) fn ensure(
+        &mut self,
+        topo: &Topology,
+        lanes: usize,
+        path: ExecPath,
+        tier: KernelTier,
+    ) {
         let (sl, dm, dk, ts) = (topo.seq_len, topo.d_model, topo.d_k(), topo.tile_size);
-        self.x16.resize(sl * dm, 0);
+        match tier {
+            KernelTier::SimdInt8 => self.x16.truncate(0),
+            KernelTier::Scalar | KernelTier::Simd => self.x16.resize(sl * dm, 0),
+        }
         self.out.resize(sl * dm, 0.0);
         if self.lanes.len() < lanes {
             self.lanes.resize_with(lanes, HeadScratch::default);
@@ -233,15 +249,15 @@ mod tests {
         let mut ws = Workspace::new();
         let small = Topology::new(8, 64, 2, 16);
         let large = Topology::new(16, 64, 2, 16);
-        ws.ensure(&large, 2, ExecPath::Reference);
+        ws.ensure(&large, 2, ExecPath::Reference, KernelTier::Scalar);
         let fp = ws.footprint();
         assert_eq!(ws.lanes.len(), 2);
         assert_eq!(ws.x16.len(), 16 * 64);
         // Warm re-ensure (same + smaller topology): nothing moves.
-        ws.ensure(&large, 2, ExecPath::Reference);
+        ws.ensure(&large, 2, ExecPath::Reference, KernelTier::Scalar);
         assert_eq!(ws.footprint(), fp);
-        ws.ensure(&small, 1, ExecPath::Reference);
-        ws.ensure(&large, 2, ExecPath::Reference);
+        ws.ensure(&small, 1, ExecPath::Reference, KernelTier::Scalar);
+        ws.ensure(&large, 2, ExecPath::Reference, KernelTier::Scalar);
         assert_eq!(ws.footprint(), fp, "shrink + regrow must stay in capacity");
     }
 
@@ -249,34 +265,53 @@ mod tests {
     fn fused_path_sizes_stripe_not_score_matrix() {
         let mut ws = Workspace::new();
         let topo = Topology::new(32, 64, 2, 16);
-        ws.ensure(&topo, 1, ExecPath::FusedTiled);
+        ws.ensure(&topo, 1, ExecPath::FusedTiled, KernelTier::Scalar);
         assert_eq!(ws.lanes[0].stripe.len(), 32 * 16);
         assert_eq!(ws.lanes[0].rows.len(), 32);
         assert_eq!(ws.reference_score_capacity(), 0, "fused must not allocate SL×SL");
         let fused_bytes = ws.footprint_bytes();
         // The reference path at the same topology retains strictly more.
         let mut ws_ref = Workspace::new();
-        ws_ref.ensure(&topo, 1, ExecPath::Reference);
+        ws_ref.ensure(&topo, 1, ExecPath::Reference, KernelTier::Scalar);
         assert_eq!(ws_ref.lanes[0].s.len(), 32 * 32);
         assert!(ws_ref.footprint_bytes() > fused_bytes);
         // Switching a fused workspace to reference sizes s lazily.
-        ws.ensure(&topo, 1, ExecPath::Reference);
+        ws.ensure(&topo, 1, ExecPath::Reference, KernelTier::Scalar);
         assert_eq!(ws.lanes[0].s.len(), 32 * 32);
         assert_eq!(ws.lanes[0].stripe.len(), 0);
         assert!(ws.lanes[0].stripe.capacity() >= 32 * 16, "capacity is retained");
     }
 
     #[test]
+    fn int8_tier_never_sizes_the_widened_input() {
+        // The SimdInt8 tier reads the request's i8 operand directly: a
+        // workspace that has only served the int8 datapath must never
+        // allocate the i16 copy (the "no widening pass" contract).
+        let mut ws = Workspace::new();
+        let topo = Topology::new(16, 64, 2, 16);
+        ws.ensure(&topo, 1, ExecPath::FusedTiled, KernelTier::SimdInt8);
+        assert_eq!(ws.x16.len(), 0);
+        assert_eq!(ws.x16.capacity(), 0, "int8-only workspace allocated x16");
+        // Switching tiers sizes it lazily; switching back truncates the
+        // length but keeps the capacity (same policy as score scratch).
+        ws.ensure(&topo, 1, ExecPath::FusedTiled, KernelTier::Scalar);
+        assert_eq!(ws.x16.len(), 16 * 64);
+        ws.ensure(&topo, 1, ExecPath::FusedTiled, KernelTier::SimdInt8);
+        assert_eq!(ws.x16.len(), 0);
+        assert!(ws.x16.capacity() >= 16 * 64, "capacity is retained");
+    }
+
+    #[test]
     fn take_output_then_warm_up_again() {
         let mut ws = Workspace::new();
         let topo = Topology::new(4, 32, 2, 16);
-        ws.ensure(&topo, 1, ExecPath::Reference);
+        ws.ensure(&topo, 1, ExecPath::Reference, KernelTier::Scalar);
         ws.out[0] = 7.0;
         let out = ws.take_output();
         assert_eq!(out.len(), 4 * 32);
         assert_eq!(out[0], 7.0);
         assert!(ws.output().is_empty());
-        ws.ensure(&topo, 1, ExecPath::Reference);
+        ws.ensure(&topo, 1, ExecPath::Reference, KernelTier::Scalar);
         assert_eq!(ws.output().len(), 4 * 32);
     }
 
@@ -285,17 +320,17 @@ mod tests {
         let mut ws = Workspace::new();
         let big = Topology::new(64, 64, 2, 16);
         let small = Topology::new(4, 32, 2, 16);
-        ws.ensure(&big, 4, ExecPath::Reference);
+        ws.ensure(&big, 4, ExecPath::Reference, KernelTier::Scalar);
         let peak = ws.footprint_bytes();
         // One small request is not enough: capacity must survive a blip
         // (the next big request would otherwise reallocate everything).
-        ws.ensure(&small, 1, ExecPath::Reference);
+        ws.ensure(&small, 1, ExecPath::Reference, KernelTier::Scalar);
         assert_eq!(ws.footprint_bytes(), peak);
-        ws.ensure(&big, 4, ExecPath::Reference);
+        ws.ensure(&big, 4, ExecPath::Reference, KernelTier::Scalar);
         assert_eq!(ws.footprint_bytes(), peak, "big demand resets the streak");
         // A sustained window of small demand releases the surplus.
         for _ in 0..SHRINK_WINDOW {
-            ws.ensure(&small, 1, ExecPath::Reference);
+            ws.ensure(&small, 1, ExecPath::Reference, KernelTier::Scalar);
         }
         let shrunk = ws.footprint_bytes();
         assert!(shrunk < peak, "decay must release the high-water surplus");
@@ -303,7 +338,7 @@ mod tests {
         // Post-shrink steady state is warm again: zero allocations.
         let fp = ws.footprint();
         for _ in 0..4 {
-            ws.ensure(&small, 1, ExecPath::Reference);
+            ws.ensure(&small, 1, ExecPath::Reference, KernelTier::Scalar);
         }
         assert_eq!(ws.footprint(), fp, "post-shrink warm request reallocated");
     }
@@ -315,10 +350,10 @@ mod tests {
         // warm contract is unaffected by the policy.
         let mut ws = Workspace::new();
         let topo = Topology::new(16, 64, 2, 16);
-        ws.ensure(&topo, 2, ExecPath::Reference);
+        ws.ensure(&topo, 2, ExecPath::Reference, KernelTier::Scalar);
         let fp = ws.footprint();
         for _ in 0..(2 * SHRINK_WINDOW) {
-            ws.ensure(&topo, 2, ExecPath::Reference);
+            ws.ensure(&topo, 2, ExecPath::Reference, KernelTier::Scalar);
             assert_eq!(ws.footprint(), fp);
         }
     }

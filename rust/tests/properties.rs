@@ -417,6 +417,223 @@ fn fused_workspace_footprint_is_sl_times_ts() {
     );
 }
 
+// --------------------------------------- kernel tiers / int8 GEMM (PR 7)
+
+#[test]
+fn prop_int8_gemm_bit_identical_across_tiers() {
+    // DESIGN.md §14: every integer GEMM tier computes the same exact
+    // i32 accumulators — the true int8×int8 kernel, its AVX2 version,
+    // and both widened-i16 kernels all equal the direct product — over
+    // random shapes (k/n tails off the 16- and 4-lane grids) and random
+    // sub-slice offsets (unaligned SIMD loads).
+    use famous::fixed::{
+        matmul_i32_i8_into, matmul_i32_i8_scalar_into, matmul_i32_widened_into,
+        matmul_i32_widened_simd_into, widen_i16,
+    };
+    run("int8 gemm == widened == direct", 200, |g: &mut Gen| {
+        let m = g.usize_in(1, 6);
+        let k = g.usize_in(1, 70);
+        let n = g.usize_in(1, 9);
+        let off_a = g.usize_in(0, 3);
+        let off_b = g.usize_in(0, 3);
+        let a_buf = g.vec_i8(off_a + m * k);
+        let b_buf = g.vec_i8(off_b + n * k);
+        let (a8, b8) = (&a_buf[off_a..], &b_buf[off_b..]);
+        let want = matmul_i32(
+            &FxMatrix { rows: m, cols: k, data: a8.to_vec() },
+            &FxMatrix { rows: n, cols: k, data: b8.to_vec() },
+        );
+        let shape = format!("m={m} k={k} n={n} off=({off_a},{off_b})");
+        let mut got = vec![0i32; m * n];
+        matmul_i32_i8_scalar_into(a8, b8, m, k, n, &mut got);
+        assert_eq!(got, want, "i8 scalar diverged ({shape})");
+        got.fill(0);
+        matmul_i32_i8_into(a8, b8, m, k, n, &mut got);
+        assert_eq!(got, want, "i8 dispatched diverged ({shape})");
+        let (a16, b16) = (widen_i16(a8), widen_i16(b8));
+        got.fill(0);
+        matmul_i32_widened_into(&a16, &b16, m, k, n, &mut got);
+        assert_eq!(got, want, "widened scalar diverged ({shape})");
+        got.fill(0);
+        matmul_i32_widened_simd_into(&a16, &b16, m, k, n, &mut got);
+        assert_eq!(got, want, "widened simd diverged ({shape})");
+    });
+}
+
+#[test]
+fn prop_i8_saturation_roundtrip() {
+    // The operand snap saturates instead of wrapping: values past the
+    // grid edges land exactly on ±extreme levels, grid extremes
+    // round-trip exactly, and fake-quantization is idempotent (the
+    // datapath sees a fixed point of the snap).
+    run("i8 saturation", 300, |g: &mut Gen| {
+        let scale = g.f64_in(1e-3, 2.0) as f32;
+        let q = Quantizer::new(scale);
+        let v = g.f64_in(-600.0, 600.0) as f32;
+        if v >= 128.0 * scale {
+            assert_eq!(q.quantize(v), 127, "positive overflow must saturate (v={v})");
+        }
+        if v <= -129.0 * scale {
+            assert_eq!(q.quantize(v), -128, "negative overflow must saturate (v={v})");
+        }
+        assert_eq!(q.fake_quant(127.0 * scale), 127.0 * scale);
+        assert_eq!(q.fake_quant(-128.0 * scale), -128.0 * scale);
+        let fq = q.fake_quant(v);
+        assert_eq!(q.fake_quant(fq), fq, "fake_quant must be idempotent (v={v})");
+        assert!(fq.abs() <= 128.0 * scale);
+    });
+}
+
+#[test]
+fn prop_kernel_tiers_agree_end_to_end() {
+    // DESIGN.md §14 on random topologies: the scalar oracle and the
+    // SIMD tiers agree within the documented tier tolerance on both
+    // attention paths; the two AVX2 tiers (identical integer
+    // projections, same f32 code) are bit-identical to each other; and
+    // every tier is bit-deterministic across repeat runs.
+    use famous::sim::{fused, ExecPath, KernelTier, PreparedWeights};
+    use famous::testdata::MhaInputs;
+    run("tiers agree end-to-end", 20, |g: &mut Gen| {
+        let heads = *g.pick(&[1usize, 2, 4]);
+        let dk = *g.pick(&[4usize, 8, 16]);
+        let dm = heads * dk;
+        let sl = g.usize_in(2, 20);
+        let topo = Topology::new(sl, dm, heads, dm);
+        let mut inputs = MhaInputs::generate(&topo);
+        for _ in 0..4 {
+            let i = g.usize_in(0, inputs.x.len() - 1);
+            inputs.x[i] = g.f64_in(-1.0, 1.0) as f32;
+        }
+        let mut cfg = SimConfig::u55c();
+        cfg.causal = g.bool();
+        let path = if g.bool() { ExecPath::FusedTiled } else { ExecPath::Reference };
+        let prepared: Vec<_> = KernelTier::ALL
+            .into_iter()
+            .map(|t| PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, t))
+            .collect();
+        let x = prepared[0].quantize_input(&inputs.x);
+        let outs: Vec<Vec<f32>> = prepared.iter().map(|p| p.execute_path(&x, path)).collect();
+        let mag = outs[0].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let tol = fused::tier_tolerance(famous::sim::SoftmaxKind::Exact, sl, dk, mag);
+        for (tier, out) in KernelTier::ALL.into_iter().zip(&outs).skip(1) {
+            for (a, b) in outs[0].iter().zip(out) {
+                assert!((a - b).abs() <= tol, "{topo} {tier}: {a} vs {b} (tol {tol:.2e})");
+            }
+        }
+        if KernelTier::Simd.is_available() {
+            assert_eq!(bits(&outs[1]), bits(&outs[2]), "{topo}: simd != simd-int8");
+        } else {
+            // Clamped hosts run the scalar kernels under every label.
+            assert_eq!(bits(&outs[0]), bits(&outs[1]), "{topo}: clamped simd");
+            assert_eq!(bits(&outs[0]), bits(&outs[2]), "{topo}: clamped simd-int8");
+        }
+        for (p, out) in prepared.iter().zip(&outs) {
+            assert_eq!(
+                bits(&p.execute_path(&x, path)),
+                bits(out),
+                "{topo} {}: tier not bit-deterministic",
+                p.tier()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_int8_datapath_error_bounded_vs_f32_reference() {
+    // The end-to-end quantization-error contract (DESIGN.md §14): on the
+    // *same fake-quantized operands* the int8 datapath — whose integer
+    // projections are exact, erring only in f32 dequant/softmax — stays
+    // within the documented quant tolerance of a plain f32 attention
+    // evaluated on those operands, for every kernel tier.
+    use famous::sim::{KernelTier, PreparedWeights, SoftmaxUnit};
+    use famous::testdata::MhaInputs;
+
+    // f32 multi-head attention on fake-quantized operands, mirroring the
+    // engine's semantics: per head q = fq(x)·fq(w)ᵀ + fq(b), exact
+    // softmax over 1/√d_k-scaled scores, o = p·v, heads concatenated.
+    fn mha_f32(topo: &Topology, inputs: &MhaInputs) -> Vec<f32> {
+        let q = Quantizer::grid64();
+        let (sl, dm, h, dk) = (topo.seq_len, topo.d_model, topo.heads, topo.d_k());
+        let scale = 1.0 / (dk as f32).sqrt();
+        let fq = |v: &[f32]| -> Vec<f32> { v.iter().map(|&x| q.fake_quant(x)).collect() };
+        let x = fq(&inputs.x);
+        let unit = SoftmaxUnit::exact();
+        let mut out = vec![0f32; sl * dm];
+        for head in 0..h {
+            let proj = |w: &[f32], b: &[f32]| -> Vec<f32> {
+                let w = fq(&w[head * dk * dm..(head + 1) * dk * dm]);
+                let b = fq(&b[head * dk..(head + 1) * dk]);
+                let mut m = vec![0f32; sl * dk];
+                for i in 0..sl {
+                    for c in 0..dk {
+                        let mut acc = 0f32;
+                        for l in 0..dm {
+                            acc += x[i * dm + l] * w[c * dm + l];
+                        }
+                        m[i * dk + c] = acc + b[c];
+                    }
+                }
+                m
+            };
+            let qm = proj(&inputs.wq, &inputs.bq);
+            let km = proj(&inputs.wk, &inputs.bk);
+            let vm = proj(&inputs.wv, &inputs.bv);
+            let mut p = vec![0f32; sl * sl];
+            for i in 0..sl {
+                for j in 0..sl {
+                    let mut acc = 0f32;
+                    for c in 0..dk {
+                        acc += qm[i * dk + c] * km[j * dk + c];
+                    }
+                    p[i * sl + j] = acc * scale;
+                }
+            }
+            unit.rows(&mut p, sl, sl);
+            for i in 0..sl {
+                for c in 0..dk {
+                    let mut acc = 0f32;
+                    for j in 0..sl {
+                        acc += p[i * sl + j] * vm[j * dk + c];
+                    }
+                    out[i * dm + head * dk + c] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    run("int8 datapath ~= f32 reference", 15, |g: &mut Gen| {
+        let heads = *g.pick(&[1usize, 2, 4]);
+        let dk = *g.pick(&[4usize, 8]);
+        let dm = heads * dk;
+        let sl = g.usize_in(2, 16);
+        let topo = Topology::new(sl, dm, heads, dm);
+        let mut inputs = MhaInputs::generate(&topo);
+        for _ in 0..4 {
+            let i = g.usize_in(0, inputs.x.len() - 1);
+            inputs.x[i] = g.f64_in(-1.5, 1.5) as f32;
+            let j = g.usize_in(0, inputs.wq.len() - 1);
+            inputs.wq[j] = g.f64_in(-1.0, 1.0) as f32;
+        }
+        let want = mha_f32(&topo, &inputs);
+        let mag = want.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let kind = famous::sim::SoftmaxKind::Exact;
+        let tol = famous::sim::tier_tolerance(kind, sl, dk, mag)
+            .max(famous::sim::fused::quant_tolerance(kind, sl, dm, mag));
+        for tier in KernelTier::ALL {
+            let prepared =
+                PreparedWeights::prepare_with_tier(&SimConfig::u55c(), &topo, &inputs, tier);
+            let got = prepared.execute(&prepared.quantize_input(&inputs.x));
+            for (i, (w, g2)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    (w - g2).abs() <= tol,
+                    "{topo} {tier}: datapath {g2} vs f32 {w} at {i} (tol {tol:.2e})"
+                );
+            }
+        }
+    });
+}
+
 #[test]
 fn warm_workspace_requests_allocate_nothing() {
     // A second same-topology request must leave every buffer pointer and
