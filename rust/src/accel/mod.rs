@@ -316,6 +316,13 @@ impl FamousAccelerator {
     pub fn path_counters(&self) -> PathCounters {
         self.backend.path_counters()
     }
+
+    /// Per-request ABFT verdicts of the most recent run/run_batch call
+    /// (`true` = corrupt), request order; empty for engines without an
+    /// integrity layer (DESIGN.md §15).
+    pub fn last_integrity(&self) -> Vec<bool> {
+        self.backend.last_integrity()
+    }
 }
 
 #[cfg(test)]

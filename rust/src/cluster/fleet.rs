@@ -42,6 +42,22 @@ pub struct RouterTotals {
     pub warm_hits: u64,
     /// Requests no device (even sharded) could admit.
     pub rejected: u64,
+    /// Requests bounced out under [`super::router::SaturationPolicy::Typed`]
+    /// after exhausting the bounded-backoff retry budget (DESIGN.md §15).
+    pub saturated: u64,
+    /// ABFT checksum mismatches detected fleet-wide (each is one
+    /// corrupted device invocation that was *not* served silently).
+    pub integrity_detected: u64,
+    /// Detections healed by a local scrub-retry on the same device
+    /// (transient fault; re-prepare restored clean weights).
+    pub integrity_recovered: u64,
+    /// Corrupt responses healed by re-executing the request on a
+    /// different device (persistent fault on the original).
+    pub integrity_rerouted: u64,
+    /// Corrupt responses the router could not heal (no spare device /
+    /// retry budget exhausted) — surfaced to the caller flagged, never
+    /// silently.
+    pub integrity_failed: u64,
     /// Modeled GOP dispatched (paper op-counting convention, per
     /// sub-request — DESIGN.md §5).
     pub total_gop: f64,
@@ -403,6 +419,24 @@ impl FleetStats {
             self.totals.warm_hits,
             self.totals.retries
         ));
+        if self.totals.integrity_detected > 0 || self.totals.saturated > 0 {
+            out.push_str(&format!(
+                "integrity: {} detected ({} scrubbed locally, {} rerouted, {} unhealed); \
+                 {} saturated\n",
+                self.totals.integrity_detected,
+                self.totals.integrity_recovered,
+                self.totals.integrity_rerouted,
+                self.totals.integrity_failed,
+                self.totals.saturated
+            ));
+            if self.totals.integrity_failed > 0 {
+                out.push_str(&format!(
+                    "WARNING: {} corrupt response(s) served flagged — no spare device could \
+                     re-execute them\n",
+                    self.totals.integrity_failed
+                ));
+            }
+        }
         let slo = &self.totals.slo;
         if slo.any() {
             let mut q = Table::new(
@@ -470,7 +504,7 @@ mod tests {
             warm_hits: 1,
             rejected: 0,
             total_gop: 2.0,
-            slo: SloStats::default(),
+            ..RouterTotals::default()
         };
         FleetStats::assemble(&specs, coord, totals)
     }
@@ -587,6 +621,23 @@ mod tests {
         assert!(r.contains("QoS"), "{r}");
         assert!(r.contains("high"), "{r}");
         assert!(r.contains("deadline miss rate"), "{r}");
+    }
+
+    #[test]
+    fn render_integrity_line_only_when_detected() {
+        let mut f = two_device_fleet();
+        assert!(!f.render().contains("integrity"), "clean fleet hides the integrity line");
+        f.totals.integrity_detected = 3;
+        f.totals.integrity_recovered = 2;
+        f.totals.integrity_rerouted = 1;
+        let r = f.render();
+        assert!(
+            r.contains("integrity: 3 detected (2 scrubbed locally, 1 rerouted, 0 unhealed)"),
+            "{r}"
+        );
+        assert!(!r.contains("WARNING"), "healed corruption is not a warning");
+        f.totals.integrity_failed = 1;
+        assert!(f.render().contains("WARNING: 1 corrupt response(s)"));
     }
 
     #[test]

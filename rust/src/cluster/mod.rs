@@ -55,7 +55,8 @@ pub use fleet::{DeviceHealth, DeviceReport, FleetStats, SloStats};
 pub use loadgen::{Arrival, ArrivalProcess, LoadGen, LoadGenConfig, MmppFit, QosClass};
 pub use placement::{PlacementPlan, PlacementPlanner, TopologyPlacement, WorkloadProfile};
 pub use router::{
-    Cluster, ClusterConfig, ClusterHandle, ClusterResponse, QosOutcome, QosPolicy, ShedNotice,
+    bounce_backoff, Cluster, ClusterConfig, ClusterHandle, ClusterResponse, QosOutcome, QosPolicy,
+    SaturationNotice, SaturationPolicy, ShedNotice,
 };
 pub use shard::ShardPlan;
 pub use telemetry::{
@@ -110,6 +111,17 @@ impl DeviceSpec {
     pub fn with_silent_derate(mut self, factor: f64) -> Self {
         assert!(factor > 0.0 && factor <= 1.0, "derate factor must be in (0, 1]");
         self.silent_derate = factor;
+        self
+    }
+
+    /// Seed this device with a deterministic SEU injection plan
+    /// (DESIGN.md §15) — the data-corruption sibling of
+    /// [`Self::with_silent_derate`]'s silent clock drift.  The plan
+    /// rides on the device's `SimConfig` into its backend, so the
+    /// router's advertised model stays oblivious; detection is the ABFT
+    /// layer's job.
+    pub fn with_fault_plan(mut self, plan: crate::sim::FaultPlan) -> Self {
+        self.sim.fault_plan = Some(plan);
         self
     }
 

@@ -37,10 +37,11 @@ use super::DeviceSpec;
 use crate::accel::{FamousAccelerator, DEFAULT_PROGRAM_CACHE};
 use crate::config::Topology;
 use crate::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorStats, Priority, Request, Response, SchedulerConfig,
-    Server, ServerConfig, ServerHandle, SubmitError,
+    BatchPolicy, Coordinator, CoordinatorStats, IntegrityVerdict, Priority, Request, Response,
+    SchedulerConfig, Server, ServerConfig, ServerHandle, SubmitError,
 };
 use crate::metrics::OpCount;
+use crate::rng::XorShift64;
 use anyhow::{anyhow, bail, Result};
 use std::sync::{Arc, Mutex};
 
@@ -60,6 +61,20 @@ pub enum QosPolicy {
     SlackEdf,
 }
 
+/// What the router does when a request exhausts its bounce budget
+/// (`max_retries` Busy hand-backs) with every candidate still full.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SaturationPolicy {
+    /// Block for queue space on the best candidate — backpressure
+    /// propagates to the client and no request is ever dropped.
+    #[default]
+    Block,
+    /// Hand the request back as a typed [`QosOutcome::Saturated`]
+    /// instead of blocking, so the caller decides (re-submit, downgrade,
+    /// drop).  Pairs with the bounded-backoff bounce loop.
+    Typed,
+}
+
 /// Cluster tuning.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterConfig {
@@ -73,6 +88,8 @@ pub struct ClusterConfig {
     pub qos: QosPolicy,
     /// Telemetry windowing/ring tuning (DESIGN.md §13).
     pub telemetry: TelemetryConfig,
+    /// Bounce-budget exhaustion behavior (DESIGN.md §15).
+    pub saturation: SaturationPolicy,
 }
 
 impl Default for ClusterConfig {
@@ -83,6 +100,7 @@ impl Default for ClusterConfig {
             max_retries: 3,
             qos: QosPolicy::Affinity,
             telemetry: TelemetryConfig::default(),
+            saturation: SaturationPolicy::Block,
         }
     }
 }
@@ -130,6 +148,13 @@ pub struct ClusterResponse {
     pub completed_ms: f64,
     /// `completed_ms > deadline_ms` (always false for best-effort).
     pub deadline_missed: bool,
+    /// ABFT integrity verdict for the served output (DESIGN.md §15):
+    /// `Clean` (every checksum held), `Recovered` (a breach was detected
+    /// and a scrub-retry or cross-device re-execution produced this
+    /// verified-clean output), or `Corrupt` (containment failed — the
+    /// output is flagged, never silently served).  Worst-of for sharded
+    /// requests.
+    pub verdict: IntegrityVerdict,
 }
 
 /// Outcome of a QoS-routed request: served, or explicitly shed at
@@ -141,18 +166,26 @@ pub struct ClusterResponse {
 pub enum QosOutcome {
     Served(ClusterResponse),
     Shed(ShedNotice),
+    /// The request exhausted its bounce budget with every candidate's
+    /// ingress still full ([`SaturationPolicy::Typed`] only — under the
+    /// default `Block` policy the router blocks instead).
+    Saturated(SaturationNotice),
 }
 
 impl QosOutcome {
     pub fn served(self) -> Option<ClusterResponse> {
         match self {
             QosOutcome::Served(r) => Some(r),
-            QosOutcome::Shed(_) => None,
+            QosOutcome::Shed(_) | QosOutcome::Saturated(_) => None,
         }
     }
 
     pub fn is_shed(&self) -> bool {
         matches!(self, QosOutcome::Shed(_))
+    }
+
+    pub fn is_saturated(&self) -> bool {
+        matches!(self, QosOutcome::Saturated(_))
     }
 }
 
@@ -167,9 +200,28 @@ pub struct ShedNotice {
     pub predicted_completion_ms: f64,
 }
 
+/// Why a request was handed back at saturation (never silent).
+#[derive(Clone, Debug)]
+pub struct SaturationNotice {
+    pub id: u64,
+    pub priority: Priority,
+    /// Busy hand-backs absorbed before giving up.
+    pub bounces: u64,
+}
+
 struct DeviceEndpoint {
     spec: DeviceSpec,
-    handle: ServerHandle,
+    /// Behind a mutex so [`Cluster::restart_device`] can swap in a fresh
+    /// server's handle (undrain) while client threads route.  Callers
+    /// clone the handle out in a statement-scoped lock — never hold it
+    /// across a blocking submit.
+    handle: Mutex<ServerHandle>,
+}
+
+impl DeviceEndpoint {
+    fn handle(&self) -> ServerHandle {
+        self.handle.lock().unwrap().clone()
+    }
 }
 
 /// Router-side mirror of one device's topology-keyed `ProgramCache`
@@ -247,6 +299,7 @@ struct Shared {
     plan: PlacementPlan,
     max_retries: usize,
     qos: QosPolicy,
+    saturation: SaturationPolicy,
     state: Mutex<RouterState>,
     telemetry: Mutex<FrameAggregator>,
 }
@@ -260,6 +313,10 @@ pub struct Cluster {
     /// Devices killed via [`Cluster::fail_device`] (reported `Failed`,
     /// not `Stopped`).
     failed: Vec<bool>,
+    /// Boot configuration, kept so [`Cluster::restart_device`] can
+    /// rebuild a drained device's server exactly as `start` did.
+    scheduler: SchedulerConfig,
+    server_cfg: ServerConfig,
     /// Threshold rules + audit log, evaluated over sealed frames by
     /// [`Cluster::pump_control`].
     control: ControlPlane,
@@ -305,7 +362,7 @@ impl Cluster {
                 },
                 config.server,
             );
-            endpoints.push(DeviceEndpoint { spec, handle: server.handle() });
+            endpoints.push(DeviceEndpoint { spec, handle: Mutex::new(server.handle()) });
             servers.push(Some(server));
         }
         let n = endpoints.len();
@@ -314,6 +371,7 @@ impl Cluster {
             plan,
             max_retries: config.max_retries,
             qos: config.qos,
+            saturation: config.saturation,
             state: Mutex::new(RouterState {
                 last_topology: vec![None; n],
                 backlog_ms: vec![0.0; n],
@@ -329,6 +387,8 @@ impl Cluster {
             servers,
             early_stats: vec![None; n],
             failed: vec![false; n],
+            scheduler: config.scheduler,
+            server_cfg: config.server,
             control: ControlPlane::default(),
         })
     }
@@ -382,6 +442,52 @@ impl Cluster {
         st.last_topology[id] = None;
         st.down[id] = true;
         st.warm[id].clear();
+        drop(st);
+        true
+    }
+
+    /// Restore a drained (or failed) device: boot a fresh server from
+    /// the device's original spec — same factory, scheduler, and queue
+    /// config as [`Cluster::start`], including any silent derate or
+    /// fault plan the spec carries — swap its handle into the routing
+    /// table, and clear the down flag so ranking sees live capacity
+    /// again.  The restarted worker begins with an empty queue, cold
+    /// program cache, and a re-prepared (fresh-epoch) weight stage.
+    /// Returns `false` if the device is already live.  This is the
+    /// execution hook behind [`ControlAction::UndrainDevice`]
+    /// (DESIGN.md §15).
+    pub fn restart_device(&mut self, id: usize) -> bool {
+        let Some(slot) = self.servers.get_mut(id) else {
+            return false;
+        };
+        if slot.is_some() {
+            return false;
+        }
+        let spec = self.shared.devices[id].spec.clone();
+        let mut sim = spec.sim.clone();
+        sim.build.clock_hz *= spec.silent_derate;
+        let sched = self.scheduler;
+        let server = Server::start(
+            move || {
+                let accel = FamousAccelerator::with_sim_datapath(sim);
+                Coordinator::new(accel, sched)
+            },
+            self.server_cfg,
+        );
+        // Swap the routing handle in its own statement-scoped lock
+        // (never nested with the state lock — rank() orders state →
+        // handle).
+        *self.shared.devices[id].handle.lock().unwrap() = server.handle();
+        *slot = Some(server);
+        self.failed[id] = false;
+        let mut st = self.shared.state.lock().unwrap();
+        st.down[id] = false;
+        st.last_topology[id] = None;
+        st.warm[id].clear();
+        // Fresh worker, empty queue: its completion horizon restarts at
+        // the clock epoch (queue delay is max(backlog, arrival) − arrival,
+        // so a zero horizon just means "no queue").
+        st.backlog_ms[id] = 0.0;
         drop(st);
         true
     }
@@ -455,6 +561,17 @@ impl Cluster {
                 format!("admission margin for {} set to {margin_ms} ms", priority.label())
             }
             ControlAction::Alert => "alert".to_string(),
+            ControlAction::UndrainDevice => {
+                let id = firing.device.expect("UndrainDevice rules are per-device scoped");
+                if self.restart_device(id) {
+                    // Give drain rules a fresh observation window on the
+                    // restored device instead of a stale latched streak.
+                    self.control.reset_device(id);
+                    format!("restored device {id}")
+                } else {
+                    format!("device {id} already live")
+                }
+            }
         }
     }
 
@@ -657,6 +774,11 @@ impl ClusterHandle {
                 s.deadline_ms,
                 s.predicted_completion_ms
             ),
+            QosOutcome::Saturated(s) => bail!(
+                "request {} saturated: every candidate ingress full after {} bounces",
+                s.id,
+                s.bounces
+            ),
         }
     }
 
@@ -716,7 +838,17 @@ impl ClusterHandle {
         }
         let resp = match shard {
             None => {
-                let d = self.call_single(req, None)?;
+                let id = req.id;
+                let d = match self.call_single_verified(req, None)? {
+                    SingleOutcome::Done(d) => d,
+                    SingleOutcome::Saturated { bounces } => {
+                        return Ok(QosOutcome::Saturated(SaturationNotice {
+                            id,
+                            priority: meta.priority,
+                            bounces,
+                        }));
+                    }
+                };
                 let missed = meta.deadline_ms.map(|dl| d.done_ms > dl);
                 let mut st = self.shared.state.lock().unwrap();
                 st.totals.completed += 1;
@@ -752,9 +884,13 @@ impl ClusterHandle {
                     deadline_ms: meta.deadline_ms,
                     completed_ms: d.done_ms,
                     deadline_missed: missed.unwrap_or(false),
+                    verdict: d.resp.verdict,
                 }
             }
-            Some(s) => self.call_sharded(req, s, &meta)?,
+            Some(s) => match self.call_sharded(req, s, &meta)? {
+                QosOutcome::Served(r) => r,
+                other => return Ok(other),
+            },
         };
         Ok(QosOutcome::Served(resp))
     }
@@ -886,7 +1022,7 @@ impl ClusterHandle {
                     hot,
                     warm: !hot && st.warm[d.spec.id].contains(topo),
                     preference: position(d.spec.id),
-                    pending: d.handle.pending(),
+                    pending: d.handle().pending(),
                 }
             })
             .collect();
@@ -894,8 +1030,13 @@ impl ClusterHandle {
         order_candidates(views)
     }
 
-    /// Route one single-device request with backpressure failover.
-    fn call_single(&self, req: Request, exclude: Option<usize>) -> Result<Dispatched> {
+    /// Route one single-device request with backpressure failover:
+    /// Busy hand-backs walk the candidate ranking with bounded
+    /// exponential backoff + seeded jitter between probes, up to
+    /// `max_retries` bounces; exhaustion either blocks on the best
+    /// candidate ([`SaturationPolicy::Block`]) or hands the request
+    /// back typed ([`SaturationPolicy::Typed`]).
+    fn call_single(&self, req: Request, exclude: Option<usize>) -> Result<SingleOutcome> {
         let topo = req.topology.clone();
         let meta = QosMeta::of(&req);
         let mut candidates = self.rank(&topo, exclude, Some(&meta));
@@ -914,6 +1055,10 @@ impl ClusterHandle {
         let mut bounced: Vec<usize> = Vec::new();
         loop {
             if bounces >= self.shared.max_retries as u64 {
+                if self.shared.saturation == SaturationPolicy::Typed {
+                    self.shared.state.lock().unwrap().totals.saturated += 1;
+                    return Ok(SingleOutcome::Saturated { bounces });
+                }
                 // Enough spinning: block for queue space on the best
                 // candidate (backpressure propagates to the client).
                 // Prefer one that did not just bounce us — a bounce can
@@ -925,14 +1070,16 @@ impl ClusterHandle {
                     .find(|d| !bounced.contains(d))
                     .unwrap_or(candidates[0]);
                 let resp = self.shared.devices[dev]
-                    .handle
+                    .handle()
                     .call_blocking(req)
                     .map_err(|e| anyhow!("device {dev}: {e}"))?;
-                return Ok(self.record(resp, dev, &topo, &meta, bounces));
+                return Ok(SingleOutcome::Done(self.record(resp, dev, &topo, &meta, bounces)));
             }
             let dev = candidates[idx % candidates.len()];
-            match self.shared.devices[dev].handle.try_call(req) {
-                Ok(resp) => return Ok(self.record(resp, dev, &topo, &meta, bounces)),
+            match self.shared.devices[dev].handle().try_call(req) {
+                Ok(resp) => {
+                    return Ok(SingleOutcome::Done(self.record(resp, dev, &topo, &meta, bounces)))
+                }
                 Err(SubmitError::Busy(returned)) => {
                     req = returned;
                     bounces += 1;
@@ -941,19 +1088,92 @@ impl ClusterHandle {
                         bounced.push(dev);
                     }
                     self.shared.state.lock().unwrap().totals.retries += 1;
+                    // Real-time backoff before the next probe: the
+                    // virtual-clock latency model is untouched, but the
+                    // wall-clock spin on a saturated fleet is bounded
+                    // and decorrelated across clients.
+                    std::thread::sleep(bounce_backoff(bounces, req.id));
                 }
                 Err(SubmitError::Failed(e)) => bail!("device {dev}: {e}"),
             }
         }
     }
 
-    /// Two half-requests on (preferably) two devices, concat on the host.
-    fn call_sharded(
-        &self,
-        req: Request,
-        shard: ShardPlan,
-        meta: &QosMeta,
-    ) -> Result<ClusterResponse> {
+    /// [`Self::call_single`] plus the cross-device half of the ABFT
+    /// recovery ladder (DESIGN.md §15).  The coordinator already
+    /// scrub-retried locally; a response still flagged `Corrupt` carries
+    /// its operands back, so the router re-executes it on another device
+    /// (bounded by `max_retries` hops).  A reroute that comes back clean
+    /// is relabeled `Recovered`; if every hop fails, the corrupt output
+    /// is surfaced with its `Corrupt` verdict — flagged, never silent.
+    fn call_single_verified(&self, req: Request, exclude: Option<usize>) -> Result<SingleOutcome> {
+        let topo = req.topology.clone();
+        let meta = QosMeta::of(&req);
+        let id = req.id;
+        let mut cur = match self.call_single(req, exclude)? {
+            SingleOutcome::Done(d) => d,
+            sat => return Ok(sat),
+        };
+        let mut rerouted = false;
+        let mut hops = 0usize;
+        while cur.resp.verdict == IntegrityVerdict::Corrupt {
+            let inputs = cur.resp.returned_inputs.take();
+            let budget = hops < self.shared.max_retries.max(1);
+            let (Some(inputs), true) = (inputs, budget) else {
+                // Containment failed: count it, flag it, surface it.
+                self.shared.state.lock().unwrap().totals.integrity_failed += 1;
+                self.telemetry_event(TelemetryEvent::Integrity {
+                    t_ms: cur.done_ms,
+                    device: cur.device,
+                    contained: false,
+                });
+                return Ok(SingleOutcome::Done(cur));
+            };
+            hops += 1;
+            let bad = cur.device;
+            let retry = Request::new(id, topo.clone(), *inputs).with_qos(
+                meta.priority,
+                meta.arrival_ms,
+                meta.deadline_ms,
+            );
+            match self.call_single(retry, Some(bad)) {
+                Ok(SingleOutcome::Done(next)) => {
+                    // The breach on `bad` was contained by re-executing
+                    // elsewhere (whether or not the new device is clean
+                    // — its own verdict gets its own round).
+                    self.shared.state.lock().unwrap().totals.integrity_rerouted += 1;
+                    self.telemetry_event(TelemetryEvent::Integrity {
+                        t_ms: next.done_ms,
+                        device: bad,
+                        contained: true,
+                    });
+                    rerouted = true;
+                    cur = next;
+                }
+                Ok(SingleOutcome::Saturated { .. }) | Err(_) => {
+                    // No capacity (or no device) to re-execute on: the
+                    // original corrupt output is all we have.
+                    self.shared.state.lock().unwrap().totals.integrity_failed += 1;
+                    self.telemetry_event(TelemetryEvent::Integrity {
+                        t_ms: cur.done_ms,
+                        device: cur.device,
+                        contained: false,
+                    });
+                    return Ok(SingleOutcome::Done(cur));
+                }
+            }
+        }
+        if rerouted {
+            cur.resp.verdict = IntegrityVerdict::Recovered;
+        }
+        Ok(SingleOutcome::Done(cur))
+    }
+
+    /// Two half-requests on (preferably) two devices, concat on the
+    /// host.  Either half saturating (typed policy only) saturates the
+    /// whole request — the other half's work is done but its output is
+    /// discarded, and the combined bounce count rides the notice.
+    fn call_sharded(&self, req: Request, shard: ShardPlan, meta: &QosMeta) -> Result<QosOutcome> {
         let (lo, hi) = shard.split_inputs(&req.inputs)?;
         let req_lo = Request::new(req.id, shard.half.clone(), lo)
             .with_qos(req.priority, req.arrival_ms, req.deadline_ms);
@@ -963,11 +1183,28 @@ impl ClusterHandle {
         // the halves actually run concurrently when the fleet allows.
         let low_primary = self.rank(&shard.half, None, Some(meta)).first().copied();
         let other = self.clone();
-        let hi_worker = std::thread::spawn(move || other.call_single(req_hi, low_primary));
-        let lo_result = self.call_single(req_lo, None);
+        let hi_worker =
+            std::thread::spawn(move || other.call_single_verified(req_hi, low_primary));
+        let lo_result = self.call_single_verified(req_lo, None);
         let hi_result =
             hi_worker.join().map_err(|_| anyhow!("shard worker thread panicked"))?;
-        let (lo, hi) = (lo_result?, hi_result?);
+        let (lo, hi) = match (lo_result?, hi_result?) {
+            (SingleOutcome::Done(lo), SingleOutcome::Done(hi)) => (lo, hi),
+            (lo, hi) => {
+                let bounces = [&lo, &hi]
+                    .iter()
+                    .map(|o| match o {
+                        SingleOutcome::Done(d) => d.bounces,
+                        SingleOutcome::Saturated { bounces } => *bounces,
+                    })
+                    .sum::<u64>();
+                return Ok(QosOutcome::Saturated(SaturationNotice {
+                    id: req.id,
+                    priority: meta.priority,
+                    bounces,
+                }));
+            }
+        };
         let output = shard.concat_outputs(&lo.resp.output, &hi.resp.output)?;
         let fabric_ms = lo.resp.fabric_ms.max(hi.resp.fabric_ms);
         let gop = 2.0 * OpCount::paper_convention(&shard.half);
@@ -991,7 +1228,17 @@ impl ClusterHandle {
                 DeviceTouch { device: hi.device, heat: hi.heat, fused },
             ],
         });
-        Ok(ClusterResponse {
+        // Worst-of verdict: a corrupt half corrupts the concat.
+        let verdict = match (lo.resp.verdict, hi.resp.verdict) {
+            (IntegrityVerdict::Corrupt, _) | (_, IntegrityVerdict::Corrupt) => {
+                IntegrityVerdict::Corrupt
+            }
+            (IntegrityVerdict::Recovered, _) | (_, IntegrityVerdict::Recovered) => {
+                IntegrityVerdict::Recovered
+            }
+            _ => IntegrityVerdict::Clean,
+        };
+        Ok(QosOutcome::Served(ClusterResponse {
             id: req.id,
             topology: shard.full.clone(),
             output,
@@ -1004,7 +1251,8 @@ impl ClusterHandle {
             deadline_ms: meta.deadline_ms,
             completed_ms: done,
             deadline_missed: missed.unwrap_or(false),
-        })
+            verdict,
+        }))
     }
 
     /// Book-keeping after a device served a (sub-)request: affinity
@@ -1042,6 +1290,30 @@ impl ClusterHandle {
         st.totals.total_gop += OpCount::paper_convention(topo);
         let done = st.backlog_ms[dev].max(meta.arrival_ms) + resp.fabric_ms;
         st.backlog_ms[dev] = done;
+        // ABFT verdict accounting (DESIGN.md §15).  A locally recovered
+        // breach (coordinator scrub-retry) is fully resolved here; a
+        // still-corrupt response is only *detected* here — containment
+        // is decided by the reroute ladder in `call_single_verified`,
+        // which emits the Integrity event once the outcome is known.
+        match resp.verdict {
+            IntegrityVerdict::Clean => {}
+            IntegrityVerdict::Recovered => {
+                st.totals.integrity_detected += 1;
+                st.totals.integrity_recovered += 1;
+            }
+            IntegrityVerdict::Corrupt => {
+                st.totals.integrity_detected += 1;
+            }
+        }
+        let verdict = resp.verdict;
+        drop(st);
+        if verdict == IntegrityVerdict::Recovered {
+            self.telemetry_event(TelemetryEvent::Integrity {
+                t_ms: done,
+                device: dev,
+                contained: true,
+            });
+        }
         Dispatched { resp, device: dev, done_ms: done, heat, bounces }
     }
 }
@@ -1055,6 +1327,28 @@ struct Dispatched {
     done_ms: f64,
     heat: Heat,
     bounces: u64,
+}
+
+/// What a single-device dispatch produced: a served response, or a
+/// typed saturation hand-back ([`SaturationPolicy::Typed`]).
+enum SingleOutcome {
+    Done(Dispatched),
+    Saturated { bounces: u64 },
+}
+
+/// Bounded exponential backoff with seeded jitter for the Busy-bounce
+/// loop: 50 µs doubling per attempt, capped at 2 ms, plus up to +50%
+/// jitter drawn deterministically from the request id and attempt
+/// number (so two runs of the same trace sleep identically, and two
+/// colliding clients sleep differently).  Pure — unit-tested directly.
+pub fn bounce_backoff(attempt: u64, request_id: u64) -> std::time::Duration {
+    const BASE_US: u64 = 50;
+    const CAP_US: u64 = 2_000;
+    let exp = attempt.saturating_sub(1).min(16) as u32;
+    let base = BASE_US.saturating_mul(1u64 << exp).min(CAP_US);
+    let jitter = XorShift64::new(request_id ^ attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .below(base / 2 + 1);
+    std::time::Duration::from_micros(base + jitter)
 }
 
 /// The plan's device preference list for `topo` — including when `topo`
@@ -1450,6 +1744,7 @@ mod tests {
                 assert!(n.predicted_completion_ms > n.deadline_ms);
             }
             QosOutcome::Served(r) => panic!("expected shed, served: {r:?}"),
+            QosOutcome::Saturated(_) => panic!("Block policy never saturates"),
         }
         // High priority is never shed — it runs late instead.
         let r = h
@@ -1644,6 +1939,73 @@ mod tests {
             refold.fold(f);
         }
         assert_eq!(refold, snap.sealed);
+    }
+
+    #[test]
+    fn bounce_backoff_bounded_exponential_with_jitter() {
+        for attempt in 1..20u64 {
+            let us = bounce_backoff(attempt, 42).as_micros() as u64;
+            let base = (50u64 << (attempt - 1).min(16)).min(2_000);
+            assert!(us >= base, "attempt {attempt}: {us} µs under base {base}");
+            assert!(us <= base + base / 2, "attempt {attempt}: {us} µs over jitter cap");
+        }
+        // Deterministic for a (attempt, id) pair — two runs of the same
+        // trace sleep identically.
+        assert_eq!(bounce_backoff(3, 9), bounce_backoff(3, 9));
+    }
+
+    #[test]
+    fn restart_device_restores_routing_capacity() {
+        let t = Topology::new(64, 768, 8, 64);
+        let mut cluster = two_u55c(std::slice::from_ref(&t));
+        let h = cluster.handle();
+        let primary = h.call(req(0, &t)).unwrap().devices[0];
+        cluster.stop_device(primary).unwrap();
+        assert!(!cluster.restart_device(1 - primary), "live device must not restart");
+        assert!(cluster.restart_device(primary), "drained device restarts");
+        assert!(!cluster.restart_device(primary), "double restart is a no-op");
+        // The restored device is cold (empty horizon, no affinity): the
+        // next request ranks it exactly as it ranked at boot, so the
+        // fleet serves on — and through the restarted worker.
+        let mut seen = std::collections::HashSet::new();
+        for i in 1..6u64 {
+            seen.insert(h.call(req(i, &t)).unwrap().devices[0]);
+        }
+        assert!(seen.contains(&primary), "restarted device never re-entered routing");
+        let fleet = cluster.shutdown();
+        assert_eq!(fleet.totals.retries, 0, "router probed a dead handle");
+        assert_eq!(fleet.totals.completed, 6);
+        assert!(fleet.devices.iter().all(|d| d.health == DeviceHealth::Live));
+    }
+
+    #[test]
+    fn corrupt_device_contained_by_cross_device_reroute() {
+        let t = Topology::new(16, 256, 4, 64);
+        // Device 0 carries a persistent (stuck-at) fault plan: the
+        // coordinator's local scrub-retry re-draws the same flips, so it
+        // escalates `Corrupt` and the router must re-execute the request
+        // on device 1 from the handed-back operands.
+        let faulty =
+            DeviceSpec::u55c(0).with_fault_plan(crate::sim::FaultPlan::seu(0xBAD5EED, 0.01));
+        let cluster = Cluster::start(
+            vec![faulty, DeviceSpec::u55c(1)],
+            &WorkloadProfile::uniform(std::slice::from_ref(&t)),
+            ClusterConfig::default(),
+        )
+        .unwrap();
+        let h = cluster.handle();
+        let inputs = MhaInputs::generate(&t);
+        let mut accel = FamousAccelerator::with_sim_datapath(crate::sim::SimConfig::u55c());
+        let want = accel.run(&t, &inputs).unwrap().output;
+        let resp = h.call(Request::new(0, t.clone(), inputs)).unwrap();
+        assert_eq!(resp.verdict, IntegrityVerdict::Recovered, "reroute must relabel");
+        assert_eq!(resp.devices, vec![1], "must re-execute on the clean device");
+        assert_eq!(resp.output, want, "recovered output must be bit-identical to clean");
+        let fleet = cluster.shutdown();
+        assert!(fleet.totals.integrity_detected >= 1);
+        assert_eq!(fleet.totals.integrity_rerouted, 1);
+        assert_eq!(fleet.totals.integrity_failed, 0, "zero corrupt outputs served");
+        assert!(fleet.render().contains("integrity"), "fleet report must surface ABFT");
     }
 
     #[test]

@@ -112,6 +112,11 @@ pub enum TelemetryEvent {
     Shed { t_ms: f64, priority: Priority },
     /// No placement admits the topology (and sharding cannot split it).
     Reject { t_ms: f64 },
+    /// The ABFT layer flagged a checksum breach on `device`
+    /// (DESIGN.md §15).  `contained` means a scrub-retry or cross-device
+    /// re-execution produced a verified-clean result before the response
+    /// left the router; `false` means a corrupt output was surfaced.
+    Integrity { t_ms: f64, device: usize, contained: bool },
 }
 
 impl TelemetryEvent {
@@ -120,7 +125,8 @@ impl TelemetryEvent {
             TelemetryEvent::Ingress { t_ms, .. }
             | TelemetryEvent::Completion { t_ms, .. }
             | TelemetryEvent::Shed { t_ms, .. }
-            | TelemetryEvent::Reject { t_ms } => *t_ms,
+            | TelemetryEvent::Reject { t_ms }
+            | TelemetryEvent::Integrity { t_ms, .. } => *t_ms,
         }
     }
 }
@@ -180,6 +186,10 @@ pub struct DeviceWindow {
     pub cold: u64,
     pub fused: u64,
     pub reference: u64,
+    /// ABFT checksum breaches attributed to this device in the window.
+    pub integrity_detected: u64,
+    /// Breaches on this device that still escaped as corrupt outputs.
+    pub integrity_corrupt: u64,
     /// Router backlog-model lead over the window end at seal time:
     /// `max(0, backlog_ms − window_end)` — how far ahead of real time
     /// the device's queue horizon sits.
@@ -200,6 +210,8 @@ impl DeviceWindow {
             ("cold", Json::Num(self.cold as f64)),
             ("fused", Json::Num(self.fused as f64)),
             ("reference", Json::Num(self.reference as f64)),
+            ("integrity_detected", Json::Num(self.integrity_detected as f64)),
+            ("integrity_corrupt", Json::Num(self.integrity_corrupt as f64)),
             ("backlog_lead_ms", Json::Num(self.backlog_lead_ms)),
             ("down", Json::Bool(self.down)),
         ])
@@ -238,6 +250,14 @@ pub struct TelemetryFrame {
     /// Straggler events that arrived after their window sealed; counted
     /// here (the first frame sealed after the straggler), never silent.
     pub late_events: u64,
+    /// ABFT checksum breaches detected in the window (DESIGN.md §15).
+    pub integrity_detected: u64,
+    /// Breaches contained before the response left the router
+    /// (scrub-retry or cross-device re-execution verified clean).
+    pub integrity_recovered: u64,
+    /// Breaches that escaped as corrupt outputs (must stay zero while
+    /// recovery works).
+    pub integrity_corrupt: u64,
     pub devices: Vec<DeviceWindow>,
 }
 
@@ -296,6 +316,9 @@ impl TelemetryFrame {
             ("reference", Json::Num(self.reference as f64)),
             ("kernel_tier", Json::Str(self.kernel_tier.to_string())),
             ("late_events", Json::Num(self.late_events as f64)),
+            ("integrity_detected", Json::Num(self.integrity_detected as f64)),
+            ("integrity_recovered", Json::Num(self.integrity_recovered as f64)),
+            ("integrity_corrupt", Json::Num(self.integrity_corrupt as f64)),
             ("devices", Json::Arr(self.devices.iter().map(|d| d.to_json()).collect())),
         ])
     }
@@ -322,6 +345,9 @@ pub struct FrameTotals {
     pub fused: u64,
     pub reference: u64,
     pub late_events: u64,
+    pub integrity_detected: u64,
+    pub integrity_recovered: u64,
+    pub integrity_corrupt: u64,
     pub sojourn_count: u64,
     pub sojourn_sum_ms: f64,
     /// Per-device completed invocation counts.
@@ -348,6 +374,9 @@ impl FrameTotals {
         self.fused += f.fused;
         self.reference += f.reference;
         self.late_events += f.late_events;
+        self.integrity_detected += f.integrity_detected;
+        self.integrity_recovered += f.integrity_recovered;
+        self.integrity_corrupt += f.integrity_corrupt;
         self.sojourn_count += f.sojourn.count;
         self.sojourn_sum_ms += f.sojourn.sum_ms;
         if self.device_served.len() < f.devices.len() {
@@ -398,6 +427,9 @@ struct Partial {
     cold: u64,
     fused: u64,
     reference: u64,
+    integrity_detected: u64,
+    integrity_recovered: u64,
+    integrity_corrupt: u64,
     devices: Vec<DevPartial>,
 }
 
@@ -412,6 +444,8 @@ struct DevPartial {
     cold: u64,
     fused: u64,
     reference: u64,
+    integrity_detected: u64,
+    integrity_corrupt: u64,
 }
 
 impl Partial {
@@ -432,6 +466,9 @@ impl Partial {
             cold: 0,
             fused: 0,
             reference: 0,
+            integrity_detected: 0,
+            integrity_recovered: 0,
+            integrity_corrupt: 0,
             devices: vec![DevPartial::default(); n_devices],
         }
     }
@@ -494,6 +531,20 @@ impl Partial {
             TelemetryEvent::Reject { .. } => {
                 self.rejected += 1;
             }
+            TelemetryEvent::Integrity { device, contained, .. } => {
+                self.integrity_detected += 1;
+                if *contained {
+                    self.integrity_recovered += 1;
+                } else {
+                    self.integrity_corrupt += 1;
+                }
+                if let Some(d) = self.devices.get_mut(*device) {
+                    d.integrity_detected += 1;
+                    if !contained {
+                        d.integrity_corrupt += 1;
+                    }
+                }
+            }
         }
     }
 
@@ -520,6 +571,8 @@ impl Partial {
                 cold: d.cold,
                 fused: d.fused,
                 reference: d.reference,
+                integrity_detected: d.integrity_detected,
+                integrity_corrupt: d.integrity_corrupt,
                 backlog_lead_ms: (backlog_ms.get(i).copied().unwrap_or(0.0) - end_ms).max(0.0),
                 down: down.get(i).copied().unwrap_or(false),
             })
@@ -545,6 +598,9 @@ impl Partial {
             reference: self.reference,
             kernel_tier: crate::sim::KernelTier::effective().name(),
             late_events,
+            integrity_detected: self.integrity_detected,
+            integrity_recovered: self.integrity_recovered,
+            integrity_corrupt: self.integrity_corrupt,
             devices,
         }
     }
@@ -739,6 +795,10 @@ pub enum RuleSignal {
     ShedCount,
     /// Router backlog-model lead over the window end, ms.
     BacklogLeadMs,
+    /// ABFT checksum breaches per device invocation in the window
+    /// (detected / dispatches; per-device: detected / served) —
+    /// DESIGN.md §15.  Windows with no dispatches read 0.
+    IntegrityErrorRate,
 }
 
 /// What to do when a rule fires.
@@ -753,6 +813,14 @@ pub enum ControlAction {
     SetAdmissionMargin { priority: Priority, margin_ms: f64 },
     /// Record only — an auditable note in the action log.
     Alert,
+    /// Restore a previously drained device (`Cluster::restart_device`)
+    /// after `for_windows` consecutive *clean* windows — the inverse of
+    /// [`ControlAction::DrainDevice`] and the release half of the
+    /// quarantine loop (DESIGN.md §15).  Requires `RuleScope::PerDevice`;
+    /// unlike every other action its streak counts windows where the
+    /// signal stays *at or under* the threshold while the device is
+    /// down, and firing re-arms (it may fire once per drain cycle).
+    UndrainDevice,
 }
 
 impl ControlAction {
@@ -763,6 +831,7 @@ impl ControlAction {
                 format!("set_admission_margin[{}]={margin_ms}ms", priority.label())
             }
             ControlAction::Alert => "alert".to_string(),
+            ControlAction::UndrainDevice => "undrain_device".to_string(),
         }
     }
 }
@@ -909,6 +978,39 @@ impl ControlPlane {
                     RuleScope::Fleet => None,
                     RuleScope::PerDevice => Some(target),
                 };
+                if matches!(rule.action, ControlAction::UndrainDevice) {
+                    // Inverted rule: count clean windows while the target
+                    // is down; a live target re-arms the one-shot latch
+                    // so the rule can fire again after the next drain.
+                    let down = device
+                        .and_then(|i| frame.devices.get(i))
+                        .is_some_and(|d| d.down);
+                    if !down {
+                        self.streaks[ri][target] = 0;
+                        self.fired[ri][target] = false;
+                        continue;
+                    }
+                    // The drained device produces no evidence of its
+                    // own; judge the fleet-level signal (no news — no
+                    // breaches anywhere — is good news here).
+                    let value = signal_value(rule, frame, None);
+                    match value {
+                        Some(v) if v > rule.threshold => self.streaks[ri][target] = 0,
+                        _ => self.streaks[ri][target] += 1,
+                    }
+                    if self.streaks[ri][target] >= rule.for_windows && !self.fired[ri][target] {
+                        self.fired[ri][target] = true;
+                        firings.push(Firing {
+                            rule: rule.name.clone(),
+                            frame: frame.index,
+                            at_ms: frame.end_ms,
+                            device,
+                            observed: value.unwrap_or(0.0),
+                            action: rule.action,
+                        });
+                    }
+                    continue;
+                }
                 let value = signal_value(rule, frame, device);
                 match value {
                     Some(v) if v > rule.threshold => self.streaks[ri][target] += 1,
@@ -930,6 +1032,18 @@ impl ControlPlane {
         self.cursor = self.cursor.max(frame.index + 1);
         firings
     }
+
+    /// Clear every per-device streak and one-shot latch for `target` —
+    /// called when a device is restored (undrained) so drain rules get a
+    /// fresh observation window instead of re-firing on stale state.
+    pub fn reset_device(&mut self, target: usize) {
+        for (ri, rule) in self.rules.iter().enumerate() {
+            if rule.scope == RuleScope::PerDevice && target < self.streaks[ri].len() {
+                self.streaks[ri][target] = 0;
+                self.fired[ri][target] = false;
+            }
+        }
+    }
 }
 
 /// The signal value for one rule target, or `None` when the frame
@@ -950,6 +1064,9 @@ fn signal_value(rule: &ControlRule, frame: &TelemetryFrame, device: Option<usize
                 .filter(|d| !d.down)
                 .map(|d| d.backlog_lead_ms)
                 .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v)))),
+            RuleSignal::IntegrityErrorRate => Some(
+                frame.integrity_detected as f64 / frame.dispatches().max(1) as f64,
+            ),
         },
         Some(i) => {
             let d = frame.devices.get(i)?;
@@ -961,6 +1078,9 @@ fn signal_value(rule: &ControlRule, frame: &TelemetryFrame, device: Option<usize
                 RuleSignal::MissCount => Some(d.missed as f64),
                 RuleSignal::ShedCount => None,
                 RuleSignal::BacklogLeadMs => Some(d.backlog_lead_ms),
+                RuleSignal::IntegrityErrorRate => {
+                    Some(d.integrity_detected as f64 / d.served.max(1) as f64)
+                }
             }
         }
     }
@@ -1027,14 +1147,35 @@ pub fn render_top(frames: &[TelemetryFrame], names: &[String], log: &[ActionReco
         },
         span.late_events,
     );
+    if span.integrity_detected > 0 {
+        let _ = writeln!(
+            out,
+            "integrity: {} detected  {} recovered  {} corrupt",
+            span.integrity_detected, span.integrity_recovered, span.integrity_corrupt,
+        );
+    }
+    // Quarantine ledger: devices drained by the control plane (and not
+    // since restored) are "quar", not failed hardware.
+    let mut quarantined = vec![false; last.devices.len()];
+    for r in log {
+        if let Some(d) = r.device {
+            if d < quarantined.len() {
+                match r.action {
+                    ControlAction::DrainDevice => quarantined[d] = true,
+                    ControlAction::UndrainDevice => quarantined[d] = false,
+                    _ => {}
+                }
+            }
+        }
+    }
     let served: Vec<f64> = frames.iter().map(|f| f.completed as f64).collect();
     let tail = served.len().saturating_sub(60);
     let _ = writeln!(out, "done/window |{}|", sparkline(&served[tail..]));
     let _ = writeln!(
         out,
-        "{:<14} {:>6} {:>5} {:>5} {:>9} {:>11} {:>6} {:>9} {:>6}",
-        "device (last)", "served", "met", "miss", "p99 ms", "hot/warm/cold", "fused%", "lead ms",
-        "health",
+        "{:<14} {:>6} {:>5} {:>5} {:>9} {:>11} {:>6} {:>6} {:>9} {:>6}",
+        "device (last)", "served", "met", "miss", "p99 ms", "hot/warm/cold", "fused%", "integ",
+        "lead ms", "health",
     );
     for (i, d) in last.devices.iter().enumerate() {
         let name = names.get(i).map(String::as_str).unwrap_or("?");
@@ -1043,9 +1184,18 @@ pub fn render_top(frames: &[TelemetryFrame], names: &[String], log: &[ActionReco
         } else {
             d.fused as f64 / (d.fused + d.reference) as f64 * 100.0
         };
+        let health = if d.down {
+            if quarantined.get(i).copied().unwrap_or(false) {
+                "quar"
+            } else {
+                "down"
+            }
+        } else {
+            "live"
+        };
         let _ = writeln!(
             out,
-            "{:<14} {:>6} {:>5} {:>5} {:>9.3} {:>11} {:>6.0} {:>9.2} {:>6}",
+            "{:<14} {:>6} {:>5} {:>5} {:>9.3} {:>11} {:>6.0} {:>6} {:>9.2} {:>6}",
             format!("{i}:{name}"),
             d.served,
             d.met,
@@ -1053,8 +1203,22 @@ pub fn render_top(frames: &[TelemetryFrame], names: &[String], log: &[ActionReco
             d.sojourn.p99_ms,
             format!("{}/{}/{}", d.hot, d.warm, d.cold),
             fused_pct,
+            d.integrity_detected,
             d.backlog_lead_ms,
-            if d.down { "down" } else { "live" },
+            health,
+        );
+    }
+    let quar_count = last
+        .devices
+        .iter()
+        .enumerate()
+        .filter(|(i, d)| d.down && quarantined.get(*i).copied().unwrap_or(false))
+        .count();
+    if quar_count > 0 {
+        let _ = writeln!(
+            out,
+            "WARNING: {quar_count} device(s) quarantined by the control plane — \
+             drained pending clean windows, not failed hardware",
         );
     }
     if !log.is_empty() {
@@ -1314,6 +1478,138 @@ mod tests {
         assert!(view.contains("p99-drain"), "{view}");
         assert!(view.contains("drained device 1"), "{view}");
         assert!(render_top(&[], &names, &log).contains("no sealed frames"));
+    }
+
+    #[test]
+    fn integrity_events_fold_and_drive_signals() {
+        let mut agg = FrameAggregator::new(cfg(10.0, 0, 8), 2);
+        agg.record(ingress(1.0));
+        agg.record(completion(2.0, 1.0, 1, Heat::Hot));
+        agg.record(TelemetryEvent::Integrity { t_ms: 2.0, device: 1, contained: true });
+        agg.record(TelemetryEvent::Integrity { t_ms: 3.0, device: 1, contained: false });
+        agg.seal_all();
+        let f = agg.frames().last().unwrap().clone();
+        assert_eq!(f.integrity_detected, 2);
+        assert_eq!(f.integrity_recovered, 1);
+        assert_eq!(f.integrity_corrupt, 1);
+        assert_eq!(f.devices[1].integrity_detected, 2);
+        assert_eq!(f.devices[1].integrity_corrupt, 1);
+        assert_eq!(f.devices[0].integrity_detected, 0);
+        let t = agg.sealed_totals();
+        assert_eq!((t.integrity_detected, t.integrity_recovered, t.integrity_corrupt), (2, 1, 1));
+        let jsonl = agg.snapshot().to_jsonl();
+        assert!(jsonl.contains("\"integrity_detected\":2"), "{jsonl}");
+        assert!(jsonl.contains("\"integrity_corrupt\":1"), "{jsonl}");
+
+        let rule = ControlRule {
+            name: "q".to_string(),
+            scope: RuleScope::PerDevice,
+            signal: RuleSignal::IntegrityErrorRate,
+            threshold: 0.0,
+            for_windows: 1,
+            action: ControlAction::DrainDevice,
+        };
+        // Device 1: 2 breaches over 1 served invocation; device 0 clean;
+        // fleet: 2 breaches over 1 dispatch.
+        assert_eq!(signal_value(&rule, &f, Some(1)), Some(2.0));
+        assert_eq!(signal_value(&rule, &f, Some(0)), Some(0.0));
+        assert_eq!(signal_value(&rule, &f, None), Some(2.0));
+    }
+
+    #[test]
+    fn undrain_rule_counts_clean_windows_and_rearms() {
+        let mut cp = ControlPlane::new(vec![ControlRule {
+            name: "undrain".to_string(),
+            scope: RuleScope::PerDevice,
+            signal: RuleSignal::IntegrityErrorRate,
+            threshold: 0.0,
+            for_windows: 2,
+            action: ControlAction::UndrainDevice,
+        }]);
+        // One frame: device 0 serves; device 1 is `down` (or not); an
+        // optional fleet-visible breach keeps the window dirty.
+        let mk = |index: u64, down: bool, breach: bool| {
+            let mut agg = FrameAggregator::new(cfg(10.0, 0, 8), 2);
+            agg.record(completion(1.0, 1.0, 0, Heat::Hot));
+            if breach {
+                agg.record(TelemetryEvent::Integrity { t_ms: 1.5, device: 0, contained: true });
+            }
+            agg.observe_gauges(&[0.0, 0.0], &[false, down]);
+            agg.seal_all();
+            let mut f = agg.frames().last().unwrap().clone();
+            f.index = index;
+            f
+        };
+        // Live device: rule idles (and keeps the latch armed).
+        assert!(cp.evaluate(&mk(0, false, false)).is_empty());
+        // Drained, but the fleet still sees breaches: streak resets.
+        assert!(cp.evaluate(&mk(1, true, true)).is_empty());
+        assert!(cp.evaluate(&mk(2, true, false)).is_empty()); // clean 1/2
+        let firings = cp.evaluate(&mk(3, true, false)); // clean 2/2
+        assert_eq!(firings.len(), 1);
+        assert_eq!(firings[0].device, Some(1));
+        assert_eq!(firings[0].action, ControlAction::UndrainDevice);
+        // Back live: the latch re-arms, so a later drain cycle can fire
+        // the undrain again — unlike every one-shot rule.
+        assert!(cp.evaluate(&mk(4, false, false)).is_empty());
+        assert!(cp.evaluate(&mk(5, true, false)).is_empty());
+        assert_eq!(cp.evaluate(&mk(6, true, false)).len(), 1, "must re-fire after re-drain");
+    }
+
+    #[test]
+    fn reset_device_clears_streaks_and_latch() {
+        let mut cp = ControlPlane::new(vec![ControlRule {
+            name: "drain".to_string(),
+            scope: RuleScope::PerDevice,
+            signal: RuleSignal::SojournP99Ms,
+            threshold: 5.0,
+            for_windows: 3,
+            action: ControlAction::DrainDevice,
+        }]);
+        for i in 0..3 {
+            let n = cp.evaluate(&frame_with_p99(i, &[9.0])).len();
+            assert_eq!(n, usize::from(i == 2));
+        }
+        // Latched: more breaches stay silent until the device is reset.
+        assert!(cp.evaluate(&frame_with_p99(3, &[9.0])).is_empty());
+        cp.reset_device(0);
+        assert!(cp.evaluate(&frame_with_p99(4, &[9.0])).is_empty());
+        assert!(cp.evaluate(&frame_with_p99(5, &[9.0])).is_empty());
+        assert_eq!(cp.evaluate(&frame_with_p99(6, &[9.0])).len(), 1, "fresh 3-window streak");
+    }
+
+    #[test]
+    fn render_top_marks_quarantined_devices() {
+        let mut f = frame_with_p99(0, &[1.0, 0.0]);
+        f.devices[1].down = true;
+        let names = vec!["a".to_string(), "b".to_string()];
+        let log = vec![ActionRecord {
+            frame: 0,
+            at_ms: 10.0,
+            rule: "integrity-drain".to_string(),
+            device: Some(1),
+            observed: 1.0,
+            action: ControlAction::DrainDevice,
+            outcome: "drained device 1".to_string(),
+        }];
+        let view = render_top(&[f.clone()], &names, &log);
+        assert!(view.contains("quar"), "{view}");
+        assert!(view.contains("WARNING: 1 device(s) quarantined"), "{view}");
+        // An undrain record (and the device back up) clears the flag.
+        let mut log2 = log.clone();
+        log2.push(ActionRecord {
+            frame: 3,
+            at_ms: 40.0,
+            rule: "undrain".to_string(),
+            device: Some(1),
+            observed: 0.0,
+            action: ControlAction::UndrainDevice,
+            outcome: "restored device 1".to_string(),
+        });
+        f.devices[1].down = false;
+        let view2 = render_top(&[f], &names, &log2);
+        assert!(!view2.contains("WARNING"), "{view2}");
+        assert!(view2.contains("live"), "{view2}");
     }
 
     #[test]

@@ -38,6 +38,22 @@ use crate::config::Topology;
 use crate::metrics::LatencyStats;
 use anyhow::Result;
 
+/// ABFT integrity outcome of one served request (DESIGN.md §15).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IntegrityVerdict {
+    /// Every projection of every head passed the checksum verify first
+    /// try (also the verdict when integrity checks are off).
+    #[default]
+    Clean,
+    /// The first execution failed the verify; the local scrub-retry
+    /// (re-prepare from the pristine host copy) re-served it clean.
+    Recovered,
+    /// Still failing after the scrub-retry — the output must NOT be
+    /// served; the router re-executes cross-device from
+    /// [`Response::returned_inputs`].
+    Corrupt,
+}
+
 /// A completed request.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -51,6 +67,12 @@ pub struct Response {
     pub gops: f64,
     /// Whether serving this request required reprogramming the registers.
     pub reprogrammed: bool,
+    /// ABFT integrity outcome; `Corrupt` means `output` is untrusted.
+    pub verdict: IntegrityVerdict,
+    /// The request operands, handed back when the verdict is `Corrupt`
+    /// so the router can rebuild the request and re-execute it on
+    /// another device (the `SubmitError::Busy` hand-back idiom).
+    pub returned_inputs: Option<Box<crate::testdata::MhaInputs>>,
 }
 
 /// Serving statistics.
@@ -88,6 +110,14 @@ pub struct CoordinatorStats {
     /// exactly which topologies a device could replay without a timing
     /// sim.
     pub cached_topologies: Vec<Topology>,
+    /// Requests whose first execution failed the ABFT checksum verify
+    /// (detected corruptions, DESIGN.md §15).
+    pub integrity_detected: u64,
+    /// Detected requests the local scrub-retry re-served clean.
+    pub integrity_recovered: u64,
+    /// Detected requests still failing after the scrub-retry, escalated
+    /// to the router as `Corrupt` (their outputs are never served).
+    pub integrity_corrupt: u64,
 }
 
 impl CoordinatorStats {
@@ -149,19 +179,37 @@ impl Coordinator {
         // error check: a timing sim that ran ahead of a backend failure
         // must still be counted (the accel is owned exclusively by this
         // coordinator, so absolute copies are exact).
-        self.stats.timing_sims = self.accel.timing_sims_run;
-        self.stats.program_cache_hits = self.accel.program_cache_hits;
-        let paths = self.accel.path_counters();
-        self.stats.fused_dispatches = paths.fused;
-        self.stats.reference_dispatches = paths.reference;
-        self.stats.scalar_tier_dispatches = paths.scalar;
-        self.stats.simd_tier_dispatches = paths.simd;
-        self.stats.simd_int8_tier_dispatches = paths.simd_int8;
-        self.stats.cached_topologies = self.accel.programs.topologies();
+        self.mirror_accel_counters();
         let reports = reports?;
+        // Per-request ABFT verdicts of the batch just executed, request
+        // order (empty = no integrity layer = all clean).
+        let verdicts = self.accel.last_integrity();
         let mut batch_makespan = 0.0f64;
         let mut responses = Vec::with_capacity(batch.len());
-        for (req, report) in batch.into_iter().zip(reports) {
+        for (idx, (req, mut report)) in batch.into_iter().zip(reports).enumerate() {
+            let mut verdict = IntegrityVerdict::Clean;
+            let mut returned_inputs = None;
+            if verdicts.get(idx).copied().unwrap_or(false) {
+                self.stats.integrity_detected += 1;
+                // Local scrub: re-prepare the weights from the pristine
+                // host copy and re-execute once.  A transient upset
+                // re-draws at a fresh epoch and clears; a persistent
+                // (stuck-at) fault survives and escalates.
+                match self.accel.run(&req.topology, &req.inputs) {
+                    Ok(clean)
+                        if !self.accel.last_integrity().first().copied().unwrap_or(false) =>
+                    {
+                        report = clean;
+                        verdict = IntegrityVerdict::Recovered;
+                        self.stats.integrity_recovered += 1;
+                    }
+                    _ => {
+                        verdict = IntegrityVerdict::Corrupt;
+                        self.stats.integrity_corrupt += 1;
+                        returned_inputs = Some(Box::new(req.inputs.clone()));
+                    }
+                }
+            }
             self.stats.served += 1;
             self.stats.fabric_latency.record(report.latency_ms);
             batch_makespan = batch_makespan.max(report.latency_ms);
@@ -173,11 +221,31 @@ impl Coordinator {
                 fabric_ms: report.latency_ms,
                 gops: report.gops,
                 reprogrammed,
+                verdict,
+                returned_inputs,
             });
         }
+        // Scrub-retries above ran through the accelerator again: refresh
+        // the mirrored counters so they stay absolute.
+        self.mirror_accel_counters();
         self.stats.batches += 1;
         self.stats.batch_makespan_ms += batch_makespan;
         Ok(Some(responses))
+    }
+
+    /// Mirror the accelerator's absolute counters into the stats (the
+    /// accel is owned exclusively by this coordinator, so copies are
+    /// exact).
+    fn mirror_accel_counters(&mut self) {
+        self.stats.timing_sims = self.accel.timing_sims_run;
+        self.stats.program_cache_hits = self.accel.program_cache_hits;
+        let paths = self.accel.path_counters();
+        self.stats.fused_dispatches = paths.fused;
+        self.stats.reference_dispatches = paths.reference;
+        self.stats.scalar_tier_dispatches = paths.scalar;
+        self.stats.simd_tier_dispatches = paths.simd;
+        self.stats.simd_int8_tier_dispatches = paths.simd_int8;
+        self.stats.cached_topologies = self.accel.programs.topologies();
     }
 
     /// Drain the whole queue, returning responses in completion order.

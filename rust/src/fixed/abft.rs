@@ -1,0 +1,160 @@
+//! Algorithm-based fault tolerance (ABFT) for the integer GEMMs.
+//!
+//! Huang–Abraham style checksums, specialized to the accelerator's
+//! projection GEMMs (`out[i][j] = Σ_l x[i][l] · w[j][l]`, DESIGN.md
+//! §15).  At `PreparedWeights::prepare` time we fold the *pristine*
+//! quantized weights into a column-sum vector
+//!
+//! ```text
+//! fold[l] = Σ_j w[j][l]          (i64, length = d_model)
+//! ```
+//!
+//! and per invocation verify, for every output row `i`,
+//!
+//! ```text
+//! Σ_j acc[i][j]  ==  Σ_l x[i][l] · fold[l]
+//! ```
+//!
+//! Both sides are exact integer arithmetic, so the check is *exact* —
+//! zero false positives — across all [`crate::fixed::KernelTier`]s (the
+//! i16-widened and int8 datapaths stage the same quantized values).  A
+//! single corrupted weight `w[j0][l0] += δ` shifts row `i`'s left side
+//! by `x[i][l0] · δ`: it is caught whenever any input row has a nonzero
+//! value in column `l0`, and when no row does, the corruption is
+//! provably harmless (the output is bit-identical to the clean run).
+//! A corrupted accumulator entry shifts exactly one row sum and is
+//! always caught.
+//!
+//! Cost: `O(m·(n+k))` per verified GEMM against the GEMM's `O(m·n·k)`
+//! — about `1/n + 1/k` relative overhead (≈1–2% at the paper shapes).
+//! Bounds: `|x|·|w| ≤ 2^7·2^15` per term and `k ≤ 2^12` at every
+//! admissible topology, so row sums stay far below `i64::MAX` and the
+//! fold below `2^27` per entry — no wrap even with corrupted operands.
+
+/// Column-sum fold of a row-major `rows × cols` i8 weight matrix:
+/// `fold[l] = Σ_j w[j*cols + l]`.  Computed from the pristine operands
+/// *before* any fault injection touches the staged copies.
+pub fn fold_weights_i8(w: &[i8], rows: usize, cols: usize) -> Vec<i64> {
+    assert_eq!(w.len(), rows * cols, "weight matrix shape mismatch");
+    let mut fold = vec![0i64; cols];
+    for row in w.chunks_exact(cols) {
+        for (f, &v) in fold.iter_mut().zip(row) {
+            *f += v as i64;
+        }
+    }
+    fold
+}
+
+/// Verify an `m × n` i32 accumulator against the fold of its weight
+/// operand, using the i16-widened input (`m × k`).  Returns the number
+/// of rows whose checksum disagrees (0 = clean).
+pub fn verify_rows_i16(acc: &[i32], x16: &[i16], fold: &[i64], m: usize, n: usize) -> u32 {
+    let k = fold.len();
+    // `>=`: callers may hand high-water-mark scratch buffers that are
+    // larger than the active `m × n` / `m × k` shapes.
+    debug_assert!(acc.len() >= m * n);
+    debug_assert!(x16.len() >= m * k);
+    let mut bad = 0u32;
+    for i in 0..m {
+        let got: i64 = acc[i * n..(i + 1) * n].iter().map(|&v| v as i64).sum();
+        let want: i64 =
+            x16[i * k..(i + 1) * k].iter().zip(fold).map(|(&x, &f)| x as i64 * f).sum();
+        if got != want {
+            bad += 1;
+        }
+    }
+    bad
+}
+
+/// [`verify_rows_i16`] for the int8 tier's un-widened input operand.
+/// The staged i8 input holds the same values as the widened copy, so
+/// the two verifiers are interchangeable on clean data.
+pub fn verify_rows_i8(acc: &[i32], x8: &[i8], fold: &[i64], m: usize, n: usize) -> u32 {
+    let k = fold.len();
+    debug_assert!(acc.len() >= m * n);
+    debug_assert!(x8.len() >= m * k);
+    let mut bad = 0u32;
+    for i in 0..m {
+        let got: i64 = acc[i * n..(i + 1) * n].iter().map(|&v| v as i64).sum();
+        let want: i64 =
+            x8[i * k..(i + 1) * k].iter().zip(fold).map(|(&x, &f)| x as i64 * f).sum();
+        if got != want {
+            bad += 1;
+        }
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{matmul_i32_widened_into, widen_i16};
+
+    fn gemm(x8: &[i8], w8: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+        let x16 = widen_i16(x8);
+        let w16 = widen_i16(w8);
+        let mut acc = vec![0i32; m * n];
+        matmul_i32_widened_into(&x16, &w16, m, k, n, &mut acc);
+        acc
+    }
+
+    fn operands(m: usize, k: usize, n: usize) -> (Vec<i8>, Vec<i8>) {
+        let x: Vec<i8> = (0..m * k).map(|i| ((i * 37 + 11) % 255) as i8).collect();
+        let w: Vec<i8> = (0..n * k).map(|i| ((i * 53 + 7) % 251) as i8).collect();
+        (x, w)
+    }
+
+    #[test]
+    fn clean_gemm_verifies_on_both_input_widths() {
+        let (m, k, n) = (5, 16, 7);
+        let (x, w) = operands(m, k, n);
+        let acc = gemm(&x, &w, m, k, n);
+        let fold = fold_weights_i8(&w, n, k);
+        assert_eq!(verify_rows_i16(&acc, &widen_i16(&x), &fold, m, n), 0);
+        assert_eq!(verify_rows_i8(&acc, &x, &fold, m, n), 0);
+    }
+
+    #[test]
+    fn every_single_accumulator_flip_is_caught() {
+        let (m, k, n) = (4, 8, 6);
+        let (x, w) = operands(m, k, n);
+        let clean = gemm(&x, &w, m, k, n);
+        let fold = fold_weights_i8(&w, n, k);
+        for pos in 0..clean.len() {
+            for bit in [0u32, 7, 19, 30] {
+                let mut acc = clean.clone();
+                acc[pos] ^= 1i32 << bit;
+                assert_eq!(
+                    verify_rows_i16(&acc, &widen_i16(&x), &fold, m, n),
+                    1,
+                    "flip at {pos} bit {bit} escaped"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weight_fault_caught_or_provably_harmless() {
+        let (m, k, n) = (4, 8, 6);
+        let (mut x, w) = operands(m, k, n);
+        // Zero an input column: a fault confined to that weight column
+        // is masked — and must leave the output bit-identical.
+        for row in 0..m {
+            x[row * k + 3] = 0;
+        }
+        let clean = gemm(&x, &w, m, k, n);
+        let fold = fold_weights_i8(&w, n, k); // fold of the pristine weights
+        for l in 0..k {
+            let mut wf = w.clone();
+            wf[2 * k + l] ^= 0x11; // corrupt w[2][l]
+            let acc = gemm(&x, &wf, m, k, n);
+            let bad = verify_rows_i16(&acc, &widen_i16(&x), &fold, m, n);
+            if l == 3 {
+                assert_eq!(bad, 0, "masked fault flagged");
+                assert_eq!(acc, clean, "masked fault changed the output");
+            } else {
+                assert!(bad > 0, "fault in live column {l} escaped");
+            }
+        }
+    }
+}

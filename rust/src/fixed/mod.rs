@@ -17,11 +17,16 @@
 //!   kernels behind runtime AVX2 detection, including the true
 //!   int8×int8→i32 GEMM (no i16 widening pass); the scalar kernels above
 //!   stay the bit-identity oracle (DESIGN.md §14).
+//! * [`abft`] — Huang–Abraham checksum fold/verify for the projection
+//!   GEMMs: exact integer detection of corrupted staged operands across
+//!   all kernel tiers (DESIGN.md §15).
 
+pub mod abft;
 mod mac;
 mod matrix;
 pub mod simd;
 
+pub use abft::{fold_weights_i8, verify_rows_i16, verify_rows_i8};
 pub use mac::Dsp48Mac;
 pub use matrix::{
     matmul_i32, matmul_i32_fast, matmul_i32_tiled, matmul_i32_widened, matmul_i32_widened_into,

@@ -42,11 +42,41 @@ fn parser() -> Parser {
         .opt_default("seed", "7", "cluster --qos: load generator seed")
         .opt_default("window-ms", "0", "top: telemetry window (0 = 12x mean service time)")
         .opt_default("derate", "1.0", "top: silent clock derate on the last device (1.0 = healthy)")
+        .opt_default("seu", "", "cluster/top: SEU fault plan 'seed:rate' on the last device")
         .opt_default("export", "", "top: write the sealed frame ring as JSONL to this path")
         .flag("plain", "top: append dashboard repaints instead of clearing the screen")
         .flag("qos", "cluster: QoS serving (loadgen arrivals, EDF+slack routing, SLO report)")
         .flag("sim-datapath", "use the rust int8 datapath instead of PJRT")
         .flag("double-buffer", "enable load/compute overlap in the tile loop")
+}
+
+/// Parse `--seu seed:rate` (e.g. `0xBAD5EED:0.01` or `7:0.02`) into a
+/// persistent stuck-at fault plan for the last fleet device.
+fn parse_seu(s: &str) -> Result<famous::sim::FaultPlan, String> {
+    let (seed, rate) = s.split_once(':').ok_or_else(|| format!("--seu '{s}' must be seed:rate"))?;
+    let seed = seed.trim();
+    let seed: u64 = if let Some(hex) = seed.strip_prefix("0x").or_else(|| seed.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).map_err(|_| format!("bad seu seed '{seed}'"))?
+    } else {
+        seed.parse().map_err(|_| format!("bad seu seed '{seed}'"))?
+    };
+    let rate: f64 = rate.trim().parse().map_err(|_| format!("bad seu rate '{rate}'"))?;
+    if !(0.0..=1.0).contains(&rate) {
+        return Err(format!("seu rate {rate} must be in [0, 1]"));
+    }
+    Ok(famous::sim::FaultPlan::seu(seed, rate))
+}
+
+/// Apply `--seu` to the last fleet device, if the flag is set.
+fn apply_seu(args: &famous::cli::Args, devices: &mut [DeviceSpec]) -> anyhow::Result<bool> {
+    let spec = args.get_or("seu", "");
+    if spec.is_empty() {
+        return Ok(false);
+    }
+    let plan = parse_seu(spec).map_err(anyhow::Error::msg)?;
+    let last = devices.len() - 1;
+    devices[last] = devices[last].clone().with_fault_plan(plan);
+    Ok(true)
 }
 
 fn parse_topology(s: &str, ts: usize) -> Result<Topology, String> {
@@ -184,8 +214,12 @@ fn cmd_serve(args: &famous::cli::Args) -> anyhow::Result<()> {
 }
 
 fn cmd_cluster(args: &famous::cli::Args) -> anyhow::Result<()> {
-    let devices = parse_fleet(args.get_or("fleet", "u55c:2,u200:2"))?;
+    let mut devices = parse_fleet(args.get_or("fleet", "u55c:2,u200:2"))?;
     let n: usize = args.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(32);
+    if apply_seu(args, &mut devices)? {
+        let name = &devices.last().unwrap().name;
+        println!("SEU plan active on {name} (ABFT detection + reroute engaged)");
+    }
     if args.flag("qos") {
         return cmd_cluster_qos(args, devices, n);
     }
@@ -280,17 +314,18 @@ fn cmd_cluster_qos(
     );
     let h = cluster.handle();
     let t0 = std::time::Instant::now();
-    let (mut served, mut shed) = (0usize, 0usize);
+    let (mut served, mut shed, mut saturated) = (0usize, 0usize, 0usize);
     for (i, a) in arrivals.iter().enumerate() {
         match h.call_qos(a.materialize(i as u64))? {
             QosOutcome::Served(_) => served += 1,
             QosOutcome::Shed(_) => shed += 1,
+            QosOutcome::Saturated(_) => saturated += 1,
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     let fleet = cluster.shutdown();
     print!("{}", fleet.render());
-    println!("served {served}, shed {shed} of {n} in {wall:.2}s wall");
+    println!("served {served}, shed {shed}, saturated {saturated} of {n} in {wall:.2}s wall");
     Ok(())
 }
 
@@ -309,6 +344,7 @@ fn cmd_top(args: &famous::cli::Args) -> anyhow::Result<()> {
         let last = devices.len() - 1;
         devices[last] = devices[last].clone().with_silent_derate(derate);
     }
+    let seu = apply_seu(args, &mut devices)?;
     let mix: Vec<(Topology, f64)> = vec![
         (Topology::new(64, 768, 8, 64), 3.0),
         (Topology::new(32, 768, 8, 64), 2.0),
@@ -364,6 +400,27 @@ fn cmd_top(args: &famous::cli::Args) -> anyhow::Result<()> {
             margin_ms: 0.0,
         },
     });
+    if seu {
+        // SEU policy pair (DESIGN.md §15): quarantine a device whose
+        // windowed ABFT detection rate stays nonzero, then restore it
+        // after it has sat drained through clean windows.
+        cluster.add_control_rule(ControlRule {
+            name: "integrity-quarantine".to_string(),
+            scope: RuleScope::PerDevice,
+            signal: RuleSignal::IntegrityErrorRate,
+            threshold: 0.0,
+            for_windows: 2,
+            action: ControlAction::DrainDevice,
+        });
+        cluster.add_control_rule(ControlRule {
+            name: "integrity-undrain".to_string(),
+            scope: RuleScope::PerDevice,
+            signal: RuleSignal::IntegrityErrorRate,
+            threshold: 0.0,
+            for_windows: 4,
+            action: ControlAction::UndrainDevice,
+        });
+    }
     let names = cluster.device_names();
     let plain = args.flag("plain");
     println!(
@@ -373,13 +430,17 @@ fn cmd_top(args: &famous::cli::Args) -> anyhow::Result<()> {
         window_ms,
         if derate < 1.0 { format!(", last device derated to {derate:.2}x") } else { String::new() }
     );
+    if seu {
+        println!("SEU plan active on {} (quarantine + undrain rules armed)", names.last().unwrap());
+    }
     let h = cluster.handle();
-    let (mut served, mut shed) = (0usize, 0usize);
+    let (mut served, mut shed, mut saturated) = (0usize, 0usize, 0usize);
     let mut painted = 0u64;
     for (i, a) in arrivals.iter().enumerate() {
         match h.call_qos(a.materialize(i as u64))? {
             QosOutcome::Served(_) => served += 1,
             QosOutcome::Shed(_) => shed += 1,
+            QosOutcome::Saturated(_) => saturated += 1,
         }
         cluster.pump_control();
         let snap = cluster.telemetry();
@@ -406,7 +467,9 @@ fn cmd_top(args: &famous::cli::Args) -> anyhow::Result<()> {
     let actions = cluster.control_log().len();
     let fleet = cluster.shutdown();
     print!("{}", fleet.render());
-    println!("served {served}, shed {shed} of {n}; {actions} control action(s)");
+    println!(
+        "served {served}, shed {shed}, saturated {saturated} of {n}; {actions} control action(s)"
+    );
     Ok(())
 }
 

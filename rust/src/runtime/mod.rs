@@ -41,6 +41,13 @@ pub struct PathCounters {
     pub scalar: u64,
     pub simd: u64,
     pub simd_int8: u64,
+    /// Requests whose every projection passed the ABFT checksum verify
+    /// (DESIGN.md §15).  `integrity_pass + integrity_fail == total()`
+    /// whenever integrity checks are on.
+    pub integrity_pass: u64,
+    /// Requests with at least one failed ABFT row checksum — corrupted
+    /// staged operands or an accumulator upset.
+    pub integrity_fail: u64,
 }
 
 impl PathCounters {
@@ -72,6 +79,14 @@ pub trait Backend {
     /// datapath report the default (all zeros).
     fn path_counters(&self) -> PathCounters {
         PathCounters::default()
+    }
+
+    /// Per-request ABFT verdicts of the most recent
+    /// [`Backend::run_mha`]/[`Backend::run_mha_batch`] call, in request
+    /// order: `true` = at least one failed row checksum (corrupt).
+    /// Engines without an integrity layer report empty (= all clean).
+    fn last_integrity(&self) -> Vec<bool> {
+        Vec::new()
     }
 
     fn name(&self) -> &'static str;
@@ -316,6 +331,14 @@ pub struct SimBackend {
     workspace: Workspace,
     /// Fused/reference dispatch attribution.
     counters: PathCounters,
+    /// Per-request ABFT verdicts of the most recent call (`true` =
+    /// corrupt), request order.
+    last_faulty: Vec<bool>,
+    /// Prepare generation for transient fault plans: each preparation
+    /// re-draws its faults (the scrub analogue — re-staging from the
+    /// pristine host copy clears a transient upset).  Persistent plans
+    /// ignore it.
+    fault_epoch: u64,
 }
 
 /// How `SimBackend` picks the kernel tier for weight preparation
@@ -381,7 +404,36 @@ impl SimBackend {
             pool_lean_streak: 0,
             workspace: Workspace::new(),
             counters: PathCounters::default(),
+            last_faulty: Vec::new(),
+            fault_epoch: 0,
         }
+    }
+
+    /// The config this preparation runs under: a transient fault plan
+    /// advances to a fresh epoch (new seeded draws — the scrub), a
+    /// persistent plan stays stuck at epoch 0.
+    fn prepare_config(&mut self) -> crate::sim::SimConfig {
+        let mut config = self.config.clone();
+        if let Some(plan) = config.fault_plan.as_mut() {
+            if !plan.persistent {
+                *plan = plan.at_epoch(self.fault_epoch);
+                self.fault_epoch += 1;
+            }
+        }
+        config
+    }
+
+    /// Record per-request verdicts into the counters and the
+    /// `last_integrity` snapshot.
+    fn count_integrity(&mut self, faulty: Vec<bool>) {
+        for &f in &faulty {
+            if f {
+                self.counters.integrity_fail += 1;
+            } else {
+                self.counters.integrity_pass += 1;
+            }
+        }
+        self.last_faulty = faulty;
     }
 
     fn admit(&self, topo: &Topology) -> Result<()> {
@@ -478,7 +530,7 @@ fn execute_on_worker(
     pool: &PoolHandle,
     lanes: usize,
     path: ExecPath,
-) -> Vec<f32> {
+) -> (Vec<f32>, u64) {
     let xq = prepared.quantize_input(x);
     WORKER_WS.with(|cell| match cell.try_borrow_mut() {
         Ok(mut ws) => {
@@ -487,12 +539,13 @@ fn execute_on_worker(
             } else {
                 prepared.execute_into_path(&xq, &mut ws, path);
             }
-            ws.output().to_vec()
+            (ws.output().to_vec(), ws.integrity_faults())
         }
         Err(_) => {
             let mut ws = Workspace::new();
             prepared.execute_into_path(&xq, &mut ws, path);
-            ws.take_output()
+            let faults = ws.integrity_faults();
+            (ws.take_output(), faults)
         }
     })
 }
@@ -500,8 +553,9 @@ fn execute_on_worker(
 impl Backend for SimBackend {
     fn run_mha(&mut self, topo: &Topology, inputs: &MhaInputs) -> Result<Vec<f32>> {
         self.admit(topo)?;
+        let config = self.prepare_config();
         let prepared =
-            PreparedWeights::prepare_with_tier(&self.config, topo, inputs, self.choose_tier());
+            PreparedWeights::prepare_with_tier(&config, topo, inputs, self.choose_tier());
         let x = prepared.quantize_input(&inputs.x);
         let lanes = topo.heads.min(Self::cores());
         let path = self.choose_path(topo);
@@ -512,6 +566,8 @@ impl Backend for SimBackend {
         } else {
             prepared.execute_into_path(&x, &mut self.workspace, path);
         }
+        let faulty = self.workspace.integrity_faults() > 0;
+        self.count_integrity(vec![faulty]);
         Ok(self.workspace.output().to_vec())
     }
 
@@ -529,9 +585,9 @@ impl Backend for SimBackend {
         self.admit(topo)?;
         let batch = inputs.len();
         let tier = self.choose_tier();
-        let shared = Arc::new(PreparedWeights::prepare_with_tier(&self.config, topo, first, tier));
+        let config = self.prepare_config();
+        let shared = Arc::new(PreparedWeights::prepare_with_tier(&config, topo, first, tier));
         let tier = shared.tier();
-        let config = self.config.clone();
         let items: Vec<BatchItem> = inputs
             .iter()
             .map(|&inp| {
@@ -551,7 +607,7 @@ impl Backend for SimBackend {
         self.count(path, tier, batch as u64);
         let pool = self.pool.as_ref().expect("pool just ensured");
         let topo = topo.clone();
-        let outputs = pool.parallel_map(items, move |item| match item {
+        let results = pool.parallel_map(items, move |item| match item {
             BatchItem::Shared { x } => execute_on_worker(&shared, &x, &handle, lanes, path),
             BatchItem::Own { inputs } => {
                 // The batch's clamped tier, so weight-divergent requests
@@ -560,11 +616,17 @@ impl Backend for SimBackend {
                 execute_on_worker(&own, &inputs.x, &handle, lanes, path)
             }
         });
+        let (outputs, faults): (Vec<Vec<f32>>, Vec<u64>) = results.into_iter().unzip();
+        self.count_integrity(faults.iter().map(|&f| f > 0).collect());
         Ok(outputs)
     }
 
     fn path_counters(&self) -> PathCounters {
         self.counters
+    }
+
+    fn last_integrity(&self) -> Vec<bool> {
+        self.last_faulty.clone()
     }
 
     fn name(&self) -> &'static str {

@@ -4,14 +4,15 @@
 use crate::config::{AcceleratorConfig, Topology};
 use crate::exec::PoolHandle;
 use crate::fixed::{
-    matmul_i32_i8_into, matmul_i32_widened_into, matmul_i32_widened_simd_into, widen_i16,
-    widen_i16_into, FxMatrix, KernelTier, Quantizer,
+    fold_weights_i8, matmul_i32_i8_into, matmul_i32_widened_into, matmul_i32_widened_simd_into,
+    verify_rows_i16, verify_rows_i8, widen_i16, widen_i16_into, FxMatrix, KernelTier, Quantizer,
 };
 use crate::jsonlite::Json;
 use crate::testdata::MhaInputs;
 
 use super::axi::AxiMaster;
 use super::controller::{Controller, CtrlError};
+use super::fault::{AccFault, FaultPlan};
 use super::fused::{ExecPath, FusedAttnPm};
 use super::modules::{QkPm, QkvPm, SvPm};
 use super::softmax_unit::SoftmaxUnit;
@@ -43,6 +44,14 @@ pub struct SimConfig {
     /// Fixed control overhead (µB + AXI-lite), shared with the analytical
     /// model's C0.
     pub control_overhead: u64,
+    /// Seeded SEU injection into the staged operands (DESIGN.md §15);
+    /// `None` disables injection entirely.  The owning backend bumps the
+    /// plan's epoch per prepare so transient faults clear on scrub.
+    pub fault_plan: Option<FaultPlan>,
+    /// Run the ABFT checksum verify on every projection GEMM (DESIGN.md
+    /// §15).  On by default; the exec bench flips it off to measure the
+    /// verify overhead in isolation.
+    pub integrity_checks: bool,
 }
 
 impl SimConfig {
@@ -54,6 +63,8 @@ impl SimConfig {
             scale_mode: ScaleMode::SqrtDk,
             causal: false,
             control_overhead: crate::analytical::LatencyModel::default().c0,
+            fault_plan: None,
+            integrity_checks: true,
         }
     }
 
@@ -381,6 +392,16 @@ pub struct PreparedHead {
     pub bq: Vec<f32>,
     pub bk: Vec<f32>,
     pub bv: Vec<f32>,
+    /// ABFT column-sum folds of the *pristine* quantized weights
+    /// ([`crate::fixed::abft`]), computed before any fault injection
+    /// touches the staged copies.  Empty when integrity checks are off.
+    pub cq: Vec<i64>,
+    pub ck: Vec<i64>,
+    pub cv: Vec<i64>,
+    /// Armed accumulator upsets per projection (Q, K, V), drawn at
+    /// prepare time by the device's [`FaultPlan`] and applied after the
+    /// projection GEMM on every invocation.
+    pub acc_faults: [Option<AccFault>; 3],
 }
 
 /// Topology-programmed weight state for the functional datapath: built
@@ -459,15 +480,24 @@ impl PreparedWeights {
             ScaleMode::DModel => 1.0 / dmn as f32,
         };
         let int8 = tier == KernelTier::SimdInt8;
-        let heads = (0..h)
+        let mut heads: Vec<PreparedHead> = (0..h)
             .map(|head| {
                 let wslice = |w: &[f32]| {
                     let w8 = quant.quantize_vec(&w[head * dkn * dmn..(head + 1) * dkn * dmn]);
+                    // Fold the pristine operands before staging: the fault
+                    // plan below only ever corrupts the staged copies, so
+                    // the checksum is the ground truth injection is
+                    // verified against.
+                    let fold = if config.integrity_checks {
+                        fold_weights_i8(&w8, dkn, dmn)
+                    } else {
+                        Vec::new()
+                    };
                     if int8 {
-                        (w8, Vec::new())
+                        (w8, Vec::new(), fold)
                     } else {
                         let w16 = widen_i16(&w8);
-                        (Vec::new(), w16)
+                        (Vec::new(), w16, fold)
                     }
                 };
                 let bslice = |b: &[f32]| {
@@ -476,9 +506,9 @@ impl PreparedWeights {
                         .map(|&v| quant.fake_quant(v))
                         .collect::<Vec<f32>>()
                 };
-                let (wq8, wq16) = wslice(&inp.wq);
-                let (wk8, wk16) = wslice(&inp.wk);
-                let (wv8, wv16) = wslice(&inp.wv);
+                let (wq8, wq16, cq) = wslice(&inp.wq);
+                let (wk8, wk16, ck) = wslice(&inp.wk);
+                let (wv8, wv16, cv) = wslice(&inp.wv);
                 PreparedHead {
                     wq16,
                     wk16,
@@ -489,9 +519,38 @@ impl PreparedWeights {
                     bq: bslice(&inp.bq),
                     bk: bslice(&inp.bk),
                     bv: bslice(&inp.bv),
+                    cq,
+                    ck,
+                    cv,
+                    acc_faults: [None; 3],
                 }
             })
             .collect();
+        // Seeded SEU injection (DESIGN.md §15): corrupt the staged
+        // copies only, after the pristine folds above were taken.  Draw
+        // order is fixed (head-major, projection-minor, flip before
+        // stripe), so a plan is byte-reproducible for a given epoch.
+        if let Some(plan) = config.fault_plan {
+            if plan.active() {
+                let mut rng = plan.rng();
+                let stripe_len = topo.seq_len * dkn;
+                for hp in &mut heads {
+                    for proj in 0..3 {
+                        if rng.chance(plan.weight_flip_rate) {
+                            let (w8, w16) = match proj {
+                                0 => (&mut hp.wq8, &mut hp.wq16),
+                                1 => (&mut hp.wk8, &mut hp.wk16),
+                                _ => (&mut hp.wv8, &mut hp.wv16),
+                            };
+                            super::fault::flip_weight_bank(w8, w16, &mut rng);
+                        }
+                        if rng.chance(plan.stripe_rate) {
+                            hp.acc_faults[proj] = Some(AccFault::draw(stripe_len, &mut rng));
+                        }
+                    }
+                }
+            }
+        }
         let softmax = match config.softmax_lut_bits {
             Some(bits) => SoftmaxUnit::lut(bits),
             None => SoftmaxUnit::exact(),
@@ -524,6 +583,33 @@ impl PreparedWeights {
     /// host support at prepare time).
     pub fn tier(&self) -> KernelTier {
         self.tier
+    }
+
+    /// Number of prepared heads.
+    pub fn head_count(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Corrupt one staged weight cell of head `head`'s projection `proj`
+    /// (0=Q, 1=K, 2=V): flip `bit` (0..8) at element `pos`, mirrored
+    /// into whichever staged copy the tier keeps — the deterministic
+    /// single-fault hook the property suite drives exhaustively (the
+    /// seeded [`FaultPlan`] draws the same flip randomly).
+    pub fn inject_weight_fault(&mut self, head: usize, proj: usize, pos: usize, bit: u32) {
+        let hp = &mut self.heads[head];
+        let (w8, w16) = match proj {
+            0 => (&mut hp.wq8, &mut hp.wq16),
+            1 => (&mut hp.wk8, &mut hp.wk16),
+            _ => (&mut hp.wv8, &mut hp.wv16),
+        };
+        super::fault::flip_bit(w8, w16, pos, bit);
+    }
+
+    /// Arm one accumulator upset on head `head`'s projection `proj`,
+    /// applied after that projection's GEMM on every invocation (the
+    /// test-hook twin of the plan's `stripe_rate` draws).
+    pub fn arm_acc_fault(&mut self, head: usize, proj: usize, fault: AccFault) {
+        self.heads[head].acc_faults[proj] = Some(fault);
     }
 
     /// Do two requests carry identical weight operands?  (A batch path
@@ -682,11 +768,35 @@ impl PreparedWeights {
             KernelTier::Simd => matmul_i32_widened_simd_into(x16, w16, sln, dmn, dkn, acc),
             KernelTier::SimdInt8 => matmul_i32_i8_into(x8, w8, sln, dmn, dkn, acc),
         };
+        // ABFT row verify against the pristine fold (exact integer
+        // arithmetic, so the check is tier-independent); a no-op when
+        // integrity checks were off at prepare time (empty fold).
+        let verify = |acc: &[i32], fold: &[i64]| -> u32 {
+            if fold.is_empty() {
+                return 0;
+            }
+            match self.tier {
+                KernelTier::SimdInt8 => verify_rows_i8(acc, x8, fold, sln, dkn),
+                _ => verify_rows_i16(acc, x16, fold, sln, dkn),
+            }
+        };
         gemm(&hp.wq8, &hp.wq16, &mut lane.acc);
+        if let Some(f) = hp.acc_faults[0] {
+            lane.acc[f.pos] ^= f.mask;
+        }
+        lane.faults += verify(&lane.acc, &hp.cq);
         dequant_into(&lane.acc, &hp.bq, self.scale2, dkn, &mut lane.q);
         gemm(&hp.wk8, &hp.wk16, &mut lane.acc);
+        if let Some(f) = hp.acc_faults[1] {
+            lane.acc[f.pos] ^= f.mask;
+        }
+        lane.faults += verify(&lane.acc, &hp.ck);
         dequant_into(&lane.acc, &hp.bk, self.scale2, dkn, &mut lane.k);
         gemm(&hp.wv8, &hp.wv16, &mut lane.acc);
+        if let Some(f) = hp.acc_faults[2] {
+            lane.acc[f.pos] ^= f.mask;
+        }
+        lane.faults += verify(&lane.acc, &hp.cv);
         dequant_into(&lane.acc, &hp.bv, self.scale2, dkn, &mut lane.v);
         match path {
             ExecPath::Reference => {

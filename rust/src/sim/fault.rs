@@ -1,0 +1,165 @@
+//! Seeded fault injection for the simulated BRAM banks (DESIGN.md §15).
+//!
+//! A [`FaultPlan`] is the SEU (single-event upset) analogue for this
+//! repository's staged operands: at `PreparedWeights::prepare` time it
+//! deterministically flips bits in the freshly staged weight copies
+//! (the i8 tier operands and their i16-widened twins — one flipped bit
+//! in an 8-bit BRAM cell, inherited by the widened copy exactly as a
+//! corrupted bank read would be) and/or arms per-head accumulator
+//! upsets applied after a projection GEMM (the output-stripe analogue).
+//! It composes with `DeviceSpec::silent_derate`: derate corrupts the
+//! *clock* silently, a fault plan corrupts the *data* silently.
+//!
+//! Everything is a pure function of `(seed, epoch)`, so soaks are
+//! byte-reproducible.  `persistent` faults model stuck-at cells: every
+//! prepare of the same epoch-0 plan draws identical faults, so a local
+//! re-prepare cannot help and recovery must go cross-device.  Transient
+//! (non-persistent) faults re-draw per prepare epoch — the scrub-retry
+//! analogue, where re-staging from the pristine host copy clears the
+//! upset.
+
+use crate::rng::XorShift64;
+
+/// Deterministic SEU injection plan for one simulated device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every draw this plan makes (position, bit, arming).
+    pub seed: u64,
+    /// Probability that one staged weight *matrix* (per head, per
+    /// projection) takes a single-bit upset at prepare time.
+    pub weight_flip_rate: f64,
+    /// Probability that one projection's accumulator stripe (per head,
+    /// per projection) takes a single-bit upset per invocation.
+    pub stripe_rate: f64,
+    /// Stuck-at faults: every prepare draws the same upsets, so local
+    /// scrubbing (re-prepare) cannot clear them.  Non-persistent plans
+    /// re-draw per prepare epoch and clear with high probability.
+    pub persistent: bool,
+    /// Prepare epoch (scrub generation).  The owning `SimBackend` bumps
+    /// this per prepare on transient plans; persistent plans ignore it.
+    pub epoch: u64,
+}
+
+impl FaultPlan {
+    /// A persistent (stuck-at) weight-upset plan — the quarantine
+    /// soak's configuration: every prepare of every topology corrupts
+    /// staged weights, local scrubbing never helps.
+    pub fn seu(seed: u64, weight_flip_rate: f64) -> FaultPlan {
+        FaultPlan { seed, weight_flip_rate, stripe_rate: 0.0, persistent: true, epoch: 0 }
+    }
+
+    /// A transient plan: faults re-draw per prepare epoch, so the
+    /// coordinator's scrub-retry (re-prepare from the pristine host
+    /// copy) recovers with probability `1 − rate`.
+    pub fn transient(seed: u64, weight_flip_rate: f64) -> FaultPlan {
+        FaultPlan { seed, weight_flip_rate, stripe_rate: 0.0, persistent: false, epoch: 0 }
+    }
+
+    /// This plan at an explicit prepare epoch.
+    pub fn at_epoch(mut self, epoch: u64) -> FaultPlan {
+        self.epoch = epoch;
+        self
+    }
+
+    /// The RNG for this plan's current epoch.  Persistent plans ignore
+    /// the epoch (same faults forever); transient plans fold it in.
+    pub fn rng(&self) -> XorShift64 {
+        let e = if self.persistent { 0 } else { self.epoch };
+        XorShift64::new(self.seed ^ e.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    /// Does this plan ever inject anything?
+    pub fn active(&self) -> bool {
+        self.weight_flip_rate > 0.0 || self.stripe_rate > 0.0
+    }
+}
+
+/// Flip one seeded bit in a staged i8 weight bank and mirror the flip
+/// into its i16-widened twin (when the tier keeps one).  The upset hits
+/// one 8-bit BRAM cell, so only bits 0..8 of the widened copy can
+/// change — sign-extension of the corrupted byte keeps the value in
+/// `[-255, 255]`, far inside the i32 accumulation headroom.
+pub fn flip_weight_bank(w8: &mut [i8], w16: &mut [i16], rng: &mut XorShift64) -> Option<usize> {
+    if w8.is_empty() && w16.is_empty() {
+        return None;
+    }
+    let n = if w8.is_empty() { w16.len() } else { w8.len() };
+    let pos = rng.below(n as u64) as usize;
+    let bit = rng.below(8) as u32;
+    flip_bit(w8, w16, pos, bit);
+    Some(pos)
+}
+
+/// Flip bit `bit` (0..8) of the 8-bit cell at `pos` in whichever staged
+/// copies exist — the deterministic core of [`flip_weight_bank`], public
+/// for the single-fault property suite.
+pub fn flip_bit(w8: &mut [i8], w16: &mut [i16], pos: usize, bit: u32) {
+    if !w8.is_empty() {
+        w8[pos] = (w8[pos] as u8 ^ (1u8 << bit)) as i8;
+    }
+    if !w16.is_empty() {
+        // The widened copy re-reads the corrupted cell: re-derive it by
+        // sign-extending the flipped byte (exactly what `widen_i16`
+        // would produce from the corrupted i8 bank).
+        let byte = (w16[pos] as u8) ^ (1u8 << bit);
+        w16[pos] = byte as i8 as i16;
+    }
+}
+
+/// One armed accumulator upset: element index and XOR mask, applied to
+/// a projection's i32 accumulator stripe after the GEMM (and before the
+/// ABFT verify, which therefore catches it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccFault {
+    pub pos: usize,
+    pub mask: i32,
+}
+
+impl AccFault {
+    /// Draw one upset for a stripe of `len` accumulators.  Bits 0..24
+    /// keep the dequantized perturbation finite but visible.
+    pub fn draw(len: usize, rng: &mut XorShift64) -> AccFault {
+        AccFault { pos: rng.below(len as u64) as usize, mask: 1i32 << rng.below(24) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_per_epoch() {
+        let p = FaultPlan::transient(7, 0.5).at_epoch(3);
+        let a: Vec<u64> = (0..4).map(|_| p.rng().next_u64()).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]), "same epoch, same draws");
+        assert_ne!(p.rng().next_u64(), p.at_epoch(4).rng().next_u64(), "epochs decorrelate");
+        let s = FaultPlan::seu(7, 0.5);
+        assert_eq!(
+            s.at_epoch(3).rng().next_u64(),
+            s.at_epoch(4).rng().next_u64(),
+            "persistent ignores epoch"
+        );
+    }
+
+    #[test]
+    fn flip_mirrors_i8_into_widened_copy() {
+        let base: Vec<i8> = (0..64).map(|i| (i * 3 - 90) as i8).collect();
+        let mut w8 = base.clone();
+        let mut w16: Vec<i16> = base.iter().map(|&v| v as i16).collect();
+        let mut rng = XorShift64::new(11);
+        let pos = flip_weight_bank(&mut w8, &mut w16, &mut rng).unwrap();
+        assert_ne!(w8[pos], base[pos]);
+        assert_eq!(w16[pos], w8[pos] as i16, "widened copy re-reads the corrupted cell");
+        assert_eq!(w8.iter().zip(&base).filter(|(a, b)| a != b).count(), 1);
+    }
+
+    #[test]
+    fn acc_fault_in_range() {
+        let mut rng = XorShift64::new(5);
+        for _ in 0..32 {
+            let f = AccFault::draw(100, &mut rng);
+            assert!(f.pos < 100);
+            assert!(f.mask.count_ones() == 1 && f.mask > 0);
+        }
+    }
+}

@@ -23,6 +23,7 @@
 pub mod axi;
 pub mod controller;
 pub mod engine;
+pub mod fault;
 pub mod fused;
 pub mod modules;
 pub mod softmax_unit;
@@ -33,6 +34,7 @@ pub use controller::{ControlRegs, Controller, CtrlError};
 pub use engine::{
     CycleTrace, PhaseEvent, PreparedHead, PreparedWeights, SimConfig, SimResult, Simulator,
 };
+pub use fault::{AccFault, FaultPlan};
 pub use fused::{tier_tolerance, ExecPath, FusedAttnPm};
 pub use softmax_unit::{OnlineRow, SoftmaxKind, SoftmaxUnit};
 pub use workspace::{HeadScratch, Workspace, SHRINK_WINDOW};

@@ -58,10 +58,16 @@ pub struct HeadScratch {
     /// Head output (SL × d_k) before the stripe copy into the request
     /// output.
     pub(crate) o: Vec<f32>,
+    /// ABFT row-checksum failures this lane observed for the current
+    /// request (DESIGN.md §15).  Reset by `ensure`, summed by
+    /// [`Workspace::integrity_faults`]; lanes are exclusively owned per
+    /// worker, so plain counters suffice.
+    pub(crate) faults: u32,
 }
 
 impl HeadScratch {
     fn ensure(&mut self, sl: usize, dk: usize, ts: usize, path: ExecPath) {
+        self.faults = 0;
         self.acc.resize(sl * dk, 0);
         self.q.resize(sl * dk, 0.0);
         self.k.resize(sl * dk, 0.0);
@@ -165,6 +171,12 @@ impl Workspace {
         if self.lanes.len() < lanes {
             self.lanes.resize_with(lanes, HeadScratch::default);
         }
+        // Idle lanes keep their buffers but must not keep fault counts:
+        // `integrity_faults` sums every lane, and a narrower request
+        // after a wide faulty one must not inherit stale verdicts.
+        for lane in &mut self.lanes[lanes..] {
+            lane.faults = 0;
+        }
         for lane in &mut self.lanes[..lanes] {
             lane.ensure(sl, dk, ts, path);
         }
@@ -193,6 +205,12 @@ impl Workspace {
     /// The output of the most recent `execute_into`/`execute_parallel`.
     pub fn output(&self) -> &[f32] {
         &self.out
+    }
+
+    /// ABFT row-checksum failures across all lanes for the most recent
+    /// execute (0 = every projection of every head verified clean).
+    pub fn integrity_faults(&self) -> u64 {
+        self.lanes.iter().map(|l| l.faults as u64).sum()
     }
 
     /// Move the output out, leaving an empty buffer (the next warm call

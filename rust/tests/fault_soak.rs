@@ -1,0 +1,222 @@
+//! Tier-2 soak: the fault-injection harness and the ABFT integrity
+//! layer, fleet-wide (DESIGN.md §15).
+//!
+//! One device boots with a persistent seeded SEU plan (every weight
+//! prepare corrupts its staged operands; local scrubbing re-draws the
+//! identical flips, so it never helps).  The acceptance contract:
+//!
+//! * **100% detection, zero corrupted outputs served** — every response
+//!   the faulty device produces is flagged by the checksum layer and
+//!   re-executed on a clean device; no `Served` outcome ever carries a
+//!   `Corrupt` verdict, and no `Clean` verdict ever names the faulty
+//!   device.
+//! * **Quarantine within K windows** — the per-device
+//!   `IntegrityErrorRate` rule drains exactly the faulty device within a
+//!   few telemetry windows of the first detection; the paired
+//!   `UndrainDevice` rule restores it after consecutive clean windows
+//!   (whereupon the persistent fault trips the re-armed drain again —
+//!   the quarantine cycle is part of the contract).
+//! * **Byte reproducibility** — the sealed frame export and the control
+//!   action log are byte-identical across two runs of the same seed,
+//!   real bounded-backoff sleeps notwithstanding (the virtual clock
+//!   never reads the host clock).
+
+use famous::cluster::loadgen::mean_service_ms;
+use famous::cluster::{
+    ActionRecord, Cluster, ClusterConfig, ControlAction, ControlRule, DeviceSpec, FleetStats,
+    LoadGen, LoadGenConfig, QosOutcome, RuleScope, RuleSignal, TelemetryConfig, TelemetrySnapshot,
+    WorkloadProfile,
+};
+use famous::config::Topology;
+use famous::coordinator::{BatchPolicy, IntegrityVerdict, Priority, SchedulerConfig};
+use famous::sim::FaultPlan;
+
+const SOAK_SEED: u64 = 0x5eed_fa57;
+const SEU_SEED: u64 = 0xBAD5_EED;
+
+struct SoakRun {
+    fleet: FleetStats,
+    snap: TelemetrySnapshot,
+    frames_jsonl: String,
+    actions_jsonl: String,
+    actions: Vec<ActionRecord>,
+    served: u64,
+    shed: u64,
+    recovered_served: u64,
+    corrupt_served: u64,
+    clean_from_faulty: u64,
+}
+
+/// Replay `n` bursty arrivals through a 3-device fleet whose device 0
+/// carries a persistent SEU plan, with the integrity quarantine/undrain
+/// rule pair installed, pumping the control plane after every call.
+fn run_seu_soak(n: usize) -> SoakRun {
+    let mix = vec![(Topology::new(16, 256, 4, 64), 1.0)];
+    let mut devices: Vec<DeviceSpec> = (0..3).map(DeviceSpec::u55c).collect();
+    // Persistent stuck-at upsets: rate 1.0 corrupts every projection of
+    // every prepare, so device 0 can never serve a clean response.
+    devices[0] = DeviceSpec::u55c(0).with_fault_plan(FaultPlan::seu(SEU_SEED, 1.0));
+    let base = mean_service_ms(&devices, &mix);
+    let arrivals =
+        LoadGen::new(LoadGenConfig::bursty_preset(&devices, mix.clone(), 0.45, SOAK_SEED))
+            .generate_n(n);
+    let mut workload = WorkloadProfile::default();
+    for (t, share) in &mix {
+        workload.push(t.clone(), *share);
+    }
+    let scheduler = SchedulerConfig {
+        max_batch: 8,
+        policy: BatchPolicy::EdfWithinWindow,
+        fairness_window: 16,
+    };
+    let telemetry =
+        TelemetryConfig { window_ms: 12.0 * base, grace_windows: 1, ring_capacity: 256 };
+    let mut cluster = Cluster::start(
+        devices,
+        &workload,
+        ClusterConfig { scheduler, telemetry, ..ClusterConfig::qos() },
+    )
+    .expect("cluster boot");
+    cluster.add_control_rule(ControlRule {
+        name: "integrity-quarantine".to_string(),
+        scope: RuleScope::PerDevice,
+        signal: RuleSignal::IntegrityErrorRate,
+        threshold: 0.0,
+        for_windows: 2,
+        action: ControlAction::DrainDevice,
+    });
+    cluster.add_control_rule(ControlRule {
+        name: "integrity-undrain".to_string(),
+        scope: RuleScope::PerDevice,
+        signal: RuleSignal::IntegrityErrorRate,
+        threshold: 0.0,
+        for_windows: 4,
+        action: ControlAction::UndrainDevice,
+    });
+    let h = cluster.handle();
+    let (mut served, mut shed) = (0u64, 0u64);
+    let (mut recovered_served, mut corrupt_served, mut clean_from_faulty) = (0u64, 0u64, 0u64);
+    let mut actions = Vec::new();
+    for (i, a) in arrivals.iter().enumerate() {
+        match h.call_qos(a.materialize(i as u64)).expect("call_qos") {
+            QosOutcome::Served(resp) => {
+                served += 1;
+                match resp.verdict {
+                    IntegrityVerdict::Clean => {
+                        if resp.devices.contains(&0) {
+                            clean_from_faulty += 1;
+                        }
+                    }
+                    IntegrityVerdict::Recovered => recovered_served += 1,
+                    IntegrityVerdict::Corrupt => corrupt_served += 1,
+                }
+            }
+            QosOutcome::Shed(notice) => {
+                assert_eq!(notice.priority, Priority::Low, "router may shed only Low");
+                shed += 1;
+            }
+            QosOutcome::Saturated(_) => {
+                unreachable!("Block saturation policy never returns Saturated")
+            }
+        }
+        actions.extend(cluster.pump_control());
+    }
+    cluster.seal_telemetry();
+    actions.extend(cluster.pump_control());
+    let snap = cluster.telemetry();
+    let frames_jsonl = snap.to_jsonl();
+    let actions_jsonl = cluster.control_log_jsonl();
+    SoakRun {
+        fleet: cluster.shutdown(),
+        snap,
+        frames_jsonl,
+        actions_jsonl,
+        actions,
+        served,
+        shed,
+        recovered_served,
+        corrupt_served,
+        clean_from_faulty,
+    }
+}
+
+#[test]
+fn seu_device_contained_quarantined_and_reproducible() {
+    let n = 400;
+    let run = run_seu_soak(n);
+
+    // No accepted request is lost, and the frame ledger saw every one.
+    assert_eq!(run.served + run.shed, n as u64);
+    assert_eq!(run.snap.sealed.arrivals_total(), n as u64);
+    assert_eq!(run.snap.sealed.completed, run.served);
+
+    // Zero corrupted outputs served, 100% of the faulty device's output
+    // flagged: no Corrupt verdict, and no Clean verdict names device 0.
+    assert_eq!(run.corrupt_served, 0, "a corrupt response reached a client");
+    assert_eq!(run.clean_from_faulty, 0, "device 0 served a response the checksums missed");
+    assert!(run.recovered_served > 0, "the faulty device never got traffic — nothing was tested");
+
+    // Router roll-up: detections happened, every one was healed by a
+    // cross-device re-execute, none were abandoned.
+    let totals = &run.fleet.totals;
+    assert!(totals.integrity_detected > 0);
+    assert!(totals.integrity_rerouted > 0);
+    assert_eq!(totals.integrity_failed, 0, "a clean spare existed for every reroute");
+    assert_eq!(
+        totals.integrity_recovered, 0,
+        "persistent flips re-draw identically at scrub — local retry must never succeed"
+    );
+    assert_eq!(
+        totals.integrity_rerouted, run.recovered_served,
+        "every recovered response is one cross-device re-execute, accounted exactly once"
+    );
+    // The telemetry ledger and the router agree on the detection count.
+    assert_eq!(run.snap.sealed.integrity_detected, totals.integrity_detected);
+
+    // Quarantine: the first control action drains exactly device 0,
+    // within a handful of windows of the first detection.
+    assert!(!run.actions.is_empty(), "integrity rule never fired");
+    let first = &run.actions[0];
+    assert_eq!(first.rule, "integrity-quarantine");
+    assert_eq!(first.device, Some(0));
+    assert!(matches!(first.action, ControlAction::DrainDevice));
+    assert_eq!(first.outcome, "drained device 0");
+    assert!(first.frame <= 12, "quarantine fired late, at frame {}", first.frame);
+
+    // Every action in the log targets the faulty device, and the log
+    // alternates drain / undrain: quarantine, restore after clean
+    // windows, re-quarantine when the persistent fault trips again.
+    for (i, act) in run.actions.iter().enumerate() {
+        assert_eq!(act.device, Some(0), "action {i} targeted a healthy device: {act:?}");
+        if i % 2 == 0 {
+            assert!(matches!(act.action, ControlAction::DrainDevice), "action {i}: {act:?}");
+        } else {
+            assert!(matches!(act.action, ControlAction::UndrainDevice), "action {i}: {act:?}");
+            assert_eq!(act.outcome, "restored device 0");
+        }
+    }
+    assert!(
+        run.actions.len() >= 2,
+        "trace long enough for at least one undrain, got {:?}",
+        run.actions
+    );
+
+    // The healthy devices were never drained and served the reroutes.
+    for d in &run.fleet.devices[1..] {
+        assert!(d.stats.served > 0, "healthy device {} sat idle", d.id);
+    }
+
+    // The fleet report names the incident.
+    let rendered = run.fleet.render();
+    assert!(rendered.contains("integrity"), "{rendered}");
+
+    // Byte-for-byte reproducibility: counters, sealed frames and the
+    // action log are identical across two runs of the same seeds.
+    let again = run_seu_soak(n);
+    assert_eq!(run.frames_jsonl, again.frames_jsonl, "frame export not reproducible");
+    assert_eq!(run.actions_jsonl, again.actions_jsonl, "action log not reproducible");
+    assert_eq!(run.served, again.served);
+    assert_eq!(run.recovered_served, again.recovered_served);
+    assert_eq!(again.fleet.totals.integrity_detected, totals.integrity_detected);
+    assert_eq!(again.fleet.totals.integrity_rerouted, totals.integrity_rerouted);
+}

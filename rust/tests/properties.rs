@@ -634,6 +634,80 @@ fn prop_int8_datapath_error_bounded_vs_f32_reference() {
     });
 }
 
+// ------------------------------------------- ABFT integrity (PR 8)
+
+#[test]
+fn prop_abft_catches_every_single_weight_fault() {
+    // DESIGN.md §15: the Huang–Abraham column-sum check is exact in
+    // integer arithmetic, so a single staged-weight corruption — random
+    // head, projection, element and bit, on every kernel tier — is
+    // always detected, while clean weights always verify clean.
+    use famous::sim::{KernelTier, PreparedWeights, Workspace};
+    use famous::testdata::MhaInputs;
+    run("abft catches single faults", 40, |g: &mut Gen| {
+        let heads = *g.pick(&[1usize, 2, 4]);
+        let dk = *g.pick(&[4usize, 8]);
+        let dm = heads * dk;
+        let sl = g.usize_in(2, 12);
+        let topo = Topology::new(sl, dm, heads, dm);
+        let mut inputs = MhaInputs::generate(&topo);
+        let head = g.usize_in(0, heads - 1);
+        let proj = g.usize_in(0, 2);
+        let pos = g.usize_in(0, dk * dm - 1);
+        let bit = g.usize_in(0, 7) as u32;
+        // Make the faulted weight column observable: the check is exact,
+        // but a weight column whose input column quantizes to all-zero
+        // cannot influence any accumulator — the corruption is dead code
+        // and there is nothing to detect.
+        inputs.x[pos % dm] = 1.0;
+        for tier in KernelTier::ALL {
+            let mut prepared =
+                PreparedWeights::prepare_with_tier(&SimConfig::u55c(), &topo, &inputs, tier);
+            let x = prepared.quantize_input(&inputs.x);
+            let mut ws = Workspace::new();
+            prepared.execute_into(&x, &mut ws);
+            assert_eq!(ws.integrity_faults(), 0, "clean weights flagged ({topo} {tier})");
+            prepared.inject_weight_fault(head, proj, pos, bit);
+            prepared.execute_into(&x, &mut ws);
+            assert!(
+                ws.integrity_faults() > 0,
+                "missed fault h={head} proj={proj} pos={pos} bit={bit} ({topo} {tier})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_zero_rate_fault_plan_is_bit_transparent() {
+    // A wired but zero-rate fault plan must be invisible: identical
+    // staged weights, identical outputs, clean integrity — the harness
+    // itself adds no perturbation (DESIGN.md §15 acceptance).
+    use famous::sim::{FaultPlan, PreparedWeights, Workspace};
+    use famous::testdata::MhaInputs;
+    run("zero-rate plan == no plan", 20, |g: &mut Gen| {
+        let heads = *g.pick(&[1usize, 2, 4]);
+        let dk = *g.pick(&[4usize, 8]);
+        let dm = heads * dk;
+        let sl = g.usize_in(2, 12);
+        let topo = Topology::new(sl, dm, heads, dm);
+        let inputs = MhaInputs::generate(&topo);
+        let cfg = SimConfig::u55c();
+        let mut seeded = cfg.clone();
+        seeded.fault_plan = Some(FaultPlan::seu(g.i64_in(0, 1 << 40) as u64, 0.0));
+        let base = PreparedWeights::prepare(&cfg, &topo, &inputs);
+        let planned = PreparedWeights::prepare(&seeded, &topo, &inputs);
+        let x = base.quantize_input(&inputs.x);
+        let mut ws = Workspace::new();
+        planned.execute_into(&x, &mut ws);
+        assert_eq!(ws.integrity_faults(), 0, "{topo}: zero-rate plan tripped the checksum");
+        assert_eq!(
+            bits(ws.output()),
+            bits(&base.execute(&x)),
+            "{topo}: zero-rate plan perturbed the output"
+        );
+    });
+}
+
 #[test]
 fn warm_workspace_requests_allocate_nothing() {
     // A second same-topology request must leave every buffer pointer and

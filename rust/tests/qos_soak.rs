@@ -116,6 +116,9 @@ fn run_soak_with(
             QosOutcome::Shed(notice) => {
                 assert_eq!(notice.priority, Priority::Low, "only Low may be shed");
             }
+            QosOutcome::Saturated(_) => {
+                unreachable!("Block saturation policy never returns Saturated")
+            }
         }
     }
     let fleet = cluster.shutdown();

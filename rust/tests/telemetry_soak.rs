@@ -92,6 +92,9 @@ fn run_soak(
                 assert_eq!(notice.priority, Priority::Low, "router may shed only Low");
                 shed += 1;
             }
+            QosOutcome::Saturated(_) => {
+                unreachable!("Block saturation policy never returns Saturated")
+            }
         }
         actions.extend(cluster.pump_control());
     }

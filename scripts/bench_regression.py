@@ -27,6 +27,7 @@ WALL_FIELDS = {
     "results": ("serial_alloc_ms", "serial_warm_ms", "head_parallel_ms"),
     "long_sl": ("reference_ms", "fused_ms"),
     "kernel_tiers": ("scalar_ms", "simd_ms", "simd_int8_ms"),
+    "integrity": ("verify_off_ms", "verify_on_ms"),
 }
 KEY_FIELDS = ("seq_len", "d_model", "heads", "lanes")
 
