@@ -1,0 +1,134 @@
+//! Capacity study: sweep offered load to the SLO knee on the DES.
+//!
+//! The question the virtual-time simulator exists to answer cheaply
+//! (DESIGN.md §16): *how much load can this fleet take before the SLO
+//! gives way, and how much headroom does the corrected fused-path
+//! timing buy?*  Each sweep point replays a seeded bursty trace through
+//! [`FleetSim`] twice — once billing the reference `SL×SL` service
+//! model, once billing auto-fused shapes with the corrected per-tile
+//! `FusedTiled` trace — and records the deadline-violation rate.  The
+//! **knee** is the first offered-load fraction where violations exceed
+//! 5% of deadline-bearing traffic.
+//!
+//! Every point is a fresh simulator on the same seed, so the whole
+//! study is deterministic; on the threaded fleet this sweep would cost
+//! tens of real minutes, on the DES it is wall-clock seconds.
+//!
+//!     cargo run --release --example capacity_study
+
+use famous::cluster::{
+    ClusterConfig, DesConfig, DesReport, DeviceSpec, FleetSim, LoadGen, LoadGenConfig, QosPolicy,
+    WorkloadProfile,
+};
+use famous::config::Topology;
+
+const SEED: u64 = 0xca9a_c17e;
+const N_PER_POINT: usize = 1_500;
+const KNEE_VIOLATION_RATE: f64 = 0.05;
+
+/// Long-sequence mix on the streaming build: SL 512 is past the fused
+/// threshold (the shapes the ISSUE-9 timing fix actually changes), SL
+/// 256 rides along as the short tail.
+fn mix() -> Vec<(Topology, f64)> {
+    vec![
+        (Topology::new(512, 128, 2, 64), 2.0),
+        (Topology::new(256, 128, 2, 64), 1.0),
+    ]
+}
+
+fn sweep_point(rho: f64, fused_service: bool) -> DesReport {
+    let m = mix();
+    let devices: Vec<DeviceSpec> = (0..2).map(DeviceSpec::u55c_long).collect();
+    let mut workload = WorkloadProfile::default();
+    for (t, share) in &m {
+        workload.push(t.clone(), *share);
+    }
+    let config = DesConfig {
+        cluster: ClusterConfig { qos: QosPolicy::SlackEdf, ..ClusterConfig::default() },
+        fused_service,
+    };
+    let mut sim = FleetSim::new(devices.clone(), &workload, config).expect("fleet boots");
+    let mut gen = LoadGen::new(LoadGenConfig::bursty_preset(&devices, m, rho, SEED));
+    let report = sim.run(&mut gen, N_PER_POINT);
+    assert!(report.conserved(), "conservation failed at rho {rho}: {report:?}");
+    report
+}
+
+/// First sweep point whose violation rate crosses the knee threshold
+/// (`None` when the fleet holds the SLO across the whole sweep).
+fn knee(points: &[(f64, DesReport)]) -> Option<f64> {
+    points.iter().find(|(_, r)| r.violation_rate() > KNEE_VIOLATION_RATE).map(|(rho, _)| *rho)
+}
+
+fn main() {
+    let rhos: Vec<f64> = (5..=13).map(|i| i as f64 / 10.0).collect();
+    println!("== FAMOUS capacity study (virtual-time DES, DESIGN.md §16) ==");
+    println!(
+        "fleet: 2x u55c-long; {N_PER_POINT} bursty requests per point, seed {SEED:#x}; \
+         knee at violation rate > {:.0}%",
+        KNEE_VIOLATION_RATE * 100.0
+    );
+    println!();
+    println!(
+        "{:>5}  {:>28}  {:>28}",
+        "rho", "reference (SLxSL billing)", "fused (per-tile billing)"
+    );
+    println!(
+        "{:>5}  {:>9} {:>8} {:>9}  {:>9} {:>8} {:>9}",
+        "", "viol", "shed", "util", "viol", "shed", "util"
+    );
+
+    let mut reference = Vec::new();
+    let mut fused = Vec::new();
+    let mut wall_ms = 0.0;
+    for &rho in &rhos {
+        let r = sweep_point(rho, false);
+        let f = sweep_point(rho, true);
+        wall_ms += r.wall_ms + f.wall_ms;
+        let util = |rep: &DesReport| {
+            let n = rep.device_busy_ms.len();
+            (0..n).map(|i| rep.utilization(i)).sum::<f64>() / n as f64
+        };
+        let shed = |rep: &DesReport| rep.shed;
+        println!(
+            "{:>5.2}  {:>8.2}% {:>8} {:>8.0}%  {:>8.2}% {:>8} {:>8.0}%",
+            rho,
+            r.violation_rate() * 100.0,
+            shed(&r),
+            util(&r) * 100.0,
+            f.violation_rate() * 100.0,
+            shed(&f),
+            util(&f) * 100.0,
+        );
+        reference.push((rho, r));
+        fused.push((rho, f));
+    }
+
+    let knee_ref = knee(&reference);
+    let knee_fused = knee(&fused);
+    let label = |k: Option<f64>| match k {
+        Some(rho) => format!("rho {rho:.2}"),
+        None => format!("beyond rho {:.2}", rhos.last().unwrap()),
+    };
+    println!();
+    println!("knee (reference billing): {}", label(knee_ref));
+    println!("knee (fused billing):     {}", label(knee_fused));
+    println!("sweep simulated in {:.1} ms wall across {} points", wall_ms, 2 * rhos.len());
+
+    // The corrected fused trace is strictly cheaper at SL >= 256, so
+    // fused billing can only hold the SLO at least as far up the load
+    // axis — the headroom the ISSUE-9 fix recovered.
+    let total = |pts: &[(f64, DesReport)]| -> u64 {
+        pts.iter().map(|(_, r)| r.totals.slo.total_missed() + r.shed).sum()
+    };
+    assert!(
+        total(&fused) <= total(&reference),
+        "fused billing violated more than reference across the sweep: {} > {}",
+        total(&fused),
+        total(&reference)
+    );
+    if let (Some(kr), Some(kf)) = (knee_ref, knee_fused) {
+        assert!(kf >= kr, "fused knee {kf} moved below reference knee {kr}");
+    }
+    println!("capacity_study OK: fused billing holds the SLO at least as far as reference");
+}

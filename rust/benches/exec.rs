@@ -24,6 +24,10 @@
 //!     cargo bench --bench exec
 
 use famous::benchlib::{bench, black_box};
+use famous::cluster::{
+    ClusterConfig, DesConfig, DeviceSpec, FleetSim, LoadGen, LoadGenConfig, QosPolicy,
+    WorkloadProfile,
+};
 use famous::config::Topology;
 use famous::exec::ThreadPool;
 use famous::jsonlite::Json;
@@ -357,6 +361,56 @@ fn main() {
     print!("{}", integ_table.render());
     println!("(verify-on bit-identical to verify-off; <10% overhead asserted at SL=256)");
 
+    // ---- DES wall time: fixed seeded trace through the fleet sim ----
+    // (ISSUE 9, DESIGN.md §16.)  One series point: how many wall-ms the
+    // simulator needs for a fixed 100k-request bursty trace on a 4x
+    // U55C fleet.  The regression gate watches this like any other wall
+    // series — a slowdown here is a simulator-hot-path regression, and
+    // drift in `served` under the fixed seed would surface as a failed
+    // conservation assert.  Keyed by the mix's dominant shape; `lanes`
+    // carries the fleet size.
+    let des_results = {
+        const DES_N: usize = 100_000;
+        const DES_SEED: u64 = 0xbe0c_4de5;
+        let mix: Vec<(Topology, f64)> = vec![
+            (Topology::new(64, 768, 8, 64), 3.0),
+            (Topology::new(32, 768, 8, 64), 2.0),
+            (Topology::new(64, 512, 8, 64), 1.0),
+        ];
+        let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+        let mut workload = WorkloadProfile::default();
+        for (t, share) in &mix {
+            workload.push(t.clone(), *share);
+        }
+        let config = DesConfig {
+            cluster: ClusterConfig { qos: QosPolicy::SlackEdf, ..ClusterConfig::default() },
+            fused_service: false,
+        };
+        let mut sim = FleetSim::new(devices.clone(), &workload, config).expect("fleet boots");
+        let mut gen =
+            LoadGen::new(LoadGenConfig::bursty_preset(&devices, mix, 0.9, DES_SEED));
+        let report = sim.run(&mut gen, DES_N);
+        assert!(report.conserved(), "DES bench trace not conserved: {report:?}");
+        println!(
+            "des: {DES_N} requests in {:.1} ms wall ({:.0}x real time, {} served)",
+            report.wall_ms,
+            report.speedup(),
+            report.served
+        );
+        vec![Json::obj([
+            ("seq_len", Json::from(64.0)),
+            ("d_model", Json::from(768.0)),
+            ("heads", Json::from(8.0)),
+            ("lanes", Json::from(devices.len() as f64)),
+            ("requests", Json::from(DES_N as f64)),
+            ("wall_ms", Json::from(report.wall_ms)),
+            ("virtual_ms", Json::from(report.virtual_ms)),
+            ("speedup_virtual", Json::from(report.speedup())),
+            ("served", Json::from(report.served as f64)),
+            ("violation_rate", Json::from(report.violation_rate())),
+        ])]
+    };
+
     let out = Json::obj([
         ("bench", Json::from("exec")),
         ("unit", Json::from("ms_mean_wall")),
@@ -366,6 +420,7 @@ fn main() {
         ("long_sl", Json::arr(long_results)),
         ("kernel_tiers", Json::arr(tier_results)),
         ("integrity", Json::arr(integ_results)),
+        ("des", Json::arr(des_results)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_exec.json");
     std::fs::write(path, out.to_string() + "\n").expect("write BENCH_exec.json");

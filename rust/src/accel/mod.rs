@@ -28,7 +28,7 @@ use crate::fpga::resources::{ResourceEstimate, ResourceModel, Utilization};
 use crate::jsonlite::Json;
 use crate::metrics::OpCount;
 use crate::runtime::{Backend, PathCounters, SimBackend};
-use crate::sim::{ControlRegs, SimConfig, SimResult, Simulator};
+use crate::sim::{ControlRegs, ExecPath, SimConfig, SimResult, Simulator};
 use crate::testdata::MhaInputs;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
@@ -140,6 +140,49 @@ impl ProgramCache {
     }
 }
 
+/// Per-path timing summary distilled from a cached phase trace: the
+/// modeled service time plus per-phase occupancy, without the full
+/// event list.  This is what virtual-time consumers (the discrete-event
+/// fleet simulator, DESIGN.md §16) draw per-request service times from
+/// — a cache lookup, never a per-request timing simulation.
+#[derive(Clone, Debug)]
+pub struct TraceSummary {
+    pub topology: Topology,
+    pub path: ExecPath,
+    /// Critical-path total of the trace (== `SimResult::cycles`).
+    pub cycles: u64,
+    /// Modeled fabric latency at this build's clock.
+    pub latency_ms: f64,
+    /// Summed occupancy per phase name, in order of first appearance
+    /// (per-tile events fold into their phase, so a fused trace's
+    /// overlapped tiles sum to more than `cycles`).
+    pub phases: Vec<(&'static str, u64)>,
+}
+
+impl TraceSummary {
+    fn from_sim(path: ExecPath, sim: &SimResult) -> Self {
+        let mut phases: Vec<(&'static str, u64)> = Vec::new();
+        for e in &sim.trace.events {
+            match phases.iter_mut().find(|(n, _)| *n == e.name) {
+                Some((_, c)) => *c += e.cycles(),
+                None => phases.push((e.name, e.cycles())),
+            }
+        }
+        TraceSummary {
+            topology: sim.topology.clone(),
+            path,
+            cycles: sim.cycles,
+            latency_ms: sim.latency_ms,
+            phases,
+        }
+    }
+
+    /// Summed occupancy of one phase (0 when absent).
+    pub fn phase_cycles(&self, name: &str) -> u64 {
+        self.phases.iter().find(|(n, _)| *n == name).map(|(_, c)| *c).unwrap_or(0)
+    }
+}
+
 /// Outcome of one accelerator invocation.
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -192,6 +235,12 @@ pub struct FamousAccelerator {
     pub timing_sims_run: u64,
     /// Program requests served from the cache.
     pub program_cache_hits: u64,
+    /// Memoized fused-path timing summaries ([`Self::trace_summary`]).
+    /// Kept beside — not inside — the `ProgramCache`: a `ProgramImage`
+    /// carries the register image of the build's *programmed* schedule
+    /// (reference timing), while these are alternate-path replays of the
+    /// same topology.
+    fused_timings: Vec<TraceSummary>,
 }
 
 impl FamousAccelerator {
@@ -204,6 +253,7 @@ impl FamousAccelerator {
             runs: 0,
             timing_sims_run: 0,
             program_cache_hits: 0,
+            fused_timings: Vec::new(),
         }
     }
 
@@ -256,6 +306,32 @@ impl FamousAccelerator {
             sim: sim_result,
         };
         Ok(self.programs.insert(image))
+    }
+
+    /// Per-path timing summary for `topo` (DESIGN.md §16).  `Reference`
+    /// is served straight off the cached [`ProgramImage`] (a cache miss
+    /// runs the one timing sim `program` would run anyway); `FusedTiled`
+    /// replays the tile-streaming schedule once per topology and is
+    /// memoized thereafter.  Either way, repeat calls are lookups —
+    /// the property that lets a discrete-event simulator price millions
+    /// of requests without millions of timing sims.
+    pub fn trace_summary(&mut self, topo: &Topology, path: ExecPath) -> Result<TraceSummary> {
+        if path == ExecPath::Reference {
+            let image = self.program(topo)?;
+            return Ok(TraceSummary::from_sim(path, &image.sim));
+        }
+        if let Some(s) = self.fused_timings.iter().find(|s| &s.topology == topo) {
+            return Ok(s.clone());
+        }
+        if let Err(e) = self.config.build.admits(topo) {
+            bail!("admission: {e}");
+        }
+        let mut sim = Simulator::new(self.config.clone());
+        let r = sim.run_timing_path(topo, path).map_err(|e| anyhow::anyhow!("sim: {e}"))?;
+        self.timing_sims_run += 1;
+        let s = TraceSummary::from_sim(path, &r);
+        self.fused_timings.push(s.clone());
+        Ok(s)
     }
 
     fn report(&self, image: &ProgramImage, output: Vec<f32>) -> RunReport {

@@ -1,0 +1,923 @@
+//! Virtual-time discrete-event fleet simulator (DESIGN.md §16).
+//!
+//! The threaded soak executes every request on real threads, so
+//! "millions of users" capacity studies top out at what the host can
+//! physically run.  This module replays the same routing pipeline in
+//! *virtual time*: a min-heap of timestamped component wake-ups — the
+//! load source emitting its next arrival, device service completions —
+//! advances a global virtual clock, and per-request service times come
+//! from the devices' cached [`crate::accel::ProgramImage`] phase traces
+//! instead of wall-clock thread execution.  An hour-long million-request
+//! trace simulates in wall-clock seconds and is bit-reproducible under a
+//! fixed seed.
+//!
+//! **Fidelity contract** (asserted by `rust/tests/des_soak.rs`): driven
+//! by the same seeded arrival stream and `ClusterConfig`, the simulator
+//! produces *exactly* the counters and telemetry of a threaded
+//! [`super::Cluster`] whose client submits sequentially — identical
+//! conservation totals (offered = served + shed + rejected) and
+//! byte-identical telemetry frame ledgers.  That works because every
+//! latency in this repository is already modeled on the virtual request
+//! clock; the threads only ever carried the *functional* datapath, which
+//! the DES does not re-execute.  The mirror is exact on three grounds:
+//!
+//! * **Service times.**  Each simulated device owns a
+//!   [`FamousAccelerator`] booted from the spec's *derated* build —
+//!   exactly what `Cluster::start` boots — so `fabric_ms` equals the
+//!   `ProgramImage::latency_ms` the threaded device would bill, while
+//!   routing keeps planning with the advertised
+//!   [`DeviceSpec::predicted_ms`] model (silent-derate drift included).
+//! * **Event order.**  A sequential client fully processes arrival *i*
+//!   (ingress → admission → dispatch bookkeeping → completion record)
+//!   before arrival *i+1* touches the router, so the DES records
+//!   completion telemetry *eagerly* at arrival-processing time (stamped
+//!   with its future `done_ms`, exactly like the threaded router) and
+//!   uses heap completion wake-ups only for auxiliary occupancy stats.
+//! * **Queue depths.**  Sequential driving means every ingress queue is
+//!   empty at ranking time, so the `Affinity` arm's `pending` signal is
+//!   identically 0 — bounces never happen and dispatch always lands on
+//!   the top-ranked candidate.
+//!
+//! With [`DesConfig::fused_service`] the simulator leaves mirror mode
+//! and bills shapes the auto exec policy runs fused with the corrected
+//! per-tile `FusedTiled` trace ([`FamousAccelerator::trace_summary`])
+//! instead of the reference `SL×SL` phases — the what-if lever the
+//! capacity study sweeps (`examples/capacity_study.rs`).
+
+use super::fleet::RouterTotals;
+use super::placement::{PlacementPlan, PlacementPlanner, WorkloadProfile};
+use super::router::{
+    order_candidates, order_candidates_by_slack, preferred_devices, CandidateView, ClusterConfig,
+    QosPolicy, SlackView, WarmSet, DEFAULT_ADMISSION_MARGIN_MS,
+};
+use super::shard::ShardPlan;
+use super::telemetry::{
+    self, ActionRecord, ControlAction, ControlPlane, ControlRule, DeviceTouch, FrameAggregator,
+    Heat, TelemetryEvent, TelemetrySnapshot,
+};
+use super::{Arrival, DeviceSpec, LoadGen};
+use crate::accel::FamousAccelerator;
+use crate::config::Topology;
+use crate::metrics::OpCount;
+use crate::sim::ExecPath;
+use anyhow::{bail, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One scheduled wake-up: ordering key is `(time-bits, sequence)`.
+/// Payloads never participate in the ordering, so the queue is generic
+/// without an `Ord` bound on `T`.
+struct Entry<T> {
+    /// `f64::to_bits` of the timestamp — monotone in the value for the
+    /// non-negative finite floats [`EventQueue::push`] admits.
+    key: u64,
+    /// Push sequence number: FIFO among equal timestamps, and a total
+    /// order overall (determinism does not hinge on heap internals).
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.key, self.seq).cmp(&(other.key, other.seq))
+    }
+}
+
+/// Deterministic timestamp-ordered event queue: the DES core.
+///
+/// A thin discipline over `BinaryHeap`: timestamps must be finite and
+/// non-negative (so their bit patterns order like the values), ties pop
+/// in push order, and [`EventQueue::pop`] *asserts* the dispatch
+/// sequence never goes backwards in time — the invariant the property
+/// suite fuzzes (`rust/tests/properties.rs`).
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Reverse<Entry<T>>>,
+    next_seq: u64,
+    /// Bits of the most recently popped timestamp (monotonicity check).
+    popped_key: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0, popped_key: 0 }
+    }
+
+    /// Schedule `payload` at virtual time `t_ms` (finite, `>= 0`).
+    pub fn push(&mut self, t_ms: f64, payload: T) {
+        assert!(
+            t_ms.is_finite() && t_ms >= 0.0,
+            "event timestamp must be finite and non-negative, got {t_ms}"
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Entry { key: t_ms.to_bits(), seq, payload }));
+    }
+
+    /// Pop the earliest event.  Panics if the heap would hand events
+    /// out of timestamp order — that would silently corrupt every
+    /// statistic built on the virtual clock, so it is a hard invariant,
+    /// not a debug check.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let Reverse(e) = self.heap.pop()?;
+        assert!(
+            e.key >= self.popped_key,
+            "event heap dispatched out of timestamp order: {} after {}",
+            f64::from_bits(e.key),
+            f64::from_bits(self.popped_key),
+        );
+        self.popped_key = e.key;
+        Some((f64::from_bits(e.key), e.payload))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// DES tuning: the threaded cluster's config plus the service-model
+/// lever.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DesConfig {
+    /// Routing/QoS/telemetry configuration, interpreted exactly as the
+    /// threaded [`super::Cluster`] does.  `scheduler`, `server`,
+    /// `max_retries`, `saturation` and `clock` are carried for parity
+    /// but have no observable effect under sequential-equivalent
+    /// simulation (queues never fill, so nothing bounces or blocks).
+    pub cluster: ClusterConfig,
+    /// Bill shapes the auto exec policy runs fused with the corrected
+    /// per-tile `FusedTiled` trace instead of the reference `SL×SL`
+    /// phases.  Off by default: the threaded fleet's devices still bill
+    /// reference timing, and mirror mode must match them byte-for-byte.
+    pub fused_service: bool,
+}
+
+/// One simulated fleet member: advertised spec + the derated "booted"
+/// accelerator whose program cache supplies service times.
+struct DeviceModel {
+    spec: DeviceSpec,
+    accel: FamousAccelerator,
+}
+
+/// A scheduled component wake-up.
+enum Event {
+    /// The load source emits an arrival (and re-arms for the next one).
+    Arrival(Arrival),
+    /// A device finishes one dispatched (sub-)request.
+    Completion { device: usize, fabric_ms: f64 },
+}
+
+/// Final report of one simulated trace.
+#[derive(Clone, Debug)]
+pub struct DesReport {
+    /// Arrivals offered to the router mirror.
+    pub offered: u64,
+    /// Client-visible requests completed (sharded counts once).
+    pub served: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    /// Virtual span of the trace: the last event's timestamp, ms.
+    pub virtual_ms: f64,
+    /// Host wall time the simulation took, ms.
+    pub wall_ms: f64,
+    /// Heap events dispatched (arrivals + completions).
+    pub events: u64,
+    /// Peak concurrent device invocations in flight.
+    pub peak_in_flight: u64,
+    /// Modeled fabric occupancy per device, ms.
+    pub device_busy_ms: Vec<f64>,
+    /// Full router-mirror counters (SLO stats included).
+    pub totals: RouterTotals,
+}
+
+impl DesReport {
+    /// offered = served + shed + rejected — the conservation invariant
+    /// shared with the threaded soak.
+    pub fn conserved(&self) -> bool {
+        self.offered == self.served + self.shed + self.rejected
+    }
+
+    /// Virtual-over-wall speedup (how much faster than real time the
+    /// trace simulated).
+    pub fn speedup(&self) -> f64 {
+        if self.wall_ms > 0.0 {
+            self.virtual_ms / self.wall_ms
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Modeled utilization of one device over the virtual span.
+    pub fn utilization(&self, device: usize) -> f64 {
+        if self.virtual_ms > 0.0 {
+            self.device_busy_ms.get(device).copied().unwrap_or(0.0) / self.virtual_ms
+        } else {
+            0.0
+        }
+    }
+
+    /// SLO violation rate over deadline-bearing traffic (misses + sheds
+    /// over demand) — the capacity study's knee signal.
+    pub fn violation_rate(&self) -> f64 {
+        self.totals.slo.overall_miss_rate()
+    }
+
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "des: {} offered = {} served + {} shed + {} rejected  (conserved: {})",
+            self.offered,
+            self.served,
+            self.shed,
+            self.rejected,
+            self.conserved(),
+        );
+        let _ = writeln!(
+            out,
+            "     virtual {:.1} ms in {:.1} ms wall ({:.0}x real time), {} events, peak {} in flight",
+            self.virtual_ms,
+            self.wall_ms,
+            self.speedup(),
+            self.events,
+            self.peak_in_flight,
+        );
+        let _ = writeln!(
+            out,
+            "     violation rate {:.4}  miss {}  utilization {}",
+            self.violation_rate(),
+            self.totals.slo.total_missed(),
+            (0..self.device_busy_ms.len())
+                .map(|i| format!("{:.0}%", self.utilization(i) * 100.0))
+                .collect::<Vec<_>>()
+                .join("/"),
+        );
+        out
+    }
+}
+
+/// The virtual-time fleet: a deterministic mirror of
+/// [`super::Cluster`]'s routing state machine, driven by an
+/// [`EventQueue`] instead of client threads.
+pub struct FleetSim {
+    devices: Vec<DeviceModel>,
+    plan: PlacementPlan,
+    qos: QosPolicy,
+    fused_service: bool,
+    queue: EventQueue<Event>,
+
+    // --- router-state mirror (field-for-field with `RouterState`) ---
+    last_topology: Vec<Option<Topology>>,
+    backlog_ms: Vec<f64>,
+    down: Vec<bool>,
+    warm: Vec<WarmSet>,
+    admission_margin_ms: [Option<f64>; 3],
+    totals: RouterTotals,
+
+    telemetry: FrameAggregator,
+    control: ControlPlane,
+
+    // --- auxiliary occupancy stats (heap-driven; never fed back into
+    // the router mirror, so they cannot perturb the byte-identity) ---
+    clock_ms: f64,
+    offered: u64,
+    events: u64,
+    in_flight: u64,
+    peak_in_flight: u64,
+    busy_ms: Vec<f64>,
+}
+
+impl FleetSim {
+    /// Mirror of `Cluster::start`: renumber devices, plan placement,
+    /// and boot each device's accelerator at its *real* (possibly
+    /// silently derated) clock while routing keeps the advertised model.
+    pub fn new(
+        devices: Vec<DeviceSpec>,
+        workload: &WorkloadProfile,
+        config: DesConfig,
+    ) -> Result<FleetSim> {
+        if devices.is_empty() {
+            bail!("fleet simulator needs at least one device");
+        }
+        let mut devices = devices;
+        for (i, d) in devices.iter_mut().enumerate() {
+            d.id = i;
+        }
+        let plan = PlacementPlanner::default().plan(&devices, workload);
+        let models: Vec<DeviceModel> = devices
+            .into_iter()
+            .map(|spec| {
+                let mut sim = spec.sim.clone();
+                sim.build.clock_hz *= spec.silent_derate;
+                DeviceModel { spec, accel: FamousAccelerator::with_sim_datapath(sim) }
+            })
+            .collect();
+        let n = models.len();
+        Ok(FleetSim {
+            devices: models,
+            plan,
+            qos: config.cluster.qos,
+            fused_service: config.fused_service,
+            queue: EventQueue::new(),
+            last_topology: vec![None; n],
+            backlog_ms: vec![0.0; n],
+            down: vec![false; n],
+            warm: vec![WarmSet::default(); n],
+            admission_margin_ms: DEFAULT_ADMISSION_MARGIN_MS,
+            totals: RouterTotals::default(),
+            telemetry: FrameAggregator::new(config.cluster.telemetry, n),
+            control: ControlPlane::default(),
+            clock_ms: 0.0,
+            offered: 0,
+            events: 0,
+            in_flight: 0,
+            peak_in_flight: 0,
+            busy_ms: vec![0.0; n],
+        })
+    }
+
+    pub fn plan(&self) -> &PlacementPlan {
+        &self.plan
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device_names(&self) -> Vec<String> {
+        self.devices.iter().map(|d| d.spec.name.clone()).collect()
+    }
+
+    /// Install a control rule, evaluated per sealed telemetry frame
+    /// after every processed arrival (the DES pumps its own control
+    /// plane — there is no operator thread in virtual time).
+    pub fn add_control_rule(&mut self, rule: ControlRule) {
+        self.control.add_rule(rule);
+    }
+
+    pub fn control_log(&self) -> &[ActionRecord] {
+        self.control.log()
+    }
+
+    pub fn control_log_jsonl(&self) -> String {
+        self.control.log_jsonl()
+    }
+
+    /// Snapshot the telemetry ring + running totals (same unit of
+    /// reproducibility as `Cluster::telemetry`).
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        self.telemetry.snapshot()
+    }
+
+    /// Seal every outstanding partial frame (end of run).
+    pub fn seal_telemetry(&mut self) {
+        self.telemetry.seal_all();
+    }
+
+    pub fn totals(&self) -> &RouterTotals {
+        &self.totals
+    }
+
+    /// Simulate the next `n` arrivals drawn lazily from `gen` — the
+    /// load source is a heap component that re-arms itself after each
+    /// emission, so arbitrarily long traces never materialize an
+    /// arrival vector.  Drawing one arrival at a time emits exactly the
+    /// stream one `generate_n(n)` call would.
+    pub fn run(&mut self, gen: &mut LoadGen, n: usize) -> DesReport {
+        let mut remaining = n;
+        self.run_source(move || {
+            if remaining == 0 {
+                return None;
+            }
+            remaining -= 1;
+            gen.generate_n(1).pop()
+        })
+    }
+
+    /// Simulate a pre-generated arrival trace (the cross-check path:
+    /// the threaded soak replays the identical vector).
+    pub fn run_trace(&mut self, arrivals: &[Arrival]) -> DesReport {
+        let mut it = arrivals.iter().cloned();
+        self.run_source(move || it.next())
+    }
+
+    /// The event loop: seed the load source, then drain the heap.  The
+    /// popped timestamp *is* the global virtual clock — the monotone-pop
+    /// assertion inside [`EventQueue`] guarantees it never runs
+    /// backwards.
+    fn run_source(&mut self, mut next: impl FnMut() -> Option<Arrival>) -> DesReport {
+        let wall_start = std::time::Instant::now();
+        let events_before = self.events;
+        if let Some(a) = next() {
+            self.queue.push(a.arrival_ms, Event::Arrival(a));
+        }
+        while let Some((t, ev)) = self.queue.pop() {
+            self.clock_ms = t;
+            self.events += 1;
+            match ev {
+                Event::Arrival(a) => {
+                    self.process_arrival(&a);
+                    if !self.control.rules().is_empty() {
+                        self.pump_control();
+                    }
+                    if let Some(b) = next() {
+                        self.queue.push(b.arrival_ms, Event::Arrival(b));
+                    }
+                }
+                Event::Completion { device, fabric_ms } => {
+                    self.in_flight -= 1;
+                    self.busy_ms[device] += fabric_ms;
+                }
+            }
+        }
+        let report = DesReport {
+            offered: self.offered,
+            served: self.totals.completed,
+            shed: self.totals.slo.total_shed(),
+            rejected: self.totals.rejected,
+            virtual_ms: self.clock_ms,
+            wall_ms: wall_start.elapsed().as_secs_f64() * 1000.0,
+            events: self.events - events_before,
+            peak_in_flight: self.peak_in_flight,
+            device_busy_ms: self.busy_ms.clone(),
+            totals: self.totals.clone(),
+        };
+        assert!(
+            report.conserved(),
+            "conservation violated: {} offered != {} served + {} shed + {} rejected",
+            report.offered,
+            report.served,
+            report.shed,
+            report.rejected,
+        );
+        report
+    }
+
+    /// Mirror of `ClusterHandle::call_qos`, minus the functional
+    /// datapath: ingress telemetry, admission control, dispatch
+    /// bookkeeping and eager completion records in the threaded
+    /// router's exact order.
+    fn process_arrival(&mut self, a: &Arrival) {
+        self.offered += 1;
+        let topo = &a.topology;
+        // telemetry_ingress: gauges, watermark, ingress record.
+        self.telemetry.observe_gauges(&self.backlog_ms, &self.down);
+        self.telemetry.advance(a.arrival_ms);
+        self.telemetry.record(TelemetryEvent::Ingress { t_ms: a.arrival_ms, priority: a.priority });
+        let single = self.devices.iter().any(|d| d.spec.admits(topo));
+        let shard = if single {
+            None
+        } else {
+            self.plan
+                .placement(topo)
+                .and_then(|p| p.shard.clone())
+                .or_else(|| ShardPlan::plan(topo))
+                .filter(|s| self.devices.iter().any(|d| d.spec.admits(&s.half)))
+        };
+        if !single && shard.is_none() {
+            self.totals.rejected += 1;
+            self.telemetry.record(TelemetryEvent::Reject { t_ms: a.arrival_ms });
+            return;
+        }
+        // Admission control (SlackEdf only): shed a deadline request no
+        // live admitting device can finish `margin` early.
+        if self.qos == QosPolicy::SlackEdf {
+            let margin = self.admission_margin_ms[a.priority.index()];
+            if let (Some(margin), Some(deadline)) = (margin, a.deadline_ms) {
+                let check = shard.as_ref().map(|s| &s.half).unwrap_or(topo);
+                if let Some(best) = self.best_completion_ms(check, a.arrival_ms) {
+                    if best > deadline - margin {
+                        self.totals.slo.record_shed(a.priority);
+                        self.telemetry.record(TelemetryEvent::Shed {
+                            t_ms: a.arrival_ms,
+                            priority: a.priority,
+                        });
+                        return;
+                    }
+                }
+            }
+        }
+        match shard {
+            None => {
+                let (dev, done, heat) = self.dispatch(topo, a, None);
+                let missed = a.deadline_ms.map(|dl| done > dl);
+                self.totals.completed += 1;
+                self.totals.slo.record_completion(a.priority, done - a.arrival_ms, missed);
+                self.telemetry.record(TelemetryEvent::Completion {
+                    t_ms: done,
+                    priority: a.priority,
+                    sojourn_ms: done - a.arrival_ms,
+                    missed,
+                    sharded: false,
+                    bounces: 0,
+                    touches: vec![DeviceTouch {
+                        device: dev,
+                        heat,
+                        fused: telemetry::auto_fused_path(topo),
+                    }],
+                });
+            }
+            Some(s) => {
+                // Mirror of `call_sharded`, serialized deterministically
+                // lo-then-hi: the high half is steered off the low
+                // half's primary device so the halves overlap when the
+                // fleet allows (the backlog model makes the overlap
+                // itself; order of bookkeeping is what threads leave
+                // nondeterministic and the DES pins down).
+                let lo_primary = self.rank(&s.half, None, a).first().copied();
+                let (lo_dev, lo_done, lo_heat) = self.dispatch(&s.half, a, None);
+                let (hi_dev, hi_done, hi_heat) = self.dispatch(&s.half, a, lo_primary);
+                let done = lo_done.max(hi_done);
+                let missed = a.deadline_ms.map(|dl| done > dl);
+                self.totals.completed += 1;
+                self.totals.sharded += 1;
+                self.totals.slo.record_completion(a.priority, done - a.arrival_ms, missed);
+                let fused = telemetry::auto_fused_path(&s.half);
+                self.telemetry.record(TelemetryEvent::Completion {
+                    t_ms: done,
+                    priority: a.priority,
+                    sojourn_ms: done - a.arrival_ms,
+                    missed,
+                    sharded: true,
+                    bounces: 0,
+                    touches: vec![
+                        DeviceTouch { device: lo_dev, heat: lo_heat, fused },
+                        DeviceTouch { device: hi_dev, heat: hi_heat, fused },
+                    ],
+                });
+            }
+        }
+    }
+
+    /// Mirror of `call_single`'s success path plus `record`: rank, take
+    /// the best candidate (sequential driving never bounces), bill the
+    /// service model, and advance the backlog horizon.  Returns
+    /// `(device, done_ms, heat)` and schedules the completion wake-up.
+    fn dispatch(
+        &mut self,
+        topo: &Topology,
+        a: &Arrival,
+        exclude: Option<usize>,
+    ) -> (usize, f64, Heat) {
+        let mut candidates = self.rank(topo, exclude, a);
+        if candidates.is_empty() {
+            candidates = self.rank(topo, None, a);
+        }
+        let dev = candidates[0];
+        let fabric_ms = self.service_ms(dev, topo);
+        // `record()` bookkeeping, field for field.
+        let preferred = preferred_devices(&self.plan, topo);
+        let hot = self.last_topology[dev].as_ref() == Some(topo);
+        let warm = !hot && self.warm[dev].contains(topo);
+        let heat = match (hot, warm) {
+            (true, _) => Heat::Hot,
+            (false, true) => Heat::Warm,
+            (false, false) => Heat::Cold,
+        };
+        if warm {
+            self.totals.warm_hits += 1;
+        }
+        let planned = preferred.first() == Some(&dev) || self.plan.is_pinned(dev, topo);
+        if hot || planned {
+            self.totals.affinity_hits += 1;
+        } else {
+            self.totals.affinity_misses += 1;
+        }
+        self.last_topology[dev] = Some(topo.clone());
+        self.warm[dev].touch(topo);
+        self.totals.total_gop += OpCount::paper_convention(topo);
+        let done = self.backlog_ms[dev].max(a.arrival_ms) + fabric_ms;
+        self.backlog_ms[dev] = done;
+        // Auxiliary occupancy tracking rides the heap.
+        self.queue.push(done, Event::Completion { device: dev, fabric_ms });
+        self.in_flight += 1;
+        self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+        (dev, done, heat)
+    }
+
+    /// Mirror of `rank`: slack-aware under `SlackEdf`, PR-1
+    /// hot/planned/least-loaded under `Affinity` — with `pending` pinned
+    /// to 0, the value a sequentially driven fleet always observes.
+    fn rank(&self, topo: &Topology, exclude: Option<usize>, a: &Arrival) -> Vec<usize> {
+        let preferred = preferred_devices(&self.plan, topo);
+        let position = |id: usize| preferred.iter().position(|&p| p == id).unwrap_or(usize::MAX);
+        if self.qos == QosPolicy::SlackEdf {
+            let views: Vec<SlackView> = self
+                .devices
+                .iter()
+                .filter(|d| Some(d.spec.id) != exclude && d.spec.admits(topo))
+                .map(|d| {
+                    if self.down[d.spec.id] {
+                        return SlackView {
+                            id: d.spec.id,
+                            hot: false,
+                            warm: false,
+                            preference: usize::MAX,
+                            est_completion_ms: f64::INFINITY,
+                            slack_ms: f64::NEG_INFINITY,
+                        };
+                    }
+                    let est =
+                        self.backlog_ms[d.spec.id].max(a.arrival_ms) + d.spec.predicted_ms(topo);
+                    let hot = self.last_topology[d.spec.id].as_ref() == Some(topo);
+                    SlackView {
+                        id: d.spec.id,
+                        hot,
+                        warm: !hot && self.warm[d.spec.id].contains(topo),
+                        preference: position(d.spec.id),
+                        est_completion_ms: est,
+                        slack_ms: a.deadline_ms.map_or(f64::INFINITY, |dl| dl - est),
+                    }
+                })
+                .collect();
+            return order_candidates_by_slack(views);
+        }
+        let views: Vec<CandidateView> = self
+            .devices
+            .iter()
+            .filter(|d| Some(d.spec.id) != exclude && d.spec.admits(topo))
+            .map(|d| {
+                if self.down[d.spec.id] {
+                    return CandidateView {
+                        id: d.spec.id,
+                        hot: false,
+                        warm: false,
+                        preference: usize::MAX,
+                        pending: usize::MAX,
+                    };
+                }
+                let hot = self.last_topology[d.spec.id].as_ref() == Some(topo);
+                CandidateView {
+                    id: d.spec.id,
+                    hot,
+                    warm: !hot && self.warm[d.spec.id].contains(topo),
+                    preference: position(d.spec.id),
+                    pending: 0,
+                }
+            })
+            .collect();
+        order_candidates(views)
+    }
+
+    /// Mirror of `best_completion_ms`: best modeled completion over
+    /// *live* admitting devices under the advertised model.
+    fn best_completion_ms(&self, topo: &Topology, arrival_ms: f64) -> Option<f64> {
+        self.devices
+            .iter()
+            .filter(|d| !self.down[d.spec.id] && d.spec.admits(topo))
+            .map(|d| self.backlog_ms[d.spec.id].max(arrival_ms) + d.spec.predicted_ms(topo))
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// The service model: what the booted (derated) device bills for
+    /// one invocation of `topo`.  Mirror mode replays the reference
+    /// `ProgramImage` latency — exactly the threaded device's
+    /// `fabric_ms`; with [`DesConfig::fused_service`] shapes the auto
+    /// policy runs fused are billed the corrected per-tile trace.
+    fn service_ms(&mut self, dev: usize, topo: &Topology) -> f64 {
+        let d = &mut self.devices[dev];
+        if self.fused_service && telemetry::auto_fused_path(topo) {
+            d.accel
+                .trace_summary(topo, ExecPath::FusedTiled)
+                .expect("ranked device must admit the topology")
+                .latency_ms
+        } else {
+            d.accel.program(topo).expect("ranked device must admit the topology").latency_ms()
+        }
+    }
+
+    /// Mirror of `Cluster::pump_control` + `execute_control`: evaluate
+    /// rules over newly sealed frames and apply the firings to the
+    /// simulated fleet state.
+    pub fn pump_control(&mut self) -> Vec<ActionRecord> {
+        let frames = self.telemetry.frames_since(self.control.cursor());
+        let mut out = Vec::new();
+        for frame in &frames {
+            let firings = self.control.evaluate(frame);
+            for firing in firings {
+                let outcome = self.execute_control(&firing);
+                out.push(self.control.record(&firing, outcome));
+            }
+        }
+        out
+    }
+
+    fn execute_control(&mut self, firing: &telemetry::Firing) -> String {
+        match firing.action {
+            ControlAction::DrainDevice => {
+                let id = firing.device.expect("DrainDevice rules are per-device scoped");
+                if self.down[id] {
+                    format!("device {id} already stopped")
+                } else {
+                    // Mirror of `stop_device`'s router-visible effects;
+                    // the frozen backlog horizon stays, exactly as the
+                    // threaded drain leaves it.
+                    self.down[id] = true;
+                    self.last_topology[id] = None;
+                    self.warm[id].clear();
+                    format!("drained device {id}")
+                }
+            }
+            ControlAction::SetAdmissionMargin { priority, margin_ms } => {
+                self.admission_margin_ms[priority.index()] = Some(margin_ms);
+                format!("admission margin for {} set to {margin_ms} ms", priority.label())
+            }
+            ControlAction::Alert => "alert".to_string(),
+            ControlAction::UndrainDevice => {
+                let id = firing.device.expect("UndrainDevice rules are per-device scoped");
+                if self.down[id] {
+                    // Mirror of `restart_device`: fresh horizon, cold
+                    // affinity memory, re-armed drain rules.
+                    self.down[id] = false;
+                    self.last_topology[id] = None;
+                    self.warm[id].clear();
+                    self.backlog_ms[id] = 0.0;
+                    self.control.reset_device(id);
+                    format!("restored device {id}")
+                } else {
+                    format!("device {id} already live")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::LoadGenConfig;
+
+    #[test]
+    fn event_queue_orders_by_time_then_push_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a1");
+        q.push(2.0, "b");
+        q.push(1.0, "a2");
+        q.push(0.0, "zero");
+        let mut seen = Vec::new();
+        while let Some((t, v)) = q.pop() {
+            seen.push((t, v));
+        }
+        assert_eq!(
+            seen,
+            vec![(0.0, "zero"), (1.0, "a1"), (1.0, "a2"), (2.0, "b"), (3.0, "c")],
+            "ties must pop in push order"
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn event_queue_rejects_bad_timestamps() {
+        EventQueue::new().push(f64::NAN, ());
+    }
+
+    fn mix() -> Vec<(Topology, f64)> {
+        vec![
+            (Topology::new(16, 256, 4, 64), 4.0),
+            (Topology::new(32, 256, 4, 64), 2.0),
+            (Topology::new(16, 512, 8, 64), 1.0),
+        ]
+    }
+
+    fn sim(qos: QosPolicy, fused_service: bool) -> (FleetSim, LoadGen) {
+        let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+        let mut workload = WorkloadProfile::default();
+        for (t, s) in &mix() {
+            workload.push(t.clone(), *s);
+        }
+        let cluster = ClusterConfig { qos, ..ClusterConfig::default() };
+        let fs = FleetSim::new(devices.clone(), &workload, DesConfig { cluster, fused_service })
+            .unwrap();
+        let gen = LoadGen::new(LoadGenConfig::bursty_preset(&devices, mix(), 0.9, 0x5eed));
+        (fs, gen)
+    }
+
+    #[test]
+    fn des_conserves_and_reproduces_bit_exactly() {
+        let run = || {
+            let (mut fs, mut gen) = sim(QosPolicy::SlackEdf, false);
+            let report = fs.run(&mut gen, 400);
+            fs.seal_telemetry();
+            (report, fs.telemetry().to_jsonl())
+        };
+        let (a, jsonl_a) = run();
+        let (b, jsonl_b) = run();
+        assert!(a.conserved());
+        assert_eq!(a.offered, 400);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.totals.slo.met, b.totals.slo.met);
+        assert_eq!(a.totals.slo.missed, b.totals.slo.missed);
+        for i in 0..3 {
+            assert_eq!(
+                a.totals.slo.sojourn[i].sum().to_bits(),
+                b.totals.slo.sojourn[i].sum().to_bits(),
+                "class {i} sojourn sum must be bit-identical"
+            );
+        }
+        assert_eq!(jsonl_a, jsonl_b, "telemetry ledgers must be byte-identical");
+        assert!(a.virtual_ms > 0.0);
+        assert_eq!(a.events, 400 + a.served + a.totals.sharded);
+    }
+
+    #[test]
+    fn lazy_load_source_matches_pregenerated_trace() {
+        let (mut lazy, mut gen) = sim(QosPolicy::SlackEdf, false);
+        let a = lazy.run(&mut gen, 250);
+        lazy.seal_telemetry();
+
+        let (mut eager, mut gen2) = sim(QosPolicy::SlackEdf, false);
+        let arrivals = gen2.generate_n(250);
+        let b = eager.run_trace(&arrivals);
+        eager.seal_telemetry();
+
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(lazy.telemetry().to_jsonl(), eager.telemetry().to_jsonl());
+    }
+
+    #[test]
+    fn fused_service_shortens_long_sl_virtual_time() {
+        let mix = vec![(Topology::new(512, 128, 2, 64), 1.0)];
+        let devices: Vec<DeviceSpec> = (0..2).map(DeviceSpec::u55c_long).collect();
+        let mut workload = WorkloadProfile::default();
+        workload.push(mix[0].0.clone(), 1.0);
+        let run = |fused_service| {
+            let cfg = DesConfig {
+                cluster: ClusterConfig { qos: QosPolicy::SlackEdf, ..ClusterConfig::default() },
+                fused_service,
+            };
+            let mut fs = FleetSim::new(devices.clone(), &workload, cfg).unwrap();
+            let mut gen =
+                LoadGen::new(LoadGenConfig::bursty_preset(&devices, mix.clone(), 0.8, 7));
+            fs.run(&mut gen, 40)
+        };
+        let reference = run(false);
+        let fused = run(true);
+        assert!(reference.conserved() && fused.conserved());
+        // SL=512 is past FUSED_SL_THRESHOLD, so every request is billed
+        // the corrected per-tile trace — strictly less fabric occupancy.
+        let ref_busy: f64 = reference.device_busy_ms.iter().sum();
+        let fused_busy: f64 = fused.device_busy_ms.iter().sum();
+        assert!(
+            fused_busy < ref_busy,
+            "fused-billed occupancy {fused_busy} ms !< reference {ref_busy} ms"
+        );
+    }
+
+    #[test]
+    fn control_rules_drain_and_tighten_in_virtual_time() {
+        use super::super::telemetry::{RuleScope, RuleSignal};
+        use crate::coordinator::Priority;
+        let (mut fs, mut gen) = sim(QosPolicy::SlackEdf, false);
+        fs.add_control_rule(ControlRule {
+            name: "tighten-low".to_string(),
+            scope: RuleScope::Fleet,
+            signal: RuleSignal::ShedCount,
+            threshold: 0.0,
+            for_windows: 1,
+            action: ControlAction::SetAdmissionMargin {
+                priority: Priority::Low,
+                margin_ms: 5.0,
+            },
+        });
+        let report = fs.run(&mut gen, 600);
+        assert!(report.conserved());
+        if report.shed > 0 {
+            // The rule fired on the first shedding window and installed
+            // the margin through the DES-local execution hook.
+            assert!(
+                !fs.control_log().is_empty(),
+                "sheds occurred but the control rule never fired"
+            );
+            assert_eq!(fs.admission_margin_ms[Priority::Low.index()], Some(5.0));
+            assert!(fs.control_log_jsonl().contains("tighten-low"));
+        }
+    }
+}

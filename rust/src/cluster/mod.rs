@@ -37,6 +37,11 @@
 //!   clock) plus the threshold-rule [`telemetry::ControlPlane`] that
 //!   drains drifting devices and tightens admission through `Cluster`
 //!   hooks — DESIGN.md §13.
+//! * [`des`] — the virtual-time discrete-event fleet simulator
+//!   (DESIGN.md §16): a timestamp-ordered event heap drives the same
+//!   routing/QoS/telemetry pipeline with service times drawn from the
+//!   cached `ProgramImage` traces, so million-request capacity studies
+//!   simulate in wall-clock seconds, bit-reproducibly.
 //!
 //! Invariants (tested in `rust/tests/cluster.rs`, DESIGN.md §7): every
 //! cluster response is bit-identical to a single-device run of the same
@@ -44,6 +49,7 @@
 //! one device, and affinity routing performs fewer reconfigurations per
 //! request than a lone coordinator on the same interleaved stream.
 
+pub mod des;
 pub mod fleet;
 pub mod loadgen;
 pub mod placement;
@@ -51,12 +57,13 @@ pub mod router;
 pub mod shard;
 pub mod telemetry;
 
+pub use des::{DesConfig, DesReport, EventQueue, FleetSim};
 pub use fleet::{DeviceHealth, DeviceReport, FleetStats, SloStats};
 pub use loadgen::{Arrival, ArrivalProcess, LoadGen, LoadGenConfig, MmppFit, QosClass};
 pub use placement::{PlacementPlan, PlacementPlanner, TopologyPlacement, WorkloadProfile};
 pub use router::{
-    bounce_backoff, Cluster, ClusterConfig, ClusterHandle, ClusterResponse, QosOutcome, QosPolicy,
-    SaturationNotice, SaturationPolicy, ShedNotice,
+    bounce_backoff, Clock, ClockMode, Cluster, ClusterConfig, ClusterHandle, ClusterResponse,
+    QosOutcome, QosPolicy, SaturationNotice, SaturationPolicy, ShedNotice, VirtualClock, WallClock,
 };
 pub use shard::ShardPlan;
 pub use telemetry::{

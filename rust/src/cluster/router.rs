@@ -75,6 +75,63 @@ pub enum SaturationPolicy {
     Typed,
 }
 
+/// How the router's real-time waits (the Busy-bounce backoff) pass:
+/// against the host's wall clock, or as bookkept advances of a virtual
+/// clock that never stall the calling thread.  Everything *modeled*
+/// (arrivals, backlog horizons, deadlines, telemetry windows) already
+/// runs on the virtual request clock; this knob covers the one place
+/// the router touches host time, so a virtual-time harness (DESIGN.md
+/// §16) is never blocked by a wall-clock sleep.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Backoff sleeps on `std::thread::sleep` (production serving).
+    #[default]
+    Wall,
+    /// Backoff accrues on an atomic virtual counter and returns
+    /// immediately ([`VirtualClock`]).
+    Virtual,
+}
+
+/// The router's clock seam: every real-time wait goes through this
+/// trait so virtual-time mode can advance a counter instead of
+/// stalling an event loop.
+pub trait Clock: Send + Sync {
+    fn sleep(&self, d: std::time::Duration);
+    /// Total virtual time accrued by `sleep` calls (0 for a wall
+    /// clock, whose waits really elapsed).
+    fn slept_micros(&self) -> u64 {
+        0
+    }
+}
+
+/// [`ClockMode::Wall`]: waits really block the calling thread.
+#[derive(Debug, Default)]
+pub struct WallClock;
+
+impl Clock for WallClock {
+    fn sleep(&self, d: std::time::Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// [`ClockMode::Virtual`]: waits accrue on an atomic counter and return
+/// immediately, so backoff advances virtual time instead of stalling
+/// whoever drives the clock.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    micros: std::sync::atomic::AtomicU64,
+}
+
+impl Clock for VirtualClock {
+    fn sleep(&self, d: std::time::Duration) {
+        self.micros.fetch_add(d.as_micros() as u64, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn slept_micros(&self) -> u64 {
+        self.micros.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
 /// Cluster tuning.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterConfig {
@@ -90,6 +147,8 @@ pub struct ClusterConfig {
     pub telemetry: TelemetryConfig,
     /// Bounce-budget exhaustion behavior (DESIGN.md §15).
     pub saturation: SaturationPolicy,
+    /// Wall vs virtual backoff time (DESIGN.md §16).
+    pub clock: ClockMode,
 }
 
 impl Default for ClusterConfig {
@@ -101,6 +160,7 @@ impl Default for ClusterConfig {
             qos: QosPolicy::Affinity,
             telemetry: TelemetryConfig::default(),
             saturation: SaturationPolicy::Block,
+            clock: ClockMode::Wall,
         }
     }
 }
@@ -238,11 +298,11 @@ pub struct WarmSet {
 }
 
 impl WarmSet {
-    fn contains(&self, topo: &Topology) -> bool {
+    pub(crate) fn contains(&self, topo: &Topology) -> bool {
         self.lru.contains(topo)
     }
 
-    fn touch(&mut self, topo: &Topology) {
+    pub(crate) fn touch(&mut self, topo: &Topology) {
         if let Some(pos) = self.lru.iter().position(|t| t == topo) {
             self.lru.remove(pos);
         }
@@ -252,7 +312,7 @@ impl WarmSet {
         }
     }
 
-    fn clear(&mut self) {
+    pub(crate) fn clear(&mut self) {
         self.lru.clear();
     }
 
@@ -291,8 +351,9 @@ struct RouterState {
 }
 
 /// Default admission margins: `Low` sheds at zero margin, `High` and
-/// `Normal` are never shed (they run late instead).
-const DEFAULT_ADMISSION_MARGIN_MS: [Option<f64>; 3] = [None, None, Some(0.0)];
+/// `Normal` are never shed (they run late instead).  Shared with the
+/// discrete-event mirror ([`super::des`]), which must admit identically.
+pub(crate) const DEFAULT_ADMISSION_MARGIN_MS: [Option<f64>; 3] = [None, None, Some(0.0)];
 
 struct Shared {
     devices: Vec<DeviceEndpoint>,
@@ -300,6 +361,8 @@ struct Shared {
     max_retries: usize,
     qos: QosPolicy,
     saturation: SaturationPolicy,
+    /// Real-time wait seam (bounce backoff): wall or virtual.
+    clock: Arc<dyn Clock>,
     state: Mutex<RouterState>,
     telemetry: Mutex<FrameAggregator>,
 }
@@ -366,12 +429,17 @@ impl Cluster {
             servers.push(Some(server));
         }
         let n = endpoints.len();
+        let clock: Arc<dyn Clock> = match config.clock {
+            ClockMode::Wall => Arc::new(WallClock),
+            ClockMode::Virtual => Arc::new(VirtualClock::default()),
+        };
         let shared = Arc::new(Shared {
             devices: endpoints,
             plan,
             max_retries: config.max_retries,
             qos: config.qos,
             saturation: config.saturation,
+            clock,
             state: Mutex::new(RouterState {
                 last_topology: vec![None; n],
                 backlog_ms: vec![0.0; n],
@@ -516,6 +584,12 @@ impl Cluster {
     /// Snapshot the telemetry ring + running totals.
     pub fn telemetry(&self) -> TelemetrySnapshot {
         self.shared.telemetry.lock().unwrap().snapshot()
+    }
+
+    /// Virtual time accrued by the router's backoff waits, in µs —
+    /// always 0 under [`ClockMode::Wall`], whose waits really elapsed.
+    pub fn backoff_slept_micros(&self) -> u64 {
+        self.shared.clock.slept_micros()
     }
 
     /// Seal every outstanding partial frame (end of run / final report).
@@ -1091,8 +1165,10 @@ impl ClusterHandle {
                     // Real-time backoff before the next probe: the
                     // virtual-clock latency model is untouched, but the
                     // wall-clock spin on a saturated fleet is bounded
-                    // and decorrelated across clients.
-                    std::thread::sleep(bounce_backoff(bounces, req.id));
+                    // and decorrelated across clients.  Routed through
+                    // the clock seam so virtual-time mode advances a
+                    // counter instead of stalling the event loop.
+                    self.shared.clock.sleep(bounce_backoff(bounces, req.id));
                 }
                 Err(SubmitError::Failed(e)) => bail!("device {dev}: {e}"),
             }
@@ -1352,8 +1428,9 @@ pub fn bounce_backoff(attempt: u64, request_id: u64) -> std::time::Duration {
 }
 
 /// The plan's device preference list for `topo` — including when `topo`
-/// is the half shape of a sharded placement.
-fn preferred_devices<'a>(plan: &'a PlacementPlan, topo: &Topology) -> &'a [usize] {
+/// is the half shape of a sharded placement.  Shared with the
+/// discrete-event mirror ([`super::des`]), which must rank identically.
+pub(crate) fn preferred_devices<'a>(plan: &'a PlacementPlan, topo: &Topology) -> &'a [usize] {
     if let Some(p) = plan.placement(topo) {
         return &p.devices;
     }

@@ -7,9 +7,9 @@ use famous::cli::Parser;
 use famous::cluster::loadgen::{mean_service_ms, rate_for_utilization};
 use famous::cluster::telemetry::render_top;
 use famous::cluster::{
-    parse_fleet, ArrivalProcess, Cluster, ClusterConfig, ControlAction, ControlRule, DeviceSpec,
-    LoadGen, LoadGenConfig, QosOutcome, QosPolicy, RuleScope, RuleSignal, TelemetryConfig,
-    WorkloadProfile,
+    parse_fleet, ArrivalProcess, Cluster, ClusterConfig, ControlAction, ControlRule, DesConfig,
+    DeviceSpec, FleetSim, LoadGen, LoadGenConfig, QosOutcome, QosPolicy, RuleScope, RuleSignal,
+    TelemetryConfig, WorkloadProfile,
 };
 use famous::config::Topology;
 use famous::coordinator::{
@@ -46,6 +46,8 @@ fn parser() -> Parser {
         .opt_default("export", "", "top: write the sealed frame ring as JSONL to this path")
         .flag("plain", "top: append dashboard repaints instead of clearing the screen")
         .flag("qos", "cluster: QoS serving (loadgen arrivals, EDF+slack routing, SLO report)")
+        .flag("des", "cluster: virtual-time discrete-event QoS simulation (no threads)")
+        .flag("fused-service", "cluster --des: bill auto-fused shapes the per-tile trace")
         .flag("sim-datapath", "use the rust int8 datapath instead of PJRT")
         .flag("double-buffer", "enable load/compute overlap in the tile loop")
 }
@@ -220,6 +222,9 @@ fn cmd_cluster(args: &famous::cli::Args) -> anyhow::Result<()> {
         let name = &devices.last().unwrap().name;
         println!("SEU plan active on {name} (ABFT detection + reroute engaged)");
     }
+    if args.flag("des") {
+        return cmd_cluster_des(args, devices, n);
+    }
     if args.flag("qos") {
         return cmd_cluster_qos(args, devices, n);
     }
@@ -326,6 +331,63 @@ fn cmd_cluster_qos(
     let fleet = cluster.shutdown();
     print!("{}", fleet.render());
     println!("served {served}, shed {shed}, saturated {saturated} of {n} in {wall:.2}s wall");
+    Ok(())
+}
+
+/// `cluster --des`: the same QoS fleet and seeded arrival stream as
+/// `--qos`, but simulated in virtual time on the discrete-event mirror
+/// (DESIGN.md §16) — no device threads, hour-scale traces in wall-clock
+/// seconds, bit-reproducible under a fixed seed.
+fn cmd_cluster_des(
+    args: &famous::cli::Args,
+    devices: Vec<DeviceSpec>,
+    n: usize,
+) -> anyhow::Result<()> {
+    let rho = args.get_f64("load").map_err(anyhow::Error::msg)?.unwrap_or(0.9);
+    let seed = args.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(7) as u64;
+    // The same single-device-servable mix as `--qos`, so reports are
+    // directly comparable between the threaded fleet and the simulator.
+    let mix: Vec<(Topology, f64)> = vec![
+        (Topology::new(64, 768, 8, 64), 3.0),
+        (Topology::new(32, 768, 8, 64), 2.0),
+        (Topology::new(64, 512, 8, 64), 1.0),
+    ];
+    let rate_hz = rate_for_utilization(&devices, &mix, rho);
+    let mut lg_config = LoadGenConfig::bursty_preset(&devices, mix.clone(), rho, seed);
+    match args.get_or("arrivals", "bursty") {
+        "bursty" => {}
+        "poisson" => lg_config.process = ArrivalProcess::Poisson { rate_hz },
+        other => anyhow::bail!("unknown arrival process '{other}' (poisson | bursty)"),
+    }
+    let mut workload = WorkloadProfile::default();
+    for (t, share) in &mix {
+        workload.push(t.clone(), *share);
+    }
+    let config = DesConfig {
+        cluster: ClusterConfig {
+            scheduler: SchedulerConfig {
+                policy: BatchPolicy::EdfWithinWindow,
+                ..SchedulerConfig::default()
+            },
+            qos: QosPolicy::SlackEdf,
+            ..ClusterConfig::default()
+        },
+        fused_service: args.flag("fused-service"),
+    };
+    let mut sim = FleetSim::new(devices, &workload, config)?;
+    println!(
+        "DES fleet of {} devices; {} {} arrivals at {:.0} req/s (rho {:.2}, seed {seed}{})",
+        sim.device_count(),
+        n,
+        args.get_or("arrivals", "bursty"),
+        rate_hz,
+        rho,
+        if args.flag("fused-service") { ", fused service model" } else { "" },
+    );
+    let mut gen = LoadGen::new(lg_config);
+    let report = sim.run(&mut gen, n);
+    sim.seal_telemetry();
+    print!("{}", report.render());
     Ok(())
 }
 

@@ -265,20 +265,36 @@ impl Simulator {
         Ok(())
     }
 
-    /// Timing-only run (no functional datapath).
+    /// Timing-only run (no functional datapath) on the reference
+    /// (score-materializing) attention schedule.
     pub fn run_timing(&mut self, topo: &Topology) -> Result<SimResult, CtrlError> {
-        self.run_inner(topo, None)
+        self.run_inner(topo, None, ExecPath::Reference)
+    }
+
+    /// Timing-only run on an explicit [`ExecPath`].  `Reference` keeps
+    /// the paper's two sequential whole-matrix S/SV phases (eqs. 11-12);
+    /// `FusedTiled` replays the tile-streaming schedule the fused
+    /// execute path actually runs (DESIGN.md §12): per-tile `S(t)`/
+    /// `SV(t)` events where the SV accumulation of tile t overlaps the
+    /// score stripe of tile t+1 under the online softmax.
+    pub fn run_timing_path(
+        &mut self,
+        topo: &Topology,
+        path: ExecPath,
+    ) -> Result<SimResult, CtrlError> {
+        self.run_inner(topo, None, path)
     }
 
     /// Full run: timing + functional output from the int8 datapath.
     pub fn run(&mut self, topo: &Topology, inputs: &MhaInputs) -> Result<SimResult, CtrlError> {
-        self.run_inner(topo, Some(inputs))
+        self.run_inner(topo, Some(inputs), ExecPath::Reference)
     }
 
     fn run_inner(
         &mut self,
         topo: &Topology,
         inputs: Option<&MhaInputs>,
+        path: ExecPath,
     ) -> Result<SimResult, CtrlError> {
         self.controller.program(topo)?;
         self.controller.start()?;
@@ -348,10 +364,40 @@ impl Simulator {
         } else {
             QkPm::new(sl as usize, dk as usize, scale, softmax)
         };
-        now = push(&mut trace, "S", whole, now, qk.cycles());
-        // SV — SV_PM (eq. 12).
         let sv = SvPm::new(sl as usize, dk as usize);
-        now = push(&mut trace, "SV", whole, now, sv.cycles());
+        match path {
+            ExecPath::Reference => {
+                now = push(&mut trace, "S", whole, now, qk.cycles());
+                // SV — SV_PM (eq. 12).
+                now = push(&mut trace, "SV", whole, now, sv.cycles());
+            }
+            ExecPath::FusedTiled => {
+                // Tile-streaming attention (DESIGN.md §12): the key/value
+                // range is walked in TS-wide column tiles.  S(t) fills the
+                // SL×tw score stripe; because the stripe lives banked in
+                // BRAM and rows carry independent online-softmax state,
+                // the row and column loops flatten into one II=1 pipeline
+                // (SL·tw trips, dot depth d_k) instead of re-filling the
+                // d_k-deep pipeline per row as the materializing QK_PM
+                // does.  SV(t) folds the stripe into the SL×d_k
+                // accumulator (SL·d_k trips, tw-deep reduction).  The SV
+                // unit lags the score unit by one tile: SV(t) overlaps
+                // S(t+1), the online-softmax rescale breaking the
+                // S→softmax→SV whole-matrix dependency eqs. 11-12 assume.
+                let n_col = sl.div_ceil(ts);
+                let mut s_end = now;
+                let mut sv_end = now;
+                for t in 0..n_col {
+                    let tw = ts.min(sl - t * ts);
+                    let s_len = crate::fpga::PipelinedLoop::new(sl * tw, 1, dk).latency();
+                    let sv_len = crate::fpga::PipelinedLoop::new(sl * dk, 1, tw).latency();
+                    s_end = push(&mut trace, "S", t as u32, s_end, s_len);
+                    let sv_start = s_end.max(sv_end);
+                    sv_end = push(&mut trace, "SV", t as u32, sv_start, sv_len);
+                }
+                now = sv_end;
+            }
+        }
 
         // Functional datapath (all heads; fabric runs them in parallel,
         // we compute them sequentially — same result).
@@ -891,6 +937,77 @@ mod tests {
         for name in ["CTRL", "LI", "LB", "LIA", "LWA", "SA", "BA", "S", "SV"] {
             assert!(r.trace.phase_cycles(name) > 0, "missing {name}");
         }
+    }
+
+    #[test]
+    fn fused_timing_beats_reference_at_long_sl() {
+        // The headline ISSUE-9 acceptance: the fused tile stream must
+        // model strictly faster than the materializing reference from
+        // SL=256 up — the regime the auto policy routes to it.  Billing
+        // fused executions at reference latency (the pre-fix behavior)
+        // is exactly the mis-modeling arXiv 2208.03646 flags at long SL.
+        for sl in [256usize, 512, 1024] {
+            let topo = Topology::new(sl, 768, 8, 64);
+            let reference = Simulator::new(SimConfig::u55c_long())
+                .run_timing_path(&topo, ExecPath::Reference)
+                .unwrap();
+            let fused = Simulator::new(SimConfig::u55c_long())
+                .run_timing_path(&topo, ExecPath::FusedTiled)
+                .unwrap();
+            assert!(
+                fused.cycles < reference.cycles,
+                "SL={sl}: fused {} cycles not below reference {}",
+                fused.cycles,
+                reference.cycles
+            );
+            assert!(fused.latency_ms < reference.latency_ms, "SL={sl}");
+        }
+    }
+
+    #[test]
+    fn fused_trace_has_per_tile_sv_overlap() {
+        let topo = Topology::new(512, 768, 8, 64);
+        let mut sim = Simulator::new(SimConfig::u55c_long());
+        let r = sim.run_timing_path(&topo, ExecPath::FusedTiled).unwrap();
+        let s: Vec<&PhaseEvent> = r.trace.events.iter().filter(|e| e.name == "S").collect();
+        let sv: Vec<&PhaseEvent> = r.trace.events.iter().filter(|e| e.name == "SV").collect();
+        let n_col = 512 / 64;
+        assert_eq!(s.len(), n_col, "one S stripe per column tile");
+        assert_eq!(sv.len(), n_col, "one SV fold per column tile");
+        for (t, (se, sve)) in s.iter().zip(&sv).enumerate() {
+            assert_eq!(se.tile, t as u32);
+            assert_eq!(sve.tile, t as u32);
+            // Dependency order within a tile: the stripe exists before
+            // it is folded, and folds retire in tile order.
+            assert!(sve.start >= se.end, "tile {t}: SV started before its S finished");
+        }
+        // The online-softmax overlap: SV(0) runs concurrently with S(1).
+        assert!(
+            sv[0].start < s[1].end && s[1].start < sv[0].end,
+            "SV(0) [{}, {}) does not overlap S(1) [{}, {})",
+            sv[0].start,
+            sv[0].end,
+            s[1].start,
+            s[1].end
+        );
+        // And the timeline is genuinely concurrent: summed phase cycles
+        // exceed the critical-path total (impossible in a sequential
+        // schedule, where trace_phases_cover_total pins equality).
+        let sum: u64 = r.trace.events.iter().map(PhaseEvent::cycles).sum();
+        assert!(sum > r.trace.total(), "no overlap anywhere in the fused trace");
+    }
+
+    #[test]
+    fn reference_path_timing_unchanged_by_path_dispatch() {
+        // run_timing == run_timing_path(Reference): the ExecPath-aware
+        // refactor must not perturb the validated reference schedule.
+        let topo = t1();
+        let a = Simulator::new(SimConfig::u55c()).run_timing(&topo).unwrap();
+        let b = Simulator::new(SimConfig::u55c())
+            .run_timing_path(&topo, ExecPath::Reference)
+            .unwrap();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.trace.events, b.trace.events);
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Virtual-time DES soak + fidelity cross-check (ISSUE 9, DESIGN.md §16).
+//!
+//! Two claims, each load-bearing for everything built on the simulator:
+//!
+//! * **Fidelity** — driven by the *same* seeded arrival trace and
+//!   `ClusterConfig`, the DES reproduces a sequentially driven threaded
+//!   [`Cluster`] exactly: identical conservation totals
+//!   (offered = served + shed + rejected), identical per-class SLO
+//!   counters down to the sojourn-sum bits, and a byte-identical sealed
+//!   telemetry frame ledger.  Policies evaluated on the DES are then
+//!   evaluated on the real router's semantics, not an approximation.
+//! * **Scale** — a million-request virtual-hour trace simulates in
+//!   wall-clock seconds and is bit-reproducible across runs, which is
+//!   what makes capacity sweeps (`examples/capacity_study.rs`) and the
+//!   CI `des-soak` job affordable.
+
+use famous::cluster::{
+    Cluster, ClusterConfig, DesConfig, DeviceSpec, FleetSim, LoadGen, LoadGenConfig, QosClass,
+    QosOutcome, QosPolicy, WorkloadProfile,
+};
+use famous::cluster::{Arrival, ArrivalProcess};
+use famous::config::Topology;
+use famous::coordinator::{BatchPolicy, Priority, SchedulerConfig};
+
+const SOAK_SEED: u64 = 0x5eed_f0cc;
+
+/// The qos_soak mix: small shapes, every one single-device admittable
+/// (the sharded path spawns a concurrent half-request thread, whose
+/// bookkeeping interleaving the threaded cluster does not pin down —
+/// the cross-check stays on the path where the threaded run is itself
+/// deterministic).
+fn soak_mix() -> Vec<(Topology, f64)> {
+    vec![
+        (Topology::new(16, 256, 4, 64), 4.0),
+        (Topology::new(32, 256, 4, 64), 2.0),
+        (Topology::new(16, 512, 8, 64), 1.0),
+    ]
+}
+
+fn workload(mix: &[(Topology, f64)]) -> WorkloadProfile {
+    let mut w = WorkloadProfile::default();
+    for (t, share) in mix {
+        w.push(t.clone(), *share);
+    }
+    w
+}
+
+fn cluster_config(policy: QosPolicy) -> ClusterConfig {
+    let scheduler = SchedulerConfig {
+        max_batch: 8,
+        policy: match policy {
+            QosPolicy::SlackEdf => BatchPolicy::EdfWithinWindow,
+            QosPolicy::Affinity => BatchPolicy::GroupByTopology,
+        },
+        fairness_window: 16,
+    };
+    ClusterConfig { scheduler, qos: policy, ..ClusterConfig::default() }
+}
+
+/// Bit-comparable roll-up shared by both harnesses.
+#[derive(Debug, PartialEq, Eq)]
+struct Ledger {
+    served: u64,
+    rejected: u64,
+    met: [u64; 3],
+    missed: [u64; 3],
+    shed: [u64; 3],
+    sojourn_sum_bits: [u64; 3],
+    /// Sealed telemetry frames, serialized — the byte-identity witness.
+    telemetry_jsonl: String,
+}
+
+/// Drive the real threaded cluster sequentially over `arrivals`.
+fn run_threaded(arrivals: &[Arrival], policy: QosPolicy) -> Ledger {
+    let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+    let cluster =
+        Cluster::start(devices, &workload(&soak_mix()), cluster_config(policy)).unwrap();
+    let h = cluster.handle();
+    for (i, a) in arrivals.iter().enumerate() {
+        match h.call_qos(a.materialize(i as u64)).expect("accepted request must be served") {
+            QosOutcome::Served(_) | QosOutcome::Shed(_) => {}
+            QosOutcome::Saturated(_) => unreachable!("Block policy never saturates"),
+        }
+    }
+    cluster.seal_telemetry();
+    let telemetry_jsonl = cluster.telemetry().to_jsonl();
+    let fleet = cluster.shutdown();
+    let slo = &fleet.totals.slo;
+    Ledger {
+        served: fleet.totals.completed,
+        rejected: fleet.totals.rejected,
+        met: slo.met,
+        missed: slo.missed,
+        shed: slo.shed,
+        sojourn_sum_bits: [
+            slo.sojourn[0].sum().to_bits(),
+            slo.sojourn[1].sum().to_bits(),
+            slo.sojourn[2].sum().to_bits(),
+        ],
+        telemetry_jsonl,
+    }
+}
+
+/// Replay the identical trace through the virtual-time simulator.
+fn run_des(arrivals: &[Arrival], policy: QosPolicy) -> Ledger {
+    let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+    let config = DesConfig { cluster: cluster_config(policy), ..DesConfig::default() };
+    let mut fs = FleetSim::new(devices, &workload(&soak_mix()), config).unwrap();
+    let report = fs.run_trace(arrivals);
+    fs.seal_telemetry();
+    assert!(report.conserved(), "DES conservation failed: {report:?}");
+    let slo = &report.totals.slo;
+    Ledger {
+        served: report.served,
+        rejected: report.rejected,
+        met: slo.met,
+        missed: slo.missed,
+        shed: slo.shed,
+        sojourn_sum_bits: [
+            slo.sojourn[0].sum().to_bits(),
+            slo.sojourn[1].sum().to_bits(),
+            slo.sojourn[2].sum().to_bits(),
+        ],
+        telemetry_jsonl: fs.telemetry().to_jsonl(),
+    }
+}
+
+fn trace(n: usize, rho: f64, seed: u64) -> Vec<Arrival> {
+    let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+    LoadGen::new(LoadGenConfig::bursty_preset(&devices, soak_mix(), rho, seed)).generate_n(n)
+}
+
+#[test]
+fn des_matches_threaded_soak_exactly_slack_edf() {
+    let n = if cfg!(debug_assertions) { 120 } else { 400 };
+    let arrivals = trace(n, 0.9, SOAK_SEED);
+    let threaded = run_threaded(&arrivals, QosPolicy::SlackEdf);
+    let des = run_des(&arrivals, QosPolicy::SlackEdf);
+    // One assert over the whole ledger: counters AND the serialized
+    // telemetry frames must agree byte for byte.
+    assert_eq!(threaded, des, "DES diverged from the threaded cluster");
+    // Conservation at equal offered load, both sides.
+    let shed: u64 = des.shed.iter().sum();
+    assert_eq!(des.served + shed + des.rejected, n as u64);
+    // The trace actually exercised the QoS machinery.
+    assert!(des.served > 0, "soak served nothing");
+}
+
+#[test]
+fn des_matches_threaded_soak_exactly_affinity() {
+    // The Affinity arm ranks on live ingress queue depth; a sequential
+    // client always observes zero, which is exactly what the DES pins
+    // `pending` to.  Cross-check that equivalence too.
+    let n = if cfg!(debug_assertions) { 80 } else { 240 };
+    let arrivals = trace(n, 0.7, SOAK_SEED ^ 0xa11);
+    let threaded = run_threaded(&arrivals, QosPolicy::Affinity);
+    let des = run_des(&arrivals, QosPolicy::Affinity);
+    assert_eq!(threaded, des, "DES diverged from the threaded cluster (Affinity)");
+}
+
+/// Poisson trace sized to span one virtual hour: `n` arrivals at
+/// `n / 3600` Hz.  Classes carry the 2:5:3 priority mix on fixed
+/// deadline budgets so admission control stays exercised.
+fn hour_trace_config(n: usize, seed: u64) -> LoadGenConfig {
+    LoadGenConfig {
+        process: ArrivalProcess::Poisson { rate_hz: n as f64 / 3600.0 },
+        mix: soak_mix(),
+        classes: vec![
+            QosClass { priority: Priority::High, share: 2.0, deadline_budget_ms: Some(2.0) },
+            QosClass { priority: Priority::Normal, share: 5.0, deadline_budget_ms: Some(4.0) },
+            QosClass { priority: Priority::Low, share: 3.0, deadline_budget_ms: Some(6.0) },
+        ],
+        seed,
+    }
+}
+
+#[test]
+fn million_request_virtual_hour_simulates_in_wall_seconds() {
+    // Debug builds keep CI affordable; the release-mode `des-soak` CI
+    // job runs the full million.
+    let n: usize = if cfg!(debug_assertions) { 50_000 } else { 1_000_000 };
+    let run = || {
+        let devices: Vec<DeviceSpec> = (0..4).map(DeviceSpec::u55c).collect();
+        let mut fs = FleetSim::new(
+            devices,
+            &workload(&soak_mix()),
+            DesConfig { cluster: cluster_config(QosPolicy::SlackEdf), ..DesConfig::default() },
+        )
+        .unwrap();
+        let mut gen = LoadGen::new(hour_trace_config(n, SOAK_SEED));
+        let report = fs.run(&mut gen, n);
+        fs.seal_telemetry();
+        (report, fs.telemetry().to_jsonl())
+    };
+    let (a, jsonl_a) = run();
+    let (b, jsonl_b) = run();
+
+    // Conservation + reproducibility, bit for bit.
+    assert!(a.conserved(), "conservation failed: {a:?}");
+    assert_eq!(a.offered, n as u64);
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.rejected, b.rejected);
+    assert_eq!(a.virtual_ms.to_bits(), b.virtual_ms.to_bits());
+    assert_eq!(a.totals.slo.met, b.totals.slo.met);
+    assert_eq!(a.totals.slo.missed, b.totals.slo.missed);
+    for i in 0..3 {
+        assert_eq!(
+            a.totals.slo.sojourn[i].sum().to_bits(),
+            b.totals.slo.sojourn[i].sum().to_bits(),
+            "class {i} sojourn sum must be bit-identical"
+        );
+    }
+    assert_eq!(jsonl_a, jsonl_b, "telemetry ledgers must be byte-identical");
+
+    // The trace really spans on the order of a virtual hour (Poisson
+    // jitter moves the last arrival, not the order of magnitude).
+    assert!(
+        a.virtual_ms > 3_000_000.0,
+        "virtual span {} ms is far short of an hour",
+        a.virtual_ms
+    );
+
+    // Wall budget (release only; debug timing is not meaningful): the
+    // whole point of virtual time is that the hour costs seconds.
+    if !cfg!(debug_assertions) {
+        assert!(
+            a.wall_ms < 60_000.0,
+            "1M-request virtual hour took {:.1} s wall (budget 60 s)",
+            a.wall_ms / 1000.0
+        );
+        println!(
+            "des virtual hour: {} requests, {:.1} ms wall, {:.0}x real time",
+            n,
+            a.wall_ms,
+            a.speedup()
+        );
+    }
+}

@@ -5,8 +5,17 @@ Compares the BENCH_exec.json just produced by `cargo bench --bench exec`
 against the artifact uploaded by the previous successful CI run, and
 fails when any wall-time series regressed by more than --max-regress
 (default 20%).  Series are matched by their shape key (seq_len, d_model,
-heads, lanes); series present on only one side are reported and skipped,
-so adding or removing a sweep point never breaks the gate.
+heads, lanes).
+
+Coverage is asymmetric on purpose:
+
+* A series (or whole section) present in the *baseline* but missing
+  from the new run FAILS the gate with an explicit message — a silently
+  dropped sweep point would otherwise make the gate pass vacuously
+  while coverage shrinks.
+* A series or section that is new in the *current* run (e.g. the `des`
+  series against a pre-DES baseline) passes with a notice — there is
+  nothing to compare against yet, and next run it becomes the baseline.
 
 The previous artifact is optional by design: on the first run after the
 gate lands (or when artifact retention expired) there is nothing to
@@ -28,6 +37,9 @@ WALL_FIELDS = {
     "long_sl": ("reference_ms", "fused_ms"),
     "kernel_tiers": ("scalar_ms", "simd_ms", "simd_int8_ms"),
     "integrity": ("verify_off_ms", "verify_on_ms"),
+    # Virtual-time fleet simulator (DESIGN.md §16): wall time to simulate
+    # the fixed seeded trace.  Absent from pre-DES baselines — tolerated.
+    "des": ("wall_ms",),
 }
 KEY_FIELDS = ("seq_len", "d_model", "heads", "lanes")
 
@@ -76,8 +88,21 @@ def main():
     cur = load(args.current, required=True)
 
     failures = []
+    missing = []
     compared = 0
     for section, fields in WALL_FIELDS.items():
+        if section not in prev:
+            if section in cur:
+                print(
+                    f"notice: baseline has no '{section}' section "
+                    f"(older artifact); nothing to gate yet"
+                )
+            continue
+        if section not in cur:
+            missing.append(
+                f"section '{section}' is in the baseline but missing from the new run"
+            )
+            continue
         prev_by_key = {series_key(e): e for e in prev.get(section, [])}
         for entry in cur.get(section, []):
             key = series_key(entry)
@@ -103,8 +128,20 @@ def main():
                 else:
                     print(f"ok         {line}")
         for key in prev_by_key:
-            print(f"notice: {section} [{key_label(key)}] dropped from the sweep")
+            missing.append(
+                f"{section} [{key_label(key)}] is in the baseline but missing "
+                f"from the new run"
+            )
 
+    if missing:
+        print(
+            f"\n{len(missing)} baseline series missing from the new run "
+            f"(dropped coverage is a failure, not a skip):",
+            file=sys.stderr,
+        )
+        for line in missing:
+            print(f"  {line}", file=sys.stderr)
+        return 1
     if not compared:
         print("notice: no overlapping series between baseline and current; gate passes")
         return 0
