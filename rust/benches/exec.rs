@@ -7,7 +7,10 @@
 //! kernel-tier sweep (scalar oracle vs explicit-AVX2 vs AVX2+int8-GEMM,
 //! DESIGN.md §14) over SL ∈ {64, 128, 256} — plus the PR-8 ABFT
 //! integrity series (checksum verification on vs off, DESIGN.md §15)
-//! over the same SL sweep, gated at <10% overhead at SL=256.
+//! over the same SL sweep, gated at <10% overhead at SL=256 — plus the
+//! PR-10 int8-attention sweep (fused f32 vs int8 score GEMM + SV axpy,
+//! DESIGN.md §17, win gated at SL ≥ 256) and the blocked-vs-flat int8
+//! projection-GEMM series (cache blocking win gated at m ≥ 256).
 //!
 //! Every reference mode's output is asserted bit-identical to the
 //! allocating serial reference before timing; the fused path is
@@ -221,6 +224,11 @@ fn main() {
     // (exact integer projections feeding the same f32 code).  On hosts
     // without AVX2 every tier clamps to Scalar and must be bit-equal.
     let simd_available = KernelTier::Simd.is_available();
+    // The bit-exact tiers only: simd-int8-attn changes attention-stage
+    // numerics (dequantized int8 scores) and is swept in its own series
+    // below against its own tolerance contract (DESIGN.md §17).
+    const EXACT_TIERS: [KernelTier; 3] =
+        [KernelTier::Scalar, KernelTier::Simd, KernelTier::SimdInt8];
     let mut tier_table = Table::new(
         format!("Kernel tiers — scalar vs simd vs simd-int8 (avx2={simd_available})"),
         &["topology", "scalar ms", "simd ms", "simd-int8 ms", "simd x", "int8 x"],
@@ -232,7 +240,7 @@ fn main() {
         let (warmup, iters) = if sl >= 256 { (2, 8) } else { (3, 14) };
         let mut outs: Vec<Vec<f32>> = Vec::new();
         let mut stats = Vec::new();
-        for tier in KernelTier::ALL {
+        for tier in EXACT_TIERS {
             let prepared =
                 PreparedWeights::prepare_with_tier(&SimConfig::u55c_long(), &topo, &inputs, tier);
             let x = prepared.quantize_input(&inputs.x);
@@ -245,7 +253,7 @@ fn main() {
         }
         let mag = outs[0].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let tol = fused::tier_tolerance(SoftmaxKind::Exact, sl, topo.d_k(), mag);
-        for (tier, out) in KernelTier::ALL.into_iter().zip(&outs).skip(1) {
+        for (tier, out) in EXACT_TIERS.into_iter().zip(&outs).skip(1) {
             for (i, (a, b)) in outs[0].iter().zip(out).enumerate() {
                 assert!(
                     (a - b).abs() <= tol,
@@ -296,6 +304,164 @@ fn main() {
     }
     print!("{}", tier_table.render());
     println!("(integer tiers bit-identical per DESIGN.md §14; AVX2 win asserted at SL=256)");
+
+    // ---- Int8 attention: f32 fused vs int8 score/SV datapath (PR 10) ----
+    // Both tiers stage identical blocked-i8 projections; what differs is
+    // the attention stage — f32 score GEMM + f32 SV for simd-int8,
+    // int8×int8→i32 tile scores dequantized into the online-softmax
+    // absorb plus a dequantizing i8 SV axpy for simd-int8-attn — so the
+    // speedup isolates the int8 attention datapath.  Numerics are
+    // asserted against the per-request quantization bound
+    // (`attn_quant_bound`, DESIGN.md §17) before timing; on hosts
+    // without AVX2 both tiers clamp to Scalar and must be bit-equal.
+    let mut attn_table = Table::new(
+        format!("Int8 attention — fused f32 vs int8 scores+SV (avx2={simd_available})"),
+        &["topology", "fused f32 ms", "int8-attn ms", "max |diff|", "tolerance", "speedup"],
+    );
+    let mut attn_results = Vec::new();
+    for &sl in &[128usize, 256, 512] {
+        let topo = Topology::new(sl, 768, 8, 64);
+        let inputs = MhaInputs::generate(&topo);
+        let (warmup, iters) = if sl >= 512 { (1, 5) } else { (2, 8) };
+        let f32_p = PreparedWeights::prepare_with_tier(
+            &SimConfig::u55c_long(),
+            &topo,
+            &inputs,
+            KernelTier::SimdInt8,
+        );
+        let attn_p = PreparedWeights::prepare_with_tier(
+            &SimConfig::u55c_long(),
+            &topo,
+            &inputs,
+            KernelTier::SimdInt8Attn,
+        );
+        let x = f32_p.quantize_input(&inputs.x);
+        let mut ws_f32 = Workspace::new();
+        f32_p.execute_into_path(&x, &mut ws_f32, ExecPath::FusedTiled);
+        let mut ws_i8 = Workspace::new();
+        attn_p.execute_into_path(&x, &mut ws_i8, ExecPath::FusedTiled);
+        let tol = attn_p.attn_quant_bound(&x);
+        let diff = ws_f32
+            .output()
+            .iter()
+            .zip(ws_i8.output())
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        if simd_available {
+            assert!(
+                diff <= tol,
+                "SL={sl}: int8-attn diverged {diff:.3e} beyond the quant bound {tol:.3e}"
+            );
+        } else {
+            // Both tiers clamped to Scalar: exact bit-identity.
+            assert_bits(ws_f32.output(), ws_i8.output(), &format!("SL={sl}: clamped int8-attn"));
+        }
+        let f32_t = bench(warmup, iters, || {
+            f32_p.execute_into_path(&x, &mut ws_f32, ExecPath::FusedTiled);
+        });
+        let attn_t = bench(warmup, iters, || {
+            attn_p.execute_into_path(&x, &mut ws_i8, ExecPath::FusedTiled);
+        });
+        // Acceptance (ISSUE 10): the int8 attention stage must win wall
+        // time from SL=256 up on AVX2 hosts — min-of-iters for the same
+        // robustness argument as the fused gate above.
+        if simd_available && sl >= 256 {
+            assert!(
+                attn_t.min_ms < f32_t.min_ms,
+                "SL={sl}: int8-attn (min {:.3} ms) did not beat fused f32 (min {:.3} ms)",
+                attn_t.min_ms,
+                f32_t.min_ms
+            );
+        }
+        attn_table.row(vec![
+            format!("SL={sl} h=8"),
+            format!("{:.3}", f32_t.mean_ms),
+            format!("{:.3}", attn_t.mean_ms),
+            format!("{diff:.2e}"),
+            format!("{tol:.2e}"),
+            format!("{:.2}x", f32_t.mean_ms / attn_t.mean_ms),
+        ]);
+        attn_results.push(Json::obj([
+            ("seq_len", Json::from(sl as f64)),
+            ("d_model", Json::from(768.0)),
+            ("heads", Json::from(8.0)),
+            ("fused_f32_ms", Json::from(f32_t.mean_ms)),
+            ("int8_attn_ms", Json::from(attn_t.mean_ms)),
+            ("speedup_int8_attn", Json::from(f32_t.mean_ms / attn_t.mean_ms)),
+            ("max_abs_diff", Json::from(diff as f64)),
+            ("tolerance", Json::from(tol as f64)),
+            ("simd_available", Json::from(simd_available)),
+        ]));
+    }
+    print!("{}", attn_table.render());
+    println!("(int8-attn within per-request quant bound; AVX2 win asserted at SL>=256)");
+
+    // ---- Blocked projection GEMM: flat vs packed block-major B (PR 10) ----
+    // At the Test-1 width the projection B panel is 768×768 = 576 KB —
+    // past L2 — so the flat driver re-streams all of B from L3 for
+    // every A row.  The blocked driver packs B once (prepare-time in
+    // the engine; here explicitly) into jc/pc panels and re-uses each
+    // L2-resident KC×NC panel across MC rows of A.  Integer partial
+    // sums commute, so the equivalence assert is exact `==`.
+    let blk_results = {
+        use famous::fixed::{matmul_i32_i8_blocked_into, matmul_i32_i8_into, PackedBi8};
+        let mut blk_table = Table::new(
+            "Blocked int8 GEMM — flat B vs packed block-major B (k=n=768)".to_string(),
+            &["m", "flat ms", "blocked ms", "speedup"],
+        );
+        let mut blk_results = Vec::new();
+        let (k, n) = (768usize, 768usize);
+        // Deterministic full-range i8 operands from a tiny LCG.
+        let mut state = 0x2545_f491u32;
+        let mut next_i8 = move || {
+            state = state.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+            (state >> 24) as u8 as i8
+        };
+        for &m in &[64usize, 256, 512] {
+            let a8: Vec<i8> = (0..m * k).map(|_| next_i8()).collect();
+            let b8: Vec<i8> = (0..n * k).map(|_| next_i8()).collect();
+            let pb = PackedBi8::pack(&b8, k, n);
+            let mut flat = vec![0i32; m * n];
+            let mut blocked = vec![0i32; m * n];
+            matmul_i32_i8_into(&a8, &b8, m, k, n, &mut flat);
+            matmul_i32_i8_blocked_into(&a8, &pb, m, &mut blocked);
+            assert_eq!(flat, blocked, "m={m}: blocked GEMM diverged from the flat driver");
+            let (warmup, iters) = if m >= 512 { (2, 8) } else { (3, 12) };
+            let flat_t = bench(warmup, iters, || {
+                matmul_i32_i8_into(&a8, &b8, m, k, n, black_box(&mut flat));
+            });
+            let blk_t = bench(warmup, iters, || {
+                matmul_i32_i8_blocked_into(&a8, &pb, m, black_box(&mut blocked));
+            });
+            // Acceptance (ISSUE 10): cache blocking must win once the A
+            // sweep is tall enough to thrash B through L2 (m >= 256).
+            if m >= 256 {
+                assert!(
+                    blk_t.min_ms < flat_t.min_ms,
+                    "m={m}: blocked (min {:.3} ms) did not beat flat (min {:.3} ms)",
+                    blk_t.min_ms,
+                    flat_t.min_ms
+                );
+            }
+            blk_table.row(vec![
+                format!("{m}"),
+                format!("{:.3}", flat_t.mean_ms),
+                format!("{:.3}", blk_t.mean_ms),
+                format!("{:.2}x", flat_t.mean_ms / blk_t.mean_ms),
+            ]);
+            blk_results.push(Json::obj([
+                ("m", Json::from(m as f64)),
+                ("k", Json::from(k as f64)),
+                ("n", Json::from(n as f64)),
+                ("flat_ms", Json::from(flat_t.mean_ms)),
+                ("blocked_ms", Json::from(blk_t.mean_ms)),
+                ("speedup_blocked", Json::from(flat_t.mean_ms / blk_t.mean_ms)),
+                ("bit_identical", Json::from(true)),
+            ]));
+        }
+        print!("{}", blk_table.render());
+        println!("(blocked bit-identical to flat; blocking win asserted at m>=256)");
+        blk_results
+    };
 
     // ---- ABFT integrity overhead: checksum verify on vs off (PR 8) ----
     // The Huang–Abraham fold is priced at prepare; what this series
@@ -419,6 +585,8 @@ fn main() {
         ("results", Json::arr(results)),
         ("long_sl", Json::arr(long_results)),
         ("kernel_tiers", Json::arr(tier_results)),
+        ("int8_attn", Json::arr(attn_results)),
+        ("gemm_blocked", Json::arr(blk_results)),
         ("integrity", Json::arr(integ_results)),
         ("des", Json::arr(des_results)),
     ]);

@@ -538,6 +538,7 @@ impl FleetSim {
                         device: dev,
                         heat,
                         fused: telemetry::auto_fused_path(topo),
+                        tier: crate::sim::KernelTier::effective(),
                     }],
                 });
             }
@@ -557,6 +558,7 @@ impl FleetSim {
                 self.totals.sharded += 1;
                 self.totals.slo.record_completion(a.priority, done - a.arrival_ms, missed);
                 let fused = telemetry::auto_fused_path(&s.half);
+                let tier = crate::sim::KernelTier::effective();
                 self.telemetry.record(TelemetryEvent::Completion {
                     t_ms: done,
                     priority: a.priority,
@@ -565,8 +567,8 @@ impl FleetSim {
                     sharded: true,
                     bounces: 0,
                     touches: vec![
-                        DeviceTouch { device: lo_dev, heat: lo_heat, fused },
-                        DeviceTouch { device: hi_dev, heat: hi_heat, fused },
+                        DeviceTouch { device: lo_dev, heat: lo_heat, fused, tier },
+                        DeviceTouch { device: hi_dev, heat: hi_heat, fused, tier },
                     ],
                 });
             }

@@ -943,6 +943,7 @@ impl ClusterHandle {
                         device: d.device,
                         heat: d.heat,
                         fused: telemetry::auto_fused_path(&topo),
+                        tier: crate::sim::KernelTier::effective(),
                     }],
                 });
                 ClusterResponse {
@@ -1292,6 +1293,7 @@ impl ClusterHandle {
         st.totals.slo.record_completion(meta.priority, done - meta.arrival_ms, missed);
         drop(st);
         let fused = telemetry::auto_fused_path(&shard.half);
+        let tier = crate::sim::KernelTier::effective();
         self.telemetry_event(TelemetryEvent::Completion {
             t_ms: done,
             priority: meta.priority,
@@ -1300,8 +1302,8 @@ impl ClusterHandle {
             sharded: true,
             bounces: lo.bounces + hi.bounces,
             touches: vec![
-                DeviceTouch { device: lo.device, heat: lo.heat, fused },
-                DeviceTouch { device: hi.device, heat: hi.heat, fused },
+                DeviceTouch { device: lo.device, heat: lo.heat, fused, tier },
+                DeviceTouch { device: hi.device, heat: hi.heat, fused, tier },
             ],
         });
         // Worst-of verdict: a corrupt half corrupts the concat.

@@ -37,6 +37,7 @@ use crate::coordinator::Priority;
 use crate::jsonlite::Json;
 use crate::metrics::LatencyStats;
 use crate::runtime::{FUSED_SL_THRESHOLD, SCORE_BYTES_BUDGET};
+use crate::sim::KernelTier;
 use std::collections::{BTreeMap, VecDeque};
 
 /// Aggregation tuning (part of `ClusterConfig`; `Copy` so the cluster
@@ -83,6 +84,10 @@ pub struct DeviceTouch {
     /// Whether the auto exec policy picks the fused tile-streaming path
     /// for this shape (mirror of `SimBackend::choose_path`).
     pub fused: bool,
+    /// Kernel tier the dispatch executed with (DESIGN.md §14/§17).
+    /// Attributed per touch rather than per frame so fleets mixing
+    /// tiers across devices (or flipping tiers mid-run) stay exact.
+    pub tier: KernelTier,
 }
 
 /// Mirror of the runtime's `ExecPolicy::Auto` path choice, usable
@@ -241,12 +246,12 @@ pub struct TelemetryFrame {
     pub cold: u64,
     pub fused: u64,
     pub reference: u64,
-    /// Kernel tier the process served this window with (DESIGN.md §14).
-    /// The tier is resolved once per process
-    /// ([`crate::sim::KernelTier::effective`] — env override, else host
-    /// detection) and every backend runs it, so one label per frame is
-    /// exact attribution, not a sample.
-    pub kernel_tier: &'static str,
+    /// Device invocations in the window by kernel tier, indexed by
+    /// [`KernelTier::index`] (DESIGN.md §14/§17).  Replaces the old
+    /// single `kernel_tier` label, which silently mislabeled fleets
+    /// mixing tiers across devices; per-touch counts make
+    /// `Σ tier_dispatches == dispatches()` a checkable conservation law.
+    pub tier_dispatches: [u64; KernelTier::COUNT],
     /// Straggler events that arrived after their window sealed; counted
     /// here (the first frame sealed after the straggler), never silent.
     pub late_events: u64,
@@ -283,6 +288,13 @@ impl TelemetryFrame {
         self.hot + self.warm + self.cold
     }
 
+    /// Device invocations summed over kernel tiers; conserved against
+    /// [`TelemetryFrame::dispatches`] (every touch carries exactly one
+    /// heat and one tier).
+    pub fn tier_dispatches_total(&self) -> u64 {
+        self.tier_dispatches.iter().sum()
+    }
+
     /// Program-cache hit rate of the window's dispatches (hot or warm).
     pub fn warmth_rate(&self) -> f64 {
         let d = self.dispatches();
@@ -314,7 +326,14 @@ impl TelemetryFrame {
             ("cold", Json::Num(self.cold as f64)),
             ("fused", Json::Num(self.fused as f64)),
             ("reference", Json::Num(self.reference as f64)),
-            ("kernel_tier", Json::Str(self.kernel_tier.to_string())),
+            (
+                "tier_dispatches",
+                Json::obj(
+                    KernelTier::ALL
+                        .iter()
+                        .map(|t| (t.name(), Json::Num(self.tier_dispatches[t.index()] as f64))),
+                ),
+            ),
             ("late_events", Json::Num(self.late_events as f64)),
             ("integrity_detected", Json::Num(self.integrity_detected as f64)),
             ("integrity_recovered", Json::Num(self.integrity_recovered as f64)),
@@ -344,6 +363,8 @@ pub struct FrameTotals {
     pub cold: u64,
     pub fused: u64,
     pub reference: u64,
+    /// Dispatches by kernel tier, indexed by [`KernelTier::index`].
+    pub tier_dispatches: [u64; KernelTier::COUNT],
     pub late_events: u64,
     pub integrity_detected: u64,
     pub integrity_recovered: u64,
@@ -373,6 +394,9 @@ impl FrameTotals {
         self.cold += f.cold;
         self.fused += f.fused;
         self.reference += f.reference;
+        for i in 0..KernelTier::COUNT {
+            self.tier_dispatches[i] += f.tier_dispatches[i];
+        }
         self.late_events += f.late_events;
         self.integrity_detected += f.integrity_detected;
         self.integrity_recovered += f.integrity_recovered;
@@ -427,6 +451,7 @@ struct Partial {
     cold: u64,
     fused: u64,
     reference: u64,
+    tier_dispatches: [u64; KernelTier::COUNT],
     integrity_detected: u64,
     integrity_recovered: u64,
     integrity_corrupt: u64,
@@ -466,6 +491,7 @@ impl Partial {
             cold: 0,
             fused: 0,
             reference: 0,
+            tier_dispatches: [0; KernelTier::COUNT],
             integrity_detected: 0,
             integrity_recovered: 0,
             integrity_corrupt: 0,
@@ -504,6 +530,7 @@ impl Partial {
                     } else {
                         self.reference += 1;
                     }
+                    self.tier_dispatches[t.tier.index()] += 1;
                     if let Some(d) = self.devices.get_mut(t.device) {
                         d.served += 1;
                         match missed {
@@ -596,7 +623,7 @@ impl Partial {
             cold: self.cold,
             fused: self.fused,
             reference: self.reference,
-            kernel_tier: crate::sim::KernelTier::effective().name(),
+            tier_dispatches: self.tier_dispatches,
             late_events,
             integrity_detected: self.integrity_detected,
             integrity_recovered: self.integrity_recovered,
@@ -1147,6 +1174,16 @@ pub fn render_top(frames: &[TelemetryFrame], names: &[String], log: &[ActionReco
         },
         span.late_events,
     );
+    let mut tier_mix = String::new();
+    for t in KernelTier::ALL {
+        let n = span.tier_dispatches[t.index()];
+        if n > 0 {
+            let _ = write!(tier_mix, "  {} {n}", t.name());
+        }
+    }
+    if !tier_mix.is_empty() {
+        let _ = writeln!(out, "tiers:{tier_mix}");
+    }
     if span.integrity_detected > 0 {
         let _ = writeln!(
             out,
@@ -1245,7 +1282,7 @@ mod tests {
     }
 
     fn touch(device: usize, heat: Heat) -> DeviceTouch {
-        DeviceTouch { device, heat, fused: false }
+        DeviceTouch { device, heat, fused: false, tier: KernelTier::Scalar }
     }
 
     fn completion(t_ms: f64, sojourn_ms: f64, device: usize, heat: Heat) -> TelemetryEvent {
@@ -1349,9 +1386,68 @@ mod tests {
         assert_ne!(a, build(1.5));
         assert!(a.contains("\"warm\":1"), "{a}");
         assert!(a.contains("backlog_lead_ms"), "{a}");
-        let tier = format!("\"kernel_tier\":\"{}\"", crate::sim::KernelTier::effective().name());
-        assert!(a.contains(&tier), "{a}");
+        // Per-tier dispatch counts (Json::Obj sorts keys; tier names
+        // happen to sort in `KernelTier::ALL` order).
+        assert!(
+            a.contains(
+                "\"tier_dispatches\":{\"scalar\":1,\"simd\":0,\"simd-int8\":0,\
+                 \"simd-int8-attn\":0}"
+            ),
+            "{a}"
+        );
+        assert!(!a.contains("kernel_tier"), "single-label field must be gone: {a}");
         assert_eq!(a.lines().count(), 1);
+    }
+
+    #[test]
+    fn mixed_tier_touches_attributed_per_dispatch() {
+        let mut agg = FrameAggregator::new(cfg(10.0, 0, 8), 3);
+        agg.record(TelemetryEvent::Completion {
+            t_ms: 1.0,
+            priority: Priority::Normal,
+            sojourn_ms: 1.0,
+            missed: Some(false),
+            sharded: true,
+            bounces: 0,
+            touches: vec![
+                DeviceTouch { device: 0, heat: Heat::Hot, fused: true, tier: KernelTier::Simd },
+                DeviceTouch {
+                    device: 1,
+                    heat: Heat::Cold,
+                    fused: true,
+                    tier: KernelTier::SimdInt8Attn,
+                },
+            ],
+        });
+        agg.record(TelemetryEvent::Completion {
+            t_ms: 2.0,
+            priority: Priority::Normal,
+            sojourn_ms: 1.0,
+            missed: Some(false),
+            sharded: false,
+            bounces: 0,
+            touches: vec![DeviceTouch {
+                device: 2,
+                heat: Heat::Warm,
+                fused: false,
+                tier: KernelTier::SimdInt8,
+            }],
+        });
+        agg.seal_all();
+        let f = agg.frames().last().unwrap().clone();
+        assert_eq!(f.tier_dispatches[KernelTier::Scalar.index()], 0);
+        assert_eq!(f.tier_dispatches[KernelTier::Simd.index()], 1);
+        assert_eq!(f.tier_dispatches[KernelTier::SimdInt8.index()], 1);
+        assert_eq!(f.tier_dispatches[KernelTier::SimdInt8Attn.index()], 1);
+        // Conservation: every touch carries exactly one tier and one heat.
+        assert_eq!(f.tier_dispatches_total(), f.dispatches());
+        let t = agg.sealed_totals();
+        assert_eq!(t.tier_dispatches.iter().sum::<u64>(), t.dispatches());
+        // The operator view surfaces the mix (and only nonzero tiers).
+        let names = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let view = render_top(&[f], &names, &[]);
+        assert!(view.contains("tiers:  simd 1  simd-int8 1  simd-int8-attn 1"), "{view}");
+        assert!(!view.contains("scalar"), "{view}");
     }
 
     #[test]

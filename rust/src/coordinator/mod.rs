@@ -97,13 +97,16 @@ pub struct CoordinatorStats {
     /// engines (PJRT).
     pub fused_dispatches: u64,
     pub reference_dispatches: u64,
-    /// Requests attributed per kernel tier (DESIGN.md §14): the scalar
-    /// oracle kernels, the AVX2 tier, and the AVX2+int8-GEMM tier.
-    /// Mirrored from the same backend counters; conserved against the
-    /// path split (`scalar + simd + simd_int8 == fused + reference`).
+    /// Requests attributed per kernel tier (DESIGN.md §14, §17): the
+    /// scalar oracle kernels, the AVX2 tier, the AVX2+int8-GEMM tier,
+    /// and the end-to-end int8 attention tier.  Mirrored from the same
+    /// backend counters; conserved against the path split
+    /// (`scalar + simd + simd_int8 + simd_int8_attn == fused +
+    /// reference`).
     pub scalar_tier_dispatches: u64,
     pub simd_tier_dispatches: u64,
     pub simd_int8_tier_dispatches: u64,
+    pub simd_int8_attn_tier_dispatches: u64,
     /// The accelerator's ProgramCache contents at the last stats mirror,
     /// LRU-first (see [`crate::accel::ProgramCache::topologies`]).  Lets
     /// fleet observers — and the router's warm-set mirror tests — see
@@ -245,6 +248,7 @@ impl Coordinator {
         self.stats.scalar_tier_dispatches = paths.scalar;
         self.stats.simd_tier_dispatches = paths.simd;
         self.stats.simd_int8_tier_dispatches = paths.simd_int8;
+        self.stats.simd_int8_attn_tier_dispatches = paths.simd_int8_attn;
         self.stats.cached_topologies = self.accel.programs.topologies();
     }
 

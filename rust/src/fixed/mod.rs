@@ -33,8 +33,9 @@ pub use matrix::{
     widen_i16, widen_i16_into, FxMatrix,
 };
 pub use simd::{
-    matmul_i32_i8_into, matmul_i32_i8_scalar_into, matmul_i32_widened_simd_into, KernelTier,
-    TIER_ENV,
+    axpy_i8_f32, matmul_i32_i8_blocked_into, matmul_i32_i8_into, matmul_i32_i8_scalar_into,
+    matmul_i32_widened_blocked_into, matmul_i32_widened_simd_into, quantize_i8_into, KernelTier,
+    PackedBi16, PackedBi8, TIER_ENV,
 };
 
 /// A fixed-point value: `value = mantissa * 2^-frac_bits`.

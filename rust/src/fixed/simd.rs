@@ -36,7 +36,8 @@ use std::sync::OnceLock;
 use super::matrix::matmul_i32_widened_into;
 
 /// Environment variable forcing the effective tier (`scalar`, `simd`,
-/// `simd-int8`).  Read once; unknown values fall back to detection.
+/// `simd-int8`, `simd-int8-attn`).  Read once; unknown values fall back
+/// to detection.
 pub const TIER_ENV: &str = "FAMOUS_KERNEL_TIER";
 
 /// Which implementation of the hot inner kernels a prepared model runs.
@@ -44,7 +45,10 @@ pub const TIER_ENV: &str = "FAMOUS_KERNEL_TIER";
 /// Ordered by ambition: `Scalar` is the verbatim oracle, `Simd` swaps in
 /// the AVX2 kernels over the existing widened-i16 operands, `SimdInt8`
 /// additionally feeds the projections straight from int8 (no widening
-/// pass).  SIMD tiers silently clamp to `Scalar` on hosts without AVX2.
+/// pass), and `SimdInt8Attn` carries the int8 operand stream through the
+/// fused attention stage itself (i8 Q/K/V staging, int8 score GEMM,
+/// dequantizing SV axpy).  SIMD tiers silently clamp to `Scalar` on
+/// hosts without AVX2.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum KernelTier {
     /// The scalar reference kernels — always available, bit-identity
@@ -56,16 +60,43 @@ pub enum KernelTier {
     /// AVX2 kernels plus the int8×int8→i32 projection GEMM (widening-
     /// multiply pairs; the i16 copy of `x` and the weights is skipped).
     SimdInt8,
+    /// `SimdInt8` plus int8 Q/K/V staging for the fused attention stage:
+    /// per-head symmetric quantization at projection output, the score
+    /// GEMM as int8×int8→i32, and i8 V tiles streamed through a
+    /// dequantizing axpy.  Changes fused-path numerics (bounded by
+    /// `sim::fused::attn_quant_tolerance`), so it is opt-in — never
+    /// picked by [`KernelTier::detect`].
+    SimdInt8Attn,
 }
 
 impl KernelTier {
-    pub const ALL: [KernelTier; 3] = [KernelTier::Scalar, KernelTier::Simd, KernelTier::SimdInt8];
+    pub const ALL: [KernelTier; 4] = [
+        KernelTier::Scalar,
+        KernelTier::Simd,
+        KernelTier::SimdInt8,
+        KernelTier::SimdInt8Attn,
+    ];
+
+    /// Number of tiers (dense index arrays — telemetry dispatch counts).
+    pub const COUNT: usize = Self::ALL.len();
 
     pub fn name(self) -> &'static str {
         match self {
             KernelTier::Scalar => "scalar",
             KernelTier::Simd => "simd",
             KernelTier::SimdInt8 => "simd-int8",
+            KernelTier::SimdInt8Attn => "simd-int8-attn",
+        }
+    }
+
+    /// Dense index into `[_; KernelTier::COUNT]` arrays, matching the
+    /// [`Self::ALL`] order.
+    pub fn index(self) -> usize {
+        match self {
+            KernelTier::Scalar => 0,
+            KernelTier::Simd => 1,
+            KernelTier::SimdInt8 => 2,
+            KernelTier::SimdInt8Attn => 3,
         }
     }
 
@@ -75,6 +106,9 @@ impl KernelTier {
             "scalar" => Some(KernelTier::Scalar),
             "simd" | "avx2" => Some(KernelTier::Simd),
             "simd-int8" | "simd_int8" | "int8" => Some(KernelTier::SimdInt8),
+            "simd-int8-attn" | "simd_int8_attn" | "int8-attn" | "int8_attn" => {
+                Some(KernelTier::SimdInt8Attn)
+            }
             _ => None,
         }
     }
@@ -83,8 +117,14 @@ impl KernelTier {
     pub fn is_available(self) -> bool {
         match self {
             KernelTier::Scalar => true,
-            KernelTier::Simd | KernelTier::SimdInt8 => avx2_available(),
+            KernelTier::Simd | KernelTier::SimdInt8 | KernelTier::SimdInt8Attn => avx2_available(),
         }
+    }
+
+    /// Whether this tier stages the projection weights as raw i8 (no
+    /// widened-i16 copy) and runs the int8×int8→i32 projection GEMM.
+    pub fn stages_i8(self) -> bool {
+        matches!(self, KernelTier::SimdInt8 | KernelTier::SimdInt8Attn)
     }
 
     /// Clamp to an available tier: unavailable SIMD tiers fall back to
@@ -98,7 +138,11 @@ impl KernelTier {
         }
     }
 
-    /// Best tier the host supports.
+    /// Best tier the host supports *without changing numerics*.
+    /// `SimdInt8Attn` is deliberately excluded: quantizing the attention
+    /// operands moves fused-path outputs (within
+    /// `sim::fused::attn_quant_tolerance`), so it must be requested
+    /// explicitly via [`TIER_ENV`] or `TierPolicy::Force`.
     pub fn detect() -> KernelTier {
         if avx2_available() {
             KernelTier::SimdInt8
@@ -260,6 +304,389 @@ unsafe fn matmul_i32_i8_avx2(a8: &[i8], b8: &[i8], m: usize, k: usize, n: usize,
             orow[j] = sum;
             j += 1;
         }
+    }
+}
+
+// ------------------------------------------------- cache-blocked GEMM (B packed)
+//
+// The flat kernels above stream B in row-major DRAM order on every call:
+// at d_model = 768 one i8 weight matrix is 576 KiB — past typical L2 —
+// so every projection re-reads B from L3/DRAM.  The blocked drivers walk
+// a B that was repacked ONCE (at weight-prepare time) into block-major
+// panels sized to stay L2-resident: `jc` (NC columns) outer, `pc` (KC of
+// the k dimension) inner, each (jc, pc) block holding `ncb` rows of
+// `kcb` contiguous i8/i16 values.  The drivers then run an
+// (mc × kc × nc) loop nest accumulating per-`pc` partial dots — exact
+// integer sums, so blocked output is bit-identical to the flat kernels
+// in any block order (a tested invariant).
+
+/// k-dimension block: KC × NC i8 ≤ 24 KiB per panel, re-used across all
+/// m rows while resident.
+pub const GEMM_KC: usize = 256;
+/// Column block (B rows in the a·bᵀ convention).
+pub const GEMM_NC: usize = 96;
+/// Row block of A walked per resident panel.
+pub const GEMM_MC: usize = 128;
+
+/// B (n×k row-major, the `a @ b.T` convention of [`matmul_i32_i8_into`])
+/// repacked once into block-major panels for [`matmul_i32_i8_blocked_into`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedBi8 {
+    pub k: usize,
+    pub n: usize,
+    data: Vec<i8>,
+}
+
+impl PackedBi8 {
+    /// Pack `b8` (n×k row-major).  Layout: for each `jc` column block
+    /// (NC wide), for each `pc` k-block (KC deep), `ncb` rows of `kcb`
+    /// contiguous values — the exact order the blocked driver consumes.
+    pub fn pack(b8: &[i8], k: usize, n: usize) -> PackedBi8 {
+        assert_eq!(b8.len(), n * k, "b8 shape mismatch");
+        let mut data = Vec::with_capacity(n * k);
+        let mut jc = 0;
+        while jc < n {
+            let ncb = GEMM_NC.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kcb = GEMM_KC.min(k - pc);
+                for j in 0..ncb {
+                    let row = &b8[(jc + j) * k + pc..(jc + j) * k + pc + kcb];
+                    data.extend_from_slice(row);
+                }
+                pc += kcb;
+            }
+            jc += ncb;
+        }
+        PackedBi8 { k, n, data }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// [`PackedBi8`]'s widened-i16 sibling, packed in the identical block
+/// order for [`matmul_i32_widened_blocked_into`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedBi16 {
+    pub k: usize,
+    pub n: usize,
+    data: Vec<i16>,
+}
+
+impl PackedBi16 {
+    pub fn pack(b16: &[i16], k: usize, n: usize) -> PackedBi16 {
+        assert_eq!(b16.len(), n * k, "b16 shape mismatch");
+        let mut data = Vec::with_capacity(n * k);
+        let mut jc = 0;
+        while jc < n {
+            let ncb = GEMM_NC.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kcb = GEMM_KC.min(k - pc);
+                for j in 0..ncb {
+                    let row = &b16[(jc + j) * k + pc..(jc + j) * k + pc + kcb];
+                    data.extend_from_slice(row);
+                }
+                pc += kcb;
+            }
+            jc += ncb;
+        }
+        PackedBi16 { k, n, data }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+}
+
+/// Cache-blocked int8×int8→i32 GEMM over a pre-packed B: bit-identical
+/// to [`matmul_i32_i8_into`] (exact integer partial sums), but each
+/// KC×NC panel of B is read from its packed contiguous home and re-used
+/// across MC rows of A while L2-resident.
+pub fn matmul_i32_i8_blocked_into(a8: &[i8], pb: &PackedBi8, m: usize, out: &mut [i32]) {
+    let (k, n) = (pb.k, pb.n);
+    assert_eq!(a8.len(), m * k, "a8 shape mismatch");
+    assert_eq!(out.len(), m * n, "out shape mismatch");
+    let mut off = 0;
+    let mut jc = 0;
+    while jc < n {
+        let ncb = GEMM_NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kcb = GEMM_KC.min(k - pc);
+            let block = &pb.data[off..off + ncb * kcb];
+            let first = pc == 0;
+            let mut ic = 0;
+            while ic < m {
+                let mcb = GEMM_MC.min(m - ic);
+                for i in ic..ic + mcb {
+                    let arow = &a8[i * k + pc..i * k + pc + kcb];
+                    let orow = &mut out[i * n + jc..i * n + jc + ncb];
+                    panel_i8(arow, block, kcb, ncb, orow, first);
+                }
+                ic += mcb;
+            }
+            off += ncb * kcb;
+            pc += kcb;
+        }
+        jc += ncb;
+    }
+}
+
+/// Cache-blocked sibling of [`matmul_i32_widened_simd_into`] over a
+/// pre-packed i16 B — bit-identical to the flat widened kernels.
+pub fn matmul_i32_widened_blocked_into(a16: &[i16], pb: &PackedBi16, m: usize, out: &mut [i32]) {
+    let (k, n) = (pb.k, pb.n);
+    assert_eq!(a16.len(), m * k, "a16 shape mismatch");
+    assert_eq!(out.len(), m * n, "out shape mismatch");
+    let mut off = 0;
+    let mut jc = 0;
+    while jc < n {
+        let ncb = GEMM_NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kcb = GEMM_KC.min(k - pc);
+            let block = &pb.data[off..off + ncb * kcb];
+            let first = pc == 0;
+            let mut ic = 0;
+            while ic < m {
+                let mcb = GEMM_MC.min(m - ic);
+                for i in ic..ic + mcb {
+                    let arow = &a16[i * k + pc..i * k + pc + kcb];
+                    let orow = &mut out[i * n + jc..i * n + jc + ncb];
+                    panel_i16(arow, block, kcb, ncb, orow, first);
+                }
+                ic += mcb;
+            }
+            off += ncb * kcb;
+            pc += kcb;
+        }
+        jc += ncb;
+    }
+}
+
+/// One A row against one packed panel — AVX2 when the host has it, the
+/// scalar loop otherwise (bit-identical either way).
+fn panel_i8(arow: &[i8], block: &[i8], kcb: usize, ncb: usize, orow: &mut [i32], first: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        unsafe { panel_i8_avx2(arow, block, kcb, ncb, orow, first) };
+        return;
+    }
+    panel_i8_scalar(arow, block, kcb, ncb, orow, first);
+}
+
+fn panel_i16(arow: &[i16], block: &[i16], kcb: usize, ncb: usize, orow: &mut [i32], first: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        unsafe { panel_i16_avx2(arow, block, kcb, ncb, orow, first) };
+        return;
+    }
+    panel_i16_scalar(arow, block, kcb, ncb, orow, first);
+}
+
+/// One A row against one packed panel, scalar: `ncb` dots of length
+/// `kcb`, stored on the first k-block and accumulated thereafter.
+fn panel_i8_scalar(arow: &[i8], block: &[i8], kcb: usize, ncb: usize, orow: &mut [i32], first: bool) {
+    for (j, o) in orow.iter_mut().enumerate().take(ncb) {
+        let brow = &block[j * kcb..(j + 1) * kcb];
+        let dot: i32 = arow.iter().zip(brow).map(|(&x, &y)| x as i32 * y as i32).sum();
+        if first {
+            *o = dot;
+        } else {
+            *o += dot;
+        }
+    }
+}
+
+fn panel_i16_scalar(
+    arow: &[i16],
+    block: &[i16],
+    kcb: usize,
+    ncb: usize,
+    orow: &mut [i32],
+    first: bool,
+) {
+    for (j, o) in orow.iter_mut().enumerate().take(ncb) {
+        let brow = &block[j * kcb..(j + 1) * kcb];
+        let dot: i32 = arow.iter().zip(brow).map(|(&x, &y)| x as i32 * y as i32).sum();
+        if first {
+            *o = dot;
+        } else {
+            *o += dot;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn panel_i8_avx2(
+    arow: &[i8],
+    block: &[i8],
+    kcb: usize,
+    ncb: usize,
+    orow: &mut [i32],
+    first: bool,
+) {
+    use std::arch::x86_64::*;
+    // Same 4-col / 16-lane shape as `matmul_i32_i8_avx2`, B rows from
+    // the packed panel.
+    let mut j = 0;
+    while j + 4 <= ncb {
+        let b0 = &block[j * kcb..(j + 1) * kcb];
+        let b1 = &block[(j + 1) * kcb..(j + 2) * kcb];
+        let b2 = &block[(j + 2) * kcb..(j + 3) * kcb];
+        let b3 = &block[(j + 3) * kcb..(j + 4) * kcb];
+        let mut s0 = _mm256_setzero_si256();
+        let mut s1 = _mm256_setzero_si256();
+        let mut s2 = _mm256_setzero_si256();
+        let mut s3 = _mm256_setzero_si256();
+        let mut l = 0;
+        while l + 16 <= kcb {
+            let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(arow.as_ptr().add(l).cast()));
+            let v0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b0.as_ptr().add(l).cast()));
+            let v1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b1.as_ptr().add(l).cast()));
+            let v2 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b2.as_ptr().add(l).cast()));
+            let v3 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b3.as_ptr().add(l).cast()));
+            s0 = _mm256_add_epi32(s0, _mm256_madd_epi16(av, v0));
+            s1 = _mm256_add_epi32(s1, _mm256_madd_epi16(av, v1));
+            s2 = _mm256_add_epi32(s2, _mm256_madd_epi16(av, v2));
+            s3 = _mm256_add_epi32(s3, _mm256_madd_epi16(av, v3));
+            l += 16;
+        }
+        let mut r0 = hsum_epi32(s0);
+        let mut r1 = hsum_epi32(s1);
+        let mut r2 = hsum_epi32(s2);
+        let mut r3 = hsum_epi32(s3);
+        while l < kcb {
+            let x = arow[l] as i32;
+            r0 += x * b0[l] as i32;
+            r1 += x * b1[l] as i32;
+            r2 += x * b2[l] as i32;
+            r3 += x * b3[l] as i32;
+            l += 1;
+        }
+        if first {
+            orow[j] = r0;
+            orow[j + 1] = r1;
+            orow[j + 2] = r2;
+            orow[j + 3] = r3;
+        } else {
+            orow[j] += r0;
+            orow[j + 1] += r1;
+            orow[j + 2] += r2;
+            orow[j + 3] += r3;
+        }
+        j += 4;
+    }
+    while j < ncb {
+        let brow = &block[j * kcb..(j + 1) * kcb];
+        let mut acc = _mm256_setzero_si256();
+        let mut l = 0;
+        while l + 16 <= kcb {
+            let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(arow.as_ptr().add(l).cast()));
+            let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(brow.as_ptr().add(l).cast()));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+            l += 16;
+        }
+        let mut sum = hsum_epi32(acc);
+        while l < kcb {
+            sum += arow[l] as i32 * brow[l] as i32;
+            l += 1;
+        }
+        if first {
+            orow[j] = sum;
+        } else {
+            orow[j] += sum;
+        }
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn panel_i16_avx2(
+    arow: &[i16],
+    block: &[i16],
+    kcb: usize,
+    ncb: usize,
+    orow: &mut [i32],
+    first: bool,
+) {
+    use std::arch::x86_64::*;
+    let mut j = 0;
+    while j + 4 <= ncb {
+        let b0 = &block[j * kcb..(j + 1) * kcb];
+        let b1 = &block[(j + 1) * kcb..(j + 2) * kcb];
+        let b2 = &block[(j + 2) * kcb..(j + 3) * kcb];
+        let b3 = &block[(j + 3) * kcb..(j + 4) * kcb];
+        let mut s0 = _mm256_setzero_si256();
+        let mut s1 = _mm256_setzero_si256();
+        let mut s2 = _mm256_setzero_si256();
+        let mut s3 = _mm256_setzero_si256();
+        let mut l = 0;
+        while l + 16 <= kcb {
+            let av = _mm256_loadu_si256(arow.as_ptr().add(l).cast());
+            let v0 = _mm256_loadu_si256(b0.as_ptr().add(l).cast());
+            let v1 = _mm256_loadu_si256(b1.as_ptr().add(l).cast());
+            let v2 = _mm256_loadu_si256(b2.as_ptr().add(l).cast());
+            let v3 = _mm256_loadu_si256(b3.as_ptr().add(l).cast());
+            s0 = _mm256_add_epi32(s0, _mm256_madd_epi16(av, v0));
+            s1 = _mm256_add_epi32(s1, _mm256_madd_epi16(av, v1));
+            s2 = _mm256_add_epi32(s2, _mm256_madd_epi16(av, v2));
+            s3 = _mm256_add_epi32(s3, _mm256_madd_epi16(av, v3));
+            l += 16;
+        }
+        let mut r0 = hsum_epi32(s0);
+        let mut r1 = hsum_epi32(s1);
+        let mut r2 = hsum_epi32(s2);
+        let mut r3 = hsum_epi32(s3);
+        while l < kcb {
+            let x = arow[l] as i32;
+            r0 += x * b0[l] as i32;
+            r1 += x * b1[l] as i32;
+            r2 += x * b2[l] as i32;
+            r3 += x * b3[l] as i32;
+            l += 1;
+        }
+        if first {
+            orow[j] = r0;
+            orow[j + 1] = r1;
+            orow[j + 2] = r2;
+            orow[j + 3] = r3;
+        } else {
+            orow[j] += r0;
+            orow[j + 1] += r1;
+            orow[j + 2] += r2;
+            orow[j + 3] += r3;
+        }
+        j += 4;
+    }
+    while j < ncb {
+        let brow = &block[j * kcb..(j + 1) * kcb];
+        let mut acc = _mm256_setzero_si256();
+        let mut l = 0;
+        while l + 16 <= kcb {
+            let av = _mm256_loadu_si256(arow.as_ptr().add(l).cast());
+            let bv = _mm256_loadu_si256(brow.as_ptr().add(l).cast());
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+            l += 16;
+        }
+        let mut sum = hsum_epi32(acc);
+        while l < kcb {
+            sum += arow[l] as i32 * brow[l] as i32;
+            l += 1;
+        }
+        if first {
+            orow[j] = sum;
+        } else {
+            orow[j] += sum;
+        }
+        j += 1;
     }
 }
 
@@ -481,6 +908,61 @@ unsafe fn scale_f32_avx2(alpha: f32, o: &mut [f32]) {
     }
 }
 
+// ------------------------------------------------- int8 attention staging
+
+/// Symmetric f32 → i8 quantization into a resident buffer, matching
+/// `fixed::Quantizer` semantics exactly: round half away from zero,
+/// clamp to [−128, 127].  Scalar in every tier — quantization happens
+/// once per Q/K/V row per request and is not a hot loop; keeping one
+/// implementation keeps the rounding bit-identical across tiers.
+pub fn quantize_i8_into(src: &[f32], scale: f32, dst: &mut [i8]) {
+    assert_eq!(src.len(), dst.len(), "quantize shape mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = (s / scale).round().clamp(-128.0, 127.0) as i8;
+    }
+}
+
+/// `o[j] += w * (v8[j] as f32)` — the dequantizing SV axpy of the
+/// `SimdInt8Attn` fused path: the caller folds the V quantization scale
+/// into `w`, so the i8 tile streams straight into the f32 output
+/// accumulators.  i8 → f32 conversion is exact and each element gets
+/// exactly one multiply and one add (never FMA), so the AVX2 tier is
+/// bit-identical to the scalar loop — same contract as [`axpy_f32`].
+pub fn axpy_i8_f32(tier: KernelTier, w: f32, v8: &[i8], o: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if tier != KernelTier::Scalar && avx2_available() {
+        // SAFETY: AVX2 presence checked at runtime just above.
+        unsafe { axpy_i8_f32_avx2(w, v8, o) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = tier;
+    for (oo, &vv) in o.iter_mut().zip(v8) {
+        *oo += w * vv as f32;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_i8_f32_avx2(w: f32, v8: &[i8], o: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let len = o.len().min(v8.len());
+    let wv = _mm256_set1_ps(w);
+    let mut l = 0;
+    while l + 8 <= len {
+        // 8×i8 sign-extend → 8×i32 → exact f32 lanes.
+        let iv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(v8.as_ptr().add(l).cast()));
+        let vv = _mm256_cvtepi32_ps(iv);
+        let ov = _mm256_loadu_ps(o.as_ptr().add(l));
+        _mm256_storeu_ps(o.as_mut_ptr().add(l), _mm256_add_ps(ov, _mm256_mul_ps(wv, vv)));
+        l += 8;
+    }
+    while l < len {
+        o[l] += w * v8[l] as f32;
+        l += 1;
+    }
+}
+
 // --------------------------------------------------------- fixed-tree sums
 
 /// Fixed-tree horizontal sum of 8 i32 lanes: (low ½ + high ½), then
@@ -543,7 +1025,16 @@ mod tests {
         assert_eq!(KernelTier::Scalar.clamp_available(), KernelTier::Scalar);
         if !avx2_available() {
             assert_eq!(KernelTier::SimdInt8.clamp_available(), KernelTier::Scalar);
+            assert_eq!(KernelTier::SimdInt8Attn.clamp_available(), KernelTier::Scalar);
         }
+        // The attention-int8 tier changes fused-path numerics, so
+        // detection must never pick it on its own.
+        assert_ne!(KernelTier::detect(), KernelTier::SimdInt8Attn);
+        // Dense indices match the ALL order and stay in range.
+        for (i, tier) in KernelTier::ALL.iter().enumerate() {
+            assert_eq!(tier.index(), i);
+        }
+        assert_eq!(KernelTier::COUNT, KernelTier::ALL.len());
         // The env override, when present and parseable, wins (the CI
         // kernel-tier matrix relies on this).
         if let Ok(v) = std::env::var(TIER_ENV) {
@@ -582,6 +1073,65 @@ mod tests {
         matmul_i32_i8_into(&a.data, &b.data, 1, k, 1, &mut got);
         assert_eq!(got[0], 16384 * k as i32);
         assert_eq!(got, matmul_i32(&a, &b));
+    }
+
+    #[test]
+    fn blocked_gemm_bit_identical_to_flat() {
+        // Shapes straddling the block boundaries: k crosses GEMM_KC,
+        // n crosses GEMM_NC, m crosses GEMM_MC, plus tail-only smalls.
+        for (m, k, n) in
+            [(3, 300, 100), (130, 260, 97), (5, 37, 6), (1, 1, 1), (2, GEMM_KC, GEMM_NC)]
+        {
+            let a = rand_mat(500 + (m * k) as u64, m, k);
+            let b = rand_mat(600 + (k * n) as u64, n, k);
+            let mut want = vec![0i32; m * n];
+            matmul_i32_i8_into(&a.data, &b.data, m, k, n, &mut want);
+            let pb = PackedBi8::pack(&b.data, k, n);
+            assert_eq!(pb.bytes(), n * k, "packing is a permutation, not a copy+pad");
+            let mut got = vec![0i32; m * n];
+            matmul_i32_i8_blocked_into(&a.data, &pb, m, &mut got);
+            assert_eq!(got, want, "i8 blocked m={m} k={k} n={n}");
+
+            let (a16, b16) = (widen_i16(&a.data), widen_i16(&b.data));
+            let mut want16 = vec![0i32; m * n];
+            matmul_i32_widened_into(&a16, &b16, m, k, n, &mut want16);
+            assert_eq!(want16, want, "widened flat agrees with i8 flat");
+            let pb16 = PackedBi16::pack(&b16, k, n);
+            let mut got16 = vec![0i32; m * n];
+            matmul_i32_widened_blocked_into(&a16, &pb16, m, &mut got16);
+            assert_eq!(got16, want, "i16 blocked m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn quantize_i8_matches_quantizer_semantics() {
+        let src = [0.0f32, 0.06, -0.06, 0.049, 12.9, -12.9, 0.05];
+        let mut dst = [0i8; 7];
+        quantize_i8_into(&src, 0.1, &mut dst);
+        // round-half-away, clamp to i8 rails: 0.05/0.1 = 0.5 -> 1.
+        assert_eq!(dst, [0, 1, -1, 0, 127, -128, 1]);
+    }
+
+    #[test]
+    fn dequantizing_axpy_bit_identical_across_tiers() {
+        let mut rng = XorShift64::new(23);
+        for len in [1usize, 7, 8, 9, 16, 31, 96] {
+            let v8: Vec<i8> = (0..len).map(|_| rng.range_i64(-128, 127) as i8).collect();
+            let base: Vec<f32> =
+                (0..len).map(|_| rng.range_i64(-1000, 1000) as f32 / 123.0).collect();
+            let w = 0.0137f32;
+            let mut scalar = base.clone();
+            axpy_i8_f32(KernelTier::Scalar, w, &v8, &mut scalar);
+            for tier in [KernelTier::Simd, KernelTier::SimdInt8, KernelTier::SimdInt8Attn] {
+                let mut simd = base.clone();
+                axpy_i8_f32(tier, w, &v8, &mut simd);
+                assert_eq!(
+                    scalar.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    simd.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "i8 axpy len={len} tier={tier}"
+                );
+            }
+        }
     }
 
     #[test]

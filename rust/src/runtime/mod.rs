@@ -41,6 +41,9 @@ pub struct PathCounters {
     pub scalar: u64,
     pub simd: u64,
     pub simd_int8: u64,
+    /// Requests served by the end-to-end int8 attention tier
+    /// (`KernelTier::SimdInt8Attn`, DESIGN.md §17).
+    pub simd_int8_attn: u64,
     /// Requests whose every projection passed the ABFT checksum verify
     /// (DESIGN.md §15).  `integrity_pass + integrity_fail == total()`
     /// whenever integrity checks are on.
@@ -57,7 +60,7 @@ impl PathCounters {
 
     /// Requests attributed across kernel tiers (equals [`Self::total`]).
     pub fn tier_total(&self) -> u64 {
-        self.scalar + self.simd + self.simd_int8
+        self.scalar + self.simd + self.simd_int8 + self.simd_int8_attn
     }
 }
 
@@ -466,6 +469,26 @@ impl SimBackend {
         }
     }
 
+    /// [`Self::choose_path`] with request slack (carried-over ROADMAP
+    /// item; DESIGN.md §12): `Force` still pins, `Auto` delegates to
+    /// [`choose_path_deadline`] so a tight-deadline small-SL request can
+    /// take the fused path when its modeled trace is cheaper.  Callers
+    /// feed the two modeled latencies from
+    /// [`crate::accel::FamousAccelerator::trace_summary`] (memoized per
+    /// topology, so consulting them is allocation-free when warm).
+    pub fn choose_path_with_slack(
+        &self,
+        topo: &Topology,
+        slack_ms: f64,
+        reference_ms: f64,
+        fused_ms: f64,
+    ) -> ExecPath {
+        match self.exec_policy {
+            ExecPolicy::Force(path) => path,
+            ExecPolicy::Auto => choose_path_deadline(topo, slack_ms, reference_ms, fused_ms),
+        }
+    }
+
     /// The kernel tier requests prepare with under the configured
     /// policy (before the availability clamp — counting uses the
     /// clamped tier the prepared weights report).
@@ -485,6 +508,7 @@ impl SimBackend {
             KernelTier::Scalar => self.counters.scalar += requests,
             KernelTier::Simd => self.counters.simd += requests,
             KernelTier::SimdInt8 => self.counters.simd_int8 += requests,
+            KernelTier::SimdInt8Attn => self.counters.simd_int8_attn += requests,
         }
     }
 
@@ -515,6 +539,38 @@ impl SimBackend {
             Some(_) => self.pool_lean_streak = 0,
         }
         self.pool.as_ref().expect("pool just ensured")
+    }
+}
+
+/// Deadline-aware attention-path selection (DESIGN.md §12): the
+/// `ExecPolicy::Auto` decision extended with the request's deadline
+/// slack and the two modeled trace latencies for its topology.  A pure
+/// function of its arguments — no host state, no randomness — so every
+/// serving flavor that feeds it the same (topology, slack, model) picks
+/// the same path and the bit-identity contract is untouched.
+///
+/// The hard arms of the base policy stay hard: score-scratch memory
+/// pressure and the SL threshold always take the fused path (slack
+/// cannot buy back an SL×SL buffer the workspace must not size).  Below
+/// both arms — where the reference oracle is the default — a slack
+/// tighter than the modeled reference latency switches to the fused
+/// path *iff* its modeled trace is cheaper; when the fused trace is not
+/// cheaper the switch would only add tolerance-level noise without
+/// helping the deadline, so the oracle keeps the request.
+pub fn choose_path_deadline(
+    topo: &Topology,
+    slack_ms: f64,
+    reference_ms: f64,
+    fused_ms: f64,
+) -> ExecPath {
+    let score_bytes = topo.heads * topo.seq_len * topo.seq_len * 4;
+    if topo.seq_len >= FUSED_SL_THRESHOLD || score_bytes > SCORE_BYTES_BUDGET {
+        return ExecPath::FusedTiled;
+    }
+    if slack_ms < reference_ms && fused_ms < reference_ms {
+        ExecPath::FusedTiled
+    } else {
+        ExecPath::Reference
     }
 }
 
@@ -790,6 +846,7 @@ mod tests {
             KernelTier::Scalar => c.scalar,
             KernelTier::Simd => c.simd,
             KernelTier::SimdInt8 => c.simd_int8,
+            KernelTier::SimdInt8Attn => c.simd_int8_attn,
         };
         assert_eq!(effective_count, 1);
         // An unavailable forced tier clamps (and counts) honestly.
@@ -801,6 +858,96 @@ mod tests {
             assert_eq!((c.simd_int8, c.scalar), (1, 0));
         } else {
             assert_eq!((c.simd_int8, c.scalar), (0, 1));
+        }
+    }
+
+    #[test]
+    fn int8_attn_tier_attributed_and_conserved() {
+        // The end-to-end int8 attention tier flows through the same
+        // attribution plumbing: forcing it counts simd_int8_attn (or
+        // scalar after the non-AVX2 clamp), and tier conservation
+        // (`total() == tier_total()`) holds across mixed-tier traffic.
+        let topo = Topology::new(16, 768, 8, 64);
+        let inputs = MhaInputs::generate(&topo);
+        let mut b = SimBackend::new(SimConfig::u55c());
+        b.tier_policy = TierPolicy::Force(KernelTier::SimdInt8Attn);
+        b.run_mha(&topo, &inputs).unwrap();
+        let c = b.path_counters();
+        if KernelTier::SimdInt8Attn.is_available() {
+            assert_eq!((c.simd_int8_attn, c.scalar), (1, 0));
+        } else {
+            assert_eq!((c.simd_int8_attn, c.scalar), (0, 1));
+        }
+        assert_eq!(c.total(), c.tier_total());
+        // Mix in another tier: both are attributed, conservation holds.
+        b.tier_policy = TierPolicy::Force(KernelTier::Scalar);
+        let refs: Vec<&MhaInputs> = vec![&inputs; 2];
+        b.run_mha_batch(&topo, &refs).unwrap();
+        let c = b.path_counters();
+        assert_eq!(c.scalar, if KernelTier::SimdInt8Attn.is_available() { 2 } else { 3 });
+        assert_eq!(c.total(), 3);
+        assert_eq!(c.tier_total(), 3);
+    }
+
+    #[test]
+    fn deadline_aware_path_selection_consults_modeled_traces() {
+        // Satellite contract: choose_path_deadline is a pure function
+        // tested against the accelerator's memoized trace model.  The
+        // small-SL default is the reference oracle; slack tighter than
+        // the modeled reference latency flips to fused exactly when the
+        // fused trace is modeled cheaper; the SL and memory-pressure
+        // arms stay hard regardless of slack.
+        use crate::accel::FamousAccelerator;
+        let cfg = SimConfig::u55c_long();
+        let mut acc = FamousAccelerator::new(cfg.clone(), Box::new(SimBackend::new(cfg)));
+        let small = Topology::new(64, 768, 2, 64);
+        let reference_ms =
+            acc.trace_summary(&small, ExecPath::Reference).unwrap().latency_ms;
+        let fused_ms = acc.trace_summary(&small, ExecPath::FusedTiled).unwrap().latency_ms;
+        // Generous slack: the oracle keeps the request.
+        assert_eq!(
+            choose_path_deadline(&small, reference_ms * 2.0, reference_ms, fused_ms),
+            ExecPath::Reference
+        );
+        // Tight slack: switch iff the fused trace is cheaper.
+        let want =
+            if fused_ms < reference_ms { ExecPath::FusedTiled } else { ExecPath::Reference };
+        assert_eq!(
+            choose_path_deadline(&small, reference_ms * 0.5, reference_ms, fused_ms),
+            want
+        );
+        // A modeled-cheaper fused trace under a blown deadline switches.
+        assert_eq!(
+            choose_path_deadline(&small, 0.0, 1.0, 0.5),
+            ExecPath::FusedTiled
+        );
+        // ...but a modeled-dearer one cannot help the deadline: stay.
+        assert_eq!(choose_path_deadline(&small, 0.0, 1.0, 2.0), ExecPath::Reference);
+        // Hard arms ignore slack entirely.
+        let long = Topology::new(512, 768, 8, 64);
+        assert_eq!(choose_path_deadline(&long, f64::MAX, 1.0, 2.0), ExecPath::FusedTiled);
+        let wide = Topology::new(192, 768, 8, 64); // memory-pressure arm
+        assert_eq!(choose_path_deadline(&wide, f64::MAX, 1.0, 2.0), ExecPath::FusedTiled);
+        // The policy-level hook: Force pins, Auto delegates.
+        let mut b = SimBackend::new(SimConfig::u55c_long());
+        assert_eq!(
+            b.choose_path_with_slack(&small, 0.0, 1.0, 0.5),
+            ExecPath::FusedTiled
+        );
+        b.exec_policy = ExecPolicy::Force(ExecPath::Reference);
+        assert_eq!(
+            b.choose_path_with_slack(&small, 0.0, 1.0, 0.5),
+            ExecPath::Reference
+        );
+        // Consistency with the slack-free policy: with no deadline
+        // pressure the two decisions agree on every small shape.
+        let b = SimBackend::new(SimConfig::u55c_long());
+        for topo in [small, Topology::new(128, 256, 2, 64), wide, long] {
+            assert_eq!(
+                b.choose_path_with_slack(&topo, f64::MAX, reference_ms, fused_ms),
+                b.choose_path(&topo),
+                "{topo}"
+            );
         }
     }
 

@@ -4,8 +4,9 @@
 use crate::config::{AcceleratorConfig, Topology};
 use crate::exec::PoolHandle;
 use crate::fixed::{
-    fold_weights_i8, matmul_i32_i8_into, matmul_i32_widened_into, matmul_i32_widened_simd_into,
-    verify_rows_i16, verify_rows_i8, widen_i16, widen_i16_into, FxMatrix, KernelTier, Quantizer,
+    fold_weights_i8, matmul_i32_i8_blocked_into, matmul_i32_widened_blocked_into,
+    matmul_i32_widened_into, verify_rows_i16, verify_rows_i8, widen_i16, widen_i16_into, FxMatrix,
+    KernelTier, PackedBi16, PackedBi8, Quantizer,
 };
 use crate::jsonlite::Json;
 use crate::testdata::MhaInputs;
@@ -219,6 +220,60 @@ impl Simulator {
         pool
     }
 
+    /// [`Self::head_bram_pool_path`] for an explicit [`KernelTier`]: the
+    /// path variant above keeps the paper's uniform 8-bit fixed grid
+    /// (Table I) and stays the default accounting; this variant charges
+    /// each tier the operand widths its datapath actually stages.
+    /// `Scalar`/`Simd` hold widened i16 weight/input tiles and stream f32
+    /// Q/K/V through attention; `SimdInt8` narrows the weight/input side
+    /// to i8 but still streams f32 attention operands; `SimdInt8Attn` on
+    /// the fused path banks i8 Q/K/V — a quarter of the f32 stream, so
+    /// roughly half the pool — which is what lets more heads (or a wider
+    /// tile) fit on chip, the paper's memory-utilization argument carried
+    /// through the attention stage (DESIGN.md §17).
+    pub fn head_bram_pool_tier(
+        topo: &Topology,
+        path: ExecPath,
+        tier: KernelTier,
+    ) -> crate::fpga::BramPool {
+        use crate::fpga::BramBank;
+        let (sl, dk, ts) = (topo.seq_len as u64, topo.d_k() as u64, topo.tile_size as u64);
+        // Weight/input tiles: i8 where the tier stages raw i8, widened
+        // i16 otherwise (the scalar/simd staging copies).
+        let ww = if tier.stages_i8() { 8 } else { 16 };
+        // Attention operands: the int8-attention tier's fused stream
+        // quantizes Q/K/V to i8 at projection output; every other tier
+        // (and the reference path, which SimdInt8Attn serves in f32)
+        // streams f32.
+        let aw = if tier == KernelTier::SimdInt8Attn && path == ExecPath::FusedTiled {
+            8
+        } else {
+            32
+        };
+        let mut pool = crate::fpga::BramPool::default();
+        for name in ["wq", "wk", "wv"] {
+            pool.add(BramBank::new(name, dk * ts, ww, (ts as u32 / 2).max(1)));
+        }
+        pool.add(BramBank::new("x", sl * ts, ww, (ts as u32 / 2).max(1)));
+        pool.add(BramBank::new("q", sl * dk, aw, (dk as u32 / 2).max(1)));
+        pool.add(BramBank::new("k", sl * dk, aw, (dk as u32 / 2).max(1)));
+        match path {
+            ExecPath::Reference => {
+                pool.add(BramBank::new("v", sl * dk, aw, (sl as u32 / 2).max(1)));
+                // Scores are f32 post-softmax weights on every tier.
+                pool.add(BramBank::new("s", sl * sl, 32, (sl as u32 / 2).max(1)));
+            }
+            ExecPath::FusedTiled => {
+                pool.add(BramBank::new("v", sl * dk, aw, (ts as u32 / 2).max(1)));
+                // The stripe holds i32 accumulators / f32 absorbed
+                // weights — 32-bit either way.
+                pool.add(BramBank::new("s", sl * ts, 32, (ts as u32 / 2).max(1)));
+                pool.add(BramBank::new("mrow", sl * 2, 32, 1));
+            }
+        }
+        pool
+    }
+
     /// Check that every module's parallel access pattern is conflict-free
     /// on the two-port banks (an II=1 schedule is otherwise impossible —
     /// the precondition of every latency formula here).
@@ -424,9 +479,15 @@ impl Simulator {
 
 /// One head's weights and biases, quantized once — the host-side
 /// analogue of weight tiles staged in BRAM.  Scalar/Simd tiers stage the
-/// pre-widened i16 copies (the i8 vectors stay empty); the SimdInt8 tier
-/// stages raw i8 weights only (half the bytes, no widening pass) and
-/// leaves the i16 copies empty.
+/// pre-widened i16 copies (the i8 vectors stay empty); the i8-staging
+/// tiers (`SimdInt8`, `SimdInt8Attn`) stage raw i8 weights only (half
+/// the bytes, no widening pass) and leave the i16 copies empty.
+///
+/// Alongside the flat copies, the SIMD tiers stage packed block-major
+/// copies ([`PackedBi8`]/[`PackedBi16`], DESIGN.md §17) — the
+/// cache-blocked projection GEMM's operand home.  The flat copy remains
+/// authoritative for the fault model: injection flips flat cells and the
+/// packed mirror is rebuilt from them, so the two never disagree.
 #[derive(Clone, Debug)]
 pub struct PreparedHead {
     pub wq16: Vec<i16>,
@@ -435,6 +496,16 @@ pub struct PreparedHead {
     pub wq8: Vec<i8>,
     pub wk8: Vec<i8>,
     pub wv8: Vec<i8>,
+    /// Packed block-major mirrors of the staged copies: `Simd` packs the
+    /// widened i16 weights, the i8-staging tiers pack the raw i8
+    /// weights, `Scalar` packs nothing (it stays the flat-kernel
+    /// oracle).
+    pub pwq8: Option<PackedBi8>,
+    pub pwk8: Option<PackedBi8>,
+    pub pwv8: Option<PackedBi8>,
+    pub pwq16: Option<PackedBi16>,
+    pub pwk16: Option<PackedBi16>,
+    pub pwv16: Option<PackedBi16>,
     pub bq: Vec<f32>,
     pub bk: Vec<f32>,
     pub bv: Vec<f32>,
@@ -448,6 +519,30 @@ pub struct PreparedHead {
     /// prepare time by the device's [`FaultPlan`] and applied after the
     /// projection GEMM on every invocation.
     pub acc_faults: [Option<AccFault>; 3],
+}
+
+impl PreparedHead {
+    /// (Re)build the packed block-major copies from the flat staged
+    /// copies.  Called at prepare time *after* any fault plan has
+    /// corrupted the flat staging, and again by the fault hooks after
+    /// they flip a staged cell — packed and flat always agree, so the
+    /// ABFT verify sees the same corrupted operands whichever GEMM
+    /// driver runs.
+    fn repack(&mut self, tier: KernelTier, dm: usize, dk: usize) {
+        match tier {
+            KernelTier::Scalar => {}
+            KernelTier::Simd => {
+                self.pwq16 = Some(PackedBi16::pack(&self.wq16, dm, dk));
+                self.pwk16 = Some(PackedBi16::pack(&self.wk16, dm, dk));
+                self.pwv16 = Some(PackedBi16::pack(&self.wv16, dm, dk));
+            }
+            KernelTier::SimdInt8 | KernelTier::SimdInt8Attn => {
+                self.pwq8 = Some(PackedBi8::pack(&self.wq8, dm, dk));
+                self.pwk8 = Some(PackedBi8::pack(&self.wk8, dm, dk));
+                self.pwv8 = Some(PackedBi8::pack(&self.wv8, dm, dk));
+            }
+        }
+    }
 }
 
 /// Topology-programmed weight state for the functional datapath: built
@@ -479,6 +574,17 @@ pub struct PreparedHead {
 /// reassociates.  `Simd` and `SimdInt8` outputs are bit-identical to
 /// *each other* (exact integer GEMMs feeding the same f32 code).  The
 /// flavor bit-identity above holds within every (path, tier) pair.
+///
+/// `SimdInt8Attn` (DESIGN.md §17) extends the i8 operand stream through
+/// the fused attention stage itself: Q/K/V are quantized to i8 at
+/// projection output under per-head, per-request activation scales, the
+/// score GEMM runs int8×int8→i32, and the SV fold streams i8 V tiles
+/// through a dequantizing axpy.  Its fused path is *quantization-
+/// tolerance-equivalent* to the f32 fused stream
+/// ([`super::fused::attn_quant_tolerance`], bound via
+/// [`Self::attn_quant_bound`]) and still bit-deterministic across
+/// flavors, lanes and repeats; its `Reference` path runs the same f32
+/// modules as `SimdInt8` and is bit-identical to it.
 #[derive(Clone, Debug)]
 pub struct PreparedWeights {
     pub topology: Topology,
@@ -507,11 +613,14 @@ impl PreparedWeights {
     }
 
     /// [`Self::prepare`] on an explicit [`KernelTier`] (DESIGN.md §14).
-    /// The tier is clamped to host support here — a `Simd`/`SimdInt8`
-    /// request on a non-AVX2 host prepares (and reports) `Scalar` — and
-    /// fixed for the lifetime of the prepared weights, so every request
-    /// against them runs the same kernels.  `SimdInt8` stages raw i8
-    /// weights and skips the i16 widening copies entirely.
+    /// The tier is clamped to host support here — a SIMD-tier request
+    /// on a non-AVX2 host prepares (and reports) `Scalar` — and fixed
+    /// for the lifetime of the prepared weights, so every request
+    /// against them runs the same kernels.  The i8-staging tiers
+    /// (`SimdInt8`, `SimdInt8Attn`) stage raw i8 weights and skip the
+    /// i16 widening copies entirely; the SIMD tiers additionally stage
+    /// packed block-major copies for the cache-blocked projection GEMM
+    /// (DESIGN.md §17).
     pub fn prepare_with_tier(
         config: &SimConfig,
         topo: &Topology,
@@ -525,7 +634,7 @@ impl PreparedWeights {
             ScaleMode::SqrtDk => 1.0 / (dkn as f32).sqrt(),
             ScaleMode::DModel => 1.0 / dmn as f32,
         };
-        let int8 = tier == KernelTier::SimdInt8;
+        let int8 = tier.stages_i8();
         let mut heads: Vec<PreparedHead> = (0..h)
             .map(|head| {
                 let wslice = |w: &[f32]| {
@@ -562,6 +671,12 @@ impl PreparedWeights {
                     wq8,
                     wk8,
                     wv8,
+                    pwq8: None,
+                    pwk8: None,
+                    pwv8: None,
+                    pwq16: None,
+                    pwk16: None,
+                    pwv16: None,
                     bq: bslice(&inp.bq),
                     bk: bslice(&inp.bk),
                     bv: bslice(&inp.bv),
@@ -596,6 +711,13 @@ impl PreparedWeights {
                     }
                 }
             }
+        }
+        // Pack the block-major GEMM copies only now, after the fault
+        // plan above has (possibly) corrupted the flat staging — the
+        // packed mirror must carry the same faults the verify is
+        // expected to catch.
+        for hp in &mut heads {
+            hp.repack(tier, dmn, dkn);
         }
         let softmax = match config.softmax_lut_bits {
             Some(bits) => SoftmaxUnit::lut(bits),
@@ -642,6 +764,8 @@ impl PreparedWeights {
     /// single-fault hook the property suite drives exhaustively (the
     /// seeded [`FaultPlan`] draws the same flip randomly).
     pub fn inject_weight_fault(&mut self, head: usize, proj: usize, pos: usize, bit: u32) {
+        let (dmn, dkn) = (self.topology.d_model, self.topology.d_k());
+        let tier = self.tier;
         let hp = &mut self.heads[head];
         let (w8, w16) = match proj {
             0 => (&mut hp.wq8, &mut hp.wq16),
@@ -649,6 +773,11 @@ impl PreparedWeights {
             _ => (&mut hp.wv8, &mut hp.wv16),
         };
         super::fault::flip_bit(w8, w16, pos, bit);
+        // Mirror the corruption into the packed block-major copy the
+        // cache-blocked GEMM actually reads — otherwise the injected
+        // fault would be invisible to the datapath (and to the ABFT
+        // verify the property suite drives).
+        hp.repack(tier, dmn, dkn);
     }
 
     /// Arm one accumulator upset on head `head`'s projection `proj`,
@@ -673,6 +802,44 @@ impl PreparedWeights {
     /// Quantize one request's input operand for [`Self::execute`].
     pub fn quantize_input(&self, x: &[f32]) -> FxMatrix {
         FxMatrix::from_f32(x, self.topology.seq_len, self.topology.d_model, &Quantizer::grid64())
+    }
+
+    /// The extended quantization tolerance of the `SimdInt8Attn` fused
+    /// path against the f32 fused stream for request `x`, maxed over
+    /// heads ([`super::fused::attn_quant_tolerance`], DESIGN.md §17).
+    /// Runs the projections once to recover the per-head operand maxima
+    /// that `run_into_quant` fits its activation scales from — the exact
+    /// quantities the bound is parameterized by — so tests and benches
+    /// get a sound, finite oracle without reaching into lane scratch.
+    pub fn attn_quant_bound(&self, x: &FxMatrix) -> f32 {
+        let topo = &self.topology;
+        let (sln, dmn, dkn) = (topo.seq_len, topo.d_model, topo.d_k());
+        assert_eq!(x.rows, sln, "input rows != SL");
+        assert_eq!(x.cols, dmn, "input cols != d_model");
+        let mut ws = Workspace::new();
+        ws.ensure(topo, 1, ExecPath::FusedTiled, self.tier);
+        if !self.tier.stages_i8() {
+            widen_i16_into(&x.data, &mut ws.x16);
+        }
+        let Workspace { x16, lanes, .. } = &mut ws;
+        let lane = &mut lanes[0];
+        let amax = |xs: &[f32]| xs.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let mut bound = 0f32;
+        for head in 0..self.heads.len() {
+            self.run_head(head, &x.data, x16, lane, ExecPath::FusedTiled);
+            let tol = super::fused::attn_quant_tolerance(
+                self.fused.softmax.kind,
+                sln,
+                dmn,
+                dkn,
+                self.fused.scale,
+                amax(&lane.q),
+                amax(&lane.k),
+                amax(&lane.v),
+            );
+            bound = bound.max(tol);
+        }
+        bound
     }
 
     /// Run one request through the functional datapath (all heads) against
@@ -706,7 +873,7 @@ impl PreparedWeights {
         assert_eq!(x.rows, sln, "input rows != SL");
         assert_eq!(x.cols, dmn, "input cols != d_model");
         ws.ensure(topo, 1, path, self.tier);
-        if self.tier != KernelTier::SimdInt8 {
+        if !self.tier.stages_i8() {
             widen_i16_into(&x.data, &mut ws.x16);
         }
         let Workspace { x16, lanes, out, .. } = ws;
@@ -760,7 +927,7 @@ impl PreparedWeights {
         assert_eq!(x.rows, sln, "input rows != SL");
         assert_eq!(x.cols, dmn, "input cols != d_model");
         ws.ensure(topo, lanes, path, self.tier);
-        if self.tier != KernelTier::SimdInt8 {
+        if !self.tier.stages_i8() {
             widen_i16_into(&x.data, &mut ws.x16);
         }
         let Workspace { x16, lanes: scratch, out, .. } = ws;
@@ -809,10 +976,28 @@ impl PreparedWeights {
         let topo = &self.topology;
         let (sln, dmn, dkn) = (topo.seq_len, topo.d_model, topo.d_k());
         let hp = &self.heads[head];
-        let gemm = |w8: &[i8], w16: &[i16], acc: &mut [i32]| match self.tier {
-            KernelTier::Scalar => matmul_i32_widened_into(x16, w16, sln, dmn, dkn, acc),
-            KernelTier::Simd => matmul_i32_widened_simd_into(x16, w16, sln, dmn, dkn, acc),
-            KernelTier::SimdInt8 => matmul_i32_i8_into(x8, w8, sln, dmn, dkn, acc),
+        // Projection GEMM by projection index (0=Q, 1=K, 2=V): the
+        // scalar oracle keeps the flat widened kernel; the SIMD tiers
+        // run the cache-blocked drivers over the packed block-major
+        // copies staged at prepare time (bit-identical accumulators —
+        // exact integer arithmetic in any block order).
+        let gemm = |proj: usize, acc: &mut [i32]| {
+            let (w16, p16, p8) = match proj {
+                0 => (&hp.wq16, &hp.pwq16, &hp.pwq8),
+                1 => (&hp.wk16, &hp.pwk16, &hp.pwk8),
+                _ => (&hp.wv16, &hp.pwv16, &hp.pwv8),
+            };
+            match self.tier {
+                KernelTier::Scalar => matmul_i32_widened_into(x16, w16, sln, dmn, dkn, acc),
+                KernelTier::Simd => {
+                    let pb = p16.as_ref().expect("Simd tier stages packed i16");
+                    matmul_i32_widened_blocked_into(x16, pb, sln, acc)
+                }
+                KernelTier::SimdInt8 | KernelTier::SimdInt8Attn => {
+                    let pb = p8.as_ref().expect("i8 tiers stage packed i8");
+                    matmul_i32_i8_blocked_into(x8, pb, sln, acc)
+                }
+            }
         };
         // ABFT row verify against the pristine fold (exact integer
         // arithmetic, so the check is tier-independent); a no-op when
@@ -821,24 +1006,25 @@ impl PreparedWeights {
             if fold.is_empty() {
                 return 0;
             }
-            match self.tier {
-                KernelTier::SimdInt8 => verify_rows_i8(acc, x8, fold, sln, dkn),
-                _ => verify_rows_i16(acc, x16, fold, sln, dkn),
+            if self.tier.stages_i8() {
+                verify_rows_i8(acc, x8, fold, sln, dkn)
+            } else {
+                verify_rows_i16(acc, x16, fold, sln, dkn)
             }
         };
-        gemm(&hp.wq8, &hp.wq16, &mut lane.acc);
+        gemm(0, &mut lane.acc);
         if let Some(f) = hp.acc_faults[0] {
             lane.acc[f.pos] ^= f.mask;
         }
         lane.faults += verify(&lane.acc, &hp.cq);
         dequant_into(&lane.acc, &hp.bq, self.scale2, dkn, &mut lane.q);
-        gemm(&hp.wk8, &hp.wk16, &mut lane.acc);
+        gemm(1, &mut lane.acc);
         if let Some(f) = hp.acc_faults[1] {
             lane.acc[f.pos] ^= f.mask;
         }
         lane.faults += verify(&lane.acc, &hp.ck);
         dequant_into(&lane.acc, &hp.bk, self.scale2, dkn, &mut lane.k);
-        gemm(&hp.wv8, &hp.wv16, &mut lane.acc);
+        gemm(2, &mut lane.acc);
         if let Some(f) = hp.acc_faults[2] {
             lane.acc[f.pos] ^= f.mask;
         }
@@ -848,6 +1034,25 @@ impl PreparedWeights {
             ExecPath::Reference => {
                 self.qk.run_into(&lane.q, &lane.k, &mut lane.s);
                 self.sv.run_into(&lane.s, &lane.v, &mut lane.o);
+            }
+            ExecPath::FusedTiled if self.tier == KernelTier::SimdInt8Attn => {
+                // The int8 attention stage (DESIGN.md §17): quantize
+                // Q/K/V under per-head activation scales fitted for this
+                // request, score in int8×int8→i32, dequantize once per
+                // score row into the online-softmax absorb, stream i8 V
+                // tiles through the dequantizing axpy.
+                self.fused.run_into_quant(
+                    &lane.q,
+                    &lane.k,
+                    &lane.v,
+                    &mut lane.q8,
+                    &mut lane.k8,
+                    &mut lane.v8,
+                    &mut lane.s32,
+                    &mut lane.stripe,
+                    &mut lane.rows,
+                    &mut lane.o,
+                );
             }
             ExecPath::FusedTiled => {
                 self.fused.run_into(
@@ -1422,6 +1627,103 @@ mod tests {
         let s = PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::Scalar);
         assert_eq!(s.heads[0].wq8.len(), 0);
         assert_eq!(s.heads[0].wq16.len(), topo.d_k() * topo.d_model);
+        // Packed staging follows the flat staging: the scalar oracle
+        // packs nothing, Simd packs i16, the i8 tiers pack i8.
+        assert!(s.heads[0].pwq16.is_none() && s.heads[0].pwq8.is_none());
+        if p.tier() == KernelTier::SimdInt8 {
+            let pb = p.heads[0].pwq8.as_ref().expect("int8 tier packs i8");
+            assert_eq!(pb.bytes(), topo.d_k() * topo.d_model);
+            assert!(p.heads[0].pwq16.is_none());
+            let sp = PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::Simd);
+            let pb16 = sp.heads[0].pwq16.as_ref().expect("Simd tier packs i16");
+            assert_eq!(pb16.bytes(), 2 * topo.d_k() * topo.d_model);
+            assert!(sp.heads[0].pwq8.is_none());
+        }
+    }
+
+    #[test]
+    fn int8_attn_fused_within_extended_quant_tolerance() {
+        // DESIGN.md §17 acceptance: the SimdInt8Attn fused path tracks
+        // the f32 fused stream within the parametric quantization bound
+        // (finite, per-request), its Reference path is bit-identical to
+        // SimdInt8, and the fused path is bit-deterministic on repeats.
+        let topo = Topology::new(32, 64, 4, 16);
+        let inputs = MhaInputs::generate(&topo);
+        let cfg = Simulator::toy_config();
+        let f32p = PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::SimdInt8);
+        let i8p =
+            PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::SimdInt8Attn);
+        if i8p.tier() != KernelTier::SimdInt8Attn {
+            return; // non-AVX2 host: the clamp path is covered above
+        }
+        let x = f32p.quantize_input(&inputs.x);
+        let want = f32p.execute_path(&x, ExecPath::FusedTiled);
+        let got = i8p.execute_path(&x, ExecPath::FusedTiled);
+        let tol = i8p.attn_quant_bound(&x);
+        assert!(tol.is_finite() && tol > 0.0, "bound degenerate: {tol}");
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert!((w - g).abs() <= tol, "[{i}]: {w} vs {g} (tol {tol})");
+        }
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&i8p.execute_path(&x, ExecPath::FusedTiled)),
+            bits(&got),
+            "int8-attn fused repeat diverged"
+        );
+        // Reference path under the new tier: same f32 modules as
+        // SimdInt8, byte-for-byte.
+        assert_eq!(
+            bits(&i8p.execute_path(&x, ExecPath::Reference)),
+            bits(&f32p.execute_path(&x, ExecPath::Reference)),
+            "int8-attn reference path diverged from SimdInt8"
+        );
+    }
+
+    #[test]
+    fn int8_attn_tier_pool_banks_i8_operands() {
+        // The acceptance criterion's BRAM half: under the int8-attention
+        // tier the fused pool banks Q/K/V at 8 bits — a quarter of the
+        // f32 stream every other tier holds — so the pool shrinks.
+        let topo = Topology::new(512, 768, 8, 64);
+        let width = |pool: &crate::fpga::BramPool, name: &str| {
+            pool.banks.iter().find(|b| b.name == name).unwrap().width_bits
+        };
+        let f32_pool =
+            Simulator::head_bram_pool_tier(&topo, ExecPath::FusedTiled, KernelTier::SimdInt8);
+        let i8_pool =
+            Simulator::head_bram_pool_tier(&topo, ExecPath::FusedTiled, KernelTier::SimdInt8Attn);
+        for name in ["q", "k", "v"] {
+            assert_eq!(width(&f32_pool, name), 32, "{name}: f32 stream");
+            assert_eq!(width(&i8_pool, name), 8, "{name}: i8 stream");
+        }
+        // Both i8-staging tiers narrow the weight/input tiles; the
+        // widened tiers hold i16.
+        assert_eq!(width(&f32_pool, "wq"), 8);
+        assert_eq!(width(&i8_pool, "wq"), 8);
+        let simd_pool =
+            Simulator::head_bram_pool_tier(&topo, ExecPath::FusedTiled, KernelTier::Simd);
+        assert_eq!(width(&simd_pool, "wq"), 16);
+        // The stripe stays 32-bit (i32 accumulators / f32 absorb) on
+        // every tier, and the reference path keeps the f32 stream even
+        // under SimdInt8Attn (it runs the f32 modules there).
+        assert_eq!(width(&i8_pool, "s"), 32);
+        let ref_pool =
+            Simulator::head_bram_pool_tier(&topo, ExecPath::Reference, KernelTier::SimdInt8Attn);
+        assert_eq!(width(&ref_pool, "q"), 32);
+        assert!(
+            i8_pool.total_banks18k() < f32_pool.total_banks18k(),
+            "i8 attention pool {} banks not below f32 {}",
+            i8_pool.total_banks18k(),
+            f32_pool.total_banks18k()
+        );
+        // The paper-convention accounting is untouched by the tier
+        // axis: head_bram_pool_path still banks the uniform 8-bit grid.
+        let paper = Simulator::head_bram_pool_path(&topo, ExecPath::FusedTiled);
+        for bank in &paper.banks {
+            if bank.name != "mrow" {
+                assert_eq!(bank.width_bits, 8, "{}: paper pool widened", bank.name);
+            }
+        }
     }
 
     #[test]

@@ -178,6 +178,113 @@ impl FusedAttnPm {
         }
     }
 
+    /// The `SimdInt8Attn` realization of [`Self::run_into`]: int8 operand
+    /// streams through the attention stage itself (DESIGN.md §17).
+    ///
+    /// Q/K/V arrive as the same (SL × d_k) f32 rows the f32 path
+    /// consumes; per-head symmetric scales are fitted to their actual
+    /// maxima (`s = max|·|/127` — dynamic activation quantization, so
+    /// the i8 grid always covers the operands and the quantizer never
+    /// saturates), the operands snap once into the caller's resident i8
+    /// lanes, and then per column tile:
+    ///
+    /// * the whole SL×tw score stripe comes from ONE int8×int8→i32 GEMM
+    ///   (`matmul_i32_i8_into` — exact integer accumulation, the same
+    ///   kernel family as the projections);
+    /// * each score row dequantizes once (`· sq·sk`) into the f32
+    ///   stripe, so [`SoftmaxUnit`] and the online-softmax recurrence
+    ///   run unchanged — the tolerance contract stays f32;
+    /// * the SV accumulation streams the i8 V tile through the
+    ///   dequantizing axpy (`axpy_i8_f32`, V's scale folded into the
+    ///   softmax weight) — half the V stream bytes of the f32 path.
+    ///
+    /// Returns the fitted `(sq, sk, sv)` scales (the inputs to
+    /// [`attn_quant_tolerance`]).  Bit-deterministic: scales and snaps
+    /// are pure functions of the operands, and every kernel below is
+    /// bit-identical across lanes/batching (integer GEMM exact, axpy
+    /// one-mul-one-add).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_into_quant(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        q8: &mut [i8],
+        k8: &mut [i8],
+        v8: &mut [i8],
+        s32: &mut [i32],
+        stripe: &mut [f32],
+        rows: &mut [OnlineRow],
+        out: &mut [f32],
+    ) -> (f32, f32, f32) {
+        let (sl, dk, ts) = (self.seq_len, self.d_k, self.tile);
+        assert_eq!(q.len(), sl * dk);
+        assert_eq!(k.len(), sl * dk);
+        assert_eq!(v.len(), sl * dk);
+        assert!(q8.len() >= sl * dk, "q8 lane under-sized");
+        assert!(k8.len() >= sl * dk, "k8 lane under-sized");
+        assert!(v8.len() >= sl * dk, "v8 lane under-sized");
+        assert!(s32.len() >= sl * ts, "s32 stripe lane under-sized");
+        assert!(stripe.len() >= sl * ts, "score stripe lane under-sized");
+        assert_eq!(rows.len(), sl);
+        assert_eq!(out.len(), sl * dk);
+
+        let max_abs = |xs: &[f32]| xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let sq = max_abs(q).max(1e-8) / 127.0;
+        let sk = max_abs(k).max(1e-8) / 127.0;
+        let sv = max_abs(v).max(1e-8) / 127.0;
+        simd::quantize_i8_into(q, sq, &mut q8[..sl * dk]);
+        simd::quantize_i8_into(k, sk, &mut k8[..sl * dk]);
+        simd::quantize_i8_into(v, sv, &mut v8[..sl * dk]);
+
+        rows.fill(OnlineRow::new());
+        out.fill(0.0);
+        let dq = sq * sk;
+        let mut j0 = 0;
+        while j0 < sl {
+            let tw = ts.min(sl - j0);
+            // Phase 1 — the whole tile's scores in one integer GEMM over
+            // the i8 operands (vs the f32 path's per-row blocked dots).
+            simd::matmul_i32_i8_into(
+                &q8[..sl * dk],
+                &k8[j0 * dk..(j0 + tw) * dk],
+                sl,
+                dk,
+                tw,
+                &mut s32[..sl * tw],
+            );
+            for i in 0..sl {
+                let srow = &mut stripe[i * tw..(i + 1) * tw];
+                for (jj, s) in srow.iter_mut().enumerate() {
+                    // One dequant per score: the i32 accumulator is
+                    // exact, so sq·sk is the only scale the f32 stage
+                    // ever sees; masking applies after, same sentinel.
+                    *s = self.score(i, j0 + jj, s32[i * tw + jj] as f32 * dq);
+                }
+            }
+            // Phase 2 — unchanged online-softmax absorb; the SV axpy
+            // streams i8 V rows with sv folded into the weight.
+            for i in 0..sl {
+                let srow = &mut stripe[i * tw..(i + 1) * tw];
+                let alpha = self.softmax.absorb_tile(&mut rows[i], srow);
+                let orow = &mut out[i * dk..(i + 1) * dk];
+                if alpha != 1.0 {
+                    simd::scale_f32(self.tier, alpha, orow);
+                }
+                for (jj, &w) in srow.iter().enumerate() {
+                    let vrow = &v8[(j0 + jj) * dk..(j0 + jj + 1) * dk];
+                    simd::axpy_i8_f32(self.tier, w * sv, vrow, orow);
+                }
+            }
+            j0 += tw;
+        }
+        for i in 0..sl {
+            let inv = 1.0 / rows[i].l;
+            simd::scale_f32(self.tier, inv, &mut out[i * dk..(i + 1) * dk]);
+        }
+        (sq, sk, sv)
+    }
+
     #[inline]
     fn score(&self, i: usize, j: usize, acc: f32) -> f32 {
         if self.causal && j > i {
@@ -257,6 +364,58 @@ pub fn tier_tolerance(kind: SoftmaxKind, seq_len: usize, d_k: usize, mag: f32) -
 pub fn quant_tolerance(kind: SoftmaxKind, seq_len: usize, d_model: usize, mag: f32) -> f32 {
     let mag = mag.abs().max(1.0);
     tolerance(kind, seq_len, mag) + 256.0 * (d_model + seq_len) as f32 * f32::EPSILON * mag
+}
+
+/// Documented max-abs-diff bound of the `SimdInt8Attn` fused path
+/// ([`FusedAttnPm::run_into_quant`]) against the f32 fused path on the
+/// same operands, extending [`quant_tolerance`] to cover score-stage
+/// quantization (DESIGN.md §17).  Parametric in the fitted per-head
+/// scales: `qmax`/`kmax`/`vmax` are the operand maxima the quantizer
+/// fitted to (scale = max/127), `score_scale` and `d_k` come from the
+/// topology.
+///
+/// Derivation, worst case (every bound is an L∞ sum, not a random-walk
+/// expectation):
+///
+/// * **Score perturbation** — per product term, `|q·Δk| + |k̂·Δq| ≤
+///   qmax·(kmax/254) + (kmax + sk/2)·(qmax/254) ≈ qmax·kmax/127`;
+///   summed over `d_k` terms and scaled: `Δs = score_scale · d_k ·
+///   qmax·kmax/127 · 1.1` (the 1.1 absorbs the half-step cross terms).
+/// * **Softmax sensitivity** — every un-normalized weight moves by a
+///   factor within `e^{±Δs}` and the denominator likewise, so a convex
+///   combination of rows bounded by `vmax` moves by at most
+///   `(e^{2Δs} − 1)·vmax`.
+/// * **V snap** — `|v̂ − v| ≤ sv/2` through a convex combination:
+///   `+ sv/2`.
+/// * **Saturation** — both outputs are convex combinations of rows
+///   bounded by `vmax` (+ half a V step), so their difference can never
+///   exceed the range diameter `2·vmax + sv`; the exponential term is
+///   clamped there.  For coarse effective score steps (large
+///   `score_scale·d_k·qmax·kmax`) the bound deliberately saturates at
+///   this diameter — sound, not tight; EXPERIMENTS.md documents the
+///   observed error alongside.
+///
+/// A 2× margin stacks the f32 machinery of [`quant_tolerance`] /
+/// [`tolerance`] (LUT step/clamp, reassociation) on top.
+pub fn attn_quant_tolerance(
+    kind: SoftmaxKind,
+    seq_len: usize,
+    d_model: usize,
+    d_k: usize,
+    score_scale: f32,
+    qmax: f32,
+    kmax: f32,
+    vmax: f32,
+) -> f32 {
+    let vmax = vmax.abs();
+    let base = quant_tolerance(kind, seq_len, d_model, vmax);
+    let sv = vmax.max(1e-8) / 127.0;
+    let ds = score_scale.abs() * d_k as f32 * (qmax.abs() * kmax.abs() / 127.0) * 1.1;
+    // Clamp the exponent before evaluating so the saturated arm never
+    // sees an f32 overflow (inf would poison the min below).
+    let soft = ((2.0 * ds).min(30.0).exp_m1()) * vmax;
+    let attn = (soft + 0.5 * sv).min(2.0 * vmax + sv);
+    base + 2.0 * attn
 }
 
 /// Assert `got` is within the documented [`tolerance`] of the
@@ -458,6 +617,116 @@ mod tests {
         for kind in [SoftmaxKind::Exact, SoftmaxKind::Lut { bits: 8 }] {
             assert!(tier_tolerance(kind, 64, 96, 2.0) > tolerance(kind, 64, 2.0));
             assert!(quant_tolerance(kind, 64, 768, 2.0) > tolerance(kind, 64, 2.0));
+            // The attention-stage bound dominates the projection-only
+            // bound, stays finite even for absurd scale products
+            // (saturation arm), and grows with the fitted maxima.
+            let a = attn_quant_tolerance(kind, 64, 768, 96, 0.102, 1.0, 1.0, 2.0);
+            assert!(a > quant_tolerance(kind, 64, 768, 2.0));
+            assert!(a.is_finite());
+            let big = attn_quant_tolerance(kind, 64, 768, 96, 0.102, 1e6, 1e6, 2.0);
+            assert!(big.is_finite(), "saturation arm must cap the exponential");
+            assert!(big <= quant_tolerance(kind, 64, 768, 2.0) + 2.0 * (2.0 * 2.0 + 2.0 / 127.0) + 1.0);
+            assert!(
+                attn_quant_tolerance(kind, 64, 768, 96, 0.102, 0.5, 0.5, 2.0) < a,
+                "tighter fitted maxima must tighten the bound"
+            );
         }
+    }
+
+    fn run_fused_quant(
+        pm: &FusedAttnPm,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> (Vec<f32>, (f32, f32, f32)) {
+        let n = pm.seq_len * pm.d_k;
+        let mut q8 = vec![0i8; n];
+        let mut k8 = vec![0i8; n];
+        let mut v8 = vec![0i8; n];
+        let mut s32 = vec![0i32; pm.stripe_elems()];
+        let mut stripe = vec![0f32; pm.stripe_elems()];
+        let mut rows = vec![OnlineRow::new(); pm.seq_len];
+        let mut out = vec![0f32; n];
+        let scales = pm.run_into_quant(
+            q, k, v, &mut q8, &mut k8, &mut v8, &mut s32, &mut stripe, &mut rows, &mut out,
+        );
+        (out, scales)
+    }
+
+    #[test]
+    fn int8_attn_within_attn_quant_tolerance() {
+        // The quantized attention stage against the f32 fused path on
+        // identical operands, every (tile × masking × softmax kind)
+        // combination — the module-level pin of the DESIGN.md §17
+        // numerics contract (end-to-end coverage: tests/properties.rs).
+        for sl in [4usize, 7, 12] {
+            let dk = 5;
+            let q = gen(41, sl * dk);
+            let k = gen(42, sl * dk);
+            let v = gen(43, sl * dk);
+            let max_abs = |xs: &[f32]| xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            for tile in [1usize, 3, 8, 64] {
+                for causal in [false, true] {
+                    for unit in [SoftmaxUnit::exact(), SoftmaxUnit::lut(8)] {
+                        let pm = FusedAttnPm::new(sl, dk, tile, 0.37, unit.clone(), causal)
+                            .with_tier(KernelTier::SimdInt8Attn);
+                        let want = run_fused(&pm, &q, &k, &v);
+                        let (got, _) = run_fused_quant(&pm, &q, &k, &v);
+                        let tol = attn_quant_tolerance(
+                            unit.kind,
+                            sl,
+                            dk,
+                            dk,
+                            0.37,
+                            max_abs(&q),
+                            max_abs(&k),
+                            max_abs(&v),
+                        );
+                        let diff = max_abs_diff(&want, &got);
+                        assert!(
+                            diff <= tol,
+                            "sl={sl} tile={tile} causal={causal} {:?}: {diff} > {tol}",
+                            unit.kind
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_attn_deterministic_and_rows_stay_convex() {
+        let (sl, dk) = (13usize, 4usize);
+        let q = gen(51, sl * dk);
+        let k = gen(52, sl * dk);
+        let v = gen(53, sl * dk);
+        let pm = FusedAttnPm::new(sl, dk, 4, 0.7, SoftmaxUnit::exact(), false)
+            .with_tier(KernelTier::SimdInt8Attn);
+        let (a, scales_a) = run_fused_quant(&pm, &q, &k, &v);
+        let (b, scales_b) = run_fused_quant(&pm, &q, &k, &v);
+        assert_eq!(a, b, "int8 attention must be bit-deterministic");
+        assert_eq!(scales_a, scales_b);
+        // Output rows are convex combinations of dequantized V rows —
+        // they can exceed the raw V range by at most half a V step.
+        let (_, _, sv) = scales_a;
+        let vmax = v.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let vmin = v.iter().fold(f32::INFINITY, |m, &x| m.min(x));
+        for &o in &a {
+            assert!(
+                o <= vmax + 0.5 * sv + 1e-5 && o >= vmin - 0.5 * sv - 1e-5,
+                "{o} outside [{vmin}, {vmax}] ± sv/2"
+            );
+        }
+        // Tile-width invariance within the documented bound: the math is
+        // tile-independent; only f32 absorb order moves.
+        let (wide, _) = run_fused_quant(
+            &FusedAttnPm::new(sl, dk, 64, 0.7, SoftmaxUnit::exact(), false)
+                .with_tier(KernelTier::SimdInt8Attn),
+            &q,
+            &k,
+            &v,
+        );
+        let mag = wide.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        assert!(max_abs_diff(&a, &wide) <= tolerance(SoftmaxKind::Exact, sl, mag));
     }
 }

@@ -53,6 +53,16 @@ pub struct HeadScratch {
     pub(crate) s: Vec<f32>,
     /// Score tile stripe (SL × TS) — fused streaming path only.
     pub(crate) stripe: Vec<f32>,
+    /// int8 operand lanes for the fused attention stage (SL × d_k each)
+    /// — `SimdInt8Attn` + fused path only (DESIGN.md §17): the per-head
+    /// quantized Q/K/V the int8 score GEMM and dequantizing SV axpy
+    /// stream.
+    pub(crate) q8: Vec<i8>,
+    pub(crate) k8: Vec<i8>,
+    pub(crate) v8: Vec<i8>,
+    /// i32 score-stripe accumulator (SL × TS) for the int8 score GEMM —
+    /// `SimdInt8Attn` + fused path only.
+    pub(crate) s32: Vec<i32>,
     /// Per-row online-softmax running (max, denominator) — fused only.
     pub(crate) rows: Vec<OnlineRow>,
     /// Head output (SL × d_k) before the stripe copy into the request
@@ -66,7 +76,7 @@ pub struct HeadScratch {
 }
 
 impl HeadScratch {
-    fn ensure(&mut self, sl: usize, dk: usize, ts: usize, path: ExecPath) {
+    fn ensure(&mut self, sl: usize, dk: usize, ts: usize, path: ExecPath, tier: KernelTier) {
         self.faults = 0;
         self.acc.resize(sl * dk, 0);
         self.q.resize(sl * dk, 0.0);
@@ -89,6 +99,20 @@ impl HeadScratch {
                 self.rows.resize(sl, OnlineRow::new());
             }
         }
+        // The int8 attention lanes exist only where the int8 operand
+        // stream actually runs: the SimdInt8Attn tier's fused path.
+        // Everywhere else they follow the unused-path policy above.
+        if tier == KernelTier::SimdInt8Attn && path == ExecPath::FusedTiled {
+            self.q8.resize(sl * dk, 0);
+            self.k8.resize(sl * dk, 0);
+            self.v8.resize(sl * dk, 0);
+            self.s32.resize(sl * ts, 0);
+        } else {
+            self.q8.truncate(0);
+            self.k8.truncate(0);
+            self.v8.truncate(0);
+            self.s32.truncate(0);
+        }
     }
 
     /// Bytes this lane's current request actually uses (lengths).
@@ -99,6 +123,8 @@ impl HeadScratch {
             + self.stripe.len() * 4
             + self.rows.len() * std::mem::size_of::<OnlineRow>()
             + self.o.len() * 4
+            + (self.q8.len() + self.k8.len() + self.v8.len())
+            + self.s32.len() * 4
     }
 
     /// Bytes this lane retains (capacities).
@@ -109,6 +135,8 @@ impl HeadScratch {
             + self.stripe.capacity() * 4
             + self.rows.capacity() * std::mem::size_of::<OnlineRow>()
             + self.o.capacity() * 4
+            + (self.q8.capacity() + self.k8.capacity() + self.v8.capacity())
+            + self.s32.capacity() * 4
     }
 
     fn release_surplus(&mut self) {
@@ -120,6 +148,10 @@ impl HeadScratch {
         self.stripe.shrink_to_fit();
         self.rows.shrink_to_fit();
         self.o.shrink_to_fit();
+        self.q8.shrink_to_fit();
+        self.k8.shrink_to_fit();
+        self.v8.shrink_to_fit();
+        self.s32.shrink_to_fit();
     }
 }
 
@@ -163,9 +195,12 @@ impl Workspace {
         tier: KernelTier,
     ) {
         let (sl, dm, dk, ts) = (topo.seq_len, topo.d_model, topo.d_k(), topo.tile_size);
-        match tier {
-            KernelTier::SimdInt8 => self.x16.truncate(0),
-            KernelTier::Scalar | KernelTier::Simd => self.x16.resize(sl * dm, 0),
+        if tier.stages_i8() {
+            // i8-staging tiers read the request's int8 operand directly —
+            // no widened copy (DESIGN.md §14).
+            self.x16.truncate(0);
+        } else {
+            self.x16.resize(sl * dm, 0);
         }
         self.out.resize(sl * dm, 0.0);
         if self.lanes.len() < lanes {
@@ -178,7 +213,7 @@ impl Workspace {
             lane.faults = 0;
         }
         for lane in &mut self.lanes[..lanes] {
-            lane.ensure(sl, dk, ts, path);
+            lane.ensure(sl, dk, ts, path, tier);
         }
         // High-water-mark decay: idle lanes and the unused path's score
         // scratch count as surplus; demand is what this request sized.
@@ -237,6 +272,10 @@ impl Workspace {
             fp.push((l.stripe.as_ptr() as usize, l.stripe.capacity()));
             fp.push((l.rows.as_ptr() as usize, l.rows.capacity()));
             fp.push((l.o.as_ptr() as usize, l.o.capacity()));
+            fp.push((l.q8.as_ptr() as usize, l.q8.capacity()));
+            fp.push((l.k8.as_ptr() as usize, l.k8.capacity()));
+            fp.push((l.v8.as_ptr() as usize, l.v8.capacity()));
+            fp.push((l.s32.as_ptr() as usize, l.s32.capacity()));
         }
         fp
     }
@@ -317,6 +356,38 @@ mod tests {
         ws.ensure(&topo, 1, ExecPath::FusedTiled, KernelTier::SimdInt8);
         assert_eq!(ws.x16.len(), 0);
         assert!(ws.x16.capacity() >= 16 * 64, "capacity is retained");
+    }
+
+    #[test]
+    fn attn_int8_lanes_sized_only_on_the_quantized_fused_path() {
+        let mut ws = Workspace::new();
+        let topo = Topology::new(32, 64, 2, 16);
+        let (sl, dk, ts) = (32usize, 32usize, 16usize);
+        // Fused + SimdInt8Attn: i8 lanes + i32 stripe live, x16 skipped.
+        ws.ensure(&topo, 1, ExecPath::FusedTiled, KernelTier::SimdInt8Attn);
+        assert_eq!(ws.lanes[0].q8.len(), sl * dk);
+        assert_eq!(ws.lanes[0].k8.len(), sl * dk);
+        assert_eq!(ws.lanes[0].v8.len(), sl * dk);
+        assert_eq!(ws.lanes[0].s32.len(), sl * ts);
+        assert_eq!(ws.x16.len(), 0, "attn-int8 tier must skip the widening pass");
+        // Reference path under the same tier runs the f32 modules: the
+        // attention lanes drop to zero length (capacity retained).
+        ws.ensure(&topo, 1, ExecPath::Reference, KernelTier::SimdInt8Attn);
+        assert_eq!(ws.lanes[0].q8.len(), 0);
+        assert_eq!(ws.lanes[0].s32.len(), 0);
+        assert!(ws.lanes[0].q8.capacity() >= sl * dk, "capacity is retained");
+        // Other tiers on the fused path never size them at all.
+        let mut plain = Workspace::new();
+        plain.ensure(&topo, 1, ExecPath::FusedTiled, KernelTier::SimdInt8);
+        assert_eq!(plain.lanes[0].q8.capacity(), 0);
+        assert_eq!(plain.lanes[0].s32.capacity(), 0);
+        // And the i8 lanes are part of the accounted footprint.
+        let mut a = Workspace::new();
+        a.ensure(&topo, 1, ExecPath::FusedTiled, KernelTier::SimdInt8Attn);
+        assert!(
+            a.footprint_bytes() > plain.footprint_bytes(),
+            "i8 lanes must be visible in footprint_bytes"
+        );
     }
 
     #[test]

@@ -427,8 +427,9 @@ fn prop_int8_gemm_bit_identical_across_tiers() {
     // random shapes (k/n tails off the 16- and 4-lane grids) and random
     // sub-slice offsets (unaligned SIMD loads).
     use famous::fixed::{
-        matmul_i32_i8_into, matmul_i32_i8_scalar_into, matmul_i32_widened_into,
-        matmul_i32_widened_simd_into, widen_i16,
+        matmul_i32_i8_blocked_into, matmul_i32_i8_into, matmul_i32_i8_scalar_into,
+        matmul_i32_widened_blocked_into, matmul_i32_widened_into, matmul_i32_widened_simd_into,
+        widen_i16, PackedBi16, PackedBi8,
     };
     run("int8 gemm == widened == direct", 200, |g: &mut Gen| {
         let m = g.usize_in(1, 6);
@@ -457,6 +458,17 @@ fn prop_int8_gemm_bit_identical_across_tiers() {
         got.fill(0);
         matmul_i32_widened_simd_into(&a16, &b16, m, k, n, &mut got);
         assert_eq!(got, want, "widened simd diverged ({shape})");
+        // PR-10 cache-blocked drivers over pre-packed block-major B:
+        // integer partial sums commute, so any jc/pc/MC blocking — tail
+        // panels included — reproduces the flat product bit-for-bit.
+        let pb8 = PackedBi8::pack(b8, k, n);
+        got.fill(0);
+        matmul_i32_i8_blocked_into(a8, &pb8, m, &mut got);
+        assert_eq!(got, want, "i8 blocked diverged ({shape})");
+        let pb16 = PackedBi16::pack(&b16, k, n);
+        got.fill(0);
+        matmul_i32_widened_blocked_into(&a16, &pb16, m, &mut got);
+        assert_eq!(got, want, "widened blocked diverged ({shape})");
     });
 }
 
@@ -515,17 +527,45 @@ fn prop_kernel_tiers_agree_end_to_end() {
         let outs: Vec<Vec<f32>> = prepared.iter().map(|p| p.execute_path(&x, path)).collect();
         let mag = outs[0].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let tol = fused::tier_tolerance(famous::sim::SoftmaxKind::Exact, sl, dk, mag);
-        for (tier, out) in KernelTier::ALL.into_iter().zip(&outs).skip(1) {
+        // The bit-exact tiers (indices 1..=2) stay within the tier
+        // tolerance of the scalar oracle; simd-int8-attn is handled
+        // below against its own contract (DESIGN.md §17).
+        for (tier, out) in KernelTier::ALL.into_iter().zip(&outs).take(3).skip(1) {
             for (a, b) in outs[0].iter().zip(out) {
                 assert!((a - b).abs() <= tol, "{topo} {tier}: {a} vs {b} (tol {tol:.2e})");
             }
         }
         if KernelTier::Simd.is_available() {
             assert_eq!(bits(&outs[1]), bits(&outs[2]), "{topo}: simd != simd-int8");
+            // simd-int8-attn changes numerics only on the fused path —
+            // int8 tile scores dequantized into the online softmax —
+            // and only within the per-request quantization bound; on
+            // the reference path it runs the same f32 modules as
+            // simd-int8 and must be bit-identical.
+            match path {
+                ExecPath::Reference => {
+                    assert_eq!(
+                        bits(&outs[3]),
+                        bits(&outs[2]),
+                        "{topo}: reference int8-attn diverged from simd-int8"
+                    );
+                }
+                ExecPath::FusedTiled => {
+                    let bound = prepared[3].attn_quant_bound(&x);
+                    assert!(bound.is_finite() && bound > 0.0, "{topo}: bad bound {bound}");
+                    for (a, b) in outs[2].iter().zip(&outs[3]) {
+                        assert!(
+                            (a - b).abs() <= bound,
+                            "{topo}: int8-attn {b} vs fused f32 {a} (bound {bound:.2e})"
+                        );
+                    }
+                }
+            }
         } else {
             // Clamped hosts run the scalar kernels under every label.
             assert_eq!(bits(&outs[0]), bits(&outs[1]), "{topo}: clamped simd");
             assert_eq!(bits(&outs[0]), bits(&outs[2]), "{topo}: clamped simd-int8");
+            assert_eq!(bits(&outs[0]), bits(&outs[3]), "{topo}: clamped simd-int8-attn");
         }
         for (p, out) in prepared.iter().zip(&outs) {
             assert_eq!(
@@ -535,6 +575,118 @@ fn prop_kernel_tiers_agree_end_to_end() {
                 p.tier()
             );
         }
+    });
+}
+
+// ------------------------------------------- int8 attention (PR 10)
+
+#[test]
+fn prop_int8_attn_within_quant_bound_of_f32_fused() {
+    // DESIGN.md §17 on random topologies: the int8 attention datapath
+    // (int8×int8→i32 tile scores dequantized into the online-softmax
+    // absorb, dequantizing i8 SV axpy) stays within the per-request
+    // quantization bound of the f32 fused path under the *same* staged
+    // projections — tail tiles, both softmax realizations, causal and
+    // dense.  On hosts without AVX2 both tiers clamp to Scalar and the
+    // outputs must be bit-equal.
+    use famous::sim::{ExecPath, KernelTier, PreparedWeights};
+    use famous::testdata::MhaInputs;
+    run("int8-attn ~= fused f32", 25, |g: &mut Gen| {
+        let heads = *g.pick(&[1usize, 2, 3, 4]);
+        let dk = *g.pick(&[4usize, 8, 16]);
+        let dm = heads * dk;
+        let sl = g.usize_in(2, 24);
+        let ts_candidates: Vec<usize> =
+            [2usize, 4, 8, 16, dm].iter().copied().filter(|t| dm % t == 0).collect();
+        let ts = *g.pick(&ts_candidates);
+        let topo = Topology::new(sl, dm, heads, ts);
+        let mut inputs = MhaInputs::generate(&topo);
+        for _ in 0..4 {
+            let i = g.usize_in(0, inputs.x.len() - 1);
+            inputs.x[i] = g.f64_in(-1.0, 1.0) as f32;
+            let j = g.usize_in(0, inputs.wk.len() - 1);
+            inputs.wk[j] = g.f64_in(-1.0, 1.0) as f32;
+        }
+        let mut cfg = SimConfig::u55c();
+        cfg.causal = g.bool();
+        if g.bool() {
+            cfg.softmax_lut_bits = Some(8);
+        }
+        let f32_p = PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::SimdInt8);
+        let attn_p =
+            PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::SimdInt8Attn);
+        let x = f32_p.quantize_input(&inputs.x);
+        let want = f32_p.execute_path(&x, ExecPath::FusedTiled);
+        let got = attn_p.execute_path(&x, ExecPath::FusedTiled);
+        if KernelTier::SimdInt8Attn.is_available() {
+            let bound = attn_p.attn_quant_bound(&x);
+            assert!(bound.is_finite() && bound > 0.0, "{topo} ts={ts}: bad bound {bound}");
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    (a - b).abs() <= bound,
+                    "{topo} ts={ts}: int8-attn {b} vs {a} at {i} (bound {bound:.2e})"
+                );
+            }
+        } else {
+            assert_eq!(bits(&want), bits(&got), "{topo} ts={ts}: clamped int8-attn diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_int8_attn_bit_deterministic_across_lanes_and_flavors() {
+    // The serving contract extends to the new tier: the allocating,
+    // warm-workspace and head-parallel fused flavors all reproduce the
+    // same bits under simd-int8-attn (dynamic per-request activation
+    // scales are a pure function of the inputs), across lane counts,
+    // pool sizes and repeat runs — and a second identically-seeded
+    // prepare reproduces them too.
+    use famous::exec::ThreadPool;
+    use famous::sim::{ExecPath, KernelTier, PreparedWeights, Workspace};
+    use famous::testdata::MhaInputs;
+    run("int8-attn bit-deterministic", 20, |g: &mut Gen| {
+        let heads = *g.pick(&[1usize, 2, 4]);
+        let dk = *g.pick(&[4usize, 8, 16]);
+        let dm = heads * dk;
+        let sl = g.usize_in(2, 20);
+        let topo = Topology::new(sl, dm, heads, dm);
+        let mut inputs = MhaInputs::generate(&topo);
+        for _ in 0..4 {
+            let i = g.usize_in(0, inputs.x.len() - 1);
+            inputs.x[i] = g.f64_in(-1.0, 1.0) as f32;
+        }
+        let mut cfg = SimConfig::u55c();
+        cfg.causal = g.bool();
+        let prepared =
+            PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::SimdInt8Attn);
+        let x = prepared.quantize_input(&inputs.x);
+        let got = prepared.execute_path(&x, ExecPath::FusedTiled);
+
+        let mut ws = Workspace::new();
+        prepared.execute_into_path(&x, &mut ws, ExecPath::FusedTiled);
+        assert_eq!(bits(ws.output()), bits(&got), "int8-attn workspace diverged ({topo})");
+        // Warm re-run: same buffers, same bits.
+        prepared.execute_into_path(&x, &mut ws, ExecPath::FusedTiled);
+        assert_eq!(bits(ws.output()), bits(&got), "warm int8-attn diverged ({topo})");
+
+        let threads = g.usize_in(1, 3);
+        let lanes = g.usize_in(1, heads + 1);
+        let pool = ThreadPool::new(threads);
+        let mut wsp = Workspace::new();
+        prepared.execute_parallel_path(&x, &mut wsp, &pool.handle(), lanes, ExecPath::FusedTiled);
+        assert_eq!(
+            bits(wsp.output()),
+            bits(&got),
+            "int8-attn head-parallel diverged ({topo}, threads={threads}, lanes={lanes})"
+        );
+
+        let again =
+            PreparedWeights::prepare_with_tier(&cfg, &topo, &inputs, KernelTier::SimdInt8Attn);
+        assert_eq!(
+            bits(&again.execute_path(&x, ExecPath::FusedTiled)),
+            bits(&got),
+            "re-prepared int8-attn diverged ({topo})"
+        );
     });
 }
 

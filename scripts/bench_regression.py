@@ -40,8 +40,15 @@ WALL_FIELDS = {
     # Virtual-time fleet simulator (DESIGN.md §16): wall time to simulate
     # the fixed seeded trace.  Absent from pre-DES baselines — tolerated.
     "des": ("wall_ms",),
+    # Int8 attention stage vs the fused f32 path (DESIGN.md §17).
+    # Absent from pre-PR-10 baselines — tolerated.
+    "int8_attn": ("fused_f32_ms", "int8_attn_ms"),
+    # Blocked (packed block-major B) vs flat projection GEMM drivers.
+    "gemm_blocked": ("flat_ms", "blocked_ms"),
 }
-KEY_FIELDS = ("seq_len", "d_model", "heads", "lanes")
+# gemm_blocked series carry m/k/n instead of a topology; absent fields
+# resolve to None, so the extra keys don't disturb the other sections.
+KEY_FIELDS = ("seq_len", "d_model", "heads", "lanes", "m", "k", "n")
 
 
 def series_key(entry):
